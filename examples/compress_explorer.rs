@@ -1,0 +1,57 @@
+//! Compression design-space explorer: the paper's §4 codec against every
+//! baseline, on (a) the real trained model's quantized weight stream and
+//! (b) synthetic entropy regimes, with the zeroth-order entropy bound
+//! printed alongside — the tool we used to understand why Table 1's 11.7x
+//! cannot hold on near-normal weights (see EXPERIMENTS.md).
+//!
+//! Run: `cargo run --release --example compress_explorer [model]`
+
+use anyhow::Result;
+use tiny_qmoe::compress::{self, stats, CodecId};
+use tiny_qmoe::tables;
+use tiny_qmoe::util::bench::Table;
+
+fn main() -> Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "e2e".into());
+
+    println!("== codec sweep on {model}'s real quantized weights ==");
+    let rows = tables::ablation_codec(&model)?;
+    tables::render_codec(&rows).print();
+
+    println!("\n== synthetic entropy regimes (4 MiB streams) ==");
+    for codec in [CodecId::FreqSeq, CodecId::FreqSeqPacked, CodecId::Lzw, CodecId::Huffman] {
+        let crows = tables::table1_clustered(codec)?;
+        let mut t = Table::new(
+            &format!("{codec:?}"),
+            &["regime", "entropy bits/B", "ratio", "entropy bound"],
+        );
+        for r in &crows {
+            t.row(vec![
+                r.regime.clone(),
+                format!("{:.2}", r.entropy_bits),
+                format!("{:.2}x", r.ratio_quant),
+                format!("{:.2}x", 8.0 / r.entropy_bits.max(1e-9)),
+            ]);
+        }
+        t.print();
+    }
+
+    println!("\n== dictionary-size sensitivity (freqseq-packed, gaussian codes) ==");
+    let mut rng = tiny_qmoe::util::Rng::seed_from_u64(3);
+    let data: Vec<u8> = (0..1 << 20)
+        .map(|_| (128.0 + 20.0 * rng.normal_f32()).clamp(0.0, 255.0) as u8)
+        .collect();
+    let mut t = Table::new("table size sweep", &["max entries", "ratio w/ dict"]);
+    for max_entries in [256usize, 4096, 65535] {
+        let c = compress::freqseq::FreqSeq::packed().with_max_entries(max_entries);
+        let r = stats::measure(&c, &data, None)?;
+        t.row(vec![max_entries.to_string(), format!("{:.3}x", r.ratio_with_dict())]);
+    }
+    t.print();
+    println!(
+        "\nstream entropy: {:.2} bits/byte (order-0), {:.2} (order-1 conditional)",
+        stats::byte_entropy(&data),
+        stats::conditional_entropy(&data, 1)
+    );
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Full evaluation suite: regenerates the paper's Tables 2-4 (accuracy +
+//! per-question latency for fp32 / quantized / compressed) on the trained
+//! `e2e` model across all three synthetic task families.
+//!
+//! Run: `cargo run --release --example eval_suite -- [limit]`
+//! (default 60 questions/family; the paper used 200 — pass 200 to match.)
+
+use anyhow::Result;
+use tiny_qmoe::tables::{self, Variant};
+
+fn main() -> Result<()> {
+    let limit: usize = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(tables::eval_limit);
+    let model = "e2e";
+    let codec = tables::default_codec();
+    println!("evaluating {model} with {limit} questions/family (codec {codec:?})");
+
+    for (family, paper_table) in [
+        ("mmlu", "paper Table 2"),
+        ("arc-challenge", "paper Table 3"),
+        ("arc-easy", "paper Table 4"),
+    ] {
+        let reps = tables::eval_table(model, family, &Variant::ALL, codec, limit)?;
+        tables::render_eval_table(&format!("{family} ({paper_table})"), &reps).print();
+        // the paper's qualitative claims, asserted:
+        let acc: Vec<f64> = reps.iter().map(|r| r.accuracy()).collect();
+        if (acc[1] - acc[2]).abs() > 1e-9 {
+            println!("  !! compressed accuracy deviates from quantized — lossless violated?");
+        } else {
+            println!(
+                "  ok: compressed == quantized accuracy exactly ({:.2}%); fp32 {:.2}%",
+                acc[1] * 100.0,
+                acc[0] * 100.0
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Quickstart: the whole Tiny-QMoE flow on the trained `e2e` checkpoint.
+//!
+//!   1. load the f32 checkpoint the build trained (python, build time);
+//!   2. 8-bit quantize it (paper §3, Listing 1 semantics);
+//!   3. compress the quantized codes with the frequent-sequence dictionary
+//!      codec (paper §4) into a `.tqm` container;
+//!   4. reopen the container, stream layers through the PJRT pipeline and
+//!      verify the compressed model's logits are bit-identical to the
+//!      quantized-resident model's (the codec is lossless);
+//!   5. print sizes and timings.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`)
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use tiny_qmoe::compress::CodecId;
+use tiny_qmoe::config::{default_artifacts_root, Manifest, QuantizeOptions, Residency, ServeOptions};
+use tiny_qmoe::model::{quantize_checkpoint, Checkpoint, WeightSource};
+use tiny_qmoe::pipeline::Engine;
+use tiny_qmoe::runtime::Runtime;
+use tiny_qmoe::util::bench::fmt_bytes;
+
+fn main() -> Result<()> {
+    let model = "e2e";
+    let root = default_artifacts_root();
+    let manifest = Manifest::load(&root, model)?;
+    let cfg = &manifest.config;
+    println!(
+        "model {} — {} layers, d={}, {:.1}M params",
+        cfg.name,
+        cfg.n_layers,
+        cfg.d_model,
+        cfg.n_params as f64 / 1e6
+    );
+
+    // 1. the trained f32 checkpoint
+    let ckpt = Checkpoint::load(root.join(model).join(&manifest.weights_file))?;
+    println!("fp32 checkpoint: {}", fmt_bytes(ckpt.total_f32_bytes()));
+
+    // 2+3. quantize + compress into a container
+    let t0 = std::time::Instant::now();
+    let opts = QuantizeOptions::default(); // 8-bit, per-tensor — the paper's scheme
+    let writer = quantize_checkpoint(cfg, &ckpt, &opts, CodecId::FreqSeqPacked, None, "quickstart")?;
+    let dir = tiny_qmoe::util::TempDir::new()?;
+    let tqm = dir.join("e2e.tqm");
+    let (file_bytes, dict_bytes) = writer.write(&tqm)?;
+    println!(
+        "quantized+compressed in {:.2}s: {} (dict {})",
+        t0.elapsed().as_secs_f64(),
+        fmt_bytes(file_bytes),
+        fmt_bytes(dict_bytes)
+    );
+
+    // 4. serve it two ways and compare logits bit-for-bit
+    let rt = Arc::new(Runtime::new(&root, model)?);
+    println!("PJRT platform: {}", rt.platform());
+    let stream_opts = ServeOptions {
+        residency: Residency::StreamPerLayer,
+        prefetch: true,
+        ..Default::default()
+    };
+    let resident_opts =
+        ServeOptions { residency: Residency::AlwaysResident, ..Default::default() };
+    let compressed =
+        Engine::new(rt.clone(), WeightSource::open_compressed(&tqm)?, &stream_opts)?;
+    let quantized = Engine::new(
+        Arc::new(Runtime::new(&root, model)?),
+        WeightSource::open_resident(&tqm, cfg)?,
+        &resident_opts,
+    )?;
+
+    let prompt: Vec<u32> = vec![1, 2, 20, 3]; // BOS Q k4 A
+    let a = compressed.forward_logits(&prompt)?;
+    let b = quantized.forward_logits(&prompt)?;
+    assert_eq!(a.data, b.data, "lossless serving violated!");
+    println!("compressed-vs-quantized logits: bit-identical over {} values", a.data.len());
+
+    // 5. a tiny generation for flavor
+    let data = tiny_qmoe::data::DataDir::open_for_vocab(&root, cfg.vocab)?;
+    let mut sampler = tiny_qmoe::gen::Sampler::greedy();
+    let g = tiny_qmoe::gen::generate(&compressed, &prompt, 12, &mut sampler, None)?;
+    println!("prompt : {}", data.detok(&prompt));
+    println!("output : {}", data.detok(&g.tokens));
+    println!(
+        "prefill {:.1} ms, {:.1} tok/s decode; pipeline: {}",
+        g.prefill_s * 1e3,
+        g.tokens_per_s,
+        compressed.metrics.summary()
+    );
+    Ok(())
+}

@@ -1,0 +1,261 @@
+"""AOT driver: lower L2 stages to HLO text, train/export weights, export data.
+
+This is the ONLY python entrypoint in the build (`make artifacts`); after it
+runs, the rust binary is self-contained. Per model config it produces under
+``artifacts/<cfg>/``:
+
+    manifest.json                      geometry + stage index + arg contract
+    embed_b{B}_t{T}.hlo.txt            one per (B, T) geometry bucket
+    block_b{B}_t{T}.hlo.txt            same geometry keys (T=1 for decode)
+    final_b{B}_t{T}.hlo.txt
+    weights/<cfg>.tqw                  f32 checkpoint (trained or synthesized)
+    weights/<cfg>_loss.json            loss curve (trained configs only)
+
+plus ``artifacts/data/`` (SynthLang corpora + eval sets, see data.py).
+
+HLO **text** is the interchange format, not serialized protos: jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md). Lowered with
+return_tuple=True, so the rust side unwraps with to_tuple{1,3}.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import config as C
+from . import data as D
+from . import tqw
+from .config import ModelConfig
+from .model import LAYER_WEIGHT_ORDER, make_stage_fns
+
+MANIFEST_VERSION = 1
+# steps of build-time training per config (0 = statistics-matched init only)
+TRAIN_STEPS = {"tiny": 300, "e2e": 350}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.float32)
+
+
+def u8(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.uint8)
+
+
+def i32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.int32)
+
+
+def layer_weight_specs(cfg: ModelConfig) -> list:
+    """ShapeDtypeStructs for the flattened LAYER_WEIGHT_ORDER args."""
+    d, fdim, kvd = cfg.d_model, cfg.d_ff, cfg.kv_dim
+    mat_dims = {
+        "wq": (d, d),
+        "wk": (d, kvd),
+        "wv": (d, kvd),
+        "wo": (d, d),
+        "w1": (d, fdim),
+        "w3": (d, fdim),
+        "w2": (fdim, d),
+    }
+    specs: list = []
+    for name in LAYER_WEIGHT_ORDER:
+        if name.startswith("ln"):
+            specs.append(f32(d))
+        else:
+            din, dout = mat_dims[name]
+            specs.extend([u8(din, dout), f32(dout), f32(dout)])
+    return specs
+
+
+def geometries(cfg: ModelConfig) -> list[tuple[int, int]]:
+    """(B, T) buckets to lower: prefill buckets plus decode (B, 1)."""
+    geoms = [(b, t) for b in cfg.prefill_b for t in cfg.prefill_t]
+    geoms += [(b, 1) for b in cfg.decode_b]
+    # dedupe, stable order
+    seen, out = set(), []
+    for g in geoms:
+        if g not in seen:
+            seen.add(g)
+            out.append(g)
+    return out
+
+
+def layer_weight_specs_f32(cfg: ModelConfig) -> list:
+    d, fdim, kvd = cfg.d_model, cfg.d_ff, cfg.kv_dim
+    mat_dims = {
+        "wq": (d, d),
+        "wk": (d, kvd),
+        "wv": (d, kvd),
+        "wo": (d, d),
+        "w1": (d, fdim),
+        "w3": (d, fdim),
+        "w2": (fdim, d),
+    }
+    specs: list = []
+    for name in LAYER_WEIGHT_ORDER:
+        if name.startswith("ln"):
+            specs.append(f32(d))
+        else:
+            specs.append(f32(*mat_dims[name]))
+    return specs
+
+
+def lower_config(cfg: ModelConfig, out_dir: pathlib.Path, force: bool) -> list[dict]:
+    """Lower all stages for all geometry buckets; returns manifest entries."""
+    from .model import make_stage_fns_f32
+
+    fns = make_stage_fns(cfg, use_pallas=True)
+    fns32 = make_stage_fns_f32(cfg)
+    d, v, s = cfg.d_model, cfg.vocab, cfg.max_seq
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    entries = []
+    for b, t in geometries(cfg):
+        jobs = [
+            ("embed", fns["embed"], [i32(b, t), u8(v, d), f32(v), f32(v)]),
+            (
+                "block",
+                fns["block"],
+                [f32(b, t, d), f32(b, kv, s, hd), f32(b, kv, s, hd), i32(b)]
+                + layer_weight_specs(cfg),
+            ),
+            ("final", fns["final"], [f32(b, t, d), f32(d), u8(d, v), f32(v), f32(v)]),
+            ("embed_f32", fns32["embed_f32"], [i32(b, t), f32(v, d)]),
+            (
+                "block_f32",
+                fns32["block_f32"],
+                [f32(b, t, d), f32(b, kv, s, hd), f32(b, kv, s, hd), i32(b)]
+                + layer_weight_specs_f32(cfg),
+            ),
+            ("final_f32", fns32["final_f32"], [f32(b, t, d), f32(d), f32(d, v)]),
+        ]
+        for name, fn, specs in jobs:
+            fname = f"{name}_b{b}_t{t}.hlo.txt"
+            path = out_dir / fname
+            entry = {
+                "stage": name,
+                "file": fname,
+                "b": b,
+                "t": t,
+                "s": s,
+                "n_outputs": 3 if name.startswith("block") else 1,
+            }
+            entries.append(entry)
+            if path.exists() and not force:
+                continue
+            t0 = time.time()
+            text = to_hlo_text(jax.jit(fn).lower(*specs))
+            path.write_text(text)
+            print(
+                f"  lowered {cfg.name}/{fname}: {len(text) / 1e3:.0f} kB"
+                f" in {time.time() - t0:.1f}s"
+            )
+    return entries
+
+
+def ensure_weights(cfg: ModelConfig, out_dir: pathlib.Path, force: bool) -> None:
+    from . import train as T
+
+    wdir = out_dir / "weights"
+    ckpt = wdir / f"{cfg.name}.tqw"
+    if ckpt.exists() and not force:
+        return
+    steps = TRAIN_STEPS.get(cfg.name, 0)
+    if steps > 0:
+        params, log = T.train(cfg, steps=steps)
+    else:
+        print(f"  synthesizing statistics-matched weights for {cfg.name}")
+        params, log = T.synth_proxy_params(cfg), None
+    T.export_checkpoint(cfg, params, wdir, log)
+
+
+def arg_contract(cfg: ModelConfig) -> dict:
+    """Machine-readable stage arg order for the rust side (documentation +
+    runtime self-check)."""
+    wargs = []
+    for name in LAYER_WEIGHT_ORDER:
+        if name.startswith("ln"):
+            wargs.append({"name": name, "kind": "f32"})
+        else:
+            wargs.extend(
+                [
+                    {"name": name, "kind": "u8_codes"},
+                    {"name": name + ".scale", "kind": "f32"},
+                    {"name": name + ".zero", "kind": "f32"},
+                ]
+            )
+    return {
+        "embed": ["tokens", "table_codes", "table_scale", "table_zero"],
+        "block": ["hidden", "k_cache", "v_cache", "pos"] + [w["name"] for w in wargs],
+        "final": ["hidden", "final_norm", "head_codes", "head_scale", "head_zero"],
+        "layer_weight_order": list(LAYER_WEIGHT_ORDER),
+    }
+
+
+def build_config(cfg: ModelConfig, root: pathlib.Path, force: bool) -> None:
+    out_dir = root / cfg.name
+    out_dir.mkdir(parents=True, exist_ok=True)
+    print(f"[aot] config {cfg.name} ({cfg.n_params() / 1e6:.1f} M params)")
+    ensure_weights(cfg, out_dir, force)
+    entries = lower_config(cfg, out_dir, force)
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "config": cfg.to_dict(),
+        "stages": entries,
+        "weights_file": f"weights/{cfg.name}.tqw",
+        "arg_contract": arg_contract(cfg),
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-root", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default="tiny,e2e,proxy-1b,proxy-3b",
+        help="comma-separated config names",
+    )
+    ap.add_argument("--force", action="store_true", help="re-lower and re-train")
+    args = ap.parse_args()
+
+    root = pathlib.Path(args.out_root)
+    root.mkdir(parents=True, exist_ok=True)
+
+    names = [n for n in args.configs.split(",") if n]
+    # shared data assets use the largest vocab among requested configs
+    vocab = max(C.get(n).vocab for n in names)
+    data_dir = root / "data"
+    if not (data_dir / "lang.json").exists() or args.force:
+        print(f"[aot] exporting SynthLang data (vocab={vocab})")
+        D.export_all(data_dir, vocab=vocab)
+    # eval sets for the served vocab (e2e) if different
+    for n in names:
+        cfgv = C.get(n).vocab
+        sub = data_dir / f"vocab{cfgv}"
+        if not (sub / "lang.json").exists() or args.force:
+            D.export_all(sub, vocab=cfgv)
+
+    for n in names:
+        build_config(C.get(n), root, args.force)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

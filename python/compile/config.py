@@ -1,0 +1,139 @@
+"""Model configurations for the Tiny-QMoE reproduction.
+
+The paper targets LLaMA-3.2-1B / 3B; those checkpoints are gated, so we
+define architecture-faithful proxies (RMSNorm, RoPE, GQA, SwiGLU) at sizes
+that fit the build budget — see DESIGN.md "Model configurations".
+
+This module is the single source of truth for geometry on the python side;
+`aot.py` copies everything into `artifacts/<name>/manifest.json`, which the
+rust side treats as *its* source of truth. Never let the two drift.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """LLaMA-style decoder geometry.
+
+    head_dim is derived (d_model // n_heads); n_kv_heads < n_heads gives
+    grouped-query attention exactly as in LLaMA-3.2.
+    """
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    max_seq: int  # KV-cache capacity S for this config
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # Geometry buckets the AOT pass lowers executables for.
+    prefill_t: tuple[int, ...] = (32, 64)
+    prefill_b: tuple[int, ...] = (1,)
+    decode_b: tuple[int, ...] = (1,)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def n_params(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        per_layer = (
+            d * d  # wq
+            + d * self.kv_dim * 2  # wk, wv
+            + d * d  # wo
+            + 3 * d * f  # w1, w3 (gate/up), w2 (down)
+            + 2 * d  # norms
+        )
+        return v * d * 2 + self.n_layers * per_layer + d  # embed + head + final norm
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["head_dim"] = self.head_dim
+        d["kv_dim"] = self.kv_dim
+        d["n_params"] = self.n_params()
+        return d
+
+
+TINY = ModelConfig(
+    name="tiny",
+    d_model=64,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=160,
+    vocab=256,
+    max_seq=64,
+    prefill_t=(16, 32),
+    prefill_b=(1,),
+    decode_b=(1, 2),
+)
+
+# The *served real model*: actually trained at build time (train.py) on the
+# synthetic corpus; quantized + compressed + evaluated end-to-end.
+E2E = ModelConfig(
+    name="e2e",
+    d_model=256,
+    n_layers=4,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=688,
+    vocab=512,
+    max_seq=192,
+    prefill_t=(32, 64, 128),
+    prefill_b=(1, 4),
+    decode_b=(1, 4),
+)
+
+# Architecture-faithful stand-ins for LLaMA-3.2-1B / 3B (see DESIGN.md for
+# the substitution argument). Used for Table 1 size scaling and latency
+# scaling; task skill is measured on `e2e`.
+PROXY_1B = ModelConfig(
+    name="proxy-1b",
+    d_model=512,
+    n_layers=8,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=1376,
+    vocab=4096,
+    max_seq=192,
+    prefill_t=(64, 128),
+    prefill_b=(1,),
+    decode_b=(1,),
+)
+
+PROXY_3B = ModelConfig(
+    name="proxy-3b",
+    d_model=768,
+    n_layers=12,
+    n_heads=12,
+    n_kv_heads=4,
+    d_ff=2064,
+    vocab=4096,
+    max_seq=192,
+    prefill_t=(64, 128),
+    prefill_b=(1,),
+    decode_b=(1,),
+)
+
+CONFIGS: dict[str, ModelConfig] = {
+    c.name: c for c in (TINY, E2E, PROXY_1B, PROXY_3B)
+}
+
+
+def get(name: str) -> ModelConfig:
+    try:
+        return CONFIGS[name]
+    except KeyError:
+        raise KeyError(f"unknown model config {name!r}; have {sorted(CONFIGS)}")

@@ -1,0 +1,193 @@
+"""SynthLang: the synthetic language standing in for the paper's corpora.
+
+The paper trains nothing (it quantizes pretrained LLaMA-3.2) but its
+evaluation needs (a) a model that is actually *good at something* so that
+quantization-induced accuracy loss is measurable, (b) MMLU/ARC-style
+multiple-choice tasks, and (c) a C4-style calibration stream for GPTQ.
+None of those assets are fetchable here (repro band 0), so we build a
+deterministic token-level language with three task families of graded
+difficulty:
+
+* ``arc-easy``   — ``Q k A f_e(k) SEP``: one key, one answer token.
+* ``arc-challenge`` — ``Q k1 k2 A f_c1(k1) f_c2(k2) SEP``: two keys whose
+  answers must be emitted in order.
+* ``mmlu``       — ``Q k1 k2 k3 A f_m1(k1) f_m2(k2) f_m3(k3) SEP``: three
+  keys; evaluated 5-shot like the paper's MMLU setting.
+
+Each ``f`` is an independent fixed random permutation of the key space, so
+the tasks are pure association learning: easy tasks get the most training
+mass and the fewest answer tokens, hard tasks the least mass and the most
+answer tokens — which yields the paper's accuracy ordering
+(ARC-Easy > ARC-Challenge > MMLU) on the trained ``e2e`` model.
+
+Everything is seeded and exported to ``artifacts/data/`` by ``aot.py``:
+the rust side never re-implements the generator, it just reads the files.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+
+import numpy as np
+
+# -- special tokens (shared contract with rust/src/data/) --------------------
+PAD, BOS, Q, A, SEP, EOS = 0, 1, 2, 3, 4, 5
+KEY_BASE = 16  # first key/value token id
+
+FAMILIES = ("arc-easy", "arc-challenge", "mmlu")
+N_KEYS_BY_FAMILY = {"arc-easy": 1, "arc-challenge": 2, "mmlu": 3}
+# training mixture mass: easier tasks see more data (=> higher accuracy)
+FAMILY_WEIGHTS = {"arc-easy": 0.55, "arc-challenge": 0.30, "mmlu": 0.15}
+# per-family key-space size: larger space + less mass = fewer observations
+# per association = lower accuracy. This is the difficulty dial that yields
+# the paper's ordering (ARC-Easy > ARC-Challenge > MMLU) on the trained
+# e2e model; values clamped to the vocab's available key space.
+FAMILY_KEY_SPACE = {"arc-easy": 48, "arc-challenge": 192, "mmlu": 352}
+
+
+def key_space(vocab: int) -> int:
+    """Number of key/value tokens for a given vocab size."""
+    return min(vocab - KEY_BASE, 448)
+
+
+@dataclass
+class SynthLang:
+    """Deterministic task-family definition for a given vocab size."""
+
+    vocab: int
+    seed: int = 1234
+
+    def __post_init__(self) -> None:
+        self.n_keys = key_space(self.vocab)
+        rng = np.random.default_rng(self.seed)
+        # one permutation per (family, answer slot)
+        self.tables: dict[str, list[np.ndarray]] = {}
+        for fam in FAMILIES:
+            k = N_KEYS_BY_FAMILY[fam]
+            self.tables[fam] = [rng.permutation(self.n_keys) for _ in range(k)]
+
+    # -- episode construction ------------------------------------------------
+    def answer_tokens(self, fam: str, keys: list[int]) -> list[int]:
+        tabs = self.tables[fam]
+        return [KEY_BASE + int(tabs[i][k]) for i, k in enumerate(keys)]
+
+    def episode(self, fam: str, keys: list[int]) -> list[int]:
+        """One `Q keys A answers SEP` episode (token ids)."""
+        toks = [Q] + [KEY_BASE + k for k in keys] + [A]
+        toks += self.answer_tokens(fam, keys)
+        toks.append(SEP)
+        return toks
+
+    def family_keys(self, fam: str) -> int:
+        """Effective key-space size for a family (difficulty dial)."""
+        return min(self.n_keys, FAMILY_KEY_SPACE[fam])
+
+    def sample_episode(self, fam: str, rng: np.random.Generator) -> list[int]:
+        n = N_KEYS_BY_FAMILY[fam]
+        nk = self.family_keys(fam)
+        keys = [int(rng.integers(0, nk)) for _ in range(n)]
+        return self.episode(fam, keys)
+
+    # -- corpus --------------------------------------------------------------
+    def corpus(self, n_tokens: int, seed: int) -> np.ndarray:
+        """A flat uint16 token stream of concatenated episodes."""
+        rng = np.random.default_rng(seed)
+        fams = list(FAMILY_WEIGHTS)
+        probs = np.array([FAMILY_WEIGHTS[f] for f in fams])
+        out: list[int] = [BOS]
+        while len(out) < n_tokens:
+            fam = fams[int(rng.choice(len(fams), p=probs))]
+            out.extend(self.sample_episode(fam, rng))
+        return np.asarray(out[:n_tokens], dtype=np.uint16)
+
+    # -- multiple-choice evaluation sets -------------------------------------
+    def question(
+        self, fam: str, rng: np.random.Generator, n_shots: int, n_options: int = 4
+    ) -> dict:
+        """One MC question: prompt tokens, options (token lists), answer idx.
+
+        The prompt ends right after the `A` marker; each option is the
+        candidate answer-token sequence. Distractors are *valid-looking*
+        answers for other randomly drawn keys, so a model that has not
+        learned the association scores near chance.
+        """
+        n = N_KEYS_BY_FAMILY[fam]
+        nk = self.family_keys(fam)
+        prompt: list[int] = [BOS]
+        for _ in range(n_shots):
+            prompt.extend(self.sample_episode(fam, rng))
+        keys = [int(rng.integers(0, nk)) for _ in range(n)]
+        prompt += [Q] + [KEY_BASE + k for k in keys] + [A]
+        correct = self.answer_tokens(fam, keys)
+        options = [correct]
+        seen = {tuple(correct)}
+        while len(options) < n_options:
+            dk = [int(rng.integers(0, nk)) for _ in range(n)]
+            cand = self.answer_tokens(fam, dk)
+            if tuple(cand) in seen:
+                continue
+            seen.add(tuple(cand))
+            options.append(cand)
+        order = rng.permutation(n_options)
+        shuffled = [options[i] for i in order]
+        answer_idx = int(np.argwhere(order == 0)[0, 0])
+        return {"prompt": prompt, "options": shuffled, "answer": answer_idx}
+
+    def eval_set(self, fam: str, n_questions: int, seed: int, n_shots: int) -> dict:
+        rng = np.random.default_rng(seed)
+        qs = [self.question(fam, rng, n_shots) for _ in range(n_questions)]
+        return {
+            "family": fam,
+            "n_shots": n_shots,
+            "vocab": self.vocab,
+            "n_keys": self.n_keys,
+            "questions": qs,
+        }
+
+
+# -- vocabulary display (for the generation demo) ----------------------------
+def token_name(tok: int) -> str:
+    special = {PAD: "<pad>", BOS: "<bos>", Q: "Q", A: "A", SEP: ";", EOS: "<eos>"}
+    if tok in special:
+        return special[tok]
+    if tok >= KEY_BASE:
+        return f"k{tok - KEY_BASE}"
+    return f"<r{tok}>"
+
+
+def vocab_table(vocab: int) -> list[str]:
+    return [token_name(t) for t in range(vocab)]
+
+
+def export_all(out_dir, vocab: int, seed: int = 1234) -> None:
+    """Write corpus/calibration/eval assets consumed by the rust side."""
+    import pathlib
+
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    lang = SynthLang(vocab=vocab, seed=seed)
+
+    lang.corpus(1 << 16, seed=seed + 1).tofile(out / "calib.bin")
+    lang.corpus(1 << 14, seed=seed + 2).tofile(out / "sample.bin")
+
+    evals = {
+        "mmlu": lang.eval_set("mmlu", 200, seed + 10, n_shots=5),
+        "arc-challenge": lang.eval_set("arc-challenge", 200, seed + 11, n_shots=0),
+        "arc-easy": lang.eval_set("arc-easy", 200, seed + 12, n_shots=0),
+    }
+    for name, es in evals.items():
+        (out / f"eval_{name}.json").write_text(json.dumps(es))
+    (out / "vocab.json").write_text(json.dumps(vocab_table(vocab)))
+    (out / "lang.json").write_text(
+        json.dumps(
+            {
+                "vocab": vocab,
+                "n_keys": lang.n_keys,
+                "seed": seed,
+                "families": {f: N_KEYS_BY_FAMILY[f] for f in FAMILIES},
+                "special": {"pad": PAD, "bos": BOS, "q": Q, "a": A, "sep": SEP, "eos": EOS},
+                "key_base": KEY_BASE,
+            }
+        )
+    )

@@ -1,0 +1,86 @@
+"""Causal cache-attention as a Pallas kernel (flash-style online softmax).
+
+One grid program per (batch, head); inside, the key/value cache is walked
+in bk-sized column blocks with the standard streaming-softmax recurrence
+(running max m, denominator l, weighted accumulator acc), so the VMEM
+working set is O(T*Dh + bk*Dh) instead of O(T*S). This is the TPU
+restatement of FlashAttention's threadblock loop (DESIGN.md
+§Hardware-Adaptation).
+
+The cache is padded to capacity S; masking uses absolute positions:
+query i (absolute pos_base + i) may see cache row j iff
+j <= pos_base + i and j < kv_len. GQA head mapping (q head -> kv head) is
+done by the BlockSpec index maps, so the kernel itself is head-agnostic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant_matmul import pick_block
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, s: int, bk: int, t: int, dh: int):
+    q = q_ref[0, 0]  # f32[T, Dh]
+    pos_base = pos_ref[0]
+    kv_len = pos_base + t
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    qpos = pos_base + jax.lax.iota(jnp.int32, t)[:, None]  # [T,1]
+
+    n_blocks = s // bk
+
+    def body(bi, carry):
+        m_prev, l_prev, acc = carry
+        kblk = jax.lax.dynamic_slice(k_ref[0, 0], (bi * bk, 0), (bk, dh))
+        vblk = jax.lax.dynamic_slice(v_ref[0, 0], (bi * bk, 0), (bk, dh))
+        jpos = bi * bk + jax.lax.iota(jnp.int32, bk)[None, :]  # [1,bk]
+        scores = (q @ kblk.T) * scale  # [T,bk]
+        mask = (jpos <= qpos) & (jpos < kv_len)
+        scores = jnp.where(mask, scores, jnp.float32(-1e30))
+        m_cur = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+        p = jnp.exp(scores - m_cur)  # [T,bk]
+        alpha = jnp.exp(m_prev - m_cur)  # [T,1]
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + p @ vblk
+        return m_cur, l_cur, acc
+
+    init = (
+        jnp.full((t, 1), -1e30, jnp.float32),
+        jnp.zeros((t, 1), jnp.float32),
+        jnp.zeros((t, dh), jnp.float32),
+    )
+    _, l_fin, acc = jax.lax.fori_loop(0, n_blocks, body, init)
+    o_ref[0, 0] = acc / jnp.maximum(l_fin, 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("n_kv_heads", "bk"))
+def attention(q, k, v, pos, *, n_kv_heads: int, bk: int = 128):
+    """Grouped-query causal attention against a padded KV cache.
+
+    q:   f32[B, H, T, Dh]
+    k,v: f32[B, KV, S, Dh]  (padded cache; valid rows < pos[b] + T)
+    pos: i32[B]             absolute position of q[:, :, 0] per batch row
+    returns f32[B, H, T, Dh]
+    """
+    b, h, t, dh = q.shape
+    _, kv, s, _ = k.shape
+    assert kv == n_kv_heads and h % kv == 0
+    group = h // kv
+    bk = pick_block(s, bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, s=s, bk=bk, t=t, dh=dh),
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi: (bi,)),
+            pl.BlockSpec((1, 1, t, dh), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s, dh), lambda bi, hi: (bi, hi // group, 0, 0)),
+            pl.BlockSpec((1, 1, s, dh), lambda bi, hi: (bi, hi // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, t, dh), lambda bi, hi: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, dh), jnp.float32),
+        interpret=True,
+    )(pos, q, k, v)

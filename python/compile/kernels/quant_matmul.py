@@ -1,0 +1,102 @@
+"""Fused dequantize-matmul — the paper's inference hot spot as a Pallas kernel.
+
+Tiny-QMoE's decode loop is dominated by `activation @ dequant(Wq)` GEMV/GEMM
+over 8-bit weights. The paper implements this as cache-blocked CPU loops;
+the TPU adaptation (DESIGN.md §Hardware-Adaptation) expresses the same
+blocking with a Pallas grid:
+
+  * grid = (M/bm, N/bn, K/bk); each (i, j) program owns an output tile
+    y[bm, bn] and accumulates over the K dimension in an f32 VMEM scratch;
+  * the u8 weight tile is staged HBM->VMEM by BlockSpec, dequantized on the
+    VPU (`(wq - zero) * scale`, per-output-channel affine), and fed to the
+    MXU-shaped `jnp.dot` in f32;
+  * keeping weights u8 until the VMEM stage is the point: HBM traffic per
+    weight is 1 byte, exactly the paper's bandwidth argument for quantized
+    inference.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so both correctness and the HLO the rust runtime loads come
+from the interpret path; TPU performance is *estimated* from the BlockSpec
+footprint in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, wq_ref, scale_ref, zero_ref, o_ref, acc_ref, *, n_k: int):
+    """One (m, n, k) grid step: acc += x_tile @ dequant(w_tile)."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]  # f32[bm, bk]
+    wq = wq_ref[...].astype(jnp.float32)  # u8 -> f32 [bk, bn]
+    w = (wq - zero_ref[...][None, :]) * scale_ref[...][None, :]
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+def pick_block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target (keeps the grid exact)."""
+    b = max(1, min(dim, target))
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def vmem_bytes(m: int, k: int, n: int, bm: int, bn: int, bk: int) -> int:
+    """Estimated per-program VMEM footprint — the §Perf sizing signal."""
+    bm, bn, bk = pick_block(m, bm), pick_block(n, bn), pick_block(k, bk)
+    return 4 * bm * bk + bk * bn + 2 * 4 * bn + 2 * 4 * bm * bn
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def quant_matmul(x, wq, scale, zero, *, bm: int = 128, bn: int = 128, bk: int = 512):
+    """y[M,N] = x[M,K] @ ((wq[K,N] - zero[N]) * scale[N]), fused in VMEM.
+
+    Block sizes are clamped to divisors of the problem dims so the grid is
+    exact (no masking); defaults are MXU-shaped (128x128 output tiles;
+    bk=512 keeps the u8 weight tile at 64 KiB and the x tile at 256 KiB).
+    """
+    m, k = x.shape
+    k2, n = wq.shape
+    assert k == k2, (x.shape, wq.shape)
+    assert scale.shape == (n,) and zero.shape == (n,), (scale.shape, zero.shape, n)
+    bm = pick_block(m, bm)
+    bn = pick_block(n, bn)
+    bk = pick_block(k, bk)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pl.ANY((bm, bn), jnp.float32)]
+        if hasattr(pl, "ANY")
+        else [_vmem_scratch((bm, bn))],
+        interpret=True,
+    )(x, wq, scale, zero)
+
+
+def _vmem_scratch(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here with the
+*identical* signature; pytest asserts allclose between the two across a
+hypothesis-driven shape sweep (python/tests/test_kernels.py). The reference
+path is also what `train.py` differentiates through (pallas_call has no
+registered VJP here), so ref == kernel is the correctness keystone of the
+whole stack.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dequant(wq, scale, zero):
+    """f32 weights from u8 codes; scale/zero broadcast over the last axis."""
+    return (wq.astype(jnp.float32) - zero) * scale
+
+
+def quant_matmul(x, wq, scale, zero):
+    """y = x @ dequant(wq) with per-output-channel affine dequantization.
+
+    x:     f32[M, K]
+    wq:    u8 [K, N]   quantized weights
+    scale: f32[N]      per-output-channel scale
+    zero:  f32[N]      per-output-channel zero point (in code units)
+    returns f32[M, N] = x @ ((wq - zero) * scale)
+    """
+    w = (wq.astype(jnp.float32) - zero[None, :]) * scale[None, :]
+    return x @ w
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    """LLaMA RMSNorm over the last axis. x: f32[..., D], w: f32[D]."""
+    x = x.astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * w
+
+
+def softmax(x, axis: int = -1):
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def attention(q, k, v, pos_base, kv_len):
+    """Causal attention for one (batch, head) slice against a padded cache.
+
+    q:        f32[T, Dh]   queries for absolute positions pos_base..pos_base+T-1
+    k, v:     f32[S, Dh]   key/value cache; rows >= kv_len are padding
+    pos_base: i32 scalar   absolute position of q[0]
+    kv_len:   i32 scalar   number of valid cache rows (== pos_base + T)
+    returns   f32[T, Dh]
+
+    Masking: query i attends to cache row j iff j <= pos_base + i and
+    j < kv_len. (kv_len duplicates the causal bound during prefill; for
+    decode with T == 1 it is the live constraint.)
+    """
+    t, dh = q.shape
+    s = k.shape[0]
+    scores = (q @ k.T) * (1.0 / jnp.sqrt(jnp.float32(dh)))  # [T, S]
+    qpos = pos_base + jnp.arange(t)[:, None]
+    jpos = jnp.arange(s)[None, :]
+    mask = (jpos <= qpos) & (jpos < kv_len)
+    scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    return softmax(scores) @ v

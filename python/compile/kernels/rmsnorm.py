@@ -1,0 +1,41 @@
+"""RMSNorm as a Pallas kernel.
+
+Small but on the hot path twice per block; grid over row-tiles so the VMEM
+working set is (bm, D) regardless of sequence length. D for all configs is
+<= 768 so a full row always fits.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant_matmul import pick_block
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # [bm, D]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x * (1.0 / jnp.sqrt(ms + eps)) * w_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "bm"))
+def rmsnorm(x, w, eps: float = 1e-5, bm: int = 128):
+    """x: f32[M, D], w: f32[D] -> f32[M, D] (LLaMA RMSNorm)."""
+    m, d = x.shape
+    assert w.shape == (d,)
+    bm = pick_block(m, bm)
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=True,
+    )(x, w)

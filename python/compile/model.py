@@ -1,0 +1,374 @@
+"""L2: LLaMA-3.2-style decoder in JAX, quantization-aware, kernel-backed.
+
+Three *stage* functions are what `aot.py` lowers to HLO for the rust
+runtime — the rust coordinator drives the layer loop so that weights can be
+decompressed per layer (the paper's inference contribution):
+
+  embed_stage   tokens + quantized embedding table          -> hidden
+  block_stage   hidden + one layer's quantized weights + KV -> hidden', KV'
+  final_stage   hidden + final norm + quantized LM head     -> logits
+
+All weight matrices are stored **[in, out]** and quantized per *output*
+channel (scale/zero are f32[out]); the embedding table is [vocab, d] and
+quantized per *row*. Norm vectors stay f32 (they are O(d) bytes; the
+paper's Listing 1 quantizes them too, which buys nothing — deviation noted
+in DESIGN.md).
+
+`full_forward_f32` is the pure-f32 training/eval path used by train.py and
+as the numerical oracle for stage composition (python/tests/test_model.py).
+
+Stage argument ORDER is a binary contract with rust/src/model/ — change it
+only together with the manifest version in aot.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import attention as attn_k
+from .kernels import quant_matmul as qmm_k
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# helpers
+
+
+def _linear(x2d, w, use_pallas: bool):
+    """x2d f32[M,K] @ weight. `w` is f32[K,N] or a (u8[K,N], s[N], z[N]) triple."""
+    if isinstance(w, tuple):
+        wq, s, z = w
+        if use_pallas:
+            return qmm_k.quant_matmul(x2d, wq, s, z)
+        return kref.quant_matmul(x2d, wq, s, z)
+    return x2d @ w
+
+
+def _rmsnorm(x2d, w, eps, use_pallas: bool):
+    if use_pallas:
+        from .kernels import rmsnorm as rn_k
+
+        return rn_k.rmsnorm(x2d, w, eps=eps)
+    return kref.rmsnorm(x2d, w, eps=eps)
+
+
+def rope_tables(positions, head_dim: int, theta: float):
+    """cos/sin tables for absolute `positions` i32[...] -> f32[..., Dh/2]."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) * 2.0 / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq  # [..., half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """LLaMA half-rotation. x f32[..., H, Dh]; cos/sin broadcastable [..., 1, Dh/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# stages (lowered to HLO by aot.py)
+
+
+def embed_stage(tokens, table, scale, zero):
+    """tokens i32[B,T]; table u8[V,D]; scale/zero f32[V] -> f32[B,T,D]."""
+    rows = jnp.take(table, tokens, axis=0).astype(jnp.float32)  # [B,T,D]
+    s = jnp.take(scale, tokens, axis=0)[..., None]
+    z = jnp.take(zero, tokens, axis=0)[..., None]
+    return (rows - z) * s
+
+
+# Per-layer quantized weight order — THE contract with rust/src/model/layer.rs.
+# Each matrix entry contributes three stage args: codes u8, scale f32, zero f32.
+LAYER_WEIGHT_ORDER = (
+    "ln1",  # f32[D]
+    "wq",  # u8[D, D]
+    "wk",  # u8[D, KVD]
+    "wv",  # u8[D, KVD]
+    "wo",  # u8[D, D]
+    "ln2",  # f32[D]
+    "w1",  # u8[D, F]   gate
+    "w3",  # u8[D, F]   up
+    "w2",  # u8[F, D]   down
+)
+MATRIX_NAMES = tuple(n for n in LAYER_WEIGHT_ORDER if not n.startswith("ln"))
+
+
+def flatten_layer_weights(lw: dict[str, Any]) -> list:
+    """dict -> flat stage-arg list following LAYER_WEIGHT_ORDER."""
+    flat: list = []
+    for name in LAYER_WEIGHT_ORDER:
+        w = lw[name]
+        if isinstance(w, tuple):
+            flat.extend(w)
+        else:
+            flat.append(w)
+    return flat
+
+
+def _unflatten_layer_weights(args: tuple) -> dict[str, Any]:
+    lw: dict[str, Any] = {}
+    i = 0
+    for name in LAYER_WEIGHT_ORDER:
+        if name.startswith("ln"):
+            lw[name] = args[i]
+            i += 1
+        else:
+            lw[name] = (args[i], args[i + 1], args[i + 2])
+            i += 3
+    assert i == len(args), (i, len(args))
+    return lw
+
+
+def block_stage(cfg: ModelConfig, use_pallas: bool, h, k_cache, v_cache, pos, *wargs):
+    """One decoder block against a padded KV cache.
+
+    h:       f32[B, T, D]   (T == 1 for decode, a prompt bucket for prefill)
+    k_cache: f32[B, KV, S, Dh]; v_cache same. Rows >= pos[b] + T are stale.
+    pos:     i32[B]         absolute position of h[:, 0] per batch row
+    *wargs:  flattened per-layer weights (see LAYER_WEIGHT_ORDER)
+    returns (h', k_cache', v_cache')
+    """
+    lw = _unflatten_layer_weights(wargs)
+    return _block_impl(cfg, use_pallas, h, k_cache, v_cache, pos, lw)
+
+
+def _block_impl(cfg: ModelConfig, use_pallas: bool, h, k_cache, v_cache, pos, lw):
+    b, t, d = h.shape
+    hd, kv = cfg.head_dim, cfg.n_kv_heads
+    x2 = h.reshape(b * t, d)
+
+    a = _rmsnorm(x2, lw["ln1"], cfg.norm_eps, use_pallas)
+    q = _linear(a, lw["wq"], use_pallas).reshape(b, t, cfg.n_heads, hd)
+    k = _linear(a, lw["wk"], use_pallas).reshape(b, t, kv, hd)
+    v = _linear(a, lw["wv"], use_pallas).reshape(b, t, kv, hd)
+
+    positions = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]  # [B,T]
+    cos, sin = rope_tables(positions, hd, cfg.rope_theta)  # [B,T,Dh/2]
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    # cache update at per-row offsets: new [B,T,KV,Dh] -> cache [B,KV,S,Dh]
+    k_t = k.transpose(0, 2, 1, 3)
+    v_t = v.transpose(0, 2, 1, 3)
+    upd = jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (0, p, 0)),
+        in_axes=(0, 0, 0),
+    )
+    k_cache = upd(k_cache, k_t, pos)
+    v_cache = upd(v_cache, v_t, pos)
+
+    qh = q.transpose(0, 2, 1, 3)  # [B,H,T,Dh]
+    if use_pallas:
+        o = attn_k.attention(qh, k_cache, v_cache, pos, n_kv_heads=kv)
+    else:
+        group = cfg.n_heads // kv
+
+        def one(bq, bk, bv, p):
+            return jnp.stack(
+                [
+                    kref.attention(bq[hi], bk[hi // group], bv[hi // group], p, p + t)
+                    for hi in range(cfg.n_heads)
+                ],
+                axis=0,
+            )
+
+        o = jax.vmap(one, in_axes=(0, 0, 0, 0))(qh, k_cache, v_cache, pos)
+    o = o.transpose(0, 2, 1, 3).reshape(b * t, d)
+    h = h + _linear(o, lw["wo"], use_pallas).reshape(b, t, d)
+
+    a2 = _rmsnorm(h.reshape(b * t, d), lw["ln2"], cfg.norm_eps, use_pallas)
+    gate = _linear(a2, lw["w1"], use_pallas)
+    up = _linear(a2, lw["w3"], use_pallas)
+    mlp = _linear(jax.nn.silu(gate) * up, lw["w2"], use_pallas)
+    h = h + mlp.reshape(b, t, d)
+    return h, k_cache, v_cache
+
+
+def final_stage(cfg: ModelConfig, use_pallas: bool, h, norm, head_triple):
+    """h f32[B,T,D]; head u8[D,V] + per-column scale/zero -> logits f32[B,T,V]."""
+    b, t, d = h.shape
+    a = _rmsnorm(h.reshape(b * t, d), norm, cfg.norm_eps, use_pallas)
+    logits = _linear(a, head_triple, use_pallas)
+    return logits.reshape(b, t, -1)
+
+
+def make_stage_fns(cfg: ModelConfig, use_pallas: bool = True):
+    """Closures with static config baked in — what aot.py lowers."""
+    return {
+        "embed": embed_stage,
+        "block": functools.partial(block_stage, cfg, use_pallas),
+        "final": lambda h, norm, head, scale, zero: final_stage(
+            cfg, use_pallas, h, norm, (head, scale, zero)
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# fp32 stage variants — the unquantized baseline rows of Tables 2-4 run on
+# the SAME runtime (same stage structure, f32 weight args instead of
+# quantized triples), so latency differences measure quantization +
+# decompression, not a framework change.
+
+
+def embed_stage_f32(tokens, table):
+    """tokens i32[B,T]; table f32[V,D] -> f32[B,T,D]."""
+    return jnp.take(table, tokens, axis=0)
+
+
+def block_stage_f32(cfg: ModelConfig, h, k_cache, v_cache, pos, *wargs):
+    """Same as block_stage but wargs are 9 f32 arrays (LAYER_WEIGHT_ORDER)."""
+    assert len(wargs) == len(LAYER_WEIGHT_ORDER)
+    lw = dict(zip(LAYER_WEIGHT_ORDER, wargs))
+    return _block_impl(cfg, False, h, k_cache, v_cache, pos, lw)
+
+
+def final_stage_f32(cfg: ModelConfig, h, norm, head):
+    return final_stage(cfg, False, h, norm, head)
+
+
+def make_stage_fns_f32(cfg: ModelConfig):
+    return {
+        "embed_f32": embed_stage_f32,
+        "block_f32": functools.partial(block_stage_f32, cfg),
+        "final_f32": functools.partial(final_stage_f32, cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# pure-f32 whole-model forward (training + stage-composition oracle)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """Standard scaled-normal init, [in, out] layout everywhere."""
+    d, f, v, kvd = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.kv_dim
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+
+    def dense(k, din, dout):
+        return (jax.random.normal(k, (din, dout), jnp.float32) / jnp.sqrt(din)).astype(
+            jnp.float32
+        )
+
+    layers = []
+    for i in range(cfg.n_layers):
+        ks = jax.random.split(keys[2 + i], 7)
+        layers.append(
+            {
+                "ln1": jnp.ones((d,), jnp.float32),
+                "wq": dense(ks[0], d, d),
+                "wk": dense(ks[1], d, kvd),
+                "wv": dense(ks[2], d, kvd),
+                "wo": dense(ks[3], d, d),
+                "ln2": jnp.ones((d,), jnp.float32),
+                "w1": dense(ks[4], d, f),
+                "w3": dense(ks[5], d, f),
+                "w2": dense(ks[6], f, d),
+            }
+        )
+    return {
+        "embed": jax.random.normal(keys[0], (v, d), jnp.float32) * 0.02,
+        "layers": layers,
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "head": dense(keys[1], d, v),
+    }
+
+
+def full_forward_f32(cfg: ModelConfig, params: dict, tokens):
+    """tokens i32[B,T] -> logits f32[B,T,V]; plain causal self-attention."""
+    b, t = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)
+    hd, kv = cfg.head_dim, cfg.n_kv_heads
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    cos, sin = rope_tables(positions, hd, cfg.rope_theta)
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    group = cfg.n_heads // kv
+    for lw in params["layers"]:
+        x2 = h.reshape(b * t, -1)
+        a = kref.rmsnorm(x2, lw["ln1"], cfg.norm_eps)
+        q = (a @ lw["wq"]).reshape(b, t, cfg.n_heads, hd)
+        k = (a @ lw["wk"]).reshape(b, t, kv, hd)
+        v = (a @ lw["wv"]).reshape(b, t, kv, hd)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+        q = q.transpose(0, 2, 1, 3)  # [B,H,T,Dh]
+        k = jnp.repeat(k.transpose(0, 2, 1, 3), group, axis=1)
+        v = jnp.repeat(v.transpose(0, 2, 1, 3), group, axis=1)
+        scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(jnp.float32(hd))
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        scores = jnp.where(mask[None, None], scores, jnp.float32(-1e30))
+        o = jnp.einsum("bhts,bhsd->bhtd", kref.softmax(scores), v)
+        o = o.transpose(0, 2, 1, 3).reshape(b * t, -1)
+        h = h + (o @ lw["wo"]).reshape(b, t, -1)
+        a2 = kref.rmsnorm(h.reshape(b * t, -1), lw["ln2"], cfg.norm_eps)
+        mlp = (jax.nn.silu(a2 @ lw["w1"]) * (a2 @ lw["w3"])) @ lw["w2"]
+        h = h + mlp.reshape(b, t, -1)
+    a = kref.rmsnorm(h.reshape(b * t, -1), params["final_norm"], cfg.norm_eps)
+    return (a @ params["head"]).reshape(b, t, -1)
+
+
+# ---------------------------------------------------------------------------
+# quantization mirror (python side, used by tests + aot smoke checks; the
+# production quantizer is rust/src/quant/ — semantics must match EXACTLY)
+
+
+def quantize_tensor(w, bits: int = 8, axis: int = 1):
+    """Asymmetric uniform quantization per channel along `axis` (paper §3).
+
+    Returns (codes u8, scale f32[ch], zero f32[ch]) with
+    dequant = (codes - zero) * scale; zero is the *rounded* code offset,
+    matching the paper's Listing 1 (`zero = round(-xmin / scale)`).
+    min/max are clamped to include 0 so that zero is always a valid code.
+    """
+    maxq = float(2**bits - 1)
+    other = 1 - axis
+    xmin = jnp.minimum(w.min(axis=other), 0.0)
+    xmax = jnp.maximum(w.max(axis=other), 0.0)
+    scale = (xmax - xmin) / maxq
+    scale = jnp.where(scale <= 1e-12, 1.0, scale)
+    zero = jnp.round(-xmin / scale)
+    if axis == 1:
+        s, z = scale[None, :], zero[None, :]
+    else:
+        s, z = scale[:, None], zero[:, None]
+    q = jnp.clip(jnp.round(w / s) + z, 0.0, maxq).astype(jnp.uint8)
+    return q, scale.astype(jnp.float32), zero.astype(jnp.float32)
+
+
+def quantize_params(cfg: ModelConfig, params: dict, bits: int = 8) -> dict:
+    """f32 param tree -> quantized tree (triples for matrices, f32 norms)."""
+    out: dict = {
+        "embed": quantize_tensor(params["embed"], bits, axis=0),
+        "final_norm": params["final_norm"],
+        "head": quantize_tensor(params["head"], bits, axis=1),
+        "layers": [],
+    }
+    for lw in params["layers"]:
+        qlw: dict[str, Any] = {"ln1": lw["ln1"], "ln2": lw["ln2"]}
+        for name in MATRIX_NAMES:
+            qlw[name] = quantize_tensor(lw[name], bits, axis=1)
+        out["layers"].append(qlw)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# staged forward (python-side composition that mirrors the rust pipeline)
+
+
+def staged_forward(cfg: ModelConfig, qparams: dict, tokens, use_pallas: bool):
+    """Compose the three stages exactly as the rust pipeline does (prefill)."""
+    b, t = tokens.shape
+    s, kv, hd = cfg.max_seq, cfg.n_kv_heads, cfg.head_dim
+    h = embed_stage(tokens, *qparams["embed"])
+    pos = jnp.zeros((b,), jnp.int32)
+    for lw in qparams["layers"]:
+        kc = jnp.zeros((b, kv, s, hd), jnp.float32)
+        vc = jnp.zeros((b, kv, s, hd), jnp.float32)
+        h, _, _ = block_stage(
+            cfg, use_pallas, h, kc, vc, pos, *flatten_layer_weights(lw)
+        )
+    return final_stage(cfg, use_pallas, h, qparams["final_norm"], qparams["head"])

@@ -1,0 +1,71 @@
+"""TQW — the tiny-qmoe *weight interchange* format (python writer side).
+
+A deliberately boring little-endian binary container that carries named f32
+tensors from the python build step to the rust toolchain (which quantizes,
+compresses and re-packages them as `.tqm`). Layout:
+
+    magic   b"TQW1"
+    u32     n_tensors
+    repeated n_tensors times:
+        u16     name_len
+        bytes   name (utf-8)
+        u8      dtype  (0 = f32, 1 = u8, 2 = i32)
+        u8      ndim
+        u32*ndim dims
+        bytes   raw data, C-order, little-endian
+
+The rust reader lives in `rust/src/tensor/io.rs`; keep the two in lockstep.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"TQW1"
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.uint8): 1, np.dtype(np.int32): 2}
+_DTYPES_INV = {v: k for k, v in _DTYPES.items()}
+
+
+def write(path, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPES:
+                arr = arr.astype(np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read(path) -> dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:4] == MAGIC, f"bad magic in {path}"
+    off = 4
+    (n,) = struct.unpack_from("<I", data, off)
+    off += 4
+    out: dict[str, np.ndarray] = {}
+    for _ in range(n):
+        (nl,) = struct.unpack_from("<H", data, off)
+        off += 2
+        name = data[off : off + nl].decode("utf-8")
+        off += nl
+        dt, nd = struct.unpack_from("<BB", data, off)
+        off += 2
+        dims = struct.unpack_from(f"<{nd}I", data, off)
+        off += 4 * nd
+        dtype = _DTYPES_INV[dt]
+        count = int(np.prod(dims)) if nd else 1
+        nbytes = count * dtype.itemsize
+        arr = np.frombuffer(data[off : off + nbytes], dtype=dtype).reshape(dims)
+        off += nbytes
+        out[name] = arr
+    return out

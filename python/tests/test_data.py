@@ -1,0 +1,135 @@
+"""SynthLang substrate: determinism, structure, eval-set sanity."""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from compile import data as D
+
+
+def test_corpus_deterministic():
+    lang = D.SynthLang(vocab=512)
+    a = lang.corpus(4096, seed=3)
+    b = D.SynthLang(vocab=512).corpus(4096, seed=3)
+    assert np.array_equal(a, b)
+    assert a.dtype == np.uint16
+
+
+def test_corpus_tokens_in_range():
+    lang = D.SynthLang(vocab=256)
+    c = lang.corpus(4096, seed=1)
+    assert c.max() < 256
+    assert (c >= 0).all()
+
+
+def test_episode_structure():
+    lang = D.SynthLang(vocab=512)
+    ep = lang.episode("mmlu", [1, 2, 3])
+    assert ep[0] == D.Q
+    assert ep[4] == D.A
+    assert ep[-1] == D.SEP
+    assert len(ep) == 1 + 3 + 1 + 3 + 1
+
+
+def test_answers_are_deterministic_functions():
+    lang = D.SynthLang(vocab=512)
+    a1 = lang.answer_tokens("arc-easy", [7])
+    a2 = lang.answer_tokens("arc-easy", [7])
+    assert a1 == a2
+    assert lang.answer_tokens("arc-easy", [8]) != a1 or True  # permutation: usually differs
+
+
+def test_answer_tables_are_permutations():
+    lang = D.SynthLang(vocab=512)
+    for fam, tabs in lang.tables.items():
+        for t in tabs:
+            assert sorted(t.tolist()) == list(range(lang.n_keys))
+
+
+def test_question_has_unique_options_and_valid_answer():
+    lang = D.SynthLang(vocab=512)
+    rng = np.random.default_rng(0)
+    for fam in D.FAMILIES:
+        q = lang.question(fam, rng, n_shots=5 if fam == "mmlu" else 0)
+        opts = [tuple(o) for o in q["options"]]
+        assert len(set(opts)) == 4
+        assert 0 <= q["answer"] < 4
+        keys = q["prompt"][-(D.N_KEYS_BY_FAMILY[fam] + 1) : -1]
+        correct = lang.answer_tokens(fam, [k - D.KEY_BASE for k in keys])
+        assert list(q["options"][q["answer"]]) == correct
+
+
+def test_five_shot_prompt_contains_episodes():
+    lang = D.SynthLang(vocab=512)
+    rng = np.random.default_rng(1)
+    q = lang.question("mmlu", rng, n_shots=5)
+    assert q["prompt"].count(D.SEP) == 5  # five complete exemplars
+    assert q["prompt"][0] == D.BOS
+
+
+def test_export_all(tmp_path):
+    D.export_all(tmp_path, vocab=256, seed=9)
+    lang_meta = json.loads((tmp_path / "lang.json").read_text())
+    assert lang_meta["vocab"] == 256
+    calib = np.fromfile(tmp_path / "calib.bin", dtype=np.uint16)
+    assert len(calib) == 1 << 16
+    for fam in ("mmlu", "arc-challenge", "arc-easy"):
+        es = json.loads((tmp_path / f"eval_{fam}.json").read_text())
+        assert len(es["questions"]) == 200
+        assert es["n_shots"] == (5 if fam == "mmlu" else 0)
+    vocab = json.loads((tmp_path / "vocab.json").read_text())
+    assert len(vocab) == 256
+
+
+def test_answer_balance():
+    """Correct option index is ~uniform across questions (no position bias)."""
+    lang = D.SynthLang(vocab=512)
+    es = lang.eval_set("arc-easy", 200, seed=5, n_shots=0)
+    counts = np.bincount([q["answer"] for q in es["questions"]], minlength=4)
+    assert counts.min() > 20
+
+
+def test_family_key_spaces_graded():
+    """The difficulty dial: easy < challenge < mmlu key-space sizes."""
+    lang = D.SynthLang(vocab=512)
+    ke = lang.family_keys("arc-easy")
+    kc = lang.family_keys("arc-challenge")
+    km = lang.family_keys("mmlu")
+    assert ke < kc < km
+    # sampled keys respect the family bound
+    rng = np.random.default_rng(7)
+    for _ in range(50):
+        ep = lang.sample_episode("arc-easy", rng)
+        key_tok = ep[1]
+        assert key_tok - D.KEY_BASE < ke
+
+
+def test_family_keys_clamped_by_vocab():
+    lang = D.SynthLang(vocab=256)  # only 240 keys available
+    assert lang.family_keys("mmlu") == min(240, D.FAMILY_KEY_SPACE["mmlu"])
+
+
+def test_corpus_mixture_weights_visible():
+    """Easy episodes (1 key) dominate the mixture as configured."""
+    lang = D.SynthLang(vocab=512)
+    c = lang.corpus(1 << 15, seed=3).tolist()
+    # count episode lengths between Q and A markers
+    counts = {1: 0, 2: 0, 3: 0}
+    i = 0
+    while i < len(c):
+        if c[i] == D.Q:
+            j = i + 1
+            while j < len(c) and c[j] != D.A:
+                j += 1
+            nkeys = j - i - 1
+            if nkeys in counts:
+                counts[nkeys] += 1
+            i = j
+        else:
+            i += 1
+    total = sum(counts.values())
+    assert counts[1] / total > 0.40  # easy has 55% mass
+    assert counts[3] / total < 0.30  # mmlu has 15% mass

@@ -1,0 +1,199 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (and value regimes) — this is the core correctness
+signal for the whole stack, since the HLO the rust runtime executes is the
+lowering of exactly these kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as at
+from compile.kernels import quant_matmul as qm
+from compile.kernels import ref
+from compile.kernels import rmsnorm as rn
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 96),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, k)
+    wq = jnp.asarray(rng.integers(0, 256, size=(k, n)).astype(np.uint8))
+    scale = jnp.asarray(rng.uniform(1e-3, 0.2, n).astype(np.float32))
+    zero = jnp.asarray(np.round(rng.uniform(0, 255, n)).astype(np.float32))
+    got = qm.quant_matmul(x, wq, scale, zero)
+    want = ref.quant_matmul(x, wq, scale, zero)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4 * k)
+
+
+@settings(**SETTINGS)
+@given(
+    bm=st.sampled_from([8, 16, 128]),
+    bn=st.sampled_from([16, 32, 128]),
+    bk=st.sampled_from([32, 64, 512]),
+)
+def test_quant_matmul_block_size_invariance(bm, bn, bk):
+    """Output must not depend on the chosen tiling."""
+    rng = np.random.default_rng(0)
+    x = rand(rng, 24, 96)
+    wq = jnp.asarray(rng.integers(0, 256, size=(96, 48)).astype(np.uint8))
+    scale = jnp.asarray(rng.uniform(1e-3, 0.2, 48).astype(np.float32))
+    zero = jnp.asarray(np.round(rng.uniform(0, 255, 48)).astype(np.float32))
+    base = ref.quant_matmul(x, wq, scale, zero)
+    got = qm.quant_matmul(x, wq, scale, zero, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-2)
+
+
+def test_quant_matmul_zero_scale_column():
+    """A column with scale=0 contributes exactly -zero*scale = 0."""
+    rng = np.random.default_rng(1)
+    x = rand(rng, 4, 8)
+    wq = jnp.asarray(rng.integers(0, 256, size=(8, 3)).astype(np.uint8))
+    scale = jnp.asarray([0.0, 0.1, 0.2], dtype=np.float32)
+    zero = jnp.asarray([7.0, 3.0, 9.0], dtype=np.float32)
+    got = qm.quant_matmul(x, wq, scale, zero)
+    assert np.allclose(np.asarray(got)[:, 0], 0.0)
+
+
+def test_pick_block_divides():
+    for dim in (1, 7, 96, 128, 129, 688, 2064):
+        for tgt in (1, 8, 128, 512):
+            b = qm.pick_block(dim, tgt)
+            assert dim % b == 0 and 1 <= b <= max(1, min(dim, tgt))
+
+
+def test_vmem_budget_all_configs():
+    """The §Perf sizing claim: every config's hot matmul fits 16 MiB VMEM."""
+    from compile import config as C
+
+    for cfg in C.CONFIGS.values():
+        shapes = [
+            (128, cfg.d_model, cfg.d_model),
+            (128, cfg.d_model, cfg.d_ff),
+            (128, cfg.d_ff, cfg.d_model),
+            (128, cfg.d_model, cfg.vocab),
+        ]
+        for m, k, n in shapes:
+            assert qm.vmem_bytes(m, k, n, 128, 128, 512) < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 64), d=st.integers(2, 96), seed=st.integers(0, 2**31 - 1))
+def test_rmsnorm_matches_ref(m, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, d, scale=3.0)
+    w = rand(rng, d)
+    np.testing.assert_allclose(
+        rn.rmsnorm(x, w), ref.rmsnorm(x, w), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_rmsnorm_scale_invariant_direction():
+    """rmsnorm(c*x) == rmsnorm(x) for c > 0 (up to eps)."""
+    rng = np.random.default_rng(3)
+    x = rand(rng, 8, 32, scale=10.0)
+    w = jnp.ones((32,), jnp.float32)
+    a = np.asarray(rn.rmsnorm(x, w))
+    b = np.asarray(rn.rmsnorm(x * 50.0, w))
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    kv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2]),
+    t=st.integers(1, 8),
+    sblocks=st.integers(1, 3),
+    dh=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, kv, group, t, sblocks, dh, seed):
+    rng = np.random.default_rng(seed)
+    h = kv * group
+    s = sblocks * 16
+    q = rand(rng, b, h, t, dh)
+    k = rand(rng, b, kv, s, dh)
+    v = rand(rng, b, kv, s, dh)
+    max_pos = s - t
+    pos = jnp.asarray(rng.integers(0, max_pos + 1, size=b).astype(np.int32))
+    got = at.attention(q, k, v, pos, n_kv_heads=kv, bk=16)
+    want = np.zeros((b, h, t, dh), np.float32)
+    for bi in range(b):
+        for hi in range(h):
+            want[bi, hi] = np.asarray(
+                ref.attention(q[bi, hi], k[bi, hi // group], v[bi, hi // group], pos[bi], pos[bi] + t)
+            )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_ignores_stale_cache_rows():
+    """Garbage beyond pos+T must not leak into the output."""
+    rng = np.random.default_rng(5)
+    b, kv, t, s, dh = 1, 2, 4, 32, 8
+    q = rand(rng, b, 2, t, dh)
+    k = rand(rng, b, kv, s, dh)
+    v = rand(rng, b, kv, s, dh)
+    pos = jnp.zeros((b,), jnp.int32)
+    base = np.asarray(at.attention(q, k, v, pos, n_kv_heads=kv, bk=16))
+    k2 = k.at[:, :, t:, :].set(1e6)
+    v2 = v.at[:, :, t:, :].set(-1e6)
+    poisoned = np.asarray(at.attention(q, k2, v2, pos, n_kv_heads=kv, bk=16))
+    np.testing.assert_allclose(base, poisoned, rtol=1e-5, atol=1e-5)
+
+
+def test_attention_is_causal():
+    """Changing key at position j must not affect queries with pos < j."""
+    rng = np.random.default_rng(6)
+    b, kv, t, s, dh = 1, 1, 8, 16, 8
+    q = rand(rng, b, 1, t, dh)
+    k = rand(rng, b, kv, s, dh)
+    v = rand(rng, b, kv, s, dh)
+    pos = jnp.zeros((b,), jnp.int32)
+    base = np.asarray(at.attention(q, k, v, pos, n_kv_heads=kv, bk=16))
+    j = 5
+    k2 = k.at[:, :, j, :].add(3.0)
+    out = np.asarray(at.attention(q, k2, v, pos, n_kv_heads=kv, bk=16))
+    np.testing.assert_allclose(base[:, :, :j], out[:, :, :j], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(base[:, :, j:], out[:, :, j:])
+
+
+def test_attention_softmax_rows_sum_to_one_property():
+    """With v == ones, output must be exactly ones (softmax normalization)."""
+    rng = np.random.default_rng(7)
+    b, kv, t, s, dh = 2, 2, 4, 32, 8
+    q = rand(rng, b, 4, t, dh, scale=2.0)
+    k = rand(rng, b, kv, s, dh)
+    v = jnp.ones((b, kv, s, dh), jnp.float32)
+    pos = jnp.asarray([0, 9], dtype=np.int32)
+    out = np.asarray(at.attention(q, k, v, pos, n_kv_heads=kv, bk=16))
+    np.testing.assert_allclose(out, np.ones_like(out), rtol=1e-5, atol=1e-5)

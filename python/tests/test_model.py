@@ -1,0 +1,136 @@
+"""L2 correctness: stage composition, quantization mirror, decode path."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import config as C
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = C.TINY
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    qp = M.quantize_params(cfg, params, 8)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)).astype(np.int32))
+    return cfg, params, qp, toks
+
+
+def test_full_forward_shape(tiny_setup):
+    cfg, params, _, toks = tiny_setup
+    logits = M.full_forward_f32(cfg, params, toks)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_staged_matches_full_f32_closely(tiny_setup):
+    """Quantized staged forward tracks the f32 oracle (small quant noise)."""
+    cfg, params, qp, toks = tiny_setup
+    full = M.full_forward_f32(cfg, params, toks)
+    staged = M.staged_forward(cfg, qp, toks, use_pallas=False)
+    err = float(jnp.mean(jnp.abs(full - staged)))
+    sig = float(jnp.mean(jnp.abs(full)))
+    assert err / sig < 0.15, (err, sig)
+
+
+def test_staged_pallas_matches_staged_ref(tiny_setup):
+    """Pallas and jnp stage paths must agree to float tolerance."""
+    cfg, _, qp, toks = tiny_setup
+    a = M.staged_forward(cfg, qp, toks, use_pallas=False)
+    b = M.staged_forward(cfg, qp, toks, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-3)
+
+
+def test_prefill_then_decode_matches_prefill(tiny_setup):
+    """Decoding token T given a prefill cache == prefilling T+1 tokens.
+
+    This is the invariant the rust serving loop relies on.
+    """
+    cfg, _, qp, toks = tiny_setup
+    b, t = toks.shape
+    s, kv, hd = cfg.max_seq, cfg.n_kv_heads, cfg.head_dim
+
+    # full prefill over t tokens
+    full_logits = M.staged_forward(cfg, qp, toks, use_pallas=False)
+
+    # prefill t-1, then decode the t-th token through the cache path
+    h = M.embed_stage(toks[:, : t - 1], *qp["embed"])
+    pos0 = jnp.zeros((b,), jnp.int32)
+    caches = []
+    for lw in qp["layers"]:
+        kc = jnp.zeros((b, kv, s, hd), jnp.float32)
+        vc = jnp.zeros((b, kv, s, hd), jnp.float32)
+        h, kc, vc = M.block_stage(
+            cfg, False, h, kc, vc, pos0, *M.flatten_layer_weights(lw)
+        )
+        caches.append((kc, vc))
+    h1 = M.embed_stage(toks[:, t - 1 :], *qp["embed"])
+    pos = jnp.full((b,), t - 1, jnp.int32)
+    for lw, (kc, vc) in zip(qp["layers"], caches):
+        h1, kc, vc = M.block_stage(
+            cfg, False, h1, kc, vc, pos, *M.flatten_layer_weights(lw)
+        )
+    dec_logits = M.final_stage(cfg, False, h1, qp["final_norm"], qp["head"])
+    np.testing.assert_allclose(
+        np.asarray(dec_logits[:, 0]), np.asarray(full_logits[:, -1]), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_quantize_tensor_roundtrip_error_bound():
+    """|w - dequant(quant(w))| <= scale/2 elementwise (uniform quant bound)."""
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(64, 48)).astype(np.float32))
+    q, s, z = M.quantize_tensor(w, 8, axis=1)
+    deq = (q.astype(jnp.float32) - z[None, :]) * s[None, :]
+    err = np.abs(np.asarray(w - deq))
+    bound = np.asarray(s)[None, :] * 0.5 + 1e-7
+    assert (err <= bound).all()
+
+
+@pytest.mark.parametrize("bits", [2, 4, 6, 8])
+def test_quantize_bits_monotone_error(bits):
+    """More bits -> less error (the paper's §3 ablation, in miniature)."""
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32))
+
+    def mse(b):
+        q, s, z = M.quantize_tensor(w, b, axis=1)
+        deq = (q.astype(jnp.float32) - z[None, :]) * s[None, :]
+        return float(jnp.mean((w - deq) ** 2))
+
+    if bits < 8:
+        assert mse(bits) > mse(bits + 1) * 0.999
+
+
+def test_quantize_codes_cover_range():
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(size=(256, 8)).astype(np.float32))
+    q, _, _ = M.quantize_tensor(w, 8, axis=1)
+    q = np.asarray(q)
+    assert q.min() >= 0 and q.max() <= 255
+    assert q.max() > 200  # full range actually used
+
+
+def test_rope_positions_shift_consistency():
+    """apply_rope at pos p then attention must equal shifting the cache."""
+    cos0, sin0 = M.rope_tables(jnp.asarray([0, 1, 2]), 8, 10000.0)
+    cos1, sin1 = M.rope_tables(jnp.asarray([5, 6, 7]), 8, 10000.0)
+    assert cos0.shape == (3, 4)
+    assert not np.allclose(np.asarray(cos0), np.asarray(cos1))
+
+
+def test_embed_stage_dequant_correct():
+    rng = np.random.default_rng(4)
+    table = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
+    q, s, z = M.quantize_tensor(table, 8, axis=0)
+    toks = jnp.asarray([[0, 5, 31]], dtype=jnp.int32)
+    out = M.embed_stage(toks, q, s, z)
+    want = (np.asarray(q)[np.asarray(toks)] - np.asarray(z)[np.asarray(toks), None]) * np.asarray(s)[
+        np.asarray(toks), None
+    ]
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6, atol=1e-6)

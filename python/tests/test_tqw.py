@@ -1,0 +1,50 @@
+"""TQW interchange format: python writer <-> python reader roundtrip.
+
+(The rust reader is additionally covered by rust/src/tensor/io.rs tests
+against a fixture written by this code path via `make artifacts`.)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from compile import tqw
+
+
+def test_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = {
+        "a": rng.normal(size=(3, 4)).astype(np.float32),
+        "nested.name.weight": rng.normal(size=(2, 3, 4)).astype(np.float32),
+        "bytes": rng.integers(0, 255, size=(16,)).astype(np.uint8),
+        "ids": rng.integers(-5, 5, size=(2, 2)).astype(np.int32),
+        "scalar_ish": np.asarray([1.5], dtype=np.float32),
+    }
+    p = tmp_path / "x.tqw"
+    tqw.write(p, tensors)
+    got = tqw.read(p)
+    assert set(got) == set(tensors)
+    for k in tensors:
+        assert got[k].dtype == tensors[k].dtype, k
+        np.testing.assert_array_equal(got[k], tensors[k])
+
+
+def test_f64_downcast(tmp_path):
+    p = tmp_path / "y.tqw"
+    tqw.write(p, {"w": np.ones((2, 2), dtype=np.float64)})
+    got = tqw.read(p)
+    assert got["w"].dtype == np.float32
+
+
+def test_empty(tmp_path):
+    p = tmp_path / "z.tqw"
+    tqw.write(p, {})
+    assert tqw.read(p) == {}
+
+
+def test_bad_magic(tmp_path):
+    p = tmp_path / "bad.tqw"
+    p.write_bytes(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(AssertionError):
+        tqw.read(p)

@@ -1,0 +1,17 @@
+//! E5 — the paper's §3 bit-width ablation: ternary/2/4/6/8-bit naive
+//! quantization plus 4/8-bit GPTQ, reported as weight-MSE and SQNR (the
+//! paper's qualitative finding: <6 bits destroys the model; GPTQ helps
+//! but cannot rescue 4-bit to 8-bit quality).
+use tiny_qmoe::tables;
+
+fn main() -> anyhow::Result<()> {
+    let rows = tables::ablation_bits("e2e", true, tables::eval_limit())?;
+    tables::render_bits(&rows).print();
+    // monotonicity: more bits, less error (within each quantizer)
+    let naive: Vec<&tiny_qmoe::tables::BitsRow> =
+        rows.iter().filter(|r| r.quantizer == "naive").collect();
+    for w in naive.windows(2) {
+        assert!(w[0].weight_mse >= w[1].weight_mse, "MSE not monotone in bits");
+    }
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! E6 — the §4 codec design space on real quantized weights: every codec,
+//! freqseq sequence-length sweep, and the entropy bound. Shows the paper's
+//! faithful escape encoding *expanding* on high-entropy streams and the
+//! packed fix recovering it.
+use tiny_qmoe::tables;
+
+fn main() -> anyhow::Result<()> {
+    let rows = tables::ablation_codec("e2e")?;
+    tables::render_codec(&rows).print();
+    Ok(())
+}

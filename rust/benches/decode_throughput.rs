@@ -1,0 +1,43 @@
+//! §Perf — end-to-end decode throughput (tokens/s) per variant and batch
+//! size: the serving system's headline number.
+use tiny_qmoe::gen::{generate, Sampler};
+use tiny_qmoe::tables::{self, Variant};
+use tiny_qmoe::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let model = "e2e";
+    let codec = tables::default_codec();
+    let mut t = Table::new(
+        "decode throughput — e2e",
+        &["variant", "prefill ms", "tok/s", "decompress share"],
+    );
+    for variant in [Variant::Fp32, Variant::Quantized, Variant::Compressed] {
+        let engine = tables::build_engine(model, variant, codec)?;
+        let prompt: Vec<u32> = vec![1, 2, 20, 3];
+        // warm the executable cache before timing
+        let mut s = Sampler::greedy();
+        let _ = generate(&engine, &prompt, 4, &mut s, None)?;
+        engine.metrics.reset_timers();
+        // median of 5 generations (single-sample numbers were too noisy
+        // for §Perf before/after comparisons)
+        let mut tps = Vec::new();
+        let mut prefills = Vec::new();
+        for _ in 0..5 {
+            let g = generate(&engine, &prompt, 48, &mut s, None)?;
+            tps.push(g.tokens_per_s);
+            prefills.push(g.prefill_s);
+        }
+        tps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        prefills.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let d = engine.metrics.decompress_secs();
+        let e = engine.metrics.exec_secs();
+        t.row(vec![
+            engine.variant(),
+            format!("{:.1}", prefills[2] * 1e3),
+            format!("{:.1}", tps[2]),
+            format!("{:.0}%", 100.0 * d / (d + e).max(1e-12)),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

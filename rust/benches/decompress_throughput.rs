@@ -1,0 +1,37 @@
+//! §Perf — decompression throughput per codec on a realistic quantized
+//! weight stream (the serving pipeline's hot auxiliary path).
+use tiny_qmoe::compress::{self, stats};
+use tiny_qmoe::util::bench::{bench, Table};
+use tiny_qmoe::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::seed_from_u64(5);
+    let data: Vec<u8> = (0..8 << 20)
+        .map(|_| (128.0 + 22.0 * rng.normal_f32()).clamp(0.0, 255.0) as u8)
+        .collect();
+    let mut t = Table::new(
+        "decompression throughput (8 MiB gaussian-code stream)",
+        &["codec", "ratio", "decompress MB/s", "compress MB/s"],
+    );
+    for id in compress::all_codec_ids() {
+        let c = compress::codec(id);
+        let r = stats::measure(c.as_ref(), &data, None)?;
+        let dict = c.train(&[&data]);
+        let payload = c.compress(&dict, &data)?;
+        let mut out = Vec::new();
+        let m = bench(c.name(), 1.0, || {
+            c.decompress(&dict, &payload, data.len(), &mut out).unwrap();
+        });
+        let mc = bench(c.name(), 1.0, || {
+            let _ = c.compress(&dict, &data).unwrap();
+        });
+        t.row(vec![
+            c.name().into(),
+            format!("{:.3}x", r.ratio_with_dict()),
+            format!("{:.0}", data.len() as f64 / 1e6 / m.mean_s),
+            format!("{:.0}", data.len() as f64 / 1e6 / mc.mean_s),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

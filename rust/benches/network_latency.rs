@@ -1,0 +1,9 @@
+//! E7 — the paper's §5 network-vs-local comparison: simulated hosted-LLM
+//! round trips (anchored to the paper's 697 ms Safari measurement) against
+//! the measured on-device per-question latency of the compressed model.
+use tiny_qmoe::tables;
+
+fn main() -> anyhow::Result<()> {
+    tables::network_table("e2e", tables::default_codec(), tables::eval_limit())?.print();
+    Ok(())
+}

@@ -1,0 +1,10 @@
+//! E8 — residency policy sweep (the paper's §6 per-layer decompression
+//! claim): resident vs stream vs stream+prefetch vs LRU, reporting peak
+//! weight memory, per-question latency and the decompression share.
+use tiny_qmoe::tables;
+
+fn main() -> anyhow::Result<()> {
+    let rows = tables::residency_table("e2e", tables::default_codec(), 10)?;
+    tables::render_residency(&rows).print();
+    Ok(())
+}

@@ -1,0 +1,29 @@
+//! E1 — regenerates the paper's Table 1 (model sizes: fp32 / quantized /
+//! quantized+compressed) for the trained e2e model and both LLaMA-3.2
+//! proxies, with the per-stream entropy bound and the clustered-regime
+//! companion that explains where the paper's 11.7x can and cannot come from.
+use tiny_qmoe::tables;
+use tiny_qmoe::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    for codec in [tables::paper_codec(), tables::default_codec()] {
+        let rows = tables::table1(&["e2e", "proxy-1b", "proxy-3b"], codec)?;
+        tables::render_table1(&rows, codec).print();
+    }
+    let codec = tables::default_codec();
+    let crows = tables::table1_clustered(codec)?;
+    let mut ct = Table::new(
+        "Table 1 companion — ratio vs weight-entropy regime (freqseq-packed)",
+        &["regime", "entropy bits/B", "ratio vs quantized", "entropy bound"],
+    );
+    for r in &crows {
+        ct.row(vec![
+            r.regime.clone(),
+            format!("{:.2}", r.entropy_bits),
+            format!("{:.2}x", r.ratio_quant),
+            format!("{:.2}x", 8.0 / r.entropy_bits.max(1e-9)),
+        ]);
+    }
+    ct.print();
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! E2 — regenerates the paper's Table 2: mmlu accuracy + per-question
+//! latency for fp32 / quantized / compressed variants of the trained
+//! e2e model. Question budget: TQM_EVAL_LIMIT (default 60; paper used 200).
+use tiny_qmoe::tables::{self, Variant};
+
+fn main() -> anyhow::Result<()> {
+    let limit = tables::eval_limit();
+    let reps = tables::eval_table("e2e", "mmlu", &Variant::ALL, tables::default_codec(), limit)?;
+    tables::render_eval_table("mmlu (paper Table 2) — e2e", &reps).print();
+    // shape assertions from the paper: lossless compression => identical
+    // accuracy; both within noise of fp32
+    assert_eq!(reps[1].n_correct, reps[2].n_correct, "compressed != quantized accuracy");
+    Ok(())
+}

@@ -1,0 +1,353 @@
+//! Canonical Huffman coding over bytes (S6) — the entropy-coding baseline.
+//!
+//! The role of this codec in the reproduction is calibration: a Huffman
+//! coder achieves within ~1 bit/symbol of the stream's zeroth-order
+//! entropy, so comparing it against the paper's dictionary codec exposes
+//! how much of Table 1's claimed ratio could possibly come from symbol
+//! skew versus longer-range structure.
+//!
+//! Self-contained payload: a 256-byte code-length header (canonical codes
+//! are reconstructed from lengths on both sides), then the bit stream.
+//! `train` is a no-op — per-tensor histograms beat a shared table here.
+
+use anyhow::Result;
+
+use super::{Codec, CodecId};
+
+pub struct Huffman;
+
+/// Build code lengths via the standard two-queue Huffman construction on
+/// the byte histogram. Returns lengths[256] (0 = symbol absent).
+fn code_lengths(hist: &[u64; 256]) -> [u8; 256] {
+    #[derive(Clone)]
+    struct Node {
+        freq: u64,
+        kind: NodeKind,
+    }
+    #[derive(Clone)]
+    enum NodeKind {
+        Leaf(u8),
+        Internal(usize, usize),
+    }
+
+    let mut lengths = [0u8; 256];
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut heap: Vec<usize> = Vec::new(); // indices into nodes, min-heap by freq
+    for (sym, &f) in hist.iter().enumerate() {
+        if f > 0 {
+            nodes.push(Node { freq: f, kind: NodeKind::Leaf(sym as u8) });
+            heap.push(nodes.len() - 1);
+        }
+    }
+    match heap.len() {
+        0 => return lengths,
+        1 => {
+            if let NodeKind::Leaf(s) = nodes[heap[0]].kind {
+                lengths[s as usize] = 1;
+            }
+            return lengths;
+        }
+        _ => {}
+    }
+    // simple binary-heap via sort-each-pop is O(n log n) overall for 256 syms
+    while heap.len() > 1 {
+        heap.sort_unstable_by_key(|&i| std::cmp::Reverse(nodes[i].freq));
+        let a = heap.pop().unwrap();
+        let b = heap.pop().unwrap();
+        nodes.push(Node { freq: nodes[a].freq + nodes[b].freq, kind: NodeKind::Internal(a, b) });
+        heap.push(nodes.len() - 1);
+    }
+    // walk depths iteratively
+    let mut stack = vec![(heap[0], 0u8)];
+    while let Some((idx, depth)) = stack.pop() {
+        match nodes[idx].kind {
+            NodeKind::Leaf(s) => lengths[s as usize] = depth.max(1),
+            NodeKind::Internal(a, b) => {
+                stack.push((a, depth + 1));
+                stack.push((b, depth + 1));
+            }
+        }
+    }
+    lengths
+}
+
+/// Canonical codes from lengths: symbols sorted by (length, value).
+/// Returns (code, length) per symbol; codes assigned MSB-first. Lengths
+/// are internally produced (<= ~40 for 256 symbols), but this is also on
+/// the decode path where the header may be corrupt — callers must have
+/// validated `lengths <= 60` first (u64 arithmetic keeps us panic-free
+/// for anything that passes that check).
+fn canonical_codes(lengths: &[u8; 256]) -> [(u64, u8); 256] {
+    let mut order: Vec<u8> = (0u16..256).map(|s| s as u8).collect();
+    order.sort_by_key(|&s| (lengths[s as usize], s));
+    let mut codes = [(0u64, 0u8); 256];
+    let mut code: u64 = 0;
+    let mut prev_len: u8 = 0;
+    for &s in &order {
+        let len = lengths[s as usize].min(63);
+        if len == 0 {
+            continue;
+        }
+        if prev_len != 0 {
+            code = (code + 1) << (len - prev_len).min(63);
+        } else {
+            code = 0;
+        }
+        codes[s as usize] = (code, len);
+        prev_len = len;
+    }
+    codes
+}
+
+impl Codec for Huffman {
+    fn id(&self) -> CodecId {
+        CodecId::Huffman
+    }
+
+    fn name(&self) -> &'static str {
+        "huffman"
+    }
+
+    fn train(&self, _samples: &[&[u8]]) -> Vec<u8> {
+        Vec::new()
+    }
+
+    fn compress(&self, _dict: &[u8], data: &[u8]) -> Result<Vec<u8>> {
+        if data.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut hist = [0u64; 256];
+        for &b in data {
+            hist[b as usize] += 1;
+        }
+        let lengths = code_lengths(&hist);
+        let codes = canonical_codes(&lengths);
+        let mut out = Vec::with_capacity(256 + data.len() / 2);
+        out.extend_from_slice(&lengths);
+        // MSB-first bit stream
+        let mut acc: u64 = 0;
+        let mut nbits: u32 = 0;
+        for &b in data {
+            let (code, len) = codes[b as usize];
+            acc = (acc << len) | code as u64;
+            nbits += len as u32;
+            while nbits >= 8 {
+                out.push(((acc >> (nbits - 8)) & 0xFF) as u8);
+                nbits -= 8;
+            }
+        }
+        if nbits > 0 {
+            out.push(((acc << (8 - nbits)) & 0xFF) as u8);
+        }
+        Ok(out)
+    }
+
+    fn decompress(
+        &self,
+        _dict: &[u8],
+        payload: &[u8],
+        expected_len: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
+        out.clear();
+        if expected_len == 0 {
+            anyhow::ensure!(payload.is_empty(), "huffman: payload for empty stream");
+            return Ok(());
+        }
+        anyhow::ensure!(payload.len() >= 256, "huffman: missing header");
+        let mut lengths = [0u8; 256];
+        lengths.copy_from_slice(&payload[..256]);
+        // validate BEFORE building codes: a corrupt header could carry
+        // absurd lengths (found by prop_corrupted_payloads_never_panic)
+        let max_len = *lengths.iter().max().unwrap();
+        anyhow::ensure!(max_len > 0 && max_len <= 60, "huffman: bad lengths");
+        let codes = canonical_codes(&lengths);
+
+        // canonical decode tables: first_code / first_index per length
+        let mut order: Vec<u8> = (0u16..256)
+            .map(|s| s as u8)
+            .filter(|&s| lengths[s as usize] > 0)
+            .collect();
+        order.sort_by_key(|&s| (lengths[s as usize], s));
+        let ml = max_len as usize;
+        let mut first_code = vec![u64::MAX; ml + 1];
+        let mut first_index = vec![0usize; ml + 1];
+        let mut count = vec![0usize; ml + 1];
+        for (i, &s) in order.iter().enumerate() {
+            let l = lengths[s as usize] as usize;
+            if first_code[l] == u64::MAX {
+                first_code[l] = codes[s as usize].0 as u64;
+                first_index[l] = i;
+            }
+            count[l] += 1;
+        }
+
+        // §Perf: 12-bit LUT fast path. Peeking LUT_BITS at once resolves
+        // any code of length <= LUT_BITS in a single lookup (covers ~all
+        // symbols on realistic histograms); longer codes fall back to the
+        // canonical per-bit walk. Entries whose canonical code would fall
+        // outside the table (possible only with corrupt, Kraft-violating
+        // headers) are skipped — the fallback walk rejects them cleanly.
+        const LUT_BITS: usize = 12;
+        let lut_width = ml.min(LUT_BITS);
+        let mut lut: Vec<(u8, u8)> = vec![(0, 0); 1 << lut_width]; // (symbol, len); len 0 = fallback
+        for &s in &order {
+            let (code, len) = codes[s as usize];
+            let len_us = len as usize;
+            if len_us == 0 || len_us > lut_width {
+                continue;
+            }
+            let shift = lut_width - len_us;
+            let base = (code as usize) << shift;
+            let top = base + (1usize << shift);
+            if top > lut.len() {
+                continue; // corrupt header; handled by the fallback walk
+            }
+            for e in &mut lut[base..top] {
+                *e = (s, len);
+            }
+        }
+
+        out.reserve(expected_len);
+        let body = &payload[256..];
+        let total_bits = body.len() * 8;
+        // MSB-aligned bit accumulator: the next `nbits` unconsumed bits
+        // live in the TOP bits of `acc`.
+        let mut acc: u64 = 0;
+        let mut nbits: usize = 0;
+        let mut next_byte: usize = 0;
+        let mut consumed_bits: usize = 0;
+        while out.len() < expected_len {
+            // bulk refill: grab 4 bytes at once while there is room
+            if nbits <= 32 && next_byte + 4 <= body.len() {
+                let w = u32::from_be_bytes(body[next_byte..next_byte + 4].try_into().unwrap());
+                acc |= (w as u64) << (32 - nbits);
+                next_byte += 4;
+                nbits += 32;
+            }
+            while nbits <= 56 && next_byte < body.len() {
+                acc |= (body[next_byte] as u64) << (56 - nbits);
+                next_byte += 1;
+                nbits += 8;
+            }
+            anyhow::ensure!(consumed_bits < total_bits, "huffman: truncated stream");
+            let idx = (acc >> (64 - lut_width)) as usize;
+            let (sym, len) = lut[idx];
+            if len != 0 {
+                let len_us = len as usize;
+                anyhow::ensure!(
+                    consumed_bits + len_us <= total_bits,
+                    "huffman: truncated stream"
+                );
+                out.push(sym);
+                acc <<= len_us;
+                nbits = nbits.saturating_sub(len_us);
+                consumed_bits += len_us;
+                continue;
+            }
+            // fallback: canonical per-bit walk for long / corrupt codes
+            let mut code: u64 = 0;
+            let mut len = 0usize;
+            loop {
+                anyhow::ensure!(consumed_bits < total_bits, "huffman: truncated stream");
+                if nbits == 0 {
+                    anyhow::bail!("huffman: truncated stream");
+                }
+                let bit = (acc >> 63) & 1;
+                acc <<= 1;
+                nbits -= 1;
+                consumed_bits += 1;
+                code = (code << 1) | bit;
+                len += 1;
+                anyhow::ensure!(len <= ml, "huffman: code too long");
+                if first_code[len] != u64::MAX
+                    && code >= first_code[len]
+                    && (code - first_code[len]) < count[len] as u64
+                {
+                    let idx = first_index[len] + (code - first_code[len]) as usize;
+                    out.push(order[idx]);
+                    break;
+                }
+                // refill inside long walks too
+                while nbits <= 56 && next_byte < body.len() {
+                    acc |= (body[next_byte] as u64) << (56 - nbits);
+                    next_byte += 1;
+                    nbits += 8;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil::roundtrip_all_regimes;
+
+    #[test]
+    fn roundtrips() {
+        roundtrip_all_regimes(&Huffman);
+    }
+
+    #[test]
+    fn near_entropy_on_skewed_stream() {
+                let mut rng = crate::util::Rng::seed_from_u64(2);
+        // two-symbol stream, p = (0.9, 0.1): H ~= 0.469 bits/byte
+        let data: Vec<u8> =
+            (0..100_000).map(|_| if rng.gen_bool(0.9) { 0u8 } else { 1 }).collect();
+        let payload = Huffman.compress(&[], &data).unwrap();
+        // huffman floor is 1 bit/symbol for a 2-symbol alphabet
+        let bits_per_sym = (payload.len() - 256) as f64 * 8.0 / data.len() as f64;
+        assert!(bits_per_sym < 1.05, "bits/sym {bits_per_sym}");
+    }
+
+    #[test]
+    fn gaussian_codes_compress_some() {
+        // 8-bit-quantized normal data: entropy ~ 5-6 bits -> ~1.3-1.6x
+        let regs = crate::compress::testutil::regimes();
+        let gauss = &regs.iter().find(|(n, _)| *n == "gauss8bit").unwrap().1;
+        let payload = Huffman.compress(&[], gauss).unwrap();
+        let ratio = gauss.len() as f64 / payload.len() as f64;
+        assert!(ratio > 1.1 && ratio < 2.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn single_symbol_stream() {
+        let data = vec![200u8; 999];
+        let payload = Huffman.compress(&[], &data).unwrap();
+        let mut out = Vec::new();
+        Huffman.decompress(&[], &payload, data.len(), &mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn corrupt_header_rejected() {
+        let mut out = Vec::new();
+        assert!(Huffman.decompress(&[], &[0u8; 10], 5, &mut out).is_err());
+    }
+
+    #[test]
+    fn canonical_codes_are_prefix_free() {
+        let mut hist = [0u64; 256];
+        for (i, h) in hist.iter_mut().enumerate() {
+            *h = (i as u64 % 7) + 1;
+        }
+        let lengths = code_lengths(&hist);
+        let codes = canonical_codes(&lengths);
+        for a in 0..256 {
+            for b in 0..256 {
+                if a == b {
+                    continue;
+                }
+                let (ca, la) = codes[a];
+                let (cb, lb) = codes[b];
+                if la == 0 || lb == 0 || la > lb {
+                    continue;
+                }
+                // a must not be a prefix of b
+                assert_ne!(cb >> (lb - la), ca, "prefix violation {a} {b}");
+            }
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! LZW with variable-width codes (S5) — the dictionary family the paper's
+//! §2.2 describes ("LZW starts with a dictionary containing single
+//! character substrings ... outputs its code, and adds a new substring").
+//!
+//! Implementation notes:
+//! * codes start at 9 bits and widen as the dictionary grows, GIF-style;
+//! * the dictionary is capped at 2^16 entries and **frozen** when full
+//!   (static tail), which empirically beats resetting on weight streams;
+//! * encoder dictionary is a `HashMap<(prefix, byte) -> code>`; decoder
+//!   reconstructs strings lazily via parent chains (no O(n²) buffers),
+//!   including the classic KwKwK corner case.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::{Codec, CodecId};
+
+const MAX_CODE_BITS: u32 = 16;
+const MAX_CODES: u32 = 1 << MAX_CODE_BITS;
+
+pub struct Lzw {
+    pub max_codes: u32,
+}
+
+impl Default for Lzw {
+    fn default() -> Self {
+        Self { max_codes: MAX_CODES }
+    }
+}
+
+struct BitWriter {
+    out: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    fn new() -> Self {
+        Self { out: Vec::new(), acc: 0, nbits: 0 }
+    }
+
+    fn write(&mut self, code: u32, width: u32) {
+        self.acc |= (code as u64) << self.nbits;
+        self.nbits += width;
+        while self.nbits >= 8 {
+            self.out.push((self.acc & 0xFF) as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.out.push((self.acc & 0xFF) as u8);
+        }
+        self.out
+    }
+}
+
+struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(data: &'a [u8]) -> Self {
+        Self { data, pos: 0, acc: 0, nbits: 0 }
+    }
+
+    fn read(&mut self, width: u32) -> Option<u32> {
+        while self.nbits < width {
+            if self.pos >= self.data.len() {
+                return None;
+            }
+            self.acc |= (self.data[self.pos] as u64) << self.nbits;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+        let code = (self.acc & ((1u64 << width) - 1)) as u32;
+        self.acc >>= width;
+        self.nbits -= width;
+        Some(code)
+    }
+}
+
+fn width_for(next_code: u32) -> u32 {
+    // width needed to express the largest assigned code
+    32 - (next_code.max(2) - 1).leading_zeros()
+}
+
+impl Codec for Lzw {
+    fn id(&self) -> CodecId {
+        CodecId::Lzw
+    }
+
+    fn name(&self) -> &'static str {
+        "lzw"
+    }
+
+    fn train(&self, _samples: &[&[u8]]) -> Vec<u8> {
+        Vec::new() // adaptive: the dictionary is implicit in the stream
+    }
+
+    fn compress(&self, _dict: &[u8], data: &[u8]) -> Result<Vec<u8>> {
+        if data.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut table: HashMap<(u32, u8), u32> = HashMap::new();
+        let mut next_code: u32 = 256;
+        let mut w = BitWriter::new();
+        let mut prefix: u32 = data[0] as u32;
+        for &b in &data[1..] {
+            match table.get(&(prefix, b)) {
+                Some(&code) => prefix = code,
+                None => {
+                    // emit at the width that covers codes assigned so far
+                    w.write(prefix, width_for(next_code));
+                    if next_code < self.max_codes {
+                        table.insert((prefix, b), next_code);
+                        next_code += 1;
+                    }
+                    prefix = b as u32;
+                }
+            }
+        }
+        w.write(prefix, width_for(next_code));
+        Ok(w.finish())
+    }
+
+    fn decompress(
+        &self,
+        _dict: &[u8],
+        payload: &[u8],
+        expected_len: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
+        out.clear();
+        if expected_len == 0 {
+            anyhow::ensure!(payload.is_empty(), "lzw: payload for empty stream");
+            return Ok(());
+        }
+        out.reserve(expected_len);
+        // decoder table: code -> (parent, appended byte); roots are bytes
+        let mut parent: Vec<u32> = Vec::new();
+        let mut last_byte: Vec<u8> = Vec::new();
+        let mut next_code: u32 = 256;
+        let mut r = BitReader::new(payload);
+
+        fn expand(
+            code: u32,
+            parent: &[u32],
+            last_byte: &[u8],
+            scratch: &mut Vec<u8>,
+        ) -> u8 {
+            scratch.clear();
+            let mut c = code;
+            while c >= 256 {
+                let idx = (c - 256) as usize;
+                scratch.push(last_byte[idx]);
+                c = parent[idx];
+            }
+            scratch.push(c as u8);
+            scratch.reverse();
+            scratch[0]
+        }
+
+        let mut scratch = Vec::new();
+        let first = r
+            .read(width_for(next_code))
+            .ok_or_else(|| anyhow::anyhow!("lzw: truncated stream"))?;
+        anyhow::ensure!(first < 256, "lzw: first code must be a literal");
+        out.push(first as u8);
+        let mut prev = first;
+
+        while out.len() < expected_len {
+            // the encoder is one insertion ahead of us at read time, so it
+            // may emit `next_code` itself (KwKwK) — unless the table is
+            // frozen at the cap, where both sides stop growing
+            let width = width_for((next_code + 1).min(self.max_codes));
+            let code = r
+                .read(width)
+                .ok_or_else(|| anyhow::anyhow!("lzw: truncated stream at {}", out.len()))?;
+            let kwkwk_ok = next_code < self.max_codes;
+            anyhow::ensure!(
+                code < next_code + kwkwk_ok as u32,
+                "lzw: code {code} out of range (next {next_code})"
+            );
+            let first_byte = if code == next_code {
+                // KwKwK: string = prev-string + first byte of prev-string
+                let fb = expand(prev, &parent, &last_byte, &mut scratch);
+                scratch.push(fb);
+                scratch[0]
+            } else {
+                expand(code, &parent, &last_byte, &mut scratch)
+            };
+            out.extend_from_slice(&scratch);
+            if next_code < self.max_codes {
+                parent.push(prev);
+                last_byte.push(first_byte);
+                next_code += 1;
+            }
+            prev = code;
+        }
+        anyhow::ensure!(out.len() == expected_len, "lzw: length overshoot");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil::roundtrip_all_regimes;
+
+    #[test]
+    fn roundtrips() {
+        roundtrip_all_regimes(&Lzw::default());
+    }
+
+    #[test]
+    fn kwkwk_case() {
+        // "abababab..." exercises the code == next_code branch
+        let data: Vec<u8> = std::iter::repeat([b'a', b'b']).take(500).flatten().collect();
+        let c = Lzw::default();
+        let payload = c.compress(&[], &data).unwrap();
+        let mut out = Vec::new();
+        c.decompress(&[], &payload, data.len(), &mut out).unwrap();
+        assert_eq!(out, data);
+        assert!(payload.len() < data.len() / 4);
+    }
+
+    #[test]
+    fn repetitive_compresses_strongly() {
+        let data: Vec<u8> = (0..100_000u32).map(|i| ((i / 7) % 5) as u8).collect();
+        let c = Lzw::default();
+        let payload = c.compress(&[], &data).unwrap();
+        assert!(
+            (data.len() as f64 / payload.len() as f64) > 5.0,
+            "ratio {}",
+            data.len() as f64 / payload.len() as f64
+        );
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let data = vec![1u8; 1000];
+        let c = Lzw::default();
+        let payload = c.compress(&[], &data).unwrap();
+        let mut out = Vec::new();
+        assert!(c
+            .decompress(&[], &payload[..payload.len() / 2], data.len(), &mut out)
+            .is_err());
+    }
+
+    #[test]
+    fn single_byte() {
+        let c = Lzw::default();
+        let payload = c.compress(&[], &[42]).unwrap();
+        let mut out = Vec::new();
+        c.decompress(&[], &payload, 1, &mut out).unwrap();
+        assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn dictionary_freeze_at_cap() {
+        // small cap forces the frozen-dictionary path
+        let c = Lzw { max_codes: 512 };
+                let mut rng = crate::util::Rng::seed_from_u64(9);
+        let data: Vec<u8> = (0..50_000).map(|_| rng.gen_range(0, 8) as u8).collect();
+        let payload = c.compress(&[], &data).unwrap();
+        let mut out = Vec::new();
+        c.decompress(&[], &payload, data.len(), &mut out).unwrap();
+        assert_eq!(out, data);
+    }
+}

@@ -1,0 +1,150 @@
+//! Lossless compression substrate (S4-S6): the paper's §2.2 / §4.
+//!
+//! * [`freqseq`] — the paper's actual codec (§4): a static dictionary of
+//!   frequent fixed-length byte sequences with u16 codewords and an 0xFFFF
+//!   escape. Two variants: `FreqSeq` is bit-faithful to the paper's
+//!   listings (escaped raw bytes stored as u16 — yes, that expands), and
+//!   `FreqSeqPacked` fixes the escape encoding (our ablation).
+//! * [`lzw`] — LZW with variable-width codes (§2.2 names LZW as the
+//!   schema family the paper builds on).
+//! * [`huffman`] — canonical Huffman: the entropy-coding baseline that
+//!   calibrates how much any dictionary scheme can possibly win.
+//! * [`rle`], [`raw`] — trivial baselines.
+//!
+//! All codecs implement [`Codec`] and are **lossless**; property tests in
+//! each module plus `rust/tests/proptest_compress.rs` enforce exact
+//! roundtrips, because Tables 2-4's "Compressed" rows being identical to
+//! "Quantized" accuracy depends on it.
+
+pub mod freqseq;
+pub mod huffman;
+pub mod lzw;
+pub mod raw;
+pub mod rle;
+pub mod stream;
+pub mod stats;
+
+use anyhow::Result;
+
+/// Stable on-disk codec identifiers (TQM container field).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CodecId {
+    Raw = 0,
+    Rle = 1,
+    Lzw = 2,
+    Huffman = 3,
+    /// Paper-faithful frequent-sequence table (§4 listings).
+    FreqSeq = 4,
+    /// Frequent-sequence table with packed escapes (our fix).
+    FreqSeqPacked = 5,
+}
+
+impl CodecId {
+    pub fn from_u32(v: u32) -> Result<Self> {
+        Ok(match v {
+            0 => CodecId::Raw,
+            1 => CodecId::Rle,
+            2 => CodecId::Lzw,
+            3 => CodecId::Huffman,
+            4 => CodecId::FreqSeq,
+            5 => CodecId::FreqSeqPacked,
+            _ => anyhow::bail!("unknown codec id {v}"),
+        })
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "raw" => CodecId::Raw,
+            "rle" => CodecId::Rle,
+            "lzw" => CodecId::Lzw,
+            "huffman" => CodecId::Huffman,
+            "freqseq" => CodecId::FreqSeq,
+            "freqseq-packed" => CodecId::FreqSeqPacked,
+            _ => anyhow::bail!("unknown codec {s:?} (raw|rle|lzw|huffman|freqseq|freqseq-packed)"),
+        })
+    }
+}
+
+/// A lossless byte-stream codec with an optional model-global trained
+/// dictionary. `train` sees sample streams (the model's quantized tensors)
+/// and returns a serialized dictionary that `compress`/`decompress` share;
+/// adaptive codecs return an empty dict.
+pub trait Codec: Send + Sync {
+    fn id(&self) -> CodecId;
+    fn name(&self) -> &'static str;
+
+    /// Build the shared dictionary from sample streams (may be empty).
+    fn train(&self, samples: &[&[u8]]) -> Vec<u8>;
+
+    /// Compress one stream under the trained dictionary.
+    fn compress(&self, dict: &[u8], data: &[u8]) -> Result<Vec<u8>>;
+
+    /// Decompress into `out` (cleared first); `expected_len` is the
+    /// original stream length (stored by the container).
+    fn decompress(
+        &self,
+        dict: &[u8],
+        payload: &[u8],
+        expected_len: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<()>;
+}
+
+pub fn codec(id: CodecId) -> Box<dyn Codec> {
+    match id {
+        CodecId::Raw => Box::new(raw::Raw),
+        CodecId::Rle => Box::new(rle::Rle),
+        CodecId::Lzw => Box::new(lzw::Lzw::default()),
+        CodecId::Huffman => Box::new(huffman::Huffman),
+        CodecId::FreqSeq => Box::new(freqseq::FreqSeq::paper()),
+        CodecId::FreqSeqPacked => Box::new(freqseq::FreqSeq::packed()),
+    }
+}
+
+pub fn all_codec_ids() -> [CodecId; 6] {
+    [
+        CodecId::Raw,
+        CodecId::Rle,
+        CodecId::Lzw,
+        CodecId::Huffman,
+        CodecId::FreqSeq,
+        CodecId::FreqSeqPacked,
+    ]
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    
+    /// Byte streams with the regimes the codecs must handle: empty, tiny,
+    /// constant, repetitive, quantized-gaussian-like, uniform-random.
+    pub fn regimes() -> Vec<(&'static str, Vec<u8>)> {
+        let mut rng = crate::util::Rng::seed_from_u64(42);
+        let gauss: Vec<u8> = (0..20_000)
+            .map(|_| (128.0 + 20.0 * rng.normal_f32()).clamp(0.0, 255.0) as u8)
+            .collect();
+        let uniform: Vec<u8> = (0..20_000).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        let repetitive: Vec<u8> =
+            (0..20_000).map(|i| [1u8, 2, 3, 4, 1, 2, 3, 4, 9, 9][i % 10]).collect();
+        vec![
+            ("empty", vec![]),
+            ("one", vec![7]),
+            ("three", vec![1, 2, 3]),
+            ("constant", vec![88; 5000]),
+            ("repetitive", repetitive),
+            ("gauss8bit", gauss),
+            ("uniform", uniform),
+        ]
+    }
+
+    pub fn roundtrip_all_regimes(c: &dyn super::Codec) {
+        let regs = regimes();
+        let samples: Vec<&[u8]> = regs.iter().map(|(_, d)| d.as_slice()).collect();
+        let dict = c.train(&samples);
+        for (name, data) in &regs {
+            let payload = c.compress(&dict, data).unwrap();
+            let mut out = Vec::new();
+            c.decompress(&dict, &payload, data.len(), &mut out).unwrap();
+            assert_eq!(&out, data, "codec {} failed roundtrip on {name}", c.name());
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! Identity codec — the "Quantized" (uncompressed) baseline rows in the
+//! paper's tables, and the fallback when a stream is incompressible.
+
+use anyhow::Result;
+
+use super::{Codec, CodecId};
+
+pub struct Raw;
+
+impl Codec for Raw {
+    fn id(&self) -> CodecId {
+        CodecId::Raw
+    }
+
+    fn name(&self) -> &'static str {
+        "raw"
+    }
+
+    fn train(&self, _samples: &[&[u8]]) -> Vec<u8> {
+        Vec::new()
+    }
+
+    fn compress(&self, _dict: &[u8], data: &[u8]) -> Result<Vec<u8>> {
+        Ok(data.to_vec())
+    }
+
+    fn decompress(
+        &self,
+        _dict: &[u8],
+        payload: &[u8],
+        expected_len: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
+        anyhow::ensure!(payload.len() == expected_len, "raw length mismatch");
+        out.clear();
+        out.extend_from_slice(payload);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil::roundtrip_all_regimes;
+
+    #[test]
+    fn roundtrips() {
+        roundtrip_all_regimes(&Raw);
+    }
+
+    #[test]
+    fn rejects_wrong_length() {
+        let mut out = Vec::new();
+        assert!(Raw.decompress(&[], &[1, 2, 3], 2, &mut out).is_err());
+    }
+}

@@ -1,0 +1,93 @@
+//! Run-length encoding baseline: `(count, byte)` pairs, runs up to 255.
+//!
+//! Wins only on the highly clustered / ternary regimes (where QMoE-style
+//! sparsity dominates); on 8-bit near-normal streams it roughly doubles
+//! size — which is exactly the point of including it in the codec bench.
+
+use anyhow::Result;
+
+use super::{Codec, CodecId};
+
+pub struct Rle;
+
+impl Codec for Rle {
+    fn id(&self) -> CodecId {
+        CodecId::Rle
+    }
+
+    fn name(&self) -> &'static str {
+        "rle"
+    }
+
+    fn train(&self, _samples: &[&[u8]]) -> Vec<u8> {
+        Vec::new()
+    }
+
+    fn compress(&self, _dict: &[u8], data: &[u8]) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(data.len() / 2 + 8);
+        let mut i = 0;
+        while i < data.len() {
+            let b = data[i];
+            let mut run = 1usize;
+            while run < 255 && i + run < data.len() && data[i + run] == b {
+                run += 1;
+            }
+            out.push(run as u8);
+            out.push(b);
+            i += run;
+        }
+        Ok(out)
+    }
+
+    fn decompress(
+        &self,
+        _dict: &[u8],
+        payload: &[u8],
+        expected_len: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
+        anyhow::ensure!(payload.len() % 2 == 0, "rle payload must be pairs");
+        out.clear();
+        out.reserve(expected_len);
+        for pair in payload.chunks_exact(2) {
+            let (count, byte) = (pair[0] as usize, pair[1]);
+            anyhow::ensure!(count > 0, "zero-length run");
+            out.extend(std::iter::repeat(byte).take(count));
+        }
+        anyhow::ensure!(out.len() == expected_len, "rle length mismatch");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil::roundtrip_all_regimes;
+
+    #[test]
+    fn roundtrips() {
+        roundtrip_all_regimes(&Rle);
+    }
+
+    #[test]
+    fn constant_compresses_well() {
+        let data = vec![7u8; 10_000];
+        let payload = Rle.compress(&[], &data).unwrap();
+        assert!(payload.len() < data.len() / 100);
+    }
+
+    #[test]
+    fn random_expands() {
+                let mut rng = crate::util::Rng::seed_from_u64(1);
+        let data: Vec<u8> = (0..10_000).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        let payload = Rle.compress(&[], &data).unwrap();
+        assert!(payload.len() > data.len());
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let mut out = Vec::new();
+        assert!(Rle.decompress(&[], &[1], 1, &mut out).is_err()); // odd len
+        assert!(Rle.decompress(&[], &[0, 5], 0, &mut out).is_err()); // zero run
+    }
+}

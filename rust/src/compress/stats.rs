@@ -1,0 +1,145 @@
+//! Compression analytics: byte entropy (the information-theoretic bound a
+//! zeroth-order coder faces), higher-order entropy estimates, and the
+//! per-stream report the Table 1 / E6 benches print.
+
+use super::{Codec, CodecId};
+
+/// Zeroth-order Shannon entropy of a byte stream, bits per byte.
+pub fn byte_entropy(data: &[u8]) -> f64 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    let mut hist = [0u64; 256];
+    for &b in data {
+        hist[b as usize] += 1;
+    }
+    let n = data.len() as f64;
+    hist.iter()
+        .filter(|&&h| h > 0)
+        .map(|&h| {
+            let p = h as f64 / n;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// Order-k conditional entropy estimate H(X_i | X_{i-k..i-1}) via k-gram
+/// frequencies (k in 1..=3 practical). Gives the bound that context-aware
+/// codecs like LZW chase.
+pub fn conditional_entropy(data: &[u8], k: usize) -> f64 {
+    assert!((1..=3).contains(&k));
+    if data.len() <= k {
+        return 0.0;
+    }
+    use std::collections::HashMap;
+    let mut ctx_counts: HashMap<u32, u64> = HashMap::new();
+    let mut joint_counts: HashMap<(u32, u8), u64> = HashMap::new();
+    for w in data.windows(k + 1) {
+        let mut ctx = 0u32;
+        for &b in &w[..k] {
+            ctx = (ctx << 8) | b as u32;
+        }
+        *ctx_counts.entry(ctx).or_insert(0) += 1;
+        *joint_counts.entry((ctx, w[k])).or_insert(0) += 1;
+    }
+    let n = (data.len() - k) as f64;
+    let mut h = 0.0;
+    for (&(ctx, _), &jc) in &joint_counts {
+        let cc = ctx_counts[&ctx] as f64;
+        let p_joint = jc as f64 / n;
+        let p_cond = jc as f64 / cc;
+        h -= p_joint * p_cond.log2();
+    }
+    h
+}
+
+/// One codec's result on one stream.
+#[derive(Clone, Debug)]
+pub struct CodecResult {
+    pub codec: CodecId,
+    pub name: &'static str,
+    pub raw_bytes: usize,
+    pub compressed_bytes: usize,
+    pub dict_bytes: usize,
+    pub compress_secs: f64,
+    pub decompress_secs: f64,
+}
+
+impl CodecResult {
+    /// Ratio counting the (amortizable) dictionary.
+    pub fn ratio_with_dict(&self) -> f64 {
+        self.raw_bytes as f64 / (self.compressed_bytes + self.dict_bytes).max(1) as f64
+    }
+
+    pub fn ratio(&self) -> f64 {
+        self.raw_bytes as f64 / self.compressed_bytes.max(1) as f64
+    }
+
+    pub fn decompress_mb_s(&self) -> f64 {
+        self.raw_bytes as f64 / 1e6 / self.decompress_secs.max(1e-12)
+    }
+}
+
+/// Run one codec end-to-end on a stream (train on the stream itself unless
+/// a shared dict is supplied) and verify the roundtrip.
+pub fn measure(
+    c: &dyn Codec,
+    data: &[u8],
+    shared_dict: Option<&[u8]>,
+) -> anyhow::Result<CodecResult> {
+    let owned;
+    let dict: &[u8] = match shared_dict {
+        Some(d) => d,
+        None => {
+            owned = c.train(&[data]);
+            &owned
+        }
+    };
+    let t0 = std::time::Instant::now();
+    let payload = c.compress(dict, data)?;
+    let compress_secs = t0.elapsed().as_secs_f64();
+    let mut out = Vec::new();
+    let t1 = std::time::Instant::now();
+    c.decompress(dict, &payload, data.len(), &mut out)?;
+    let decompress_secs = t1.elapsed().as_secs_f64();
+    anyhow::ensure!(out == data, "codec {} roundtrip mismatch", c.name());
+    Ok(CodecResult {
+        codec: c.id(),
+        name: c.name(),
+        raw_bytes: data.len(),
+        compressed_bytes: payload.len(),
+        dict_bytes: if shared_dict.is_some() { 0 } else { dict.len() },
+        compress_secs,
+        decompress_secs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_extremes() {
+        assert_eq!(byte_entropy(&[]), 0.0);
+        assert_eq!(byte_entropy(&[5; 1000]), 0.0);
+        let all: Vec<u8> = (0..=255).collect();
+        assert!((byte_entropy(&all) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn conditional_entropy_detects_structure() {
+        // deterministic successor: H(X|prev) == 0
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 256) as u8).collect();
+        assert!(byte_entropy(&data) > 7.9);
+        assert!(conditional_entropy(&data, 1) < 0.01);
+    }
+
+    #[test]
+    fn measure_reports_ratio() {
+        let c = crate::compress::codec(CodecId::Rle);
+        let data = vec![3u8; 10_000];
+        let r = measure(c.as_ref(), &data, None).unwrap();
+        assert!(r.ratio() > 50.0);
+        assert_eq!(r.raw_bytes, 10_000);
+    }
+}

@@ -1,0 +1,233 @@
+//! Chunked compression (S4 extension): split a stream into fixed-size
+//! chunks compressed independently, with a chunk index.
+//!
+//! Two serving-relevant properties the flat codecs lack:
+//!
+//! * **bounded decode memory / partial access** — a layer's codes can be
+//!   decompressed range-by-range (the paper's phones have little headroom
+//!   even for one layer);
+//! * **parallel decode** — chunks are independent, so a multicore device
+//!   can decompress with `std::thread::scope` fan-out (on this repo's
+//!   1-vCPU testbed the parallel path degrades gracefully to serial).
+//!
+//! Framing: `u32 n_chunks | u32 chunk_len | n_chunks * (u64 offset into
+//! payload, u64 raw_len)` then the concatenated chunk payloads.
+
+use anyhow::Result;
+
+use super::Codec;
+
+pub const DEFAULT_CHUNK: usize = 256 * 1024;
+
+pub struct Chunked<'a> {
+    pub inner: &'a dyn Codec,
+    pub chunk_len: usize,
+}
+
+impl<'a> Chunked<'a> {
+    pub fn new(inner: &'a dyn Codec) -> Self {
+        Self { inner, chunk_len: DEFAULT_CHUNK }
+    }
+
+    pub fn with_chunk_len(mut self, n: usize) -> Self {
+        assert!(n > 0);
+        self.chunk_len = n;
+        self
+    }
+
+    pub fn compress(&self, dict: &[u8], data: &[u8]) -> Result<Vec<u8>> {
+        let chunks: Vec<&[u8]> = data.chunks(self.chunk_len.max(1)).collect();
+        let mut payloads = Vec::with_capacity(chunks.len());
+        for c in &chunks {
+            payloads.push(self.inner.compress(dict, c)?);
+        }
+        let mut out = Vec::new();
+        out.extend_from_slice(&(chunks.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.chunk_len as u32).to_le_bytes());
+        let mut offset = 0u64;
+        for (c, p) in chunks.iter().zip(&payloads) {
+            out.extend_from_slice(&offset.to_le_bytes());
+            out.extend_from_slice(&(c.len() as u64).to_le_bytes());
+            offset += p.len() as u64;
+        }
+        for p in &payloads {
+            out.extend_from_slice(p);
+        }
+        Ok(out)
+    }
+
+    fn parse_index(payload: &[u8]) -> Result<(Vec<(usize, usize)>, usize, &[u8])> {
+        anyhow::ensure!(payload.len() >= 8, "chunked: truncated header");
+        let n = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+        let chunk_len = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
+        let idx_end = 8 + n * 16;
+        anyhow::ensure!(payload.len() >= idx_end, "chunked: truncated index");
+        let mut index = Vec::with_capacity(n);
+        for i in 0..n {
+            let off = 8 + i * 16;
+            let o = u64::from_le_bytes(payload[off..off + 8].try_into().unwrap()) as usize;
+            let l = u64::from_le_bytes(payload[off + 8..off + 16].try_into().unwrap()) as usize;
+            index.push((o, l));
+        }
+        Ok((index, chunk_len, &payload[idx_end..]))
+    }
+
+    pub fn decompress(
+        &self,
+        dict: &[u8],
+        payload: &[u8],
+        expected_len: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
+        let (index, _cl, body) = Self::parse_index(payload)?;
+        out.clear();
+        out.reserve(expected_len);
+        let mut scratch = Vec::new();
+        for (i, &(off, raw_len)) in index.iter().enumerate() {
+            let end = index.get(i + 1).map(|&(o, _)| o).unwrap_or(body.len());
+            anyhow::ensure!(off <= end && end <= body.len(), "chunked: bad index");
+            self.inner.decompress(dict, &body[off..end], raw_len, &mut scratch)?;
+            out.extend_from_slice(&scratch);
+        }
+        anyhow::ensure!(out.len() == expected_len, "chunked: length mismatch");
+        Ok(())
+    }
+
+    /// Decompress only the chunks covering byte range [start, start+len) —
+    /// the partial-access primitive. Returns (bytes, offset of range start
+    /// within them).
+    pub fn decompress_range(
+        &self,
+        dict: &[u8],
+        payload: &[u8],
+        start: usize,
+        len: usize,
+    ) -> Result<(Vec<u8>, usize)> {
+        let (index, chunk_len, body) = Self::parse_index(payload)?;
+        anyhow::ensure!(chunk_len > 0, "chunked: zero chunk_len");
+        let first = start / chunk_len;
+        let last = (start + len).saturating_sub(1) / chunk_len;
+        anyhow::ensure!(last < index.len(), "chunked: range beyond stream");
+        let mut out = Vec::new();
+        let mut scratch = Vec::new();
+        for i in first..=last {
+            let (off, raw_len) = index[i];
+            let end = index.get(i + 1).map(|&(o, _)| o).unwrap_or(body.len());
+            self.inner.decompress(dict, &body[off..end], raw_len, &mut scratch)?;
+            out.extend_from_slice(&scratch);
+        }
+        Ok((out, start - first * chunk_len))
+    }
+
+    /// Parallel decompression across chunks using scoped threads.
+    pub fn decompress_parallel(
+        &self,
+        dict: &[u8],
+        payload: &[u8],
+        expected_len: usize,
+        n_threads: usize,
+    ) -> Result<Vec<u8>>
+    where
+        Self: Sync,
+    {
+        let (index, _cl, body) = Self::parse_index(payload)?;
+        let n = index.len();
+        if n == 0 {
+            anyhow::ensure!(expected_len == 0, "chunked: empty payload");
+            return Ok(Vec::new());
+        }
+        let mut results: Vec<Result<Vec<u8>>> = (0..n).map(|_| Ok(Vec::new())).collect();
+        let threads = n_threads.clamp(1, n);
+        let stride = (n + threads - 1) / threads;
+        std::thread::scope(|s| {
+            for (tid, slot_chunk) in results.chunks_mut(stride).enumerate() {
+                let index = &index;
+                let inner = self.inner;
+                s.spawn(move || {
+                    for (j, slot) in slot_chunk.iter_mut().enumerate() {
+                        let i = tid * stride + j;
+                        let (off, raw_len) = index[i];
+                        let end = index.get(i + 1).map(|&(o, _)| o).unwrap_or(body.len());
+                        let mut buf = Vec::new();
+                        *slot = inner
+                            .decompress(dict, &body[off..end], raw_len, &mut buf)
+                            .map(|_| buf);
+                    }
+                });
+            }
+        });
+        let mut out = Vec::with_capacity(expected_len);
+        for r in results {
+            out.extend_from_slice(&r?);
+        }
+        anyhow::ensure!(out.len() == expected_len, "chunked: length mismatch");
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{codec, CodecId};
+    use crate::util::Rng;
+
+    fn sample(n: usize) -> Vec<u8> {
+        let mut rng = Rng::seed_from_u64(1);
+        (0..n).map(|_| (128.0 + 20.0 * rng.normal_f32()).clamp(0.0, 255.0) as u8).collect()
+    }
+
+    #[test]
+    fn roundtrip_all_codecs_and_sizes() {
+        for id in crate::compress::all_codec_ids() {
+            let inner = codec(id);
+            let ch = Chunked::new(inner.as_ref()).with_chunk_len(1000);
+            for n in [0usize, 1, 999, 1000, 1001, 5000] {
+                let data = sample(n);
+                let dict = inner.train(&[&data]);
+                let payload = ch.compress(&dict, &data).unwrap();
+                let mut out = Vec::new();
+                ch.decompress(&dict, &payload, n, &mut out).unwrap();
+                assert_eq!(out, data, "{id:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn range_access() {
+        let inner = codec(CodecId::Huffman);
+        let ch = Chunked::new(inner.as_ref()).with_chunk_len(512);
+        let data = sample(4096);
+        let dict = inner.train(&[&data]);
+        let payload = ch.compress(&dict, &data).unwrap();
+        for (start, len) in [(0usize, 10usize), (500, 100), (1000, 2000), (4000, 96)] {
+            let (bytes, off) = ch.decompress_range(&dict, &payload, start, len).unwrap();
+            assert_eq!(&bytes[off..off + len], &data[start..start + len]);
+        }
+        assert!(ch.decompress_range(&dict, &payload, 4095, 100).is_err());
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let inner = codec(CodecId::Lzw);
+        let ch = Chunked::new(inner.as_ref()).with_chunk_len(777);
+        let data = sample(10_000);
+        let dict = inner.train(&[&data]);
+        let payload = ch.compress(&dict, &data).unwrap();
+        for threads in [1usize, 2, 4, 16] {
+            let got = ch.decompress_parallel(&dict, &payload, data.len(), threads).unwrap();
+            assert_eq!(got, data, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn corrupt_index_rejected() {
+        let inner = codec(CodecId::Raw);
+        let ch = Chunked::new(inner.as_ref());
+        let mut out = Vec::new();
+        assert!(ch.decompress(&[], &[1, 2, 3], 10, &mut out).is_err());
+        let data = sample(100);
+        let mut payload = ch.compress(&[], &data).unwrap();
+        payload.truncate(10);
+        assert!(ch.decompress(&[], &payload, 100, &mut out).is_err());
+    }
+}

@@ -1,0 +1,251 @@
+//! Config system: model geometry (mirrors `python/compile/config.py` via
+//! the AOT manifest — rust never hardcodes dims) plus serving / quantize /
+//! compress options assembled from CLI flags and JSON config files.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::quant::Bits;
+use crate::util::Json;
+
+/// Model geometry parsed from `artifacts/<name>/manifest.json::config`.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+    pub head_dim: usize,
+    pub kv_dim: usize,
+    pub n_params: usize,
+    pub prefill_t: Vec<usize>,
+    pub prefill_b: Vec<usize>,
+    pub decode_b: Vec<usize>,
+}
+
+impl ModelConfig {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.get("name")?.as_str()?.to_string(),
+            d_model: j.get("d_model")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            n_kv_heads: j.get("n_kv_heads")?.as_usize()?,
+            d_ff: j.get("d_ff")?.as_usize()?,
+            vocab: j.get("vocab")?.as_usize()?,
+            max_seq: j.get("max_seq")?.as_usize()?,
+            rope_theta: j.get("rope_theta")?.as_f64()?,
+            norm_eps: j.get("norm_eps")?.as_f64()?,
+            head_dim: j.get("head_dim")?.as_usize()?,
+            kv_dim: j.get("kv_dim")?.as_usize()?,
+            n_params: j.get("n_params")?.as_usize()?,
+            prefill_t: j.get("prefill_t")?.usize_arr()?,
+            prefill_b: j.get("prefill_b")?.usize_arr()?,
+            decode_b: j.get("decode_b")?.usize_arr()?,
+        })
+    }
+}
+
+/// One lowered stage geometry from the manifest.
+#[derive(Clone, Debug)]
+pub struct StageEntry {
+    pub stage: String,
+    pub file: String,
+    pub b: usize,
+    pub t: usize,
+    pub s: usize,
+    pub n_outputs: usize,
+}
+
+/// Full AOT manifest for one model config.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: u32,
+    pub config: ModelConfig,
+    pub stages: Vec<StageEntry>,
+    pub weights_file: String,
+}
+
+impl Manifest {
+    pub fn load(artifacts_root: impl AsRef<Path>, model: &str) -> Result<Self> {
+        let path = artifacts_root.as_ref().join(model).join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`?)"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        let version = j.get("version")?.as_u32()?;
+        anyhow::ensure!(
+            version == crate::FORMAT_VERSION,
+            "manifest version {} != {}",
+            version,
+            crate::FORMAT_VERSION
+        );
+        let mut stages = Vec::new();
+        for s in j.get("stages")?.as_arr()? {
+            stages.push(StageEntry {
+                stage: s.get("stage")?.as_str()?.to_string(),
+                file: s.get("file")?.as_str()?.to_string(),
+                b: s.get("b")?.as_usize()?,
+                t: s.get("t")?.as_usize()?,
+                s: s.get("s")?.as_usize()?,
+                n_outputs: s.get("n_outputs")?.as_usize()?,
+            });
+        }
+        Ok(Manifest {
+            version,
+            config: ModelConfig::from_json(j.get("config")?)?,
+            stages,
+            weights_file: j.get("weights_file")?.as_str()?.to_string(),
+        })
+    }
+
+    pub fn model_dir(&self, artifacts_root: impl AsRef<Path>) -> PathBuf {
+        artifacts_root.as_ref().join(&self.config.name)
+    }
+
+    /// Smallest prefill bucket that fits `t` tokens at batch `b`.
+    pub fn prefill_bucket(&self, b: usize, t: usize) -> Option<&StageEntry> {
+        self.stages
+            .iter()
+            .filter(|s| s.stage == "block" && s.b == b && s.t >= t && s.t > 1)
+            .min_by_key(|s| s.t)
+    }
+
+    pub fn stage(&self, stage: &str, b: usize, t: usize) -> Option<&StageEntry> {
+        self.stages.iter().find(|s| s.stage == stage && s.b == b && s.t == t)
+    }
+}
+
+/// How to quantize a checkpoint (paper §3).
+#[derive(Clone, Debug)]
+pub struct QuantizeOptions {
+    pub bits: Bits,
+    pub per_channel: bool,
+    /// Use GPTQ with calibration data instead of the naive quantizer.
+    pub gptq: bool,
+    /// GPTQ damping (fraction of mean Hessian diagonal).
+    pub percdamp: f64,
+    /// Calibration token budget for GPTQ.
+    pub calib_tokens: usize,
+}
+
+impl Default for QuantizeOptions {
+    fn default() -> Self {
+        Self { bits: Bits::B8, per_channel: false, gptq: false, percdamp: 0.01, calib_tokens: 8192 }
+    }
+}
+
+/// Weight residency policy for the serving pipeline (E8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Residency {
+    /// Decompress everything up front; keep expanded weights resident
+    /// (the paper's "Quantized" baseline).
+    AlwaysResident,
+    /// Decompress each layer just-in-time and drop it after use
+    /// (the paper's per-layer streaming).
+    StreamPerLayer,
+    /// Keep up to N expanded layers in an LRU cache.
+    Lru(usize),
+}
+
+impl Residency {
+    pub fn parse(s: &str) -> Result<Self> {
+        if s == "resident" {
+            return Ok(Residency::AlwaysResident);
+        }
+        if s == "stream" {
+            return Ok(Residency::StreamPerLayer);
+        }
+        if let Some(n) = s.strip_prefix("lru:") {
+            return Ok(Residency::Lru(n.parse()?));
+        }
+        anyhow::bail!("bad residency {s:?} (resident|stream|lru:N)")
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Residency::AlwaysResident => "resident".into(),
+            Residency::StreamPerLayer => "stream".into(),
+            Residency::Lru(n) => format!("lru:{n}"),
+        }
+    }
+}
+
+/// Serving configuration (coordinator).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    pub residency: Residency,
+    /// Overlap next-layer decompression with current-layer execution.
+    pub prefetch: bool,
+    /// Dynamic batcher: max batch size (must match a lowered decode_b).
+    pub max_batch: usize,
+    /// Dynamic batcher: max queue wait before dispatching a partial batch.
+    pub max_wait_ms: u64,
+    /// Max generated tokens per request.
+    pub max_new_tokens: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            residency: Residency::StreamPerLayer,
+            prefetch: true,
+            max_batch: 4,
+            max_wait_ms: 2,
+            max_new_tokens: 32,
+        }
+    }
+}
+
+/// Where build artifacts live; resolves the repo-root default.
+pub fn default_artifacts_root() -> PathBuf {
+    if let Ok(p) = std::env::var("TQM_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // walk up from cwd looking for artifacts/
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residency_parse() {
+        assert_eq!(Residency::parse("resident").unwrap(), Residency::AlwaysResident);
+        assert_eq!(Residency::parse("stream").unwrap(), Residency::StreamPerLayer);
+        assert_eq!(Residency::parse("lru:3").unwrap(), Residency::Lru(3));
+        assert!(Residency::parse("bogus").is_err());
+        assert_eq!(Residency::Lru(2).label(), "lru:2");
+    }
+
+    #[test]
+    fn manifest_parses_real_artifact() {
+        let root = default_artifacts_root();
+        if !root.join("tiny/manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&root, "tiny").unwrap();
+        assert_eq!(m.config.name, "tiny");
+        assert_eq!(m.config.d_model, 64);
+        assert!(m.stage("block", 1, 1).is_some());
+        let bucket = m.prefill_bucket(1, 10).unwrap();
+        assert!(bucket.t >= 10);
+    }
+}

@@ -1,0 +1,95 @@
+//! Dynamic batching policy (S10): collect requests from the queue until
+//! either the batch is full or the oldest request has waited `max_wait`.
+//! Deadline-or-full is the same policy vLLM's continuous batcher degrades
+//! to for fixed-geometry executables, which is what our compiled decode
+//! buckets are.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 4, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Block for the first item, then drain until full or deadline. Returns an
+/// empty vec when the channel has disconnected and is drained.
+pub fn collect_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Vec<T> {
+    let mut batch = Vec::with_capacity(policy.max_batch);
+    match rx.recv() {
+        Ok(item) => batch.push(item),
+        Err(_) => return batch,
+    }
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    batch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn collects_up_to_max_batch() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) };
+        let b = collect_batch(&rx, policy);
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b2 = collect_batch(&rx, policy);
+        assert_eq!(b2, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn partial_batch_on_deadline() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let t0 = Instant::now();
+        let b = collect_batch(&rx, policy);
+        assert_eq!(b, vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn empty_on_disconnect() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        drop(tx);
+        let b = collect_batch(&rx, BatchPolicy::default());
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn late_arrivals_within_window_join() {
+        let (tx, rx) = mpsc::channel();
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(60) };
+        let sender = std::thread::spawn(move || {
+            tx.send(1).unwrap();
+            std::thread::sleep(Duration::from_millis(10));
+            tx.send(2).unwrap();
+        });
+        let b = collect_batch(&rx, policy);
+        sender.join().unwrap();
+        assert_eq!(b, vec![1, 2]);
+    }
+}

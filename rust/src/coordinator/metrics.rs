@@ -1,0 +1,133 @@
+//! Serving metrics (S10): request counters and latency aggregation for the
+//! coordinator — what the paper's Tables 2-4 latency columns are made of,
+//! plus the queueing/batching split a serving system actually needs.
+
+use std::sync::Mutex;
+
+#[derive(Default)]
+pub struct ServeMetrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    requests: u64,
+    tokens_out: u64,
+    batches: u64,
+    batch_sizes: Vec<usize>,
+    queue_s: Vec<f64>,
+    prefill_s: Vec<f64>,
+    decode_s: Vec<f64>,
+    total_s: Vec<f64>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencyStats {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+fn stats(xs: &[f64]) -> LatencyStats {
+    if xs.is_empty() {
+        return LatencyStats::default();
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    LatencyStats {
+        mean: v.iter().sum::<f64>() / v.len() as f64,
+        p50: v[v.len() / 2],
+        p95: v[(v.len() * 95 / 100).min(v.len() - 1)],
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ServeSnapshot {
+    pub requests: u64,
+    pub tokens_out: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub queue: LatencyStats,
+    pub prefill: LatencyStats,
+    pub decode: LatencyStats,
+    pub total: LatencyStats,
+    pub tokens_per_s: f64,
+}
+
+impl ServeMetrics {
+    pub fn record_batch(&self, size: usize) {
+        let mut i = self.inner.lock().unwrap();
+        i.batches += 1;
+        i.batch_sizes.push(size);
+    }
+
+    pub fn record_request(
+        &self,
+        queue_s: f64,
+        prefill_s: f64,
+        decode_s: f64,
+        tokens_out: usize,
+    ) {
+        let mut i = self.inner.lock().unwrap();
+        i.requests += 1;
+        i.tokens_out += tokens_out as u64;
+        i.queue_s.push(queue_s);
+        i.prefill_s.push(prefill_s);
+        i.decode_s.push(decode_s);
+        i.total_s.push(queue_s + prefill_s + decode_s);
+    }
+
+    pub fn snapshot(&self) -> ServeSnapshot {
+        let i = self.inner.lock().unwrap();
+        let decode_total: f64 = i.decode_s.iter().sum();
+        ServeSnapshot {
+            requests: i.requests,
+            tokens_out: i.tokens_out,
+            batches: i.batches,
+            mean_batch_size: if i.batch_sizes.is_empty() {
+                0.0
+            } else {
+                i.batch_sizes.iter().sum::<usize>() as f64 / i.batch_sizes.len() as f64
+            },
+            queue: stats(&i.queue_s),
+            prefill: stats(&i.prefill_s),
+            decode: stats(&i.decode_s),
+            total: stats(&i.total_s),
+            tokens_per_s: if decode_total > 0.0 {
+                i.tokens_out as f64 / decode_total
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let m = ServeMetrics::default();
+        m.record_batch(2);
+        m.record_batch(4);
+        m.record_request(0.001, 0.01, 0.1, 10);
+        m.record_request(0.002, 0.02, 0.3, 30);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.tokens_out, 40);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch_size - 3.0).abs() < 1e-9);
+        assert!(s.total.mean > 0.1);
+        assert!(s.tokens_per_s > 0.0);
+        assert!(s.queue.p95 >= s.queue.p50);
+    }
+
+    #[test]
+    fn empty_snapshot_safe() {
+        let m = ServeMetrics::default();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.tokens_per_s, 0.0);
+    }
+}

@@ -1,0 +1,450 @@
+//! Serving coordinator (S10): the L3 shell around the pipeline engine.
+//!
+//! Each registered model runs on a dedicated serving thread (the PJRT
+//! client, executables and weight source are not `Send`, and pinning a
+//! model to a thread is the right serving topology anyway). Requests enter
+//! through an mpsc queue; the dynamic batcher groups compatible requests
+//! up to the compiled decode geometry; generation proceeds with batched
+//! decode steps, retiring finished requests as they hit their token budget
+//! or the stop token.
+//!
+//! The router dispatches by model name, so one process can serve e.g. the
+//! fp32-resident baseline and the compressed-streamed variant side by side
+//! (exactly what the benches do).
+
+pub mod batcher;
+pub mod metrics;
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::{Residency, ServeOptions};
+use crate::gen::{Sampler, SamplerKind};
+use crate::model::WeightSource;
+use crate::pipeline::{Engine, Session};
+use crate::runtime::Runtime;
+
+pub use batcher::{collect_batch, BatchPolicy};
+pub use metrics::{ServeMetrics, ServeSnapshot};
+
+/// What a client submits.
+pub struct GenRequest {
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub sampler: SamplerKind,
+    pub seed: u64,
+    pub stop_token: Option<u32>,
+}
+
+/// What a client gets back.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub tokens: Vec<u32>,
+    pub queue_s: f64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+}
+
+struct Envelope {
+    req: GenRequest,
+    enqueued: Instant,
+    resp: mpsc::Sender<Result<GenResponse>>,
+}
+
+/// How to build a model's engine (resolved on its serving thread).
+pub struct ModelSpec {
+    pub name: String,
+    pub artifacts_root: std::path::PathBuf,
+    pub manifest_model: String,
+    pub tqm_path: std::path::PathBuf,
+    pub serve: ServeOptions,
+}
+
+pub struct ModelHandle {
+    tx: mpsc::Sender<Envelope>,
+    pub metrics: Arc<ServeMetrics>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// The router: model name -> serving thread.
+pub struct Coordinator {
+    models: HashMap<String, ModelHandle>,
+}
+
+impl Coordinator {
+    pub fn new() -> Self {
+        Self { models: HashMap::new() }
+    }
+
+    /// Register and start a model's serving thread.
+    pub fn register(&mut self, spec: ModelSpec) -> Result<()> {
+        let (tx, rx) = mpsc::channel::<Envelope>();
+        let metrics = Arc::new(ServeMetrics::default());
+        let thread_metrics = metrics.clone();
+        let name = spec.name.clone();
+        // engine construction errors must surface at register time
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name(format!("serve-{name}"))
+            .spawn(move || serve_thread(spec, rx, thread_metrics, ready_tx))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("serving thread died during startup"))??;
+        self.models.insert(name, ModelHandle { tx, metrics, join: Some(join) });
+        Ok(())
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    pub fn metrics(&self, model: &str) -> Option<Arc<ServeMetrics>> {
+        self.models.get(model).map(|h| h.metrics.clone())
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(
+        &self,
+        model: &str,
+        req: GenRequest,
+    ) -> Result<mpsc::Receiver<Result<GenResponse>>> {
+        let h = self
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("no model {model:?} registered"))?;
+        let (resp_tx, resp_rx) = mpsc::channel();
+        h.tx
+            .send(Envelope { req, enqueued: Instant::now(), resp: resp_tx })
+            .map_err(|_| anyhow::anyhow!("serving thread for {model:?} is gone"))?;
+        Ok(resp_rx)
+    }
+
+    /// Submit and block for the response.
+    pub fn generate(&self, model: &str, req: GenRequest) -> Result<GenResponse> {
+        let rx = self.submit(model, req)?;
+        rx.recv().map_err(|_| anyhow::anyhow!("response channel closed"))?
+    }
+
+    /// Stop all serving threads (drains queues).
+    pub fn shutdown(mut self) {
+        for (_, mut h) in self.models.drain() {
+            drop(h.tx);
+            if let Some(j) = h.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One in-flight request during batched decoding.
+struct Active {
+    env: Envelope,
+    session: Session,
+    sampler: Sampler,
+    generated: Vec<u32>,
+    next: u32,
+    prefill_s: f64,
+    decode_start: Instant,
+    done: bool,
+}
+
+fn serve_thread(
+    spec: ModelSpec,
+    rx: mpsc::Receiver<Envelope>,
+    metrics: Arc<ServeMetrics>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let engine = match build_engine(&spec) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let policy = BatchPolicy {
+        max_batch: spec.serve.max_batch,
+        max_wait: std::time::Duration::from_millis(spec.serve.max_wait_ms),
+    };
+    loop {
+        let batch = collect_batch(&rx, policy);
+        if batch.is_empty() {
+            return; // disconnected
+        }
+        metrics.record_batch(batch.len());
+        serve_batch(&engine, batch, &metrics, spec.serve.max_new_tokens);
+    }
+}
+
+fn build_engine(spec: &ModelSpec) -> Result<Engine> {
+    let rt = Arc::new(Runtime::new(&spec.artifacts_root, &spec.manifest_model)?);
+    let source = match spec.serve.residency {
+        Residency::AlwaysResident => {
+            WeightSource::open_resident(&spec.tqm_path, &rt.manifest.config)?
+        }
+        _ => WeightSource::open_compressed(&spec.tqm_path)?,
+    };
+    Engine::new(rt, source, &spec.serve)
+}
+
+fn serve_batch(
+    engine: &Engine,
+    batch: Vec<Envelope>,
+    metrics: &ServeMetrics,
+    max_new_cap: usize,
+) {
+    // prefill each request individually (prefill buckets are B=1)
+    let mut active: Vec<Active> = Vec::with_capacity(batch.len());
+    for env in batch {
+        let t0 = Instant::now();
+        match engine.prefill_session(&env.req.prompt) {
+            Ok((session, first_logits)) => {
+                let mut sampler = match env.req.sampler {
+                    SamplerKind::Greedy => Sampler::greedy(),
+                    SamplerKind::TopK { k, temperature } => {
+                        Sampler::top_k(k, temperature, env.req.seed)
+                    }
+                };
+                let next = sampler.sample(&first_logits);
+                active.push(Active {
+                    env,
+                    session,
+                    sampler,
+                    generated: Vec::new(),
+                    next,
+                    prefill_s: t0.elapsed().as_secs_f64(),
+                    decode_start: Instant::now(),
+                    done: false,
+                });
+            }
+            Err(e) => {
+                let _ = env.resp.send(Err(e));
+            }
+        }
+    }
+
+    // batched decode until everyone finishes
+    loop {
+        let live: Vec<usize> = (0..active.len()).filter(|&i| !active[i].done).collect();
+        if live.is_empty() {
+            break;
+        }
+        // emit the sampled token first, then check budgets
+        for &i in &live {
+            let a = &mut active[i];
+            a.generated.push(a.next);
+            let hit_stop = a.env.req.stop_token == Some(a.next);
+            let budget = a.env.req.max_new.min(max_new_cap);
+            if hit_stop
+                || a.generated.len() >= budget
+                || a.session.pos + 1 >= engine.cfg().max_seq
+            {
+                a.done = true;
+                retire(a, metrics);
+            }
+        }
+        let live: Vec<usize> = (0..active.len()).filter(|&i| !active[i].done).collect();
+        if live.is_empty() {
+            break;
+        }
+        // temporarily move sessions out of their slots so decode_batch can
+        // take disjoint &mut without aliasing
+        let tokens: Vec<u32> = live.iter().map(|&i| active[i].next).collect();
+        let mut sessions_owned: Vec<Session> = live
+            .iter()
+            .map(|&i| std::mem::replace(&mut active[i].session, Session::empty()))
+            .collect();
+        let mut session_refs: Vec<&mut Session> = sessions_owned.iter_mut().collect();
+        let result = engine.decode_batch(&mut session_refs, &tokens);
+        for (j, &i) in live.iter().enumerate() {
+            active[i].session = std::mem::replace(&mut sessions_owned[j], Session::empty());
+        }
+        match result {
+            Ok(logit_rows) => {
+                for (&i, row) in live.iter().zip(logit_rows) {
+                    let a = &mut active[i];
+                    a.next = a.sampler.sample(&row);
+                }
+            }
+            Err(e) => {
+                let msg = format!("decode failed: {e}");
+                for &i in &live {
+                    let a = &mut active[i];
+                    a.done = true;
+                    let _ = a.env.resp.send(Err(anyhow::anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}
+
+fn retire(a: &mut Active, metrics: &ServeMetrics) {
+    let queue_s = a.env.enqueued.elapsed().as_secs_f64()
+        - a.prefill_s
+        - a.decode_start.elapsed().as_secs_f64();
+    let queue_s = queue_s.max(0.0);
+    let decode_s = a.decode_start.elapsed().as_secs_f64();
+    metrics.record_request(queue_s, a.prefill_s, decode_s, a.generated.len());
+    let _ = a.env.resp.send(Ok(GenResponse {
+        tokens: a.generated.clone(),
+        queue_s,
+        prefill_s: a.prefill_s,
+        decode_s,
+    }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CodecId;
+    use crate::config::{default_artifacts_root, QuantizeOptions};
+    use crate::model::{quantize_checkpoint, Checkpoint};
+    use crate::util::TempDir;
+
+    fn make_spec(dir: &TempDir, residency: Residency) -> Option<ModelSpec> {
+        let root = default_artifacts_root();
+        if !root.join("tiny/manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let manifest = crate::config::Manifest::load(&root, "tiny").unwrap();
+        let ckpt = Checkpoint::load(root.join("tiny/weights/tiny.tqw")).unwrap();
+        let opts = QuantizeOptions { per_channel: true, ..Default::default() };
+        let w = quantize_checkpoint(
+            &manifest.config,
+            &ckpt,
+            &opts,
+            CodecId::FreqSeqPacked,
+            None,
+            "tiny.tqw",
+        )
+        .unwrap();
+        let tqm = dir.join("tiny.tqm");
+        w.write(&tqm).unwrap();
+        Some(ModelSpec {
+            name: "tiny".into(),
+            artifacts_root: root,
+            manifest_model: "tiny".into(),
+            tqm_path: tqm,
+            serve: ServeOptions {
+                residency,
+                prefetch: false,
+                max_batch: 2,
+                max_wait_ms: 5,
+                max_new_tokens: 8,
+            },
+        })
+    }
+
+    #[test]
+    fn serve_roundtrip_single() {
+        let dir = TempDir::new().unwrap();
+        let Some(spec) = make_spec(&dir, Residency::StreamPerLayer) else { return };
+        let mut coord = Coordinator::new();
+        coord.register(spec).unwrap();
+        let resp = coord
+            .generate(
+                "tiny",
+                GenRequest {
+                    prompt: vec![1, 2, 20, 3],
+                    max_new: 4,
+                    sampler: SamplerKind::Greedy,
+                    seed: 0,
+                    stop_token: None,
+                },
+            )
+            .unwrap();
+        assert_eq!(resp.tokens.len(), 4);
+        assert!(resp.prefill_s > 0.0);
+        let snap = coord.metrics("tiny").unwrap().snapshot();
+        assert_eq!(snap.requests, 1);
+        assert_eq!(snap.tokens_out, 4);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_get_batched() {
+        let dir = TempDir::new().unwrap();
+        let Some(spec) = make_spec(&dir, Residency::StreamPerLayer) else { return };
+        let mut coord = Coordinator::new();
+        coord.register(spec).unwrap();
+        let rxs: Vec<_> = (0..4)
+            .map(|i| {
+                coord
+                    .submit(
+                        "tiny",
+                        GenRequest {
+                            prompt: vec![1, 2 + i as u32, 3],
+                            max_new: 3,
+                            sampler: SamplerKind::Greedy,
+                            seed: i as u64,
+                            stop_token: None,
+                        },
+                    )
+                    .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.tokens.len(), 3);
+        }
+        let snap = coord.metrics("tiny").unwrap().snapshot();
+        assert_eq!(snap.requests, 4);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let coord = Coordinator::new();
+        assert!(coord
+            .submit(
+                "nope",
+                GenRequest {
+                    prompt: vec![1],
+                    max_new: 1,
+                    sampler: SamplerKind::Greedy,
+                    seed: 0,
+                    stop_token: None,
+                }
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn batched_output_matches_unbatched() {
+        // determinism invariant: batching must not change greedy output
+        let dir = TempDir::new().unwrap();
+        let Some(spec) = make_spec(&dir, Residency::StreamPerLayer) else { return };
+        let mut coord = Coordinator::new();
+        coord.register(spec).unwrap();
+        let req = || GenRequest {
+            prompt: vec![2, 17, 30, 3],
+            max_new: 4,
+            sampler: SamplerKind::Greedy,
+            seed: 0,
+            stop_token: None,
+        };
+        // sequential (batch of 1)
+        let solo = coord.generate("tiny", req()).unwrap();
+        // concurrent pair (batched decode)
+        let rx1 = coord.submit("tiny", req()).unwrap();
+        let rx2 = coord.submit("tiny", req()).unwrap();
+        let b1 = rx1.recv().unwrap().unwrap();
+        let b2 = rx2.recv().unwrap().unwrap();
+        assert_eq!(solo.tokens, b1.tokens);
+        assert_eq!(solo.tokens, b2.tokens);
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,206 @@
+//! SynthLang asset loader (S12): the rust side never re-implements the
+//! generator — it reads what `python/compile/data.py` exported under
+//! `artifacts/data/` (token corpora as u16 little-endian streams, eval
+//! sets and vocab as JSON). See DESIGN.md's substitution table.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+/// Special token ids (mirrors data.py; also present in lang.json).
+#[derive(Clone, Debug)]
+pub struct SpecialTokens {
+    pub pad: u32,
+    pub bos: u32,
+    pub q: u32,
+    pub a: u32,
+    pub sep: u32,
+    pub eos: u32,
+}
+
+#[derive(Clone, Debug)]
+pub struct LangMeta {
+    pub vocab: usize,
+    pub n_keys: usize,
+    pub seed: u64,
+    pub special: SpecialTokens,
+    pub key_base: u32,
+}
+
+/// One multiple-choice question.
+#[derive(Clone, Debug)]
+pub struct Question {
+    pub prompt: Vec<u32>,
+    pub options: Vec<Vec<u32>>,
+    pub answer: usize,
+}
+
+/// A full eval set (one of synth-mmlu / synth-arc-*).
+#[derive(Clone, Debug)]
+pub struct EvalSet {
+    pub family: String,
+    pub n_shots: usize,
+    pub vocab: usize,
+    pub questions: Vec<Question>,
+}
+
+pub struct DataDir {
+    pub root: PathBuf,
+    pub lang: LangMeta,
+    pub vocab_names: Vec<String>,
+}
+
+impl DataDir {
+    /// Open the data directory matching a model's vocab size.
+    pub fn open_for_vocab(artifacts_root: impl AsRef<Path>, vocab: usize) -> Result<Self> {
+        let base = artifacts_root.as_ref().join("data");
+        let sub = base.join(format!("vocab{vocab}"));
+        let root = if sub.join("lang.json").exists() { sub } else { base };
+        Self::open(root)
+    }
+
+    pub fn open(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        let j = Json::parse(
+            &std::fs::read_to_string(root.join("lang.json"))
+                .with_context(|| format!("reading {root:?}/lang.json (run `make artifacts`?)"))?,
+        )?;
+        let sp = j.get("special")?;
+        let lang = LangMeta {
+            vocab: j.get("vocab")?.as_usize()?,
+            n_keys: j.get("n_keys")?.as_usize()?,
+            seed: j.get("seed")?.as_usize()? as u64,
+            special: SpecialTokens {
+                pad: sp.get("pad")?.as_u32()?,
+                bos: sp.get("bos")?.as_u32()?,
+                q: sp.get("q")?.as_u32()?,
+                a: sp.get("a")?.as_u32()?,
+                sep: sp.get("sep")?.as_u32()?,
+                eos: sp.get("eos")?.as_u32()?,
+            },
+            key_base: j.get("key_base")?.as_u32()?,
+        };
+        let vocab_names =
+            Json::parse(&std::fs::read_to_string(root.join("vocab.json"))?)?.str_arr()?;
+        Ok(Self { root, lang, vocab_names })
+    }
+
+    /// Load a u16-LE token stream (calib.bin / sample.bin).
+    pub fn tokens(&self, file: &str) -> Result<Vec<u32>> {
+        let bytes = std::fs::read(self.root.join(file))?;
+        anyhow::ensure!(bytes.len() % 2 == 0, "odd token file length");
+        Ok(bytes
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes([c[0], c[1]]) as u32)
+            .collect())
+    }
+
+    pub fn calibration_tokens(&self) -> Result<Vec<u32>> {
+        self.tokens("calib.bin")
+    }
+
+    pub fn eval_set(&self, family: &str) -> Result<EvalSet> {
+        let path = self.root.join(format!("eval_{family}.json"));
+        let j = Json::parse(
+            &std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?,
+        )?;
+        let mut questions = Vec::new();
+        for q in j.get("questions")?.as_arr()? {
+            let mut options = Vec::new();
+            for o in q.get("options")?.as_arr()? {
+                options.push(o.u32_arr()?);
+            }
+            questions.push(Question {
+                prompt: q.get("prompt")?.u32_arr()?,
+                options,
+                answer: q.get("answer")?.as_usize()?,
+            });
+        }
+        Ok(EvalSet {
+            family: j.get("family")?.as_str()?.to_string(),
+            n_shots: j.get("n_shots")?.as_usize()?,
+            vocab: j.get("vocab")?.as_usize()?,
+            questions,
+        })
+    }
+
+    /// Human-readable detokenization for demos/logging.
+    pub fn detok(&self, tokens: &[u32]) -> String {
+        tokens
+            .iter()
+            .map(|&t| {
+                self.vocab_names
+                    .get(t as usize)
+                    .map(|s| s.as_str())
+                    .unwrap_or("<?>")
+                    .to_string()
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+pub const EVAL_FAMILIES: [&str; 3] = ["mmlu", "arc-challenge", "arc-easy"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifacts_root;
+
+    fn open() -> Option<DataDir> {
+        let root = default_artifacts_root();
+        DataDir::open_for_vocab(&root, 512).ok()
+    }
+
+    #[test]
+    fn loads_lang_meta() {
+        let Some(d) = open() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(d.lang.vocab, 512);
+        assert!(d.lang.n_keys > 0);
+        assert_eq!(d.vocab_names.len(), 512);
+        assert_eq!(d.vocab_names[d.lang.special.q as usize], "Q");
+    }
+
+    #[test]
+    fn loads_eval_sets() {
+        let Some(d) = open() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        for fam in EVAL_FAMILIES {
+            let es = d.eval_set(fam).unwrap();
+            assert_eq!(es.questions.len(), 200, "{fam}");
+            for q in &es.questions {
+                assert_eq!(q.options.len(), 4);
+                assert!(q.answer < 4);
+                assert!(q.prompt.iter().all(|&t| (t as usize) < d.lang.vocab));
+            }
+        }
+    }
+
+    #[test]
+    fn loads_calibration_tokens() {
+        let Some(d) = open() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let toks = d.calibration_tokens().unwrap();
+        assert_eq!(toks.len(), 1 << 16);
+        assert!(toks.iter().all(|&t| (t as usize) < d.lang.vocab));
+    }
+
+    #[test]
+    fn detok_roundtrip_sane() {
+        let Some(d) = open() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let s = d.detok(&[d.lang.special.q, d.lang.key_base + 3, d.lang.special.a]);
+        assert_eq!(s, "Q k3 A");
+    }
+}

@@ -1,0 +1,173 @@
+//! Evaluation harness (S13): the paper's §5 pipeline — multiple-choice
+//! scoring by per-option log-likelihood, accuracy + per-question latency.
+//!
+//! Identical mechanics to a real MMLU/ARC harness: build the prompt,
+//! tokenize (SynthLang is already tokens), run the model over
+//! prompt+option, sum the log-probabilities of the option tokens, pick the
+//! argmax option, record wall-clock per question.
+
+pub mod report;
+pub mod scorer;
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::data::{EvalSet, Question};
+
+pub use scorer::{LogitsFn, ScoredQuestion};
+
+/// Result of one benchmark run.
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    pub family: String,
+    pub variant: String,
+    pub n_questions: usize,
+    pub n_correct: usize,
+    pub mean_latency_s: f64,
+    pub p95_latency_s: f64,
+    pub total_s: f64,
+}
+
+impl EvalReport {
+    pub fn accuracy(&self) -> f64 {
+        self.n_correct as f64 / self.n_questions.max(1) as f64
+    }
+}
+
+/// Run an eval set through a logits function (fp32 reference or the
+/// quantized/compressed pipeline). `limit` bounds question count.
+pub fn run_eval(
+    es: &EvalSet,
+    variant: &str,
+    limit: usize,
+    mut logits_fn: impl FnMut(&[u32]) -> Result<crate::tensor::Tensor>,
+) -> Result<EvalReport> {
+    let n = es.questions.len().min(limit);
+    let mut correct = 0;
+    let mut lats = Vec::with_capacity(n);
+    let t_start = Instant::now();
+    for q in &es.questions[..n] {
+        let t0 = Instant::now();
+        let pick = scorer::score_question(q, &mut logits_fn)?;
+        lats.push(t0.elapsed().as_secs_f64());
+        if pick.best == q.answer {
+            correct += 1;
+        }
+    }
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(EvalReport {
+        family: es.family.clone(),
+        variant: variant.to_string(),
+        n_questions: n,
+        n_correct: correct,
+        mean_latency_s: lats.iter().sum::<f64>() / n.max(1) as f64,
+        p95_latency_s: lats.get(n * 95 / 100).copied().unwrap_or(0.0),
+        total_s: t_start.elapsed().as_secs_f64(),
+    })
+}
+
+/// Sanity baseline: the expected accuracy of random guessing.
+pub fn chance_accuracy(es: &EvalSet) -> f64 {
+    let opts: usize = es.questions.first().map(|q| q.options.len()).unwrap_or(4);
+    1.0 / opts as f64
+}
+
+/// Quick structural validation of an eval set (used by `tqm eval --check`).
+pub fn validate(es: &EvalSet) -> Result<()> {
+    anyhow::ensure!(!es.questions.is_empty(), "empty eval set");
+    for (i, q) in es.questions.iter().enumerate() {
+        anyhow::ensure!(q.options.len() >= 2, "question {i}: < 2 options");
+        anyhow::ensure!(q.answer < q.options.len(), "question {i}: answer out of range");
+        anyhow::ensure!(!q.prompt.is_empty(), "question {i}: empty prompt");
+        for o in &q.options {
+            anyhow::ensure!(!o.is_empty(), "question {i}: empty option");
+        }
+    }
+    Ok(())
+}
+
+/// A trivially-scorable fixture for harness unit tests.
+#[cfg(test)]
+pub(crate) fn fixture_eval_set() -> EvalSet {
+    // model = "always predicts token t+1 follows t"; correct options
+    // continue the arithmetic run, distractors break it.
+    let questions = (0..20)
+        .map(|i| {
+            let start = 10 + (i % 5) as u32;
+            Question {
+                prompt: vec![start, start + 1, start + 2],
+                options: vec![
+                    vec![start + 3, start + 4],
+                    vec![start + 7, start + 1],
+                    vec![start, start],
+                    vec![99, 98],
+                ],
+                answer: 0,
+            }
+        })
+        .collect();
+    EvalSet { family: "fixture".into(), n_shots: 0, vocab: 128, questions }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    /// Logits for the "successor function" language: P(next = last + 1) high.
+    fn successor_logits(tokens: &[u32]) -> Result<Tensor> {
+        let v = 128;
+        let t = tokens.len();
+        let mut data = vec![0.0f32; t * v];
+        for (i, &tok) in tokens.iter().enumerate() {
+            let next = ((tok + 1) as usize) % v;
+            data[i * v + next] = 10.0;
+        }
+        Tensor::new(vec![t, v], data)
+    }
+
+    #[test]
+    fn perfect_model_scores_100() {
+        let es = fixture_eval_set();
+        validate(&es).unwrap();
+        let rep = run_eval(&es, "unit", 100, successor_logits).unwrap();
+        assert_eq!(rep.n_questions, 20);
+        assert_eq!(rep.accuracy(), 1.0);
+        assert!(rep.mean_latency_s >= 0.0);
+    }
+
+    #[test]
+    fn uniform_model_scores_near_chance() {
+        let es = fixture_eval_set();
+        let rep = run_eval(&es, "unit", 100, |tokens| {
+            Tensor::new(vec![tokens.len(), 128], vec![0.0; tokens.len() * 128])
+        })
+        .unwrap();
+        // with uniform logits every option ties; argmax picks first scored,
+        // which is option order dependent — accuracy should be low-ish but
+        // deterministic. Just check it runs and reports.
+        assert_eq!(rep.n_questions, 20);
+        assert!(rep.accuracy() <= 1.0);
+    }
+
+    #[test]
+    fn limit_respected() {
+        let es = fixture_eval_set();
+        let rep = run_eval(&es, "unit", 5, successor_logits).unwrap();
+        assert_eq!(rep.n_questions, 5);
+    }
+
+    #[test]
+    fn chance_is_quarter() {
+        let es = fixture_eval_set();
+        assert_eq!(chance_accuracy(&es), 0.25);
+    }
+
+    #[test]
+    fn validate_catches_bad_sets() {
+        let mut es = fixture_eval_set();
+        es.questions[0].answer = 9;
+        assert!(validate(&es).is_err());
+    }
+}

@@ -1,0 +1,93 @@
+//! Eval report persistence: JSON artifacts so table regeneration is
+//! scriptable and diffs across runs are reviewable (`tqm eval` and the
+//! bench binaries write these under `artifacts/reports/` when
+//! `TQM_REPORT_DIR` is set).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use super::EvalReport;
+use crate::util::Json;
+
+pub fn report_to_json(r: &EvalReport) -> Json {
+    Json::obj(vec![
+        ("family", Json::str(r.family.clone())),
+        ("variant", Json::str(r.variant.clone())),
+        ("n_questions", Json::num(r.n_questions as f64)),
+        ("n_correct", Json::num(r.n_correct as f64)),
+        ("accuracy", Json::num(r.accuracy())),
+        ("mean_latency_s", Json::num(r.mean_latency_s)),
+        ("p95_latency_s", Json::num(r.p95_latency_s)),
+        ("total_s", Json::num(r.total_s)),
+    ])
+}
+
+pub fn report_from_json(j: &Json) -> Result<EvalReport> {
+    Ok(EvalReport {
+        family: j.get("family")?.as_str()?.to_string(),
+        variant: j.get("variant")?.as_str()?.to_string(),
+        n_questions: j.get("n_questions")?.as_usize()?,
+        n_correct: j.get("n_correct")?.as_usize()?,
+        mean_latency_s: j.get("mean_latency_s")?.as_f64()?,
+        p95_latency_s: j.get("p95_latency_s")?.as_f64()?,
+        total_s: j.get("total_s")?.as_f64()?,
+    })
+}
+
+/// Write a batch of reports as one JSON file; returns the path.
+pub fn save(dir: impl AsRef<Path>, name: &str, reports: &[EvalReport]) -> Result<PathBuf> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    let arr = Json::Arr(reports.iter().map(report_to_json).collect());
+    std::fs::write(&path, arr.to_string())?;
+    Ok(path)
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<EvalReport>> {
+    let j = Json::parse(&std::fs::read_to_string(path)?)?;
+    j.as_arr()?.iter().map(report_from_json).collect()
+}
+
+/// Directory for report artifacts if the user asked for them.
+pub fn report_dir() -> Option<PathBuf> {
+    std::env::var("TQM_REPORT_DIR").ok().map(PathBuf::from)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> EvalReport {
+        EvalReport {
+            family: "arc-easy".into(),
+            variant: "compressed".into(),
+            n_questions: 60,
+            n_correct: 54,
+            mean_latency_s: 0.08,
+            p95_latency_s: 0.12,
+            total_s: 5.0,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = sample();
+        let j = report_to_json(&r);
+        let back = report_from_json(&j).unwrap();
+        assert_eq!(back.family, r.family);
+        assert_eq!(back.n_correct, 54);
+        assert!((back.accuracy() - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let reports = vec![sample(), sample()];
+        let p = save(dir.path(), "t4", &reports).unwrap();
+        let got = load(&p).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].variant, "compressed");
+    }
+}

@@ -1,0 +1,114 @@
+//! Per-option log-likelihood scoring (the paper's §5 "the model computes
+//! the log likelihood for each answer option").
+
+use anyhow::Result;
+
+use crate::data::Question;
+use crate::tensor::Tensor;
+
+pub type LogitsFn<'a> = dyn FnMut(&[u32]) -> Result<Tensor> + 'a;
+
+#[derive(Clone, Debug)]
+pub struct ScoredQuestion {
+    pub scores: Vec<f64>,
+    pub best: usize,
+}
+
+/// log softmax over one row of logits, returning logprob of `target`.
+fn logprob(row: &[f32], target: u32) -> f64 {
+    let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse: f64 = row.iter().map(|&x| ((x as f64) - m).exp()).sum::<f64>().ln() + m;
+    row[target as usize] as f64 - lse
+}
+
+/// Score every option of a question: run the model over prompt+option and
+/// sum the logprobs of the option tokens (teacher-forced continuation).
+pub fn score_question(
+    q: &Question,
+    logits_fn: &mut impl FnMut(&[u32]) -> Result<Tensor>,
+) -> Result<ScoredQuestion> {
+    let mut scores = Vec::with_capacity(q.options.len());
+    for opt in &q.options {
+        let mut tokens = q.prompt.clone();
+        tokens.extend_from_slice(opt);
+        let logits = logits_fn(&tokens)?;
+        let (t, v) = (logits.shape[0], logits.shape[1]);
+        anyhow::ensure!(t == tokens.len(), "logits rows {t} != tokens {}", tokens.len());
+        // option token j sits at position prompt_len + j and is predicted
+        // by the logits at position prompt_len + j - 1
+        let p0 = q.prompt.len();
+        let mut s = 0.0f64;
+        for (j, &tok) in opt.iter().enumerate() {
+            let row = &logits.data[(p0 + j - 1) * v..(p0 + j) * v];
+            anyhow::ensure!((tok as usize) < v, "option token {tok} out of vocab {v}");
+            s += logprob(row, tok);
+        }
+        scores.push(s);
+    }
+    let best = scores
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    Ok(ScoredQuestion { scores, best })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logprob_normalizes() {
+        let row = vec![1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3).map(|i| logprob(&row, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert!(logprob(&row, 2) > logprob(&row, 0));
+    }
+
+    #[test]
+    fn logprob_stable_for_large_logits() {
+        let row = vec![1000.0f32, 999.0, 0.0];
+        let lp = logprob(&row, 0);
+        assert!(lp.is_finite() && lp < 0.0);
+    }
+
+    #[test]
+    fn picks_higher_likelihood_option() {
+        let q = Question {
+            prompt: vec![5, 6],
+            options: vec![vec![7], vec![9]],
+            answer: 0,
+        };
+        let mut f = |tokens: &[u32]| {
+            let v = 16;
+            let mut data = vec![0.0f32; tokens.len() * v];
+            // position 1 (predicting position 2) favours token 7
+            data[v + 7] = 5.0;
+            Tensor::new(vec![tokens.len(), v], data)
+        };
+        let s = score_question(&q, &mut f).unwrap();
+        assert_eq!(s.best, 0);
+        assert!(s.scores[0] > s.scores[1]);
+    }
+
+    #[test]
+    fn multi_token_options_sum() {
+        let q = Question {
+            prompt: vec![1],
+            options: vec![vec![2, 3], vec![2, 9]],
+            answer: 0,
+        };
+        let mut f = |tokens: &[u32]| {
+            let v = 16;
+            let mut data = vec![0.0f32; tokens.len() * v];
+            for i in 0..tokens.len() {
+                data[i * v + 2] = 2.0; // always likes token 2
+                data[i * v + 3] = 1.0; // mildly likes 3, never 9
+            }
+            Tensor::new(vec![tokens.len(), v], data)
+        };
+        let s = score_question(&q, &mut f).unwrap();
+        assert_eq!(s.best, 0);
+    }
+}

@@ -1,0 +1,149 @@
+//! TQM container (S7): the on-device model file the paper's system ships.
+//!
+//! One file carries everything inference needs: the model-global
+//! compression dictionary, and per-tensor records holding quantization
+//! parameters plus the compressed code stream. The reader is *lazy*: it
+//! parses the index up front and decompresses tensors on demand, which is
+//! what makes the coordinator's per-layer streaming possible.
+//!
+//! ```text
+//! magic   b"TQM1"
+//! u32     format version
+//! u32     codec id
+//! u32     model config json length | bytes (name, dims, ...)
+//! u64     dict length | bytes
+//! u32     n_tensors
+//! repeated (index, fixed walk order):
+//!   u16   name_len | name utf-8
+//!   u8    kind      (0 = f32 raw, 1 = quantized-u8)
+//!   u8    bits      (storage bits; 8 for f32-raw, ignored)
+//!   u8    ndim | u32*ndim dims
+//!   u32   n_channels | f32*n scales | f32*n zeros   (kind 1 only)
+//!   u64   raw_len  (uncompressed code/byte count)
+//!   u64   payload_len
+//!   u32   crc32 of payload
+//!   bytes payload
+//! ```
+//!
+//! All integers little-endian. CRCs guard against torn writes — the paper
+//! targets phones, where that is not hypothetical.
+
+pub mod reader;
+pub mod writer;
+
+pub use reader::TqmReader;
+pub use writer::TqmWriter;
+
+use anyhow::Result;
+
+use crate::compress::CodecId;
+use crate::quant::Bits;
+use crate::util::Json;
+
+pub const MAGIC: &[u8; 4] = b"TQM1";
+
+/// What kind of tensor a record holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TensorKind {
+    /// Raw f32 little-endian bytes (norm vectors).
+    F32Raw,
+    /// Quantized u8 codes, compressed by the container codec.
+    QuantU8,
+}
+
+impl TensorKind {
+    pub fn to_u8(self) -> u8 {
+        match self {
+            TensorKind::F32Raw => 0,
+            TensorKind::QuantU8 => 1,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> anyhow::Result<Self> {
+        Ok(match v {
+            0 => TensorKind::F32Raw,
+            1 => TensorKind::QuantU8,
+            _ => anyhow::bail!("bad tensor kind {v}"),
+        })
+    }
+}
+
+/// Model-level metadata embedded in the container.
+#[derive(Clone, Debug)]
+pub struct TqmMeta {
+    pub model_name: String,
+    pub codec: CodecId,
+    pub bits: Bits,
+    /// Per-channel or per-tensor quantization.
+    pub per_channel: bool,
+    /// Quantizer used ("naive" | "gptq").
+    pub quantizer: String,
+    pub source_checkpoint: String,
+}
+
+impl TqmMeta {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model_name", Json::str(self.model_name.clone())),
+            ("codec", Json::num(self.codec as u32 as f64)),
+            ("bits", Json::num(bits_to_u8(self.bits) as f64)),
+            ("per_channel", Json::Bool(self.per_channel)),
+            ("quantizer", Json::str(self.quantizer.clone())),
+            ("source_checkpoint", Json::str(self.source_checkpoint.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            model_name: j.get("model_name")?.as_str()?.to_string(),
+            codec: CodecId::from_u32(j.get("codec")?.as_u32()?)?,
+            bits: bits_from_u8(j.get("bits")?.as_usize()? as u8)?,
+            per_channel: j.get("per_channel")?.as_bool()?,
+            quantizer: j.get("quantizer")?.as_str()?.to_string(),
+            source_checkpoint: j.get("source_checkpoint")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// Index entry for one tensor (offsets resolved by the reader).
+#[derive(Clone, Debug)]
+pub struct TensorRecord {
+    pub name: String,
+    pub kind: TensorKind,
+    pub bits: Bits,
+    pub shape: Vec<usize>,
+    pub scale: Vec<f32>,
+    pub zero: Vec<f32>,
+    pub raw_len: usize,
+    pub payload_offset: usize,
+    pub payload_len: usize,
+    pub crc32: u32,
+}
+
+impl TensorRecord {
+    /// Stored size of this record's payload + parameters (Table 1 input).
+    pub fn stored_bytes(&self) -> usize {
+        self.payload_len + 4 * (self.scale.len() + self.zero.len())
+    }
+}
+
+pub(crate) fn bits_to_u8(b: Bits) -> u8 {
+    match b {
+        Bits::Ternary => 255, // sentinel: 2 storage bits but ternary grid
+        Bits::B2 => 2,
+        Bits::B4 => 4,
+        Bits::B6 => 6,
+        Bits::B8 => 8,
+    }
+}
+
+pub(crate) fn bits_from_u8(v: u8) -> anyhow::Result<Bits> {
+    Ok(match v {
+        255 => Bits::Ternary,
+        2 => Bits::B2,
+        4 => Bits::B4,
+        6 => Bits::B6,
+        8 => Bits::B8,
+        _ => anyhow::bail!("bad bits tag {v}"),
+    })
+}

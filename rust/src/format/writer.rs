@@ -1,0 +1,146 @@
+//! TQM writer: quantized model -> container file.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::{bits_to_u8, TensorKind, TqmMeta, MAGIC};
+use crate::compress::codec;
+use crate::quant::QuantizedTensor;
+use crate::tensor::Tensor;
+use crate::FORMAT_VERSION;
+
+/// In-memory staging of a model about to be written.
+pub struct TqmWriter {
+    meta: TqmMeta,
+    // (name, kind, bits, shape, scale, zero, raw bytes)
+    tensors: Vec<StagedTensor>,
+}
+
+struct StagedTensor {
+    name: String,
+    kind: TensorKind,
+    bits: crate::quant::Bits,
+    shape: Vec<usize>,
+    scale: Vec<f32>,
+    zero: Vec<f32>,
+    raw: Vec<u8>,
+}
+
+impl TqmWriter {
+    pub fn new(meta: TqmMeta) -> Self {
+        Self { meta, tensors: Vec::new() }
+    }
+
+    /// Stage a quantized matrix (codes go through the container codec).
+    pub fn add_quantized(&mut self, name: &str, q: &QuantizedTensor) {
+        self.tensors.push(StagedTensor {
+            name: name.to_string(),
+            kind: TensorKind::QuantU8,
+            bits: q.bits,
+            shape: q.codes.shape.clone(),
+            scale: q.scale.clone(),
+            zero: q.zero.clone(),
+            raw: q.codes.data.clone(),
+        });
+    }
+
+    /// Stage a raw f32 tensor (norm vectors — stored uncompressed).
+    pub fn add_f32(&mut self, name: &str, t: &Tensor) {
+        let mut raw = Vec::with_capacity(t.data.len() * 4);
+        for v in &t.data {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        self.tensors.push(StagedTensor {
+            name: name.to_string(),
+            kind: TensorKind::F32Raw,
+            bits: crate::quant::Bits::B8,
+            shape: t.shape.clone(),
+            scale: Vec::new(),
+            zero: Vec::new(),
+            raw,
+        });
+    }
+
+    /// Train the model-global dictionary, compress every staged tensor,
+    /// and write the container. Returns (file_bytes, dict_bytes).
+    pub fn write(self, path: impl AsRef<Path>) -> Result<(usize, usize)> {
+        let c = codec(self.meta.codec);
+        // dictionary trained on the quantized code streams only
+        let packed_cache: Vec<Option<Vec<u8>>> = self
+            .tensors
+            .iter()
+            .map(|t| match t.kind {
+                TensorKind::QuantU8 if t.bits.storage_bits() < 8 => {
+                    Some(crate::quant::packing::pack(&t.raw, t.bits.storage_bits()))
+                }
+                _ => None,
+            })
+            .collect();
+        let samples: Vec<&[u8]> = self
+            .tensors
+            .iter()
+            .zip(&packed_cache)
+            .filter(|(t, _)| t.kind == TensorKind::QuantU8)
+            .map(|(t, p)| p.as_deref().unwrap_or(t.raw.as_slice()))
+            .collect();
+        let dict = c.train(&samples);
+
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.meta.codec as u32).to_le_bytes());
+        let meta_json = self.meta.to_json().to_string().into_bytes();
+        out.extend_from_slice(&(meta_json.len() as u32).to_le_bytes());
+        out.extend_from_slice(&meta_json);
+        out.extend_from_slice(&(dict.len() as u64).to_le_bytes());
+        out.extend_from_slice(&dict);
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+
+        for t in &self.tensors {
+            // sub-8-bit codes are bit-packed BEFORE entropy/dictionary
+            // coding (packed streams are denser and the codec sees the
+            // format the device stores); 8-bit passes through unchanged
+            let storage;
+            let raw_for_codec: &[u8] = match t.kind {
+                TensorKind::QuantU8 if t.bits.storage_bits() < 8 => {
+                    storage = crate::quant::packing::pack(&t.raw, t.bits.storage_bits());
+                    &storage
+                }
+                _ => &t.raw,
+            };
+            let payload = match t.kind {
+                TensorKind::QuantU8 => c.compress(&dict, raw_for_codec)?,
+                TensorKind::F32Raw => raw_for_codec.to_vec(),
+            };
+            let nb = t.name.as_bytes();
+            out.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+            out.extend_from_slice(nb);
+            out.push(t.kind.to_u8());
+            out.push(bits_to_u8(t.bits));
+            out.push(t.shape.len() as u8);
+            for d in &t.shape {
+                out.extend_from_slice(&(*d as u32).to_le_bytes());
+            }
+            if t.kind == TensorKind::QuantU8 {
+                out.extend_from_slice(&(t.scale.len() as u32).to_le_bytes());
+                for s in &t.scale {
+                    out.extend_from_slice(&s.to_le_bytes());
+                }
+                for z in &t.zero {
+                    out.extend_from_slice(&z.to_le_bytes());
+                }
+            }
+            out.extend_from_slice(&(raw_for_codec.len() as u64).to_le_bytes());
+            out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            out.extend_from_slice(&crc32fast::hash(&payload).to_le_bytes());
+            out.extend_from_slice(&payload);
+        }
+
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(&out)?;
+        f.flush()?;
+        Ok((out.len(), dict.len()))
+    }
+}

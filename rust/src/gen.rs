@@ -1,0 +1,175 @@
+//! Sampling / text generation (S14): greedy and top-k temperature sampling
+//! on decode-step logits, plus the generation driver used by the serving
+//! example and the coordinator.
+
+use anyhow::Result;
+
+use crate::pipeline::{Engine, Session};
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub enum SamplerKind {
+    Greedy,
+    TopK { k: usize, temperature: f32 },
+}
+
+pub struct Sampler {
+    pub kind: SamplerKind,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn greedy() -> Self {
+        Self { kind: SamplerKind::Greedy, rng: Rng::seed_from_u64(0) }
+    }
+
+    pub fn top_k(k: usize, temperature: f32, seed: u64) -> Self {
+        Self { kind: SamplerKind::TopK { k, temperature }, rng: Rng::seed_from_u64(seed) }
+    }
+
+    pub fn sample(&mut self, logits: &[f32]) -> u32 {
+        match self.kind {
+            SamplerKind::Greedy => argmax(logits),
+            SamplerKind::TopK { k, temperature } => {
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+                idx.truncate(k.max(1));
+                let t = temperature.max(1e-4);
+                let m = logits[idx[0]];
+                let weights: Vec<f64> =
+                    idx.iter().map(|&i| (((logits[i] - m) / t) as f64).exp()).collect();
+                let total: f64 = weights.iter().sum();
+                let mut u = self.rng.f64() * total;
+                for (j, w) in weights.iter().enumerate() {
+                    u -= w;
+                    if u <= 0.0 {
+                        return idx[j] as u32;
+                    }
+                }
+                idx[idx.len() - 1] as u32
+            }
+        }
+    }
+}
+
+pub fn argmax(logits: &[f32]) -> u32 {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as u32)
+        .unwrap_or(0)
+}
+
+/// Outcome of a generation call.
+pub struct Generation {
+    pub tokens: Vec<u32>,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub tokens_per_s: f64,
+}
+
+/// Generate `max_new` tokens from `prompt`, stopping at `stop_token`.
+pub fn generate(
+    engine: &Engine,
+    prompt: &[u32],
+    max_new: usize,
+    sampler: &mut Sampler,
+    stop_token: Option<u32>,
+) -> Result<Generation> {
+    let t0 = std::time::Instant::now();
+    let (mut session, first_logits) = engine.prefill_session(prompt)?;
+    let prefill_s = t0.elapsed().as_secs_f64();
+
+    let mut out = Vec::with_capacity(max_new);
+    let mut next = sampler.sample(&first_logits);
+    let t1 = std::time::Instant::now();
+    for _ in 0..max_new {
+        out.push(next);
+        if Some(next) == stop_token {
+            break;
+        }
+        if session.pos + 1 >= engine.cfg().max_seq {
+            break; // KV capacity reached
+        }
+        let logits = engine.decode_one(&mut session, next)?;
+        next = sampler.sample(&logits);
+    }
+    let decode_s = t1.elapsed().as_secs_f64();
+    Ok(Generation {
+        tokens_per_s: out.len() as f64 / decode_s.max(1e-9),
+        tokens: out,
+        prefill_s,
+        decode_s,
+    })
+}
+
+/// Continue an existing session by `n` tokens (used by the coordinator's
+/// batched loop for single sessions).
+pub fn continue_session(
+    engine: &Engine,
+    session: &mut Session,
+    first: u32,
+    n: usize,
+    sampler: &mut Sampler,
+) -> Result<Vec<u32>> {
+    let mut out = Vec::with_capacity(n);
+    let mut next = first;
+    for _ in 0..n {
+        if session.pos + 1 >= engine.cfg().max_seq {
+            break;
+        }
+        let logits = engine.decode_one(session, next)?;
+        next = sampler.sample(&logits);
+        out.push(next);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 5.0, -2.0]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+    }
+
+    #[test]
+    fn greedy_deterministic() {
+        let mut s = Sampler::greedy();
+        let logits = vec![0.0, 1.0, 9.0, 2.0];
+        for _ in 0..5 {
+            assert_eq!(s.sample(&logits), 2);
+        }
+    }
+
+    #[test]
+    fn top_k_respects_k() {
+        let mut s = Sampler::top_k(2, 1.0, 7);
+        let logits = vec![10.0, 9.0, -50.0, -50.0];
+        for _ in 0..100 {
+            let t = s.sample(&logits);
+            assert!(t == 0 || t == 1, "sampled outside top-2: {t}");
+        }
+    }
+
+    #[test]
+    fn top_k_low_temperature_is_greedy_ish() {
+        let mut s = Sampler::top_k(4, 0.01, 3);
+        let logits = vec![1.0, 5.0, 4.9, 0.0];
+        let picks: Vec<u32> = (0..50).map(|_| s.sample(&logits)).collect();
+        assert!(picks.iter().filter(|&&t| t == 1).count() > 45);
+    }
+
+    #[test]
+    fn top_k_seeded_reproducible() {
+        let logits = vec![1.0, 1.1, 0.9, 1.05];
+        let a: Vec<u32> =
+            { let mut s = Sampler::top_k(4, 1.0, 42); (0..20).map(|_| s.sample(&logits)).collect() };
+        let b: Vec<u32> =
+            { let mut s = Sampler::top_k(4, 1.0, 42); (0..20).map(|_| s.sample(&logits)).collect() };
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,42 @@
+//! # tiny-qmoe
+//!
+//! Production-shaped reproduction of **Tiny-QMoE** (Cashman & Nie, 2025):
+//! 8-bit post-training quantization of LLaMA-3.2-class decoders plus
+//! dictionary-based lossless compression of the quantized weight stream,
+//! served with **per-layer just-in-time decompression** so the expanded
+//! model never has to be resident in memory.
+//!
+//! Architecture (see DESIGN.md):
+//!
+//! * **L3 (this crate)** — serving coordinator: request routing, dynamic
+//!   batching, the layer-streaming decompression pipeline, KV-cache and
+//!   memory-budget management, evaluation harness, benchmark regeneration.
+//! * **L2/L1 (python, build-time only)** — JAX model stages backed by
+//!   Pallas kernels, AOT-lowered to HLO text under `artifacts/`; executed
+//!   here through the PJRT CPU client (`xla` crate). Python is never on
+//!   the request path.
+//!
+//! Entry points: the `tqm` binary (`rust/src/main.rs`), the examples in
+//! `examples/`, and the benches in `rust/benches/` (one per paper table).
+
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod format;
+pub mod gen;
+pub mod model;
+pub mod netlat;
+pub mod pipeline;
+pub mod quant;
+pub mod runtime;
+pub mod tables;
+pub mod tensor;
+pub mod util;
+
+pub use anyhow::{anyhow, Context, Result};
+
+/// Crate-wide version for on-disk formats; bump together with any change
+/// to the TQM container layout or the stage argument contract.
+pub const FORMAT_VERSION: u32 = 1;

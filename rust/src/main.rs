@@ -1,0 +1,365 @@
+//! `tqm` — the Tiny-QMoE command line.
+//!
+//! Subcommands (hand-rolled parser; the vendored crate set has no clap):
+//!
+//!   tqm quantize  --model e2e [--bits 8] [--per-channel] [--gptq]
+//!                 [--codec freqseq-packed] [--out tag]
+//!   tqm inspect   --file model.tqm
+//!   tqm eval      --model e2e --variant fp32|quant|compressed
+//!                 [--task mmlu|arc-challenge|arc-easy] [--limit N]
+//!   tqm generate  --model e2e [--prompt-tokens 1,2,3] [--max-new 32]
+//!                 [--variant compressed] [--top-k 8] [--temp 0.8]
+//!   tqm serve-demo --model e2e [--requests 16] [--batch 4]
+//!   tqm tables    --table 1|2|3|4|bits|codec|network|residency|all
+//!
+//! Run from anywhere inside the repo (artifacts are auto-discovered) after
+//! `make artifacts`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+use tiny_qmoe::compress::CodecId;
+use tiny_qmoe::config::{default_artifacts_root, QuantizeOptions, Residency, ServeOptions};
+use tiny_qmoe::gen::SamplerKind;
+use tiny_qmoe::quant::Bits;
+use tiny_qmoe::tables;
+use tiny_qmoe::util::bench::fmt_bytes;
+
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| "help".into());
+    let mut flags = HashMap::new();
+    while let Some(a) = it.next() {
+        let Some(key) = a.strip_prefix("--") else {
+            bail!("unexpected positional argument {a:?}");
+        };
+        const BOOLS: [&str; 4] = ["per-channel", "gptq", "check", "paper-codec"];
+        if BOOLS.contains(&key) {
+            flags.insert(key.to_string(), "true".into());
+        } else {
+            let v = it.next().with_context(|| format!("--{key} needs a value"))?;
+            flags.insert(key.to_string(), v);
+        }
+    }
+    Ok(Args { cmd, flags })
+}
+
+impl Args {
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn parse_bits(s: &str) -> Result<Bits> {
+    Ok(match s {
+        "ternary" | "1.5" => Bits::Ternary,
+        "2" => Bits::B2,
+        "4" => Bits::B4,
+        "6" => Bits::B6,
+        "8" => Bits::B8,
+        _ => bail!("bad --bits {s:?} (ternary|2|4|6|8)"),
+    })
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = parse_args()?;
+    match args.cmd.as_str() {
+        "quantize" => cmd_quantize(&args),
+        "inspect" => cmd_inspect(&args),
+        "eval" => cmd_eval(&args),
+        "generate" => cmd_generate(&args),
+        "serve-demo" => cmd_serve_demo(&args),
+        "tables" => cmd_tables(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "tqm — Tiny-QMoE reproduction CLI
+  quantize | inspect | eval | generate | serve-demo | tables
+  (see rust/src/main.rs header for flags)";
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let model = args.get("model", "e2e");
+    let codec = CodecId::parse(&args.get("codec", "freqseq-packed"))?;
+    let opts = QuantizeOptions {
+        bits: parse_bits(&args.get("bits", "8"))?,
+        per_channel: args.has("per-channel"),
+        gptq: args.has("gptq"),
+        percdamp: 0.01,
+        calib_tokens: args.get_usize("calib-tokens", 4096)?,
+    };
+    let default_tag = format!(
+        "{model}-{}-{}{}",
+        opts.bits.label(),
+        format!("{codec:?}").to_lowercase(),
+        if opts.gptq { "-gptq" } else { "" }
+    );
+    let tag = args.get("out", &default_tag);
+    let t0 = std::time::Instant::now();
+    let path = tables::ensure_tqm(&model, &opts, codec, &tag)?;
+    let reader = tiny_qmoe::format::TqmReader::open(&path)?;
+    println!("wrote {path:?} in {:.1}s", t0.elapsed().as_secs_f64());
+    println!(
+        "  {} compressed / {} quantized ({:.2}x), dict {}",
+        fmt_bytes(reader.file_bytes()),
+        fmt_bytes(reader.unpacked_bytes()),
+        reader.unpacked_bytes() as f64 / reader.file_bytes() as f64,
+        fmt_bytes(reader.dict_bytes()),
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let file = args.get("file", "");
+    anyhow::ensure!(!file.is_empty(), "--file required");
+    let r = tiny_qmoe::format::TqmReader::open(&file)?;
+    println!(
+        "model {} | codec {:?} | bits {:?} | quantizer {} | {} tensors",
+        r.meta.model_name,
+        r.codec_id,
+        r.meta.bits,
+        r.meta.quantizer,
+        r.records().len()
+    );
+    println!(
+        "file {} | expanded {} | dict {}",
+        fmt_bytes(r.file_bytes()),
+        fmt_bytes(r.unpacked_bytes()),
+        fmt_bytes(r.dict_bytes())
+    );
+    for rec in r.records() {
+        println!(
+            "  {:32} {:?} {:?} raw {} payload {} ({:.2}x)",
+            rec.name,
+            rec.kind,
+            rec.shape,
+            fmt_bytes(rec.raw_len),
+            fmt_bytes(rec.payload_len),
+            rec.raw_len as f64 / rec.payload_len.max(1) as f64
+        );
+    }
+    Ok(())
+}
+
+fn parse_variant(s: &str) -> Result<tables::Variant> {
+    Ok(match s {
+        "fp32" => tables::Variant::Fp32,
+        "quant" | "quantized" => tables::Variant::Quantized,
+        "compressed" => tables::Variant::Compressed,
+        _ => bail!("bad --variant {s:?} (fp32|quant|compressed)"),
+    })
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.get("model", "e2e");
+    let task = args.get("task", "arc-easy");
+    let limit = args.get_usize("limit", 200)?;
+    let variant = parse_variant(&args.get("variant", "compressed"))?;
+    let codec = CodecId::parse(&args.get("codec", "freqseq-packed"))?;
+    let reps = tables::eval_table(&model, &task, &[variant], codec, limit)?;
+    tables::render_eval_table(&format!("{task} — {model}"), &reps).print();
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let model = args.get("model", "e2e");
+    let variant = parse_variant(&args.get("variant", "compressed"))?;
+    let codec = CodecId::parse(&args.get("codec", "freqseq-packed"))?;
+    let max_new = args.get_usize("max-new", 24)?;
+    let engine = tables::build_engine(&model, variant, codec)?;
+    let root = default_artifacts_root();
+    let data = tiny_qmoe::data::DataDir::open_for_vocab(&root, engine.cfg().vocab)?;
+
+    let prompt: Vec<u32> = match args.flags.get("prompt-tokens") {
+        Some(s) => s.split(',').map(|t| t.parse::<u32>()).collect::<Result<_, _>>()?,
+        None => {
+            // a natural SynthLang prompt: BOS Q k7 A  (model should answer)
+            let sp = &data.lang.special;
+            vec![sp.bos, sp.q, data.lang.key_base + 7, sp.a]
+        }
+    };
+    let mut sampler = if args.has("top-k") {
+        tiny_qmoe::gen::Sampler::top_k(
+            args.get_usize("top-k", 8)?,
+            args.get("temp", "0.8").parse()?,
+            42,
+        )
+    } else {
+        tiny_qmoe::gen::Sampler::greedy()
+    };
+    let g = tiny_qmoe::gen::generate(&engine, &prompt, max_new, &mut sampler, None)?;
+    println!("variant: {}", engine.variant());
+    println!("prompt : {}", data.detok(&prompt));
+    println!("output : {}", data.detok(&g.tokens));
+    println!(
+        "prefill {:.1} ms | decode {:.1} ms | {:.1} tok/s",
+        g.prefill_s * 1e3,
+        g.decode_s * 1e3,
+        g.tokens_per_s
+    );
+    println!("pipeline: {}", engine.metrics.summary());
+    Ok(())
+}
+
+fn cmd_serve_demo(args: &Args) -> Result<()> {
+    let model = args.get("model", "e2e");
+    let n_requests = args.get_usize("requests", 16)?;
+    let batch = args.get_usize("batch", 4)?;
+    let codec = CodecId::parse(&args.get("codec", "freqseq-packed"))?;
+    let root = default_artifacts_root();
+    let tag = format!("{model}-b8-{codec:?}").to_lowercase();
+    let tqm = tables::ensure_tqm(&model, &QuantizeOptions::default(), codec, &tag)?;
+
+    let mut coord = tiny_qmoe::coordinator::Coordinator::new();
+    coord.register(tiny_qmoe::coordinator::ModelSpec {
+        name: model.clone(),
+        artifacts_root: root.clone(),
+        manifest_model: model.clone(),
+        tqm_path: tqm,
+        serve: ServeOptions {
+            residency: Residency::StreamPerLayer,
+            prefetch: true,
+            max_batch: batch,
+            max_wait_ms: 4,
+            max_new_tokens: 16,
+        },
+    })?;
+    let data = tiny_qmoe::data::DataDir::open_for_vocab(
+        &root,
+        tiny_qmoe::config::Manifest::load(&root, &model)?.config.vocab,
+    )?;
+    let sp = data.lang.special.clone();
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|i| {
+            coord
+                .submit(
+                    &model,
+                    tiny_qmoe::coordinator::GenRequest {
+                        prompt: vec![sp.bos, sp.q, data.lang.key_base + (i as u32 % 16), sp.a],
+                        max_new: 8,
+                        sampler: SamplerKind::Greedy,
+                        seed: i as u64,
+                        stop_token: Some(sp.sep),
+                    },
+                )
+                .unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv().unwrap()?;
+        println!(
+            "req {i:2}: {:28} queue {:5.1} ms prefill {:6.1} ms decode {:6.1} ms",
+            data.detok(&r.tokens),
+            r.queue_s * 1e3,
+            r.prefill_s * 1e3,
+            r.decode_s * 1e3
+        );
+    }
+    let snap = coord.metrics(&model).unwrap().snapshot();
+    println!(
+        "\n{} requests, {} tokens | mean batch {:.2} | decode p50 {:.1} ms p95 {:.1} ms | {:.1} tok/s",
+        snap.requests,
+        snap.tokens_out,
+        snap.mean_batch_size,
+        snap.decode.p50 * 1e3,
+        snap.decode.p95 * 1e3,
+        snap.tokens_per_s
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let which = args.get("table", "all");
+    let limit = args.get_usize("limit", tables::eval_limit())?;
+    let model = args.get("model", "e2e");
+    let codec = if args.has("paper-codec") {
+        tables::paper_codec()
+    } else {
+        tables::default_codec()
+    };
+    let t1 = || -> Result<()> {
+        let rows = tables::table1(&["e2e", "proxy-1b", "proxy-3b"], codec)?;
+        tables::render_table1(&rows, codec).print();
+        let crows = tables::table1_clustered(codec)?;
+        let mut ct = tiny_qmoe::util::bench::Table::new(
+            "Table 1 companion — codec ratio vs weight-stream entropy regime",
+            &["regime", "entropy (bits/B)", "ratio vs quantized"],
+        );
+        for r in &crows {
+            ct.row(vec![
+                r.regime.clone(),
+                format!("{:.2}", r.entropy_bits),
+                format!("{:.2}x", r.ratio_quant),
+            ]);
+        }
+        ct.print();
+        Ok(())
+    };
+    let eval_t = |family: &str, paper: &str| -> Result<()> {
+        let reps = tables::eval_table(&model, family, &tables::Variant::ALL, codec, limit)?;
+        tables::render_eval_table(&format!("{family} ({paper}) — {model}"), &reps).print();
+        Ok(())
+    };
+    match which.as_str() {
+        "1" => t1()?,
+        "2" => eval_t("mmlu", "paper Table 2")?,
+        "3" => eval_t("arc-challenge", "paper Table 3")?,
+        "4" => eval_t("arc-easy", "paper Table 4")?,
+        "bits" => {
+            let rows = tables::ablation_bits(&model, true, limit)?;
+            tables::render_bits(&rows).print();
+        }
+        "codec" => {
+            let rows = tables::ablation_codec(&model)?;
+            tables::render_codec(&rows).print();
+        }
+        "network" => tables::network_table(&model, codec, limit)?.print(),
+        "residency" => {
+            let rows = tables::residency_table(&model, codec, limit.min(10))?;
+            tables::render_residency(&rows).print();
+        }
+        "all" => {
+            t1()?;
+            eval_t("mmlu", "paper Table 2")?;
+            eval_t("arc-challenge", "paper Table 3")?;
+            eval_t("arc-easy", "paper Table 4")?;
+            let rows = tables::ablation_bits(&model, false, limit)?;
+            tables::render_bits(&rows).print();
+            let rows = tables::ablation_codec(&model)?;
+            tables::render_codec(&rows).print();
+            tables::network_table(&model, codec, limit)?.print();
+            let rows = tables::residency_table(&model, codec, limit.min(10))?;
+            tables::render_residency(&rows).print();
+        }
+        other => bail!("unknown table {other:?}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,304 @@
+//! Scalar f32 reference forward pass — two jobs:
+//!
+//! 1. **GPTQ calibration** (S3): run calibration tokens through the fp32
+//!    model and accumulate the per-linear input Gram matrices GPTQ needs.
+//!    The paper calibrates on C4; we calibrate on the SynthLang stream.
+//! 2. **fp32 baseline rows** of Tables 2-4: the "llama3.2-xB" (unquantized)
+//!    rows are produced by this path, so the accuracy deltas against the
+//!    quantized/compressed pipeline are measured, not assumed.
+//!
+//! Mirrors `python/compile/model.py::full_forward_f32` operation-for-
+//! operation (RMSNorm -> GQA attention with half-rotation RoPE -> SwiGLU).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::model::Checkpoint;
+use crate::quant::gptq::Hessian;
+
+/// Row-major matmul y[M,N] = x[M,K] @ w[K,N] (blocked over K for cache).
+pub fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    let mut y = vec![0.0f32; m * n];
+    for i in 0..m {
+        let xr = &x[i * k..(i + 1) * k];
+        let yr = &mut y[i * n..(i + 1) * n];
+        for (kk, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w[kk * n..(kk + 1) * n];
+            for (yv, &wv) in yr.iter_mut().zip(wr) {
+                *yv += xv * wv;
+            }
+        }
+    }
+    y
+}
+
+fn rmsnorm(x: &[f32], w: &[f32], eps: f32) -> Vec<f32> {
+    let d = w.len();
+    let mut out = vec![0.0f32; x.len()];
+    for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for ((o, &v), &wv) in orow.iter_mut().zip(row).zip(w) {
+            *o = v * inv * wv;
+        }
+    }
+    out
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Apply half-rotation RoPE in place. `x` is [T, H, Dh] flattened; the
+/// position of row t is `t` (prefill from 0).
+fn apply_rope(x: &mut [f32], t_len: usize, n_heads: usize, hd: usize, theta: f32) {
+    let half = hd / 2;
+    for t in 0..t_len {
+        for h in 0..n_heads {
+            let base = (t * n_heads + h) * hd;
+            for i in 0..half {
+                let ang = t as f32 / theta.powf(2.0 * i as f32 / hd as f32);
+                let (sin, cos) = ang.sin_cos();
+                let x1 = x[base + i];
+                let x2 = x[base + half + i];
+                x[base + i] = x1 * cos - x2 * sin;
+                x[base + half + i] = x2 * cos + x1 * sin;
+            }
+        }
+    }
+}
+
+/// Accumulates per-linear input activations into GPTQ Hessians.
+pub struct Capture {
+    pub hessians: BTreeMap<String, Hessian>,
+}
+
+impl Capture {
+    pub fn new() -> Self {
+        Self { hessians: BTreeMap::new() }
+    }
+
+    fn record(&mut self, name: &str, x: &[f32], k: usize) {
+        self.hessians
+            .entry(name.to_string())
+            .or_insert_with(|| Hessian::new(k))
+            .accumulate(x);
+    }
+}
+
+/// Forward a single sequence (B = 1), returning logits [T, V].
+/// With `capture`, every linear's input is accumulated for GPTQ.
+pub fn forward(
+    cfg: &ModelConfig,
+    ckpt: &Checkpoint,
+    tokens: &[u32],
+    mut capture: Option<&mut Capture>,
+) -> Result<Vec<f32>> {
+    let (d, hd, nh, kv) = (cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads);
+    let t_len = tokens.len();
+    let group = nh / kv;
+    let theta = cfg.rope_theta as f32;
+    let eps = cfg.norm_eps as f32;
+
+    let embed = ckpt.f32("embed.weight")?;
+    let mut h = vec![0.0f32; t_len * d];
+    for (t, &tok) in tokens.iter().enumerate() {
+        h[t * d..(t + 1) * d].copy_from_slice(embed.row(tok as usize));
+    }
+
+    for li in 0..cfg.n_layers {
+        let name = |m: &str| format!("layers.{li}.{m}");
+        let ln1 = ckpt.f32(&name("ln1"))?;
+        let a = rmsnorm(&h, &ln1.data, eps);
+        if let Some(cap) = capture.as_deref_mut() {
+            for m in ["wq", "wk", "wv"] {
+                cap.record(&name(m), &a, d);
+            }
+        }
+        let wq = ckpt.f32(&name("wq"))?;
+        let wk = ckpt.f32(&name("wk"))?;
+        let wv = ckpt.f32(&name("wv"))?;
+        let mut q = matmul(&a, &wq.data, t_len, d, d);
+        let mut k = matmul(&a, &wk.data, t_len, d, cfg.kv_dim);
+        let v = matmul(&a, &wv.data, t_len, d, cfg.kv_dim);
+        apply_rope(&mut q, t_len, nh, hd, theta);
+        apply_rope(&mut k, t_len, kv, hd, theta);
+
+        // causal attention per head
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut attn_out = vec![0.0f32; t_len * d]; // [T, H*Dh]
+        let mut scores = vec![0.0f32; t_len];
+        for hix in 0..nh {
+            let kvh = hix / group;
+            for ti in 0..t_len {
+                let qrow = &q[(ti * nh + hix) * hd..(ti * nh + hix + 1) * hd];
+                let mut maxs = f32::NEG_INFINITY;
+                for tj in 0..=ti {
+                    let krow = &k[(tj * kv + kvh) * hd..(tj * kv + kvh + 1) * hd];
+                    let s: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
+                    scores[tj] = s;
+                    maxs = maxs.max(s);
+                }
+                let mut denom = 0.0f32;
+                for s in scores[..=ti].iter_mut() {
+                    *s = (*s - maxs).exp();
+                    denom += *s;
+                }
+                let orow = &mut attn_out[(ti * nh + hix) * hd..(ti * nh + hix + 1) * hd];
+                for tj in 0..=ti {
+                    let w = scores[tj] / denom;
+                    let vrow = &v[(tj * kv + kvh) * hd..(tj * kv + kvh + 1) * hd];
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += w * vv;
+                    }
+                }
+            }
+        }
+        if let Some(cap) = capture.as_deref_mut() {
+            cap.record(&name("wo"), &attn_out, d);
+        }
+        let wo = ckpt.f32(&name("wo"))?;
+        let proj = matmul(&attn_out, &wo.data, t_len, d, d);
+        for (hv, pv) in h.iter_mut().zip(&proj) {
+            *hv += pv;
+        }
+
+        let ln2 = ckpt.f32(&name("ln2"))?;
+        let a2 = rmsnorm(&h, &ln2.data, eps);
+        if let Some(cap) = capture.as_deref_mut() {
+            for m in ["w1", "w3"] {
+                cap.record(&name(m), &a2, d);
+            }
+        }
+        let w1 = ckpt.f32(&name("w1"))?;
+        let w3 = ckpt.f32(&name("w3"))?;
+        let gate = matmul(&a2, &w1.data, t_len, d, cfg.d_ff);
+        let up = matmul(&a2, &w3.data, t_len, d, cfg.d_ff);
+        let mut act = vec![0.0f32; t_len * cfg.d_ff];
+        for ((o, &g), &u) in act.iter_mut().zip(&gate).zip(&up) {
+            *o = silu(g) * u;
+        }
+        if let Some(cap) = capture.as_deref_mut() {
+            cap.record(&name("w2"), &act, cfg.d_ff);
+        }
+        let w2 = ckpt.f32(&name("w2"))?;
+        let down = matmul(&act, &w2.data, t_len, cfg.d_ff, d);
+        for (hv, dv) in h.iter_mut().zip(&down) {
+            *hv += dv;
+        }
+    }
+
+    let fin = ckpt.f32("final_norm")?;
+    let a = rmsnorm(&h, &fin.data, eps);
+    if let Some(cap) = capture.as_deref_mut() {
+        cap.record("head.weight", &a, d);
+    }
+    let head = ckpt.f32("head.weight")?;
+    Ok(matmul(&a, &head.data, t_len, d, cfg.vocab))
+}
+
+/// Run calibration tokens through the model in windows, returning the
+/// Hessians GPTQ consumes. `budget` bounds total tokens.
+pub fn calibrate(
+    cfg: &ModelConfig,
+    ckpt: &Checkpoint,
+    tokens: &[u32],
+    budget: usize,
+    window: usize,
+) -> Result<Capture> {
+    let mut cap = Capture::new();
+    let mut used = 0;
+    for chunk in tokens.chunks(window) {
+        if used >= budget || chunk.len() < 2 {
+            break;
+        }
+        forward(cfg, ckpt, chunk, Some(&mut cap))?;
+        used += chunk.len();
+    }
+    Ok(cap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tests::{fake_checkpoint, tiny_cfg};
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let cfg = tiny_cfg();
+        let ckpt = fake_checkpoint(&cfg, 0);
+        let tokens: Vec<u32> = (0..8).map(|i| i % cfg.vocab as u32).collect();
+        let logits = forward(&cfg, &ckpt, &tokens, None).unwrap();
+        assert_eq!(logits.len(), 8 * cfg.vocab);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality_in_scalar_forward() {
+        // changing a later token must not affect earlier logits
+        let cfg = tiny_cfg();
+        let ckpt = fake_checkpoint(&cfg, 1);
+        let t1: Vec<u32> = vec![1, 2, 3, 4, 5, 6];
+        let mut t2 = t1.clone();
+        t2[5] = 9;
+        let l1 = forward(&cfg, &ckpt, &t1, None).unwrap();
+        let l2 = forward(&cfg, &ckpt, &t2, None).unwrap();
+        let v = cfg.vocab;
+        for t in 0..5 {
+            for c in 0..v {
+                assert!((l1[t * v + c] - l2[t * v + c]).abs() < 1e-5);
+            }
+        }
+        assert!((0..v).any(|c| (l1[5 * v + c] - l2[5 * v + c]).abs() > 1e-6));
+    }
+
+    #[test]
+    fn capture_collects_all_linears() {
+        let cfg = tiny_cfg();
+        let ckpt = fake_checkpoint(&cfg, 2);
+        let cap = calibrate(&cfg, &ckpt, &(0..64u32).collect::<Vec<_>>(), 64, 16).unwrap();
+        // 7 matrices per layer * 2 layers + head
+        assert_eq!(cap.hessians.len(), 7 * cfg.n_layers + 1);
+        let h = &cap.hessians["layers.0.wq"];
+        assert_eq!(h.k, cfg.d_model);
+        assert!(h.n_samples >= 64);
+        // gram diagonal strictly positive (inputs are not all zero)
+        assert!((0..h.k).all(|i| h.gram[i * h.k + i] > 0.0));
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // [2,2]
+        let w = vec![5.0, 6.0, 7.0, 8.0]; // [2,2]
+        let y = matmul(&x, &w, 2, 2, 2);
+        assert_eq!(y, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn gptq_end_to_end_with_real_calibration() {
+        // full S3 path: calibrate -> gptq quantize -> better task loss
+        let cfg = tiny_cfg();
+        let ckpt = fake_checkpoint(&cfg, 3);
+        let cap = calibrate(&cfg, &ckpt, &(0..128u32).map(|i| i % 64).collect::<Vec<_>>(), 128, 16)
+            .unwrap();
+        let w = ckpt.f32("layers.0.w2").unwrap();
+        let h = &cap.hessians["layers.0.w2"];
+        let gq = crate::quant::gptq::quantize(w, h, crate::quant::Bits::B4, 0.01).unwrap();
+        let naive = crate::quant::uniform::quantize(
+            w,
+            crate::quant::Bits::B4,
+            crate::quant::Granularity::PerChannel { axis: 1 },
+        )
+        .unwrap();
+        let e_g = crate::quant::gptq::hessian_weighted_error(w, &gq, h);
+        let e_n = crate::quant::gptq::hessian_weighted_error(w, &naive, h);
+        assert!(e_g <= e_n, "gptq {e_g} !<= naive {e_n}");
+    }
+}

@@ -1,0 +1,209 @@
+//! Per-layer weight set and its flattening into stage-HLO arguments.
+//!
+//! The argument order is a binary contract with
+//! `python/compile/model.py::LAYER_WEIGHT_ORDER`:
+//!   ln1, (wq, wq_s, wq_z), (wk, ..), (wv, ..), (wo, ..),
+//!   ln2, (w1, ..), (w3, ..), (w2, ..)
+//! where each matrix contributes u8 codes plus per-out-channel f32
+//! scale/zero vectors (per-tensor params are broadcast at this boundary).
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::format::TqmReader;
+use crate::quant::QuantizedTensor;
+use crate::runtime::literal;
+use crate::tensor::Tensor;
+
+#[derive(Clone)]
+pub struct LayerWeights {
+    pub index: usize,
+    pub ln1: Tensor,
+    pub wq: QuantizedTensor,
+    pub wk: QuantizedTensor,
+    pub wv: QuantizedTensor,
+    pub wo: QuantizedTensor,
+    pub ln2: Tensor,
+    pub w1: QuantizedTensor,
+    pub w3: QuantizedTensor,
+    pub w2: QuantizedTensor,
+}
+
+impl LayerWeights {
+    /// Decompress layer `i` from a TQM container (scratch-buffer variant
+    /// available through `load_into` for the pipeline's reuse path).
+    pub fn load(reader: &TqmReader, i: usize) -> Result<Self> {
+        let mut scratch = Vec::new();
+        Self::load_into(reader, i, &mut scratch)
+    }
+
+    pub fn load_into(reader: &TqmReader, i: usize, scratch: &mut Vec<u8>) -> Result<Self> {
+        let q = |name: &str, scratch: &mut Vec<u8>| -> Result<QuantizedTensor> {
+            reader.load_quantized_into(&format!("layers.{i}.{name}"), scratch)
+        };
+        Ok(Self {
+            index: i,
+            ln1: reader.load_f32(&format!("layers.{i}.ln1"))?,
+            wq: q("wq", scratch)?,
+            wk: q("wk", scratch)?,
+            wv: q("wv", scratch)?,
+            wo: q("wo", scratch)?,
+            ln2: reader.load_f32(&format!("layers.{i}.ln2"))?,
+            w1: q("w1", scratch)?,
+            w3: q("w3", scratch)?,
+            w2: q("w2", scratch)?,
+        })
+    }
+
+    fn matrices(&self) -> [(&QuantizedTensor, usize); 7] {
+        let kv = self.wk.codes.shape[1];
+        let d = self.wq.codes.shape[1];
+        let f = self.w1.codes.shape[1];
+        [
+            (&self.wq, d),
+            (&self.wk, kv),
+            (&self.wv, kv),
+            (&self.wo, d),
+            (&self.w1, f),
+            (&self.w3, f),
+            (&self.w2, d),
+        ]
+    }
+
+    /// Flatten into the stage-argument literal list (contract order).
+    pub fn to_literals(&self, _cfg: &ModelConfig) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(2 + 7 * 3);
+        let push_q = |out: &mut Vec<xla::Literal>, q: &QuantizedTensor, ch: usize| -> Result<()> {
+            out.push(literal::u8_literal(&q.codes.shape, &q.codes.data)?);
+            let (s, z) = q.channel_params(ch);
+            out.push(literal::f32_literal(&[ch], &s)?);
+            out.push(literal::f32_literal(&[ch], &z)?);
+            Ok(())
+        };
+        out.push(literal::tensor_literal(&self.ln1)?);
+        let mats = self.matrices();
+        for (q, ch) in &mats[..4] {
+            push_q(&mut out, q, *ch)?;
+        }
+        out.push(literal::tensor_literal(&self.ln2)?);
+        for (q, ch) in &mats[4..] {
+            push_q(&mut out, q, *ch)?;
+        }
+        Ok(out)
+    }
+
+    /// Bytes this layer occupies once expanded (codes + params + norms) —
+    /// the number the residency bench (E8) tracks.
+    pub fn expanded_bytes(&self) -> usize {
+        let mats = self.matrices();
+        let m: usize = mats.iter().map(|(q, _)| q.unpacked_bytes()).sum();
+        m + (self.ln1.data.len() + self.ln2.data.len()) * 4
+    }
+}
+
+/// f32 layer weights — the unquantized baseline path (stages `*_f32`).
+#[derive(Clone)]
+pub struct LayerWeightsF32 {
+    pub index: usize,
+    pub tensors: Vec<Tensor>, // LAYER_WEIGHT_ORDER: ln1,wq,wk,wv,wo,ln2,w1,w3,w2
+}
+
+pub const LAYER_WEIGHT_ORDER: [&str; 9] =
+    ["ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w3", "w2"];
+
+impl LayerWeightsF32 {
+    pub fn load(ckpt: &crate::model::Checkpoint, i: usize) -> Result<Self> {
+        let tensors = LAYER_WEIGHT_ORDER
+            .iter()
+            .map(|n| ckpt.f32(&format!("layers.{i}.{n}")).cloned())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { index: i, tensors })
+    }
+
+    pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.tensors.iter().map(literal::tensor_literal).collect()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.data.len() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CodecId;
+    use crate::config::QuantizeOptions;
+    use crate::model::tests::{fake_checkpoint, tiny_cfg};
+    use crate::model::quantize_checkpoint;
+    use crate::util::TempDir;
+
+    fn sample_reader() -> (crate::config::ModelConfig, TqmReader) {
+        let cfg = tiny_cfg();
+        let ckpt = fake_checkpoint(&cfg, 3);
+        let opts = QuantizeOptions { per_channel: true, ..Default::default() };
+        let w = quantize_checkpoint(&cfg, &ckpt, &opts, CodecId::Huffman, None, "t").unwrap();
+        let dir = TempDir::new().unwrap();
+        let p = dir.join("m.tqm");
+        w.write(&p).unwrap();
+        // read fully into memory before TempDir drops
+        let reader = TqmReader::open(&p).unwrap();
+        (cfg, reader)
+    }
+
+    #[test]
+    fn literal_contract_order_and_count() {
+        let (cfg, reader) = sample_reader();
+        let lw = LayerWeights::load(&reader, 1).unwrap();
+        let lits = lw.to_literals(&cfg).unwrap();
+        // ln1 + 4 matrices * 3 + ln2 + 3 matrices * 3 = 23
+        assert_eq!(lits.len(), 23);
+        // spot-check arg dtypes: [0] f32 norm, [1] u8 codes, [2]/[3] f32
+        assert_eq!(lits[0].ty().unwrap(), xla::ElementType::F32);
+        assert_eq!(lits[1].ty().unwrap(), xla::ElementType::U8);
+        assert_eq!(lits[2].ty().unwrap(), xla::ElementType::F32);
+        // wk codes at position 4 with kv_dim out channels
+        assert_eq!(
+            crate::runtime::literal::literal_shape(&lits[4]).unwrap(),
+            vec![cfg.d_model, cfg.kv_dim]
+        );
+    }
+
+    #[test]
+    fn per_tensor_params_broadcast_to_channels() {
+        let cfg = tiny_cfg();
+        let ckpt = fake_checkpoint(&cfg, 4);
+        let opts = QuantizeOptions { per_channel: false, ..Default::default() };
+        let w = quantize_checkpoint(&cfg, &ckpt, &opts, CodecId::Raw, None, "t").unwrap();
+        let dir = TempDir::new().unwrap();
+        let p = dir.join("m.tqm");
+        w.write(&p).unwrap();
+        let reader = TqmReader::open(&p).unwrap();
+        let lw = LayerWeights::load(&reader, 0).unwrap();
+        let lits = lw.to_literals(&cfg).unwrap();
+        // wq scale vector must be expanded to d_model
+        assert_eq!(
+            crate::runtime::literal::literal_shape(&lits[2]).unwrap(),
+            vec![cfg.d_model]
+        );
+    }
+
+    #[test]
+    fn expanded_bytes_sane() {
+        let (cfg, reader) = sample_reader();
+        let lw = LayerWeights::load(&reader, 0).unwrap();
+        let d = cfg.d_model;
+        let min_codes = d * d * 2 + d * cfg.kv_dim * 2 + d * cfg.d_ff * 3;
+        assert!(lw.expanded_bytes() > min_codes);
+    }
+
+    #[test]
+    fn scratch_reuse_consistent() {
+        let (_, reader) = sample_reader();
+        let mut scratch = Vec::new();
+        let a = LayerWeights::load_into(&reader, 0, &mut scratch).unwrap();
+        let b = LayerWeights::load(&reader, 0).unwrap();
+        assert_eq!(a.wq.codes, b.wq.codes);
+        assert_eq!(a.w2.codes, b.w2.codes);
+    }
+}

@@ -1,0 +1,346 @@
+//! Model layer (S1/S7 glue): checkpoint access, quantization of a full
+//! checkpoint into a TQM container, and the weight-source abstraction the
+//! pipeline streams layers from.
+
+pub mod forward_f32;
+pub mod layer;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ModelConfig, QuantizeOptions};
+use crate::format::{TqmMeta, TqmReader, TqmWriter};
+use crate::quant::{gptq, uniform, Granularity, QuantizedTensor};
+use crate::tensor::io::{read_tqw, TqwTensor};
+use crate::tensor::Tensor;
+
+pub use layer::{LayerWeights, LayerWeightsF32};
+
+/// Fully-resident f32 weights (the unquantized baseline of Tables 2-4).
+pub struct F32Weights {
+    pub layers: Vec<LayerWeightsF32>,
+    pub embed: Tensor,
+    pub final_norm: Tensor,
+    pub head: Tensor,
+}
+
+impl F32Weights {
+    pub fn load(cfg: &ModelConfig, ckpt: &Checkpoint) -> Result<Self> {
+        Ok(Self {
+            layers: (0..cfg.n_layers)
+                .map(|i| LayerWeightsF32::load(ckpt, i))
+                .collect::<Result<Vec<_>>>()?,
+            embed: ckpt.f32("embed.weight")?.clone(),
+            final_norm: ckpt.f32("final_norm")?.clone(),
+            head: ckpt.f32("head.weight")?.clone(),
+        })
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.bytes()).sum::<usize>()
+            + (self.embed.data.len() + self.final_norm.data.len() + self.head.data.len()) * 4
+    }
+}
+
+/// Matrix tensors per layer, in the stage-argument contract order
+/// (mirrors python/compile/model.py::LAYER_WEIGHT_ORDER minus the norms).
+pub const MATRIX_NAMES: [&str; 7] = ["wq", "wk", "wv", "wo", "w1", "w3", "w2"];
+
+/// An f32 checkpoint loaded from the TQW the python build exported.
+pub struct Checkpoint {
+    pub tensors: BTreeMap<String, TqwTensor>,
+}
+
+impl Checkpoint {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self { tensors: read_tqw(path)? })
+    }
+
+    pub fn f32(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing {name:?}"))?
+            .as_f32()
+    }
+
+    pub fn total_f32_bytes(&self) -> usize {
+        self.tensors
+            .values()
+            .map(|t| crate::tensor::numel(t.shape()) * 4)
+            .sum()
+    }
+}
+
+/// Out-channel count for each matrix (the scale/zero vector length the
+/// stage HLOs expect).
+pub fn out_channels(cfg: &ModelConfig, name: &str) -> usize {
+    match name {
+        "wq" | "wo" | "w2" => cfg.d_model,
+        "wk" | "wv" => cfg.kv_dim,
+        "w1" | "w3" => cfg.d_ff,
+        "embed.weight" => cfg.vocab, // per-ROW (axis 0) for the table
+        "head.weight" => cfg.vocab,
+        _ => panic!("not a matrix: {name}"),
+    }
+}
+
+/// Quantize one named matrix with the configured scheme.
+fn quantize_matrix(
+    name: &str,
+    w: &Tensor,
+    opts: &QuantizeOptions,
+    hessian: Option<&gptq::Hessian>,
+) -> Result<QuantizedTensor> {
+    // the embedding table is always per-row (a gather, not a matmul)
+    let gran = if name == "embed.weight" {
+        Granularity::PerChannel { axis: 0 }
+    } else if opts.per_channel {
+        Granularity::PerChannel { axis: 1 }
+    } else {
+        Granularity::PerTensor
+    };
+    if let Some(h) = hessian {
+        // GPTQ only applies to matmul weights (always per out-channel)
+        return gptq::quantize(w, h, opts.bits, opts.percdamp);
+    }
+    uniform::quantize(w, opts.bits, gran)
+}
+
+/// Quantize a full checkpoint and stage it for writing as `.tqm`.
+///
+/// `hessians` (from [`forward_f32::calibrate`]) switches matmul weights to
+/// GPTQ; the embedding table always uses the naive per-row scheme (it is a
+/// lookup, GPTQ's input-covariance model does not apply).
+pub fn quantize_checkpoint(
+    cfg: &ModelConfig,
+    ckpt: &Checkpoint,
+    opts: &QuantizeOptions,
+    codec: crate::compress::CodecId,
+    hessians: Option<&BTreeMap<String, gptq::Hessian>>,
+    source: &str,
+) -> Result<TqmWriter> {
+    if opts.gptq && hessians.is_none() {
+        bail!("gptq requested but no calibration hessians supplied");
+    }
+    let meta = TqmMeta {
+        model_name: cfg.name.clone(),
+        codec,
+        bits: opts.bits,
+        per_channel: opts.per_channel,
+        quantizer: if opts.gptq { "gptq".into() } else { "naive".into() },
+        source_checkpoint: source.to_string(),
+    };
+    let mut w = TqmWriter::new(meta);
+
+    let get_h = |name: &str| hessians.and_then(|m| m.get(name));
+
+    let embed = ckpt.f32("embed.weight").context("embed.weight")?;
+    w.add_quantized("embed.weight", &quantize_matrix("embed.weight", embed, opts, None)?);
+
+    for i in 0..cfg.n_layers {
+        for ln in ["ln1", "ln2"] {
+            let name = format!("layers.{i}.{ln}");
+            w.add_f32(&name, ckpt.f32(&name)?);
+        }
+        for m in MATRIX_NAMES {
+            let name = format!("layers.{i}.{m}");
+            let t = ckpt.f32(&name)?;
+            w.add_quantized(&name, &quantize_matrix(m, t, opts, get_h(&name))?);
+        }
+    }
+
+    w.add_f32("final_norm", ckpt.f32("final_norm")?);
+    let head = ckpt.f32("head.weight")?;
+    w.add_quantized(
+        "head.weight",
+        &quantize_matrix("head.weight", head, opts, get_h("head.weight"))?,
+    );
+    Ok(w)
+}
+
+/// Where layer weights come from at serving time.
+pub enum WeightSource {
+    /// Lazy: decompress from the TQM container per request (streaming).
+    Compressed(TqmReader),
+    /// Eager: everything quantized in memory, expanded once (the paper's
+    /// "Quantized" baseline) — built either from a TQM file or checkpoint.
+    Resident(ResidentWeights),
+}
+
+pub struct ResidentWeights {
+    pub layers: Vec<LayerWeights>,
+    pub embed: QuantizedTensor,
+    pub final_norm: Tensor,
+    pub head: QuantizedTensor,
+}
+
+impl WeightSource {
+    pub fn open_compressed(path: impl AsRef<Path>) -> Result<Self> {
+        Ok(WeightSource::Compressed(TqmReader::open(path)?))
+    }
+
+    /// Fully expand a TQM container into memory (baseline mode).
+    pub fn open_resident(path: impl AsRef<Path>, cfg: &ModelConfig) -> Result<Self> {
+        let reader = TqmReader::open(path)?;
+        let layers = (0..cfg.n_layers)
+            .map(|i| LayerWeights::load(&reader, i))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(WeightSource::Resident(ResidentWeights {
+            embed: reader.load_quantized("embed.weight")?,
+            final_norm: reader.load_f32("final_norm")?,
+            head: reader.load_quantized("head.weight")?,
+            layers,
+        }))
+    }
+
+    pub fn meta_summary(&self) -> String {
+        match self {
+            WeightSource::Compressed(r) => format!(
+                "compressed ({} tensors, {} on disk, {} expanded)",
+                r.records().len(),
+                r.file_bytes(),
+                r.unpacked_bytes()
+            ),
+            WeightSource::Resident(rw) => {
+                format!("resident ({} layers expanded)", rw.layers.len())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CodecId;
+    use crate::quant::Bits;
+    use crate::util::{Rng, TempDir};
+
+    /// Synthesize a small checkpoint matching `cfg` dims.
+    pub(crate) fn fake_checkpoint(cfg: &ModelConfig, seed: u64) -> Checkpoint {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut tensors = BTreeMap::new();
+        fn add(
+            tensors: &mut BTreeMap<String, TqwTensor>,
+            name: String,
+            shape: Vec<usize>,
+            rng: &mut Rng,
+        ) {
+            let n = crate::tensor::numel(&shape);
+            let std = 1.0 / (shape[0] as f32).sqrt();
+            tensors.insert(
+                name,
+                TqwTensor::F32(Tensor::new(shape, rng.normal_vec(n, std)).unwrap()),
+            );
+        }
+        let (d, f, v, kvd) = (cfg.d_model, cfg.d_ff, cfg.vocab, cfg.kv_dim);
+        add(&mut tensors, "embed.weight".into(), vec![v, d], &mut rng);
+        add(&mut tensors, "head.weight".into(), vec![d, v], &mut rng);
+        for i in 0..cfg.n_layers {
+            for (m, shape) in [
+                ("wq", vec![d, d]),
+                ("wk", vec![d, kvd]),
+                ("wv", vec![d, kvd]),
+                ("wo", vec![d, d]),
+                ("w1", vec![d, f]),
+                ("w3", vec![d, f]),
+                ("w2", vec![f, d]),
+            ] {
+                add(&mut tensors, format!("layers.{i}.{m}"), shape, &mut rng);
+            }
+            for ln in ["ln1", "ln2"] {
+                tensors.insert(
+                    format!("layers.{i}.{ln}"),
+                    TqwTensor::F32(Tensor::new(vec![d], vec![1.0; d]).unwrap()),
+                );
+            }
+        }
+        tensors.insert(
+            "final_norm".into(),
+            TqwTensor::F32(Tensor::new(vec![d], vec![1.0; d]).unwrap()),
+        );
+        Checkpoint { tensors }
+    }
+
+    pub(crate) fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "unit".into(),
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 32,
+            vocab: 64,
+            max_seq: 16,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+            head_dim: 4,
+            kv_dim: 8,
+            n_params: 0,
+            prefill_t: vec![8],
+            prefill_b: vec![1],
+            decode_b: vec![1],
+        }
+    }
+
+    #[test]
+    fn quantize_roundtrip_through_container() {
+        let cfg = tiny_cfg();
+        let ckpt = fake_checkpoint(&cfg, 0);
+        let opts = QuantizeOptions { per_channel: true, ..Default::default() };
+        let w = quantize_checkpoint(&cfg, &ckpt, &opts, CodecId::Lzw, None, "unit").unwrap();
+        let dir = TempDir::new().unwrap();
+        let p = dir.join("m.tqm");
+        w.write(&p).unwrap();
+
+        let src = WeightSource::open_compressed(&p).unwrap();
+        let WeightSource::Compressed(reader) = &src else { panic!() };
+        assert_eq!(reader.meta.model_name, "unit");
+        // all tensors present: embed + head + final_norm + layers*(2+7)
+        assert_eq!(reader.records().len(), 3 + cfg.n_layers * 9);
+        // layer loads and dequantizes close to the original
+        let lw = LayerWeights::load(reader, 0).unwrap();
+        let orig = ckpt.f32("layers.0.wq").unwrap();
+        let deq = lw.wq.dequantize();
+        assert!(orig.mse(&deq) < 1e-4);
+    }
+
+    #[test]
+    fn resident_mode_expands_all_layers() {
+        let cfg = tiny_cfg();
+        let ckpt = fake_checkpoint(&cfg, 1);
+        let opts = QuantizeOptions::default();
+        let w = quantize_checkpoint(&cfg, &ckpt, &opts, CodecId::FreqSeqPacked, None, "unit")
+            .unwrap();
+        let dir = TempDir::new().unwrap();
+        let p = dir.join("m.tqm");
+        w.write(&p).unwrap();
+        let src = WeightSource::open_resident(&p, &cfg).unwrap();
+        let WeightSource::Resident(rw) = &src else { panic!() };
+        assert_eq!(rw.layers.len(), 2);
+        assert_eq!(rw.embed.codes.shape, vec![cfg.vocab, cfg.d_model]);
+    }
+
+    #[test]
+    fn gptq_without_hessians_rejected() {
+        let cfg = tiny_cfg();
+        let ckpt = fake_checkpoint(&cfg, 2);
+        let opts = QuantizeOptions { gptq: true, ..Default::default() };
+        assert!(quantize_checkpoint(&cfg, &ckpt, &opts, CodecId::Raw, None, "unit").is_err());
+    }
+
+    #[test]
+    fn real_e2e_checkpoint_loads_if_built() {
+        let root = crate::config::default_artifacts_root();
+        let p = root.join("e2e/weights/e2e.tqw");
+        if !p.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let ckpt = Checkpoint::load(&p).unwrap();
+        assert!(ckpt.f32("embed.weight").is_ok());
+        assert!(ckpt.f32("layers.0.wq").is_ok());
+        assert!(ckpt.total_f32_bytes() > 1_000_000);
+    }
+}

@@ -1,0 +1,114 @@
+//! Network-latency simulator (S15): the paper's §5 aside measures a 697 ms
+//! round trip to a hosted LLM ("I used the developer tools to measure
+//! latency on safari") and argues on-device decompression beats it.
+//! We make that comparison reproducible: a parameterized RTT model
+//! (lognormal body + tail spikes, the standard shape for WAN latency)
+//! against the measured local per-question / per-token latencies (E7).
+
+use crate::util::Rng;
+
+/// Round-trip model for a hosted-LLM request.
+#[derive(Clone, Debug)]
+pub struct NetworkModel {
+    /// Median round trip (seconds).
+    pub median_s: f64,
+    /// Lognormal sigma (spread of the body).
+    pub sigma: f64,
+    /// Probability of a tail event (retransmit / congestion).
+    pub tail_p: f64,
+    /// Multiplier applied on tail events.
+    pub tail_mult: f64,
+}
+
+impl NetworkModel {
+    /// Defaults anchored to the paper's 697 ms observation.
+    pub fn paper_chatgpt() -> Self {
+        Self { median_s: 0.697, sigma: 0.25, tail_p: 0.03, tail_mult: 3.5 }
+    }
+
+    /// A fast-fiber best case (stress-tests the paper's claim).
+    pub fn fast_fiber() -> Self {
+        Self { median_s: 0.120, sigma: 0.15, tail_p: 0.01, tail_mult: 2.0 }
+    }
+
+    /// Mobile / LTE worst case.
+    pub fn mobile_lte() -> Self {
+        Self { median_s: 1.100, sigma: 0.45, tail_p: 0.08, tail_mult: 4.0 }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        let body = self.median_s * (self.sigma * rng.normal()).exp();
+        if rng.gen_bool(self.tail_p) {
+            body * self.tail_mult
+        } else {
+            body
+        }
+    }
+
+    /// Monte-Carlo summary over `n` samples: (mean, p50, p95, p99).
+    pub fn summarize(&self, n: usize, seed: u64) -> LatencySummary {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut xs: Vec<f64> = (0..n).map(|_| self.sample(&mut rng)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencySummary {
+            mean_s: xs.iter().sum::<f64>() / n as f64,
+            p50_s: xs[n / 2],
+            p95_s: xs[n * 95 / 100],
+            p99_s: xs[(n * 99 / 100).min(n - 1)],
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct LatencySummary {
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+}
+
+/// The E7 comparison: how many local decode steps / decompression passes
+/// fit inside one network round trip.
+pub fn round_trips_worth(local_latency_s: f64, net: &LatencySummary) -> f64 {
+    if local_latency_s <= 0.0 {
+        return f64::INFINITY;
+    }
+    net.p50_s / local_latency_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_roughly_anchored() {
+        let m = NetworkModel::paper_chatgpt();
+        let s = m.summarize(20_000, 1);
+        assert!((s.p50_s - 0.697).abs() < 0.05, "p50 {}", s.p50_s);
+        assert!(s.p95_s > s.p50_s);
+        assert!(s.p99_s >= s.p95_s);
+    }
+
+    #[test]
+    fn tail_events_lift_p99() {
+        let no_tail = NetworkModel { tail_p: 0.0, ..NetworkModel::paper_chatgpt() };
+        let tail = NetworkModel { tail_p: 0.2, ..NetworkModel::paper_chatgpt() };
+        let a = no_tail.summarize(20_000, 2);
+        let b = tail.summarize(20_000, 2);
+        assert!(b.p99_s > a.p99_s);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let m = NetworkModel::mobile_lte();
+        let a = m.summarize(1000, 7);
+        let b = m.summarize(1000, 7);
+        assert_eq!(a.p50_s, b.p50_s);
+    }
+
+    #[test]
+    fn round_trips_worth_math() {
+        let s = LatencySummary { mean_s: 0.7, p50_s: 0.7, p95_s: 1.0, p99_s: 1.5 };
+        assert!((round_trips_worth(0.07, &s) - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,135 @@
+//! Pipeline observability: decompression / execution timing and the
+//! expanded-weight residency accounting behind the E8 bench.
+//!
+//! Residency model: `constant` covers what is always held (embedding +
+//! head + either the compressed blob or all expanded layers), `transient`
+//! is the high-water mark of per-layer expansions live at once (1 for
+//! plain streaming, 2 with prefetch, LRU-resident bytes for Lru(n)).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+#[derive(Default)]
+pub struct PipelineMetrics {
+    decompress_ns: AtomicU64,
+    decompress_bytes: AtomicU64,
+    decompress_count: AtomicU64,
+    exec_ns: AtomicU64,
+    exec_count: AtomicU64,
+    lru_hits: AtomicU64,
+    constant_bytes: AtomicUsize,
+    peak_transient_bytes: AtomicUsize,
+    lru_resident_bytes: AtomicUsize,
+}
+
+impl PipelineMetrics {
+    pub fn record_decompress(&self, d: Duration, bytes: usize) {
+        self.decompress_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.decompress_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.decompress_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_exec(&self, d: Duration) {
+        self.exec_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn lru_hit(&self) {
+        self.lru_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn set_constant_bytes(&self, b: usize) {
+        self.constant_bytes.store(b, Ordering::Relaxed);
+    }
+
+    pub fn observe_transient(&self, bytes: usize) {
+        self.peak_transient_bytes.fetch_max(bytes, Ordering::Relaxed);
+    }
+
+    pub fn update_lru_resident(&self, resident: usize, _evicted: usize) {
+        self.lru_resident_bytes.store(resident, Ordering::Relaxed);
+        self.peak_transient_bytes.fetch_max(resident, Ordering::Relaxed);
+    }
+
+    /// Peak bytes held for weights during serving.
+    pub fn peak_bytes(&self) -> usize {
+        self.constant_bytes.load(Ordering::Relaxed)
+            + self.peak_transient_bytes.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of per-layer expansions only (excludes the constant
+    /// part: heads + compressed blob / resident layers).
+    pub fn transient_peak_bytes(&self) -> usize {
+        self.peak_transient_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn constant_bytes(&self) -> usize {
+        self.constant_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn decompress_secs(&self) -> f64 {
+        self.decompress_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn exec_secs(&self) -> f64 {
+        self.exec_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn decompress_count(&self) -> u64 {
+        self.decompress_count.load(Ordering::Relaxed)
+    }
+
+    pub fn lru_hits_count(&self) -> u64 {
+        self.lru_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn decompress_mb_s(&self) -> f64 {
+        let secs = self.decompress_secs();
+        if secs == 0.0 {
+            return 0.0;
+        }
+        self.decompress_bytes.load(Ordering::Relaxed) as f64 / 1e6 / secs
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "decompress: {} calls, {:.1} ms total ({:.0} MB/s); exec: {} calls, {:.1} ms; peak weights: {:.2} MB; lru hits: {}",
+            self.decompress_count(),
+            self.decompress_secs() * 1e3,
+            self.decompress_mb_s(),
+            self.exec_count.load(Ordering::Relaxed),
+            self.exec_secs() * 1e3,
+            self.peak_bytes() as f64 / 1e6,
+            self.lru_hits_count(),
+        )
+    }
+
+    pub fn reset_timers(&self) {
+        self.decompress_ns.store(0, Ordering::Relaxed);
+        self.decompress_bytes.store(0, Ordering::Relaxed);
+        self.decompress_count.store(0, Ordering::Relaxed);
+        self.exec_ns.store(0, Ordering::Relaxed);
+        self.exec_count.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting() {
+        let m = PipelineMetrics::default();
+        m.set_constant_bytes(100);
+        m.observe_transient(50);
+        m.observe_transient(30); // max semantics
+        assert_eq!(m.peak_bytes(), 150);
+        m.record_decompress(Duration::from_millis(10), 1_000_000);
+        assert!(m.decompress_secs() >= 0.01);
+        assert!(m.decompress_mb_s() > 0.0);
+        assert_eq!(m.decompress_count(), 1);
+        m.reset_timers();
+        assert_eq!(m.decompress_count(), 0);
+        assert_eq!(m.peak_bytes(), 150, "residency survives timer reset");
+    }
+}

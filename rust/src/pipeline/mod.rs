@@ -1,0 +1,730 @@
+//! Layer-streaming inference pipeline (S9) — the paper's core systems idea.
+//!
+//! Weights live **compressed** in memory (that is the deployment premise:
+//! the compressed container is what fits on the device). For every forward
+//! pass the engine walks the decoder blocks and materializes each layer's
+//! weights just in time:
+//!
+//! * [`crate::config::Residency::StreamPerLayer`] — decompress layer i,
+//!   execute, drop (the paper's "Compressed" rows). With `prefetch`, a
+//!   worker thread decompresses layer i+1 while layer i executes, hiding
+//!   most of the decompression latency behind compute.
+//! * [`crate::config::Residency::AlwaysResident`] — expand everything once
+//!   (the paper's "Quantized" baseline).
+//! * [`crate::config::Residency::Lru(n)`] — keep n expanded layers cached
+//!   (the middle ground the paper's future-work section gestures at).
+//!
+//! The engine tracks peak expanded-weight residency so the E8 bench can
+//! plot memory-vs-latency across policies.
+
+pub mod metrics;
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{ModelConfig, Residency, ServeOptions};
+use crate::format::TqmReader;
+use crate::model::{LayerWeights, ResidentWeights, WeightSource};
+use crate::quant::QuantizedTensor;
+use crate::runtime::{literal, Runtime};
+use crate::tensor::Tensor;
+
+pub use metrics::PipelineMetrics;
+
+/// Host-side per-layer KV cache for one request (B dim stripped:
+/// shape [KV, S, Dh]).
+#[derive(Clone)]
+pub struct LayerCache {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// One request's decoding state.
+pub struct Session {
+    pub caches: Vec<LayerCache>,
+    /// Number of valid positions (absolute position of the next token).
+    pub pos: usize,
+    pub tokens: Vec<u32>,
+}
+
+impl Session {
+    /// Placeholder used when temporarily moving a session out of a slot.
+    pub fn empty() -> Self {
+        Self { caches: Vec::new(), pos: 0, tokens: Vec::new() }
+    }
+}
+
+/// Always-resident parts (embedding table, final norm, LM head): needed at
+/// the start and end of every pass, so streaming them buys nothing; their
+/// bytes are charged to the residency metric as a constant.
+struct HeadParts {
+    embed: QuantizedTensor,
+    final_norm: Tensor,
+    head: QuantizedTensor,
+}
+
+pub struct Engine {
+    pub rt: Arc<Runtime>,
+    reader: Option<Arc<TqmReader>>,
+    resident: Option<ResidentWeights>,
+    /// fp32 baseline mode: resident f32 weights, `*_f32` stages.
+    f32w: Option<crate::model::F32Weights>,
+    heads: Option<HeadParts>,
+    /// §Perf: literals for always-resident parts, built once per engine
+    /// instead of per stage call (embed table alone is vocab*d bytes).
+    embed_lits: Vec<xla::Literal>,
+    final_lits: Vec<xla::Literal>,
+    /// §Perf: per-layer weight literals for resident / f32 modes.
+    layer_lits: Option<Vec<Vec<xla::Literal>>>,
+    pub residency: Residency,
+    pub prefetch: bool,
+    pub metrics: PipelineMetrics,
+    /// LRU cache of expanded layers (index -> weights), used by Lru(n).
+    lru: std::sync::Mutex<LruLayers>,
+}
+
+#[derive(Default)]
+struct LruLayers {
+    cap: usize,
+    entries: Vec<(usize, Arc<LayerWeights>)>, // most-recent last
+}
+
+impl LruLayers {
+    fn get(&mut self, i: usize) -> Option<Arc<LayerWeights>> {
+        if let Some(pos) = self.entries.iter().position(|(j, _)| *j == i) {
+            let e = self.entries.remove(pos);
+            let w = e.1.clone();
+            self.entries.push(e);
+            Some(w)
+        } else {
+            None
+        }
+    }
+
+    fn put(&mut self, i: usize, w: Arc<LayerWeights>) -> usize {
+        if self.cap == 0 {
+            return 0;
+        }
+        self.entries.retain(|(j, _)| *j != i);
+        self.entries.push((i, w));
+        let mut evicted = 0;
+        while self.entries.len() > self.cap {
+            let (_, w) = self.entries.remove(0);
+            evicted += w.expanded_bytes();
+        }
+        evicted
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.entries.iter().map(|(_, w)| w.expanded_bytes()).sum()
+    }
+}
+
+impl Engine {
+    pub fn new(rt: Arc<Runtime>, source: WeightSource, opts: &ServeOptions) -> Result<Self> {
+        let metrics = PipelineMetrics::default();
+        let (reader, resident, heads) = match source {
+            WeightSource::Compressed(r) => {
+                let heads = HeadParts {
+                    embed: r.load_quantized("embed.weight")?,
+                    final_norm: r.load_f32("final_norm")?,
+                    head: r.load_quantized("head.weight")?,
+                };
+                (Some(Arc::new(r)), None, heads)
+            }
+            WeightSource::Resident(rw) => {
+                let heads = HeadParts {
+                    embed: rw.embed.clone(),
+                    final_norm: rw.final_norm.clone(),
+                    head: rw.head.clone(),
+                };
+                (None, Some(rw), heads)
+            }
+        };
+        let residency = if resident.is_some() { Residency::AlwaysResident } else { opts.residency };
+        let lru_cap = match residency {
+            Residency::Lru(n) => n,
+            _ => 0,
+        };
+        let mut engine = Self {
+            rt,
+            reader,
+            resident,
+            f32w: None,
+            heads: Some(heads),
+            embed_lits: Vec::new(),
+            final_lits: Vec::new(),
+            layer_lits: None,
+            residency,
+            prefetch: opts.prefetch,
+            metrics,
+            lru: std::sync::Mutex::new(LruLayers { cap: lru_cap, entries: Vec::new() }),
+        };
+        engine.embed_lits = engine.build_embed_literals()?;
+        engine.final_lits = engine.build_final_literals()?;
+        if let Some(rw) = &engine.resident {
+            let cfg = engine.rt.manifest.config.clone();
+            engine.layer_lits = Some(
+                rw.layers
+                    .iter()
+                    .map(|l| l.to_literals(&cfg))
+                    .collect::<Result<Vec<_>>>()?,
+            );
+        }
+        engine.charge_constant_residency();
+        Ok(engine)
+    }
+
+    /// fp32 baseline engine: unquantized weights, `*_f32` stages, always
+    /// resident — the "llama3.2-xB" rows of Tables 2-4.
+    pub fn new_f32(rt: Arc<Runtime>, ckpt: &crate::model::Checkpoint) -> Result<Self> {
+        let f32w = crate::model::F32Weights::load(&rt.manifest.config, ckpt)?;
+        let mut engine = Self {
+            rt,
+            reader: None,
+            resident: None,
+            f32w: Some(f32w),
+            heads: None,
+            embed_lits: Vec::new(),
+            final_lits: Vec::new(),
+            layer_lits: None,
+            residency: Residency::AlwaysResident,
+            prefetch: false,
+            metrics: PipelineMetrics::default(),
+            lru: std::sync::Mutex::new(LruLayers::default()),
+        };
+        engine.embed_lits = engine.build_embed_literals()?;
+        engine.final_lits = engine.build_final_literals()?;
+        engine.layer_lits = Some(
+            engine
+                .f32w
+                .as_ref()
+                .unwrap()
+                .layers
+                .iter()
+                .map(|l| l.to_literals())
+                .collect::<Result<Vec<_>>>()?,
+        );
+        engine
+            .metrics
+            .set_constant_bytes(engine.f32w.as_ref().unwrap().total_bytes());
+        Ok(engine)
+    }
+
+    pub fn is_f32(&self) -> bool {
+        self.f32w.is_some()
+    }
+
+    /// Variant label for reports.
+    pub fn variant(&self) -> String {
+        if self.is_f32() {
+            "fp32".into()
+        } else if self.reader.is_some() {
+            format!("compressed/{}", self.residency.label())
+        } else {
+            "quantized".into()
+        }
+    }
+
+    fn stage(&self, base: &str) -> String {
+        if self.is_f32() {
+            format!("{base}_f32")
+        } else {
+            base.to_string()
+        }
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.rt.manifest.config
+    }
+
+    fn charge_constant_residency(&self) {
+        let Some(heads) = &self.heads else { return };
+        let constant = heads.embed.unpacked_bytes()
+            + heads.head.unpacked_bytes()
+            + heads.final_norm.data.len() * 4
+            + match (&self.resident, &self.reader) {
+                (Some(rw), _) => rw.layers.iter().map(|l| l.expanded_bytes()).sum::<usize>(),
+                (None, Some(r)) => r.file_bytes(), // the compressed blob itself
+                _ => 0,
+            };
+        self.metrics.set_constant_bytes(constant);
+    }
+
+    // -- weight materialization ---------------------------------------------
+
+    fn layer_arc(&self, i: usize) -> Result<Arc<LayerWeights>> {
+        if let Some(rw) = &self.resident {
+            // resident weights live for the engine's lifetime; cheap clone
+            return Ok(Arc::new(rw.layers[i].clone()));
+        }
+        if let Residency::Lru(_) = self.residency {
+            if let Some(w) = self.lru.lock().unwrap().get(i) {
+                self.metrics.lru_hit();
+                return Ok(w);
+            }
+        }
+        let reader = self.reader.as_ref().expect("no weight source");
+        let t0 = std::time::Instant::now();
+        let w = Arc::new(LayerWeights::load(reader, i)?);
+        self.metrics.record_decompress(t0.elapsed(), w.expanded_bytes());
+        if let Residency::Lru(_) = self.residency {
+            let evicted = self.lru.lock().unwrap().put(i, w.clone());
+            let resident = self.lru.lock().unwrap().resident_bytes();
+            self.metrics.update_lru_resident(resident, evicted);
+        }
+        Ok(w)
+    }
+
+    /// Run `f` for every layer in order, materializing weights according
+    /// to the residency policy, optionally prefetching layer i+1 on a
+    /// worker thread while layer i executes.
+    fn walk_layers<F>(&self, mut f: F) -> Result<()>
+    where
+        F: FnMut(usize, &LayerWeights) -> Result<()>,
+    {
+        let n = self.cfg().n_layers;
+        let stream = matches!(self.residency, Residency::StreamPerLayer);
+        if stream && self.prefetch {
+            let reader = self.reader.as_ref().expect("stream requires reader").clone();
+            let (tx, rx) = mpsc::sync_channel::<Result<LayerWeights>>(1);
+            std::thread::scope(|scope| -> Result<()> {
+                let metrics = &self.metrics;
+                scope.spawn(move || {
+                    let mut scratch = Vec::new();
+                    for i in 0..n {
+                        let t0 = std::time::Instant::now();
+                        let res = LayerWeights::load_into(&reader, i, &mut scratch);
+                        if let Ok(w) = &res {
+                            metrics.record_decompress(t0.elapsed(), w.expanded_bytes());
+                        }
+                        if tx.send(res).is_err() {
+                            return; // consumer bailed
+                        }
+                    }
+                });
+                for i in 0..n {
+                    let w = rx
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("prefetch thread died"))??;
+                    // streamed + the one being prefetched can coexist
+                    self.metrics.observe_transient(w.expanded_bytes() * 2);
+                    f(i, &w)?;
+                }
+                Ok(())
+            })?;
+        } else {
+            for i in 0..n {
+                let w = self.layer_arc(i)?;
+                if stream {
+                    self.metrics.observe_transient(w.expanded_bytes());
+                }
+                f(i, &w)?;
+            }
+        }
+        Ok(())
+    }
+
+    // -- stage plumbing --------------------------------------------------------
+
+    fn build_embed_literals(&self) -> Result<Vec<xla::Literal>> {
+        if let Some(fw) = &self.f32w {
+            return Ok(vec![literal::tensor_literal(&fw.embed)?]);
+        }
+        let e = &self.heads.as_ref().unwrap().embed;
+        let v = e.codes.shape[0];
+        let (s, z) = e.channel_params(v);
+        Ok(vec![
+            literal::u8_literal(&e.codes.shape, &e.codes.data)?,
+            literal::f32_literal(&[v], &s)?,
+            literal::f32_literal(&[v], &z)?,
+        ])
+    }
+
+    fn build_final_literals(&self) -> Result<Vec<xla::Literal>> {
+        if let Some(fw) = &self.f32w {
+            return Ok(vec![
+                literal::tensor_literal(&fw.final_norm)?,
+                literal::tensor_literal(&fw.head)?,
+            ]);
+        }
+        let heads = self.heads.as_ref().unwrap();
+        let h = &heads.head;
+        let v = h.codes.shape[1];
+        let (s, z) = h.channel_params(v);
+        Ok(vec![
+            literal::tensor_literal(&heads.final_norm)?,
+            literal::u8_literal(&h.codes.shape, &h.codes.data)?,
+            literal::f32_literal(&[v], &s)?,
+            literal::f32_literal(&[v], &z)?,
+        ])
+    }
+
+    fn run_embed(&self, b: usize, t: usize, tokens_padded: &[i32]) -> Result<xla::Literal> {
+        let tok = literal::i32_literal(&[b, t], tokens_padded)?;
+        let mut args: Vec<&xla::Literal> = vec![&tok];
+        args.extend(self.embed_lits.iter());
+        let out = self.rt.run_refs(&self.stage("embed"), b, t, &args)?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    fn run_final(&self, b: usize, t: usize, hidden: xla::Literal) -> Result<Tensor> {
+        let mut args: Vec<&xla::Literal> = vec![&hidden];
+        args.extend(self.final_lits.iter());
+        let out = self.rt.run_refs(&self.stage("final"), b, t, &args)?;
+        literal::to_tensor(&out[0])
+    }
+
+    /// Execute one block stage: returns (hidden', k cache, v cache).
+    fn exec_block(
+        &self,
+        b: usize,
+        t: usize,
+        i: usize,
+        h: &xla::Literal,
+        init_caches: Option<&[LayerCache]>,
+        pos: &[i32],
+        wlits: &[xla::Literal],
+    ) -> Result<(xla::Literal, LayerCache)> {
+        let cfg = self.cfg();
+        let (kv, s, hd) = (cfg.n_kv_heads, cfg.max_seq, cfg.head_dim);
+        let cache_elems = kv * s * hd;
+        let (kbuf, vbuf): (Vec<f32>, Vec<f32>) = match init_caches {
+            Some(caches) => {
+                let lc = &caches[i];
+                anyhow::ensure!(lc.k.len() == b * cache_elems, "cache shape mismatch");
+                (lc.k.clone(), lc.v.clone())
+            }
+            None => (vec![0.0f32; b * cache_elems], vec![0.0f32; b * cache_elems]),
+        };
+        let k_lit = literal::f32_literal(&[b, kv, s, hd], &kbuf)?;
+        let v_lit = literal::f32_literal(&[b, kv, s, hd], &vbuf)?;
+        let pos_lit = literal::i32_literal(&[b], pos)?;
+        let mut args: Vec<&xla::Literal> = vec![h, &k_lit, &v_lit, &pos_lit];
+        args.extend(wlits.iter());
+        let t0 = std::time::Instant::now();
+        let mut out = self.rt.run_refs(&self.stage("block"), b, t, &args)?;
+        self.metrics.record_exec(t0.elapsed());
+        anyhow::ensure!(out.len() == 3, "block stage must return 3 outputs");
+        let vc = out.pop().unwrap();
+        let kc = out.pop().unwrap();
+        let h_next = out.pop().unwrap();
+        Ok((
+            h_next,
+            LayerCache { k: literal::to_f32_vec(&kc)?, v: literal::to_f32_vec(&vc)? },
+        ))
+    }
+
+    /// Core layer loop: hidden + fresh caches -> (hidden', caches').
+    /// `pos` is the absolute position of hidden[:, 0] per batch row.
+    fn run_blocks(
+        &self,
+        b: usize,
+        t: usize,
+        hidden: xla::Literal,
+        init_caches: Option<&[LayerCache]>,
+        pos: &[i32],
+    ) -> Result<(xla::Literal, Vec<LayerCache>)> {
+        let cfg = self.cfg();
+        let mut h = hidden;
+        let mut out_caches: Vec<LayerCache> = Vec::with_capacity(cfg.n_layers);
+        if let Some(cached) = &self.layer_lits {
+            // resident / f32 modes: weight literals prebuilt once (§Perf)
+            for (i, wlits) in cached.iter().enumerate() {
+                let (h2, lc) = self.exec_block(b, t, i, &h, init_caches, pos, wlits)?;
+                h = h2;
+                out_caches.push(lc);
+            }
+        } else {
+            self.walk_layers(|i, w| {
+                let wlits = w.to_literals(cfg)?;
+                let (h2, lc) = self.exec_block(b, t, i, &h, init_caches, pos, &wlits)?;
+                h = h2;
+                out_caches.push(lc);
+                Ok(())
+            })?;
+        }
+        Ok((h, out_caches))
+    }
+
+    // -- public API ----------------------------------------------------------
+
+    /// Pick the smallest compiled prefill bucket fitting `t` tokens.
+    pub fn prefill_bucket(&self, t: usize) -> Result<usize> {
+        self.rt
+            .manifest
+            .prefill_bucket(1, t)
+            .map(|e| e.t)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "prompt of {t} tokens exceeds every lowered prefill bucket for {}",
+                    self.cfg().name
+                )
+            })
+    }
+
+    /// Full-prompt logits [T_real, V] at batch 1 — the eval scoring path.
+    pub fn forward_logits(&self, tokens: &[u32]) -> Result<Tensor> {
+        let t_real = tokens.len();
+        let bucket = self.prefill_bucket(t_real)?;
+        let mut padded: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        padded.resize(bucket, 0);
+        let h = self.run_embed(1, bucket, &padded)?;
+        let (h, _) = self.run_blocks(1, bucket, h, None, &[0])?;
+        let logits = self.run_final(1, bucket, h)?;
+        // slice to real length
+        let v = self.cfg().vocab;
+        let data = logits.data[..t_real * v].to_vec();
+        Tensor::new(vec![t_real, v], data)
+    }
+
+    /// Prefill a prompt, returning the decoding session and the logits of
+    /// the last real position (for sampling the first generated token).
+    pub fn prefill_session(&self, tokens: &[u32]) -> Result<(Session, Vec<f32>)> {
+        let t_real = tokens.len();
+        anyhow::ensure!(t_real > 0, "empty prompt");
+        let bucket = self.prefill_bucket(t_real)?;
+        let mut padded: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        padded.resize(bucket, 0);
+        let h = self.run_embed(1, bucket, &padded)?;
+        let (h, caches) = self.run_blocks(1, bucket, h, None, &[0])?;
+        let logits = self.run_final(1, bucket, h)?;
+        let v = self.cfg().vocab;
+        let last = logits.data[(t_real - 1) * v..t_real * v].to_vec();
+        Ok((
+            Session { caches, pos: t_real, tokens: tokens.to_vec() },
+            last,
+        ))
+    }
+
+    /// One decode step for a batch of sessions (padded to a compiled
+    /// decode geometry). `last_tokens[i]` is the token to feed session i.
+    /// Returns next-token logits per session.
+    pub fn decode_batch(
+        &self,
+        sessions: &mut [&mut Session],
+        last_tokens: &[u32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let n = sessions.len();
+        anyhow::ensure!(n > 0 && n == last_tokens.len(), "bad batch");
+        let cfg = self.cfg();
+        let b = *cfg
+            .decode_b
+            .iter()
+            .filter(|&&b| b >= n)
+            .min()
+            .ok_or_else(|| anyhow::anyhow!("batch {n} exceeds compiled decode_b {:?}", cfg.decode_b))?;
+        for s in sessions.iter() {
+            anyhow::ensure!(s.pos < cfg.max_seq, "session exceeded KV capacity");
+        }
+
+        // tokens + positions, padded by replicating row 0
+        let mut toks: Vec<i32> = (0..b)
+            .map(|i| last_tokens[i.min(n - 1)] as i32)
+            .collect();
+        // embed expects [B, 1]
+        let h = self.run_embed(b, 1, &mut toks)?;
+        let pos: Vec<i32> = (0..b).map(|i| sessions[i.min(n - 1)].pos as i32).collect();
+
+        // stack caches across the batch per layer
+        let (kv, s_len, hd) = (cfg.n_kv_heads, cfg.max_seq, cfg.head_dim);
+        let cache_elems = kv * s_len * hd;
+        let n_layers = cfg.n_layers;
+        let mut stacked: Vec<LayerCache> = Vec::with_capacity(n_layers);
+        for li in 0..n_layers {
+            let mut k = Vec::with_capacity(b * cache_elems);
+            let mut v = Vec::with_capacity(b * cache_elems);
+            for bi in 0..b {
+                let src = &sessions[bi.min(n - 1)].caches[li];
+                k.extend_from_slice(&src.k);
+                v.extend_from_slice(&src.v);
+            }
+            stacked.push(LayerCache { k, v });
+        }
+
+        let (h, new_caches) = self.run_blocks(b, 1, h, Some(&stacked), &pos)?;
+        let logits = self.run_final(b, 1, h)?;
+
+        // scatter caches back and collect per-session logits
+        let v_dim = cfg.vocab;
+        let mut out = Vec::with_capacity(n);
+        for bi in 0..n {
+            for li in 0..n_layers {
+                let lc = &new_caches[li];
+                sessions[bi].caches[li] = LayerCache {
+                    k: lc.k[bi * cache_elems..(bi + 1) * cache_elems].to_vec(),
+                    v: lc.v[bi * cache_elems..(bi + 1) * cache_elems].to_vec(),
+                };
+            }
+            sessions[bi].pos += 1;
+            sessions[bi].tokens.push(last_tokens[bi]);
+            out.push(logits.data[bi * v_dim..(bi + 1) * v_dim].to_vec());
+        }
+        Ok(out)
+    }
+
+    /// Convenience single-session decode.
+    pub fn decode_one(&self, session: &mut Session, token: u32) -> Result<Vec<f32>> {
+        let mut refs = [session];
+        let mut out = self.decode_batch(&mut refs, &[token])?;
+        Ok(out.pop().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CodecId;
+    use crate::config::{default_artifacts_root, QuantizeOptions, ServeOptions};
+    use crate::model::{quantize_checkpoint, Checkpoint};
+    use crate::util::TempDir;
+
+    fn build_engine(residency: Residency, prefetch: bool) -> Option<(Engine, TempDir)> {
+        let root = default_artifacts_root();
+        if !root.join("tiny/manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let rt = Arc::new(Runtime::new(&root, "tiny").unwrap());
+        let ckpt = Checkpoint::load(root.join("tiny/weights/tiny.tqw")).unwrap();
+        let opts = QuantizeOptions { per_channel: true, ..Default::default() };
+        let w = quantize_checkpoint(
+            &rt.manifest.config,
+            &ckpt,
+            &opts,
+            CodecId::FreqSeqPacked,
+            None,
+            "tiny.tqw",
+        )
+        .unwrap();
+        let dir = TempDir::new().unwrap();
+        let p = dir.join("tiny.tqm");
+        w.write(&p).unwrap();
+        let source = match residency {
+            Residency::AlwaysResident => {
+                WeightSource::open_resident(&p, &rt.manifest.config).unwrap()
+            }
+            _ => WeightSource::open_compressed(&p).unwrap(),
+        };
+        let sopts = ServeOptions { residency, prefetch, ..Default::default() };
+        Some((Engine::new(rt, source, &sopts).unwrap(), dir))
+    }
+
+    #[test]
+    fn forward_logits_shape() {
+        let Some((eng, _dir)) = build_engine(Residency::StreamPerLayer, false) else {
+            return;
+        };
+        let tokens: Vec<u32> = vec![1, 2, 3, 20, 21];
+        let logits = eng.forward_logits(&tokens).unwrap();
+        assert_eq!(logits.shape, vec![5, eng.cfg().vocab]);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn residency_modes_agree_bitwise() {
+        // THE lossless-serving invariant: stream, lru and resident modes
+        // must produce identical logits (same codes, same executables).
+        let Some((stream, _d1)) = build_engine(Residency::StreamPerLayer, false) else {
+            return;
+        };
+        let (resident, _d2) = build_engine(Residency::AlwaysResident, false).unwrap();
+        let (lru, _d3) = build_engine(Residency::Lru(1), false).unwrap();
+        let (prefetched, _d4) = build_engine(Residency::StreamPerLayer, true).unwrap();
+        let tokens: Vec<u32> = vec![1, 5, 9, 13];
+        let a = stream.forward_logits(&tokens).unwrap();
+        let b = resident.forward_logits(&tokens).unwrap();
+        let c = lru.forward_logits(&tokens).unwrap();
+        let d = prefetched.forward_logits(&tokens).unwrap();
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.data, c.data);
+        assert_eq!(a.data, d.data);
+    }
+
+    #[test]
+    fn prefill_then_decode_matches_prefill_of_longer_prompt() {
+        // decode(prefill(p), t) logits == forward_logits(p + t) last row
+        let Some((eng, _dir)) = build_engine(Residency::StreamPerLayer, false) else {
+            return;
+        };
+        let prompt: Vec<u32> = vec![2, 17, 30, 3];
+        let next: u32 = 25;
+        let (mut sess, _) = eng.prefill_session(&prompt).unwrap();
+        let dec = eng.decode_one(&mut sess, next).unwrap();
+
+        let mut full = prompt.clone();
+        full.push(next);
+        let logits = eng.forward_logits(&full).unwrap();
+        let v = eng.cfg().vocab;
+        let last = &logits.data[(full.len() - 1) * v..];
+        for (x, y) in dec.iter().zip(last) {
+            assert!((x - y).abs() < 2e-3, "{x} vs {y}");
+        }
+        assert_eq!(sess.pos, 5);
+    }
+
+    #[test]
+    fn batched_decode_matches_single() {
+        let Some((eng, _dir)) = build_engine(Residency::StreamPerLayer, false) else {
+            return;
+        };
+        let p1: Vec<u32> = vec![2, 17, 30];
+        let p2: Vec<u32> = vec![1, 6, 2, 40, 3];
+        let (mut s1, _) = eng.prefill_session(&p1).unwrap();
+        let (mut s2, _) = eng.prefill_session(&p2).unwrap();
+        let (mut s1b, _) = eng.prefill_session(&p1).unwrap();
+        let (mut s2b, _) = eng.prefill_session(&p2).unwrap();
+
+        let a1 = eng.decode_one(&mut s1, 7).unwrap();
+        let a2 = eng.decode_one(&mut s2, 9).unwrap();
+        let mut batch = [&mut s1b, &mut s2b];
+        let out = eng.decode_batch(&mut batch, &[7, 9]).unwrap();
+        for (x, y) in a1.iter().zip(&out[0]) {
+            assert!((x - y).abs() < 2e-3);
+        }
+        for (x, y) in a2.iter().zip(&out[1]) {
+            assert!((x - y).abs() < 2e-3);
+        }
+    }
+
+    #[test]
+    fn streaming_transient_residency_is_one_layer() {
+        // The paper's memory claim, measured at the *transient* level:
+        // streaming expands one layer at a time (two with prefetch),
+        // while resident mode keeps all of them expanded. The TOTAL peak
+        // for streaming also includes the compressed blob — at the honest
+        // ~1.2x ratios of this reproduction that overhead can exceed the
+        // savings on tiny models; the E8 bench (pipeline_residency)
+        // reports exactly that trade-off on the larger configs.
+        let Some((stream, _d1)) = build_engine(Residency::StreamPerLayer, false) else {
+            return;
+        };
+        let (resident, _d2) = build_engine(Residency::AlwaysResident, false).unwrap();
+        let tokens: Vec<u32> = vec![1, 2, 3];
+        stream.forward_logits(&tokens).unwrap();
+        resident.forward_logits(&tokens).unwrap();
+        let n_layers = stream.cfg().n_layers;
+        // streaming decompresses every layer once per pass...
+        assert_eq!(stream.metrics.decompress_count() as usize, n_layers);
+        // ...but holds at most one expanded layer at a time
+        let reader = stream.reader.as_ref().unwrap();
+        let one_layer = LayerWeights::load(reader, 0).unwrap().expanded_bytes();
+        let transient = stream.metrics.transient_peak_bytes();
+        assert!(transient <= one_layer * 12 / 10, "transient {transient} > 1.2 layers");
+        // resident never decompresses during serving and its constant part
+        // carries every expanded layer
+        assert_eq!(resident.metrics.decompress_count(), 0);
+        assert!(resident.metrics.constant_bytes() >= n_layers * one_layer);
+    }
+
+    #[test]
+    fn too_long_prompt_rejected() {
+        let Some((eng, _dir)) = build_engine(Residency::StreamPerLayer, false) else {
+            return;
+        };
+        let tokens: Vec<u32> = vec![1; 4096];
+        assert!(eng.forward_logits(&tokens).is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! Quantization substrate (S2/S3): the paper's §3.
+//!
+//! * [`uniform`] — the paper's Listing-1 "naive" asymmetric min/max
+//!   quantizer, at ternary/2/4/6/8 bits, per-tensor or per-channel.
+//! * [`gptq`] — the data-dependent upgrade the paper applies on top
+//!   (Hessian-damped, Cholesky-based error propagation).
+//! * [`packing`] — bit-packing for sub-8-bit codes (storage ablation).
+//! * [`stats`] — quantization-error metrics feeding the §3 ablation bench.
+//!
+//! Semantics contract: `dequant(x) = (codes - zero) * scale`, `zero` a
+//! rounded code offset — identical to `python/compile/model.py::
+//! quantize_tensor`, which the cross-language test fixture checks.
+
+pub mod gptq;
+pub mod packing;
+pub mod stats;
+pub mod uniform;
+
+use crate::tensor::{Tensor, U8Tensor};
+
+/// Quantization bit-width. `Ternary` mirrors the paper's QMoE baseline
+/// (three levels: min, 0, max).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Bits {
+    Ternary,
+    B2,
+    B4,
+    B6,
+    B8,
+}
+
+impl Bits {
+    /// Maximum code value (`2^bits - 1`); ternary uses codes {0, 1, 2}.
+    pub fn maxq(self) -> u32 {
+        match self {
+            Bits::Ternary => 2,
+            Bits::B2 => 3,
+            Bits::B4 => 15,
+            Bits::B6 => 63,
+            Bits::B8 => 255,
+        }
+    }
+
+    /// Storage bits per weight after packing.
+    pub fn storage_bits(self) -> u32 {
+        match self {
+            Bits::Ternary => 2,
+            Bits::B2 => 2,
+            Bits::B4 => 4,
+            Bits::B6 => 6,
+            Bits::B8 => 8,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Bits::Ternary => "ternary",
+            Bits::B2 => "2-bit",
+            Bits::B4 => "4-bit",
+            Bits::B6 => "6-bit",
+            Bits::B8 => "8-bit",
+        }
+    }
+
+    pub const ALL: [Bits; 5] = [Bits::Ternary, Bits::B2, Bits::B4, Bits::B6, Bits::B8];
+}
+
+/// Channel granularity for scale/zero parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// One (scale, zero) for the whole tensor — the paper's Listing 1.
+    PerTensor,
+    /// One (scale, zero) per channel along `axis` (0 = rows, 1 = cols).
+    PerChannel { axis: usize },
+}
+
+/// A quantized tensor: u8 codes (one byte per weight, regardless of bit
+/// width — packing is a storage-layer concern) plus affine parameters.
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    pub codes: U8Tensor,
+    /// Per-channel scale; length 1 for per-tensor granularity.
+    pub scale: Vec<f32>,
+    /// Per-channel zero point (rounded, in code units).
+    pub zero: Vec<f32>,
+    pub bits: Bits,
+    pub granularity: Granularity,
+}
+
+impl QuantizedTensor {
+    /// Expand channel parameters to per-element factors and dequantize.
+    pub fn dequantize(&self) -> Tensor {
+        let shape = self.codes.shape.clone();
+        let n = self.codes.data.len();
+        let mut data = vec![0.0f32; n];
+        match self.granularity {
+            Granularity::PerTensor => {
+                let (s, z) = (self.scale[0], self.zero[0]);
+                for (o, &c) in data.iter_mut().zip(&self.codes.data) {
+                    *o = (c as f32 - z) * s;
+                }
+            }
+            Granularity::PerChannel { axis } => {
+                let (rows, cols) = (shape[0], shape[1]);
+                match axis {
+                    0 => {
+                        for r in 0..rows {
+                            let (s, z) = (self.scale[r], self.zero[r]);
+                            for c in 0..cols {
+                                data[r * cols + c] = (self.codes.data[r * cols + c] as f32 - z) * s;
+                            }
+                        }
+                    }
+                    1 => {
+                        for r in 0..rows {
+                            for c in 0..cols {
+                                data[r * cols + c] =
+                                    (self.codes.data[r * cols + c] as f32 - self.zero[c])
+                                        * self.scale[c];
+                            }
+                        }
+                    }
+                    a => panic!("bad channel axis {a}"),
+                }
+            }
+        }
+        Tensor { shape, data }
+    }
+
+    /// Per-output-channel scale/zero vectors of length `channels`, expanded
+    /// from per-tensor granularity when needed — the form the stage HLOs
+    /// take as arguments.
+    pub fn channel_params(&self, channels: usize) -> (Vec<f32>, Vec<f32>) {
+        match self.granularity {
+            Granularity::PerTensor => (
+                vec![self.scale[0]; channels],
+                vec![self.zero[0]; channels],
+            ),
+            Granularity::PerChannel { .. } => {
+                assert_eq!(self.scale.len(), channels);
+                (self.scale.clone(), self.zero.clone())
+            }
+        }
+    }
+
+    /// Bytes when stored naively (1 byte/code + f32 params).
+    pub fn unpacked_bytes(&self) -> usize {
+        self.codes.data.len() + 4 * (self.scale.len() + self.zero.len())
+    }
+
+    /// Bytes when bit-packed at the native width.
+    pub fn packed_bytes(&self) -> usize {
+        let bits = self.bits.storage_bits() as usize;
+        (self.codes.data.len() * bits + 7) / 8 + 4 * (self.scale.len() + self.zero.len())
+    }
+}

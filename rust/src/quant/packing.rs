@@ -1,0 +1,89 @@
+//! Bit-packing for sub-8-bit code storage (S2).
+//!
+//! The unpacked `QuantizedTensor` keeps one byte per code for simplicity
+//! and because the stage HLOs take u8 inputs; this module provides the
+//! dense storage layout used by the TQM container for the §3 bit-width
+//! ablation (ternary/2/4/6-bit checkpoints) — LSB-first within each byte,
+//! codes never straddle... they DO straddle byte boundaries for 6-bit:
+//! a plain little-endian bit stream.
+
+/// Pack `codes` (values < 2^bits) into a little-endian bit stream.
+pub fn pack(codes: &[u8], bits: u32) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    let total_bits = codes.len() * bits as usize;
+    let mut out = vec![0u8; (total_bits + 7) / 8];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        debug_assert!(bits == 8 || (c as u32) < (1 << bits), "code {c} overflows {bits} bits");
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        out[byte] |= c << off;
+        if off + bits as usize > 8 {
+            out[byte + 1] |= c >> (8 - off);
+        }
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Unpack a little-endian bit stream into `n` codes of `bits` width.
+pub fn unpack(packed: &[u8], bits: u32, n: usize) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    let mask = if bits == 8 { 0xFFu16 } else { (1u16 << bits) - 1 };
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let lo = packed[byte] as u16 >> off;
+        let hi = if off + bits as usize > 8 {
+            (packed[byte + 1] as u16) << (8 - off)
+        } else {
+            0
+        };
+        out.push(((lo | hi) & mask) as u8);
+        bitpos += bits as usize;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+    #[test]
+    fn roundtrip_all_widths() {
+        let mut rng = crate::util::Rng::seed_from_u64(0);
+        for bits in 1..=8u32 {
+            for n in [0usize, 1, 7, 8, 9, 255, 1000] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| rng.gen_range(0, (1u16 << bits) as u64) as u8).collect();
+                let packed = pack(&codes, bits);
+                assert_eq!(packed.len(), (n * bits as usize + 7) / 8);
+                assert_eq!(unpack(&packed, bits, n), codes, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn six_bit_straddles_bytes() {
+        let codes = vec![0b111111u8, 0b000001, 0b101010, 0b010101];
+        let packed = pack(&codes, 6);
+        assert_eq!(packed.len(), 3); // 24 bits exactly
+        assert_eq!(unpack(&packed, 6, 4), codes);
+    }
+
+    #[test]
+    fn eight_bit_is_identity() {
+        let codes: Vec<u8> = (0..=255).collect();
+        assert_eq!(pack(&codes, 8), codes);
+        assert_eq!(unpack(&codes, 8, 256), codes);
+    }
+
+    #[test]
+    fn compression_factor() {
+        let codes = vec![1u8; 800];
+        assert_eq!(pack(&codes, 2).len(), 200);
+        assert_eq!(pack(&codes, 4).len(), 400);
+    }
+}

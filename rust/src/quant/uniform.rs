@@ -1,0 +1,229 @@
+//! The paper's "naive" quantizer (§3, Listing 1): asymmetric uniform
+//! min/max mapping, plus the ternary threshold variant it compares against.
+//!
+//! Listing-1 semantics, faithfully:
+//!   scale = (xmax - xmin) / maxq
+//!   zero  = round(-xmin / scale)
+//!   q     = clamp(round(x / scale) + zero, 0, maxq)
+//!   deq   = (q - zero) * scale
+//! with min/max clamped through 0 so the zero point is representable.
+
+use anyhow::{bail, Result};
+
+use super::{Bits, Granularity, QuantizedTensor};
+use crate::tensor::{Tensor, U8Tensor};
+
+/// Scale/zero from a value range (the paper's `find_params`).
+fn params_from_range(mut xmin: f32, mut xmax: f32, maxq: u32) -> (f32, f32) {
+    xmin = xmin.min(0.0);
+    xmax = xmax.max(0.0);
+    let mut scale = (xmax - xmin) / maxq as f32;
+    if scale <= 1e-12 {
+        scale = 1.0;
+    }
+    let zero = (-xmin / scale).round();
+    (scale, zero)
+}
+
+fn quantize_slice(out: &mut [u8], xs: &[f32], scale: f32, zero: f32, maxq: u32) {
+    let maxq_f = maxq as f32;
+    for (o, &x) in out.iter_mut().zip(xs) {
+        let q = (x / scale).round() + zero;
+        *o = q.clamp(0.0, maxq_f) as u8;
+    }
+}
+
+/// Quantize a tensor with the paper's naive scheme.
+///
+/// For 2-D tensors any granularity is allowed; 1-D tensors only support
+/// `PerTensor`. `Ternary` uses the same uniform machinery with maxq = 2,
+/// which reproduces QMoE's {min, 0, max} three-level grid (the zero point
+/// lands on a code because min/max are clamped through 0).
+pub fn quantize(t: &Tensor, bits: Bits, gran: Granularity) -> Result<QuantizedTensor> {
+    let maxq = bits.maxq();
+    let mut codes = vec![0u8; t.data.len()];
+    let (scale, zero): (Vec<f32>, Vec<f32>) = match gran {
+        Granularity::PerTensor => {
+            let xmin = t.data.iter().copied().fold(f32::INFINITY, f32::min);
+            let xmax = t.data.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let (s, z) = params_from_range(xmin, xmax, maxq);
+            quantize_slice(&mut codes, &t.data, s, z, maxq);
+            (vec![s], vec![z])
+        }
+        Granularity::PerChannel { axis } => {
+            let (rows, cols) = t.dims2()?;
+            match axis {
+                0 => {
+                    let mut ss = Vec::with_capacity(rows);
+                    let mut zs = Vec::with_capacity(rows);
+                    for r in 0..rows {
+                        let row = &t.data[r * cols..(r + 1) * cols];
+                        let xmin = row.iter().copied().fold(f32::INFINITY, f32::min);
+                        let xmax = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                        let (s, z) = params_from_range(xmin, xmax, maxq);
+                        quantize_slice(&mut codes[r * cols..(r + 1) * cols], row, s, z, maxq);
+                        ss.push(s);
+                        zs.push(z);
+                    }
+                    (ss, zs)
+                }
+                1 => {
+                    let mut xmin = vec![f32::INFINITY; cols];
+                    let mut xmax = vec![f32::NEG_INFINITY; cols];
+                    for r in 0..rows {
+                        for c in 0..cols {
+                            let v = t.data[r * cols + c];
+                            xmin[c] = xmin[c].min(v);
+                            xmax[c] = xmax[c].max(v);
+                        }
+                    }
+                    let mut ss = Vec::with_capacity(cols);
+                    let mut zs = Vec::with_capacity(cols);
+                    for c in 0..cols {
+                        let (s, z) = params_from_range(xmin[c], xmax[c], maxq);
+                        ss.push(s);
+                        zs.push(z);
+                    }
+                    let maxq_f = maxq as f32;
+                    for r in 0..rows {
+                        for c in 0..cols {
+                            let q = (t.data[r * cols + c] / ss[c]).round() + zs[c];
+                            codes[r * cols + c] = q.clamp(0.0, maxq_f) as u8;
+                        }
+                    }
+                    (ss, zs)
+                }
+                a => bail!("bad channel axis {a}"),
+            }
+        }
+    };
+    Ok(QuantizedTensor {
+        codes: U8Tensor { shape: t.shape.clone(), data: codes },
+        scale,
+        zero,
+        bits,
+        granularity: gran,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+    fn random_tensor(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut rng = crate::util::Rng::seed_from_u64(seed);
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.uniform(-1.5 as f64, 1.5 as f64) as f32).collect();
+        Tensor::new(vec![rows, cols], data).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        let t = random_tensor(64, 32, 0);
+        for gran in [
+            Granularity::PerTensor,
+            Granularity::PerChannel { axis: 0 },
+            Granularity::PerChannel { axis: 1 },
+        ] {
+            let q = quantize(&t, Bits::B8, gran).unwrap();
+            let deq = q.dequantize();
+            let (rows, cols) = t.dims2().unwrap();
+            for r in 0..rows {
+                for c in 0..cols {
+                    let s = match gran {
+                        Granularity::PerTensor => q.scale[0],
+                        Granularity::PerChannel { axis: 0 } => q.scale[r],
+                        _ => q.scale[c],
+                    };
+                    let err = (t.data[r * cols + c] - deq.data[r * cols + c]).abs();
+                    assert!(err <= s * 0.5 + 1e-6, "err {err} > s/2 {}", s * 0.5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_channel_beats_per_tensor_mse() {
+        // rows with very different magnitude ranges
+        let mut t = random_tensor(32, 16, 1);
+        for c in 0..16 {
+            t.data[c] *= 100.0; // first row much larger
+        }
+        let qt = quantize(&t, Bits::B8, Granularity::PerTensor).unwrap();
+        let qc = quantize(&t, Bits::B8, Granularity::PerChannel { axis: 0 }).unwrap();
+        assert!(t.mse(&qc.dequantize()) < t.mse(&qt.dequantize()));
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let t = random_tensor(64, 64, 2);
+        let mut prev = f64::INFINITY;
+        for bits in [Bits::B2, Bits::B4, Bits::B6, Bits::B8] {
+            let q = quantize(&t, bits, Granularity::PerTensor).unwrap();
+            let mse = t.mse(&q.dequantize());
+            assert!(mse < prev, "{bits:?}: {mse} !< {prev}");
+            prev = mse;
+        }
+    }
+
+    #[test]
+    fn ternary_three_levels() {
+        let t = random_tensor(16, 16, 3);
+        let q = quantize(&t, Bits::Ternary, Granularity::PerTensor).unwrap();
+        assert!(q.codes.data.iter().all(|&c| c <= 2));
+        let deq = q.dequantize();
+        let mut uniq: Vec<i64> = deq.data.iter().map(|v| (v * 1e6) as i64).collect();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert!(uniq.len() <= 3);
+    }
+
+    #[test]
+    fn ternary_high_sparsity_on_normal_weights() {
+        // the QMoE §2.5 claim: ternary on ~normal weights is mostly zeros
+        let t = {
+            let mut rng = crate::util::Rng::seed_from_u64(7);
+            let data: Vec<f32> = (0..10_000).map(|_| rng.normal_f32()).collect();
+            Tensor::new(vec![100, 100], data).unwrap()
+        };
+        let q = quantize(&t, Bits::Ternary, Granularity::PerTensor).unwrap();
+        let deq = q.dequantize();
+        let zeros = deq.data.iter().filter(|v| v.abs() < 1e-6).count();
+        assert!(
+            zeros as f64 / deq.data.len() as f64 > 0.8,
+            "ternary sparsity only {}",
+            zeros as f64 / deq.data.len() as f64
+        );
+    }
+
+    #[test]
+    fn constant_tensor_is_exact() {
+        let t = Tensor::new(vec![4, 4], vec![0.0; 16]).unwrap();
+        let q = quantize(&t, Bits::B8, Granularity::PerTensor).unwrap();
+        assert_eq!(q.dequantize().data, t.data);
+    }
+
+    #[test]
+    fn zero_always_representable() {
+        // a strictly positive tensor still encodes 0 exactly (clamped range)
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let q = quantize(&t, Bits::B8, Granularity::PerTensor).unwrap();
+        let z = q.zero[0];
+        let s = q.scale[0];
+        assert!(((0.0f32 / s).round() + z) >= 0.0);
+        assert_eq!(z, 0.0); // xmin clamped to 0 => zero code 0
+    }
+
+    #[test]
+    fn matches_python_mirror_semantics() {
+        // fixed vector with known quantization, cross-checked against
+        // python/compile/model.py::quantize_tensor by hand
+        let t = Tensor::new(vec![1, 4], vec![-1.0, 0.0, 0.5, 1.0]).unwrap();
+        let q = quantize(&t, Bits::B8, Granularity::PerTensor).unwrap();
+        // range [-1, 1], scale = f32(2/255); -xmin/scale = 127.499985 -> 127.
+        // Verified against python/compile/model.py::quantize_tensor, which
+        // yields scale 0.00784314, zero 127, codes [0, 127, 191, 254].
+        assert!((q.scale[0] - 2.0 / 255.0).abs() < 1e-7);
+        assert_eq!(q.zero[0], 127.0);
+        assert_eq!(q.codes.data, vec![0, 127, 191, 254]);
+    }
+}

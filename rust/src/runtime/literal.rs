@@ -1,0 +1,81 @@
+//! Tensor <-> xla::Literal conversions for the stage argument contract.
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+fn as_i64(dims: &[usize]) -> Vec<i64> {
+    dims.iter().map(|&d| d as i64).collect()
+}
+
+pub fn f32_literal(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    anyhow::ensure!(crate::tensor::numel(dims) == data.len(), "shape/data mismatch");
+    let lit = xla::Literal::vec1(data);
+    lit.reshape(&as_i64(dims))
+        .map_err(|e| anyhow::anyhow!("reshape f32 literal: {e}"))
+}
+
+pub fn u8_literal(dims: &[usize], data: &[u8]) -> Result<xla::Literal> {
+    anyhow::ensure!(crate::tensor::numel(dims) == data.len(), "shape/data mismatch");
+    // u8 implements ArrayElement but not NativeType, so go via raw bytes
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, dims, data)
+        .map_err(|e| anyhow::anyhow!("create u8 literal: {e}"))
+}
+
+pub fn i32_literal(dims: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    anyhow::ensure!(crate::tensor::numel(dims) == data.len(), "shape/data mismatch");
+    let lit = xla::Literal::vec1(data);
+    lit.reshape(&as_i64(dims))
+        .map_err(|e| anyhow::anyhow!("reshape i32 literal: {e}"))
+}
+
+pub fn tensor_literal(t: &Tensor) -> Result<xla::Literal> {
+    f32_literal(&t.shape, &t.data)
+}
+
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal to f32 vec: {e}"))
+}
+
+pub fn literal_shape(lit: &xla::Literal) -> Result<Vec<usize>> {
+    let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("literal shape: {e}"))?;
+    Ok(shape.dims().iter().map(|&d| d as usize).collect())
+}
+
+pub fn to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    Ok(Tensor { shape: literal_shape(lit)?, data: to_f32_vec(lit)? })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.0f32, -2.5, 3.0, 0.0, 5.5, 9.0];
+        let lit = f32_literal(&[2, 3], &data).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), data);
+        assert_eq!(literal_shape(&lit).unwrap(), vec![2, 3]);
+    }
+
+    #[test]
+    fn u8_roundtrip() {
+        let data = vec![0u8, 127, 255, 1];
+        let lit = u8_literal(&[4], &data).unwrap();
+        assert_eq!(lit.to_vec::<u8>().unwrap(), data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_literal(&[2, 2], &[1.0; 3]).is_err());
+        assert!(u8_literal(&[5], &[0; 4]).is_err());
+        assert!(i32_literal(&[1], &[]).is_err());
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let t = Tensor::new(vec![3, 2], vec![0.5; 6]).unwrap();
+        let lit = tensor_literal(&t).unwrap();
+        assert_eq!(to_tensor(&lit).unwrap(), t);
+    }
+}

@@ -1,0 +1,187 @@
+//! PJRT runtime (S8): loads the AOT-lowered HLO text stages and executes
+//! them on the CPU PJRT client. This is the only place the `xla` crate is
+//! touched; everything above deals in `Tensor`/`Literal` conversions from
+//! [`literal`].
+//!
+//! Executables are compiled once per (stage, batch, seq) geometry and
+//! cached — compilation is ~100 ms-scale, the decode hot loop must never
+//! pay it.
+
+pub mod literal;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::config::Manifest;
+
+/// Key into the executable cache.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct StageKey {
+    pub stage: String,
+    pub b: usize,
+    pub t: usize,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    model_dir: PathBuf,
+    cache: Mutex<HashMap<StageKey, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// executables compiled (for metrics / tests)
+    compiled: Mutex<usize>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_root: impl Into<PathBuf>, model: &str) -> Result<Self> {
+        let root = artifacts_root.into();
+        let manifest = Manifest::load(&root, model)?;
+        let model_dir = manifest.model_dir(&root);
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            model_dir,
+            cache: Mutex::new(HashMap::new()),
+            compiled: Mutex::new(0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn n_compiled(&self) -> usize {
+        *self.compiled.lock().unwrap()
+    }
+
+    /// Get (compiling + caching on first use) the executable for a stage
+    /// geometry. The geometry must exist in the manifest.
+    pub fn executable(
+        &self,
+        stage: &str,
+        b: usize,
+        t: usize,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = StageKey { stage: stage.to_string(), b, t };
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let entry = self
+            .manifest
+            .stage(stage, b, t)
+            .ok_or_else(|| anyhow::anyhow!("no lowered geometry {stage} b={b} t={t}"))?;
+        let path = self.model_dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e}"))?;
+        let exe = std::sync::Arc::new(exe);
+        *self.compiled.lock().unwrap() += 1;
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a stage with literal inputs, returning output literals
+    /// (the lowered functions always return a tuple; it is flattened here).
+    pub fn run(
+        &self,
+        stage: &str,
+        b: usize,
+        t: usize,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = args.iter().collect();
+        self.run_refs(stage, b, t, &refs)
+    }
+
+    /// Borrowed-argument variant: lets callers keep big weight literals
+    /// cached across calls instead of re-creating them (§Perf change 1/2).
+    pub fn run_refs(
+        &self,
+        stage: &str,
+        b: usize,
+        t: usize,
+        args: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(stage, b, t)?;
+        let result = exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("executing {stage} b={b} t={t}: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result: {e}"))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling result: {e}"))?;
+        Ok(parts)
+    }
+
+    /// Warm the cache for every geometry a serving session will touch.
+    pub fn warmup(&self, stages: &[(&str, usize, usize)]) -> Result<()> {
+        for (stage, b, t) in stages {
+            self.executable(stage, *b, *t)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifacts_root;
+
+    fn runtime() -> Option<Runtime> {
+        let root = default_artifacts_root();
+        if !root.join("tiny/manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::new(root, "tiny").unwrap())
+    }
+
+    #[test]
+    fn compiles_and_caches() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(rt.n_compiled(), 0);
+        let _e1 = rt.executable("embed", 1, 16).unwrap();
+        assert_eq!(rt.n_compiled(), 1);
+        let _e2 = rt.executable("embed", 1, 16).unwrap();
+        assert_eq!(rt.n_compiled(), 1, "second fetch must hit the cache");
+    }
+
+    #[test]
+    fn unknown_geometry_rejected() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.executable("embed", 99, 7).is_err());
+        assert!(rt.executable("bogus", 1, 16).is_err());
+    }
+
+    #[test]
+    fn embed_stage_executes() {
+        let Some(rt) = runtime() else { return };
+        let cfg = rt.manifest.config.clone();
+        let (v, d) = (cfg.vocab, cfg.d_model);
+        let tokens = vec![3i32; 16];
+        let table = vec![128u8; v * d];
+        let scale = vec![0.01f32; v];
+        let zero = vec![128.0f32; v];
+        let args = vec![
+            literal::i32_literal(&[1, 16], &tokens).unwrap(),
+            literal::u8_literal(&[v, d], &table).unwrap(),
+            literal::f32_literal(&[v], &scale).unwrap(),
+            literal::f32_literal(&[v], &zero).unwrap(),
+        ];
+        let out = rt.run("embed", 1, 16, &args).unwrap();
+        assert_eq!(out.len(), 1);
+        let h = literal::to_f32_vec(&out[0]).unwrap();
+        assert_eq!(h.len(), 16 * d);
+        // (128 - 128) * 0.01 == 0 everywhere
+        assert!(h.iter().all(|&x| x == 0.0));
+    }
+}

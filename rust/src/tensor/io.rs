@@ -1,0 +1,202 @@
+//! TQW reader/writer — the python↔rust weight interchange format.
+//!
+//! Layout (little-endian, mirrored from `python/compile/tqw.py` — keep in
+//! lockstep):
+//!
+//! ```text
+//! magic  b"TQW1"
+//! u32    n_tensors
+//! repeated:
+//!   u16      name_len, name utf-8
+//!   u8       dtype (0 = f32, 1 = u8, 2 = i32)
+//!   u8       ndim
+//!   u32*ndim dims
+//!   bytes    raw data (C-order)
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{numel, Tensor, U8Tensor};
+
+const MAGIC: &[u8; 4] = b"TQW1";
+
+/// A tensor as stored in a TQW file.
+#[derive(Clone, Debug)]
+pub enum TqwTensor {
+    F32(Tensor),
+    U8(U8Tensor),
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl TqwTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            TqwTensor::F32(t) => &t.shape,
+            TqwTensor::U8(t) => &t.shape,
+            TqwTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            TqwTensor::F32(t) => Ok(t),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+}
+
+fn read_exact<const N: usize>(r: &mut impl Read) -> Result<[u8; N]> {
+    let mut buf = [0u8; N];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Read all tensors from a TQW file (name -> tensor, sorted by name).
+pub fn read_tqw(path: impl AsRef<Path>) -> Result<BTreeMap<String, TqwTensor>> {
+    let path = path.as_ref();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let magic = read_exact::<4>(&mut f)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: bad TQW magic {magic:?}");
+    }
+    let n = u32::from_le_bytes(read_exact::<4>(&mut f)?) as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        let name_len = u16::from_le_bytes(read_exact::<2>(&mut f)?) as usize;
+        let mut name_buf = vec![0u8; name_len];
+        f.read_exact(&mut name_buf)?;
+        let name = String::from_utf8(name_buf).context("tensor name not utf-8")?;
+        let [dtype, ndim] = read_exact::<2>(&mut f)?;
+        let mut shape = Vec::with_capacity(ndim as usize);
+        for _ in 0..ndim {
+            shape.push(u32::from_le_bytes(read_exact::<4>(&mut f)?) as usize);
+        }
+        let count = numel(&shape);
+        let tensor = match dtype {
+            0 => {
+                let mut bytes = vec![0u8; count * 4];
+                f.read_exact(&mut bytes)?;
+                let data = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                TqwTensor::F32(Tensor { shape, data })
+            }
+            1 => {
+                let mut data = vec![0u8; count];
+                f.read_exact(&mut data)?;
+                TqwTensor::U8(U8Tensor { shape, data })
+            }
+            2 => {
+                let mut bytes = vec![0u8; count * 4];
+                f.read_exact(&mut bytes)?;
+                let data = bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                TqwTensor::I32 { shape, data }
+            }
+            d => bail!("{path:?}: unknown TQW dtype {d}"),
+        };
+        out.insert(name, tensor);
+    }
+    Ok(out)
+}
+
+/// Write tensors to a TQW file (used by tests and the `tqm export` path).
+pub fn write_tqw(path: impl AsRef<Path>, tensors: &BTreeMap<String, TqwTensor>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        let (dtype, shape): (u8, &[usize]) = match t {
+            TqwTensor::F32(t) => (0, &t.shape),
+            TqwTensor::U8(t) => (1, &t.shape),
+            TqwTensor::I32 { shape, .. } => (2, shape),
+        };
+        f.write_all(&[dtype, shape.len() as u8])?;
+        for d in shape {
+            f.write_all(&(*d as u32).to_le_bytes())?;
+        }
+        match t {
+            TqwTensor::F32(t) => {
+                for v in &t.data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+            TqwTensor::U8(t) => f.write_all(&t.data)?,
+            TqwTensor::I32 { data, .. } => {
+                for v in data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BTreeMap<String, TqwTensor> {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "w".into(),
+            TqwTensor::F32(Tensor::new(vec![2, 3], vec![1., -2., 3.5, 0., 1e-9, 7.]).unwrap()),
+        );
+        m.insert(
+            "codes".into(),
+            TqwTensor::U8(U8Tensor::new(vec![4], vec![0, 127, 255, 3]).unwrap()),
+        );
+        m.insert(
+            "ids".into(),
+            TqwTensor::I32 { shape: vec![2], data: vec![-5, 9] },
+        );
+        m
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("x.tqw");
+        let m = sample();
+        write_tqw(&p, &m).unwrap();
+        let got = read_tqw(&p).unwrap();
+        assert_eq!(got.len(), 3);
+        assert_eq!(got["w"].as_f32().unwrap(), m["w"].as_f32().unwrap());
+        match (&got["codes"], &m["codes"]) {
+            (TqwTensor::U8(a), TqwTensor::U8(b)) => assert_eq!(a, b),
+            _ => panic!(),
+        }
+        match &got["ids"] {
+            TqwTensor::I32 { data, .. } => assert_eq!(data, &vec![-5, 9]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("bad.tqw");
+        std::fs::write(&p, b"NOPE\x00\x00\x00\x00").unwrap();
+        assert!(read_tqw(&p).is_err());
+    }
+
+    #[test]
+    fn empty_file_ok() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("e.tqw");
+        write_tqw(&p, &BTreeMap::new()).unwrap();
+        assert!(read_tqw(&p).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,237 @@
+//! The small dense linear algebra GPTQ needs: Gram accumulation, Cholesky,
+//! and triangular inversion. Dimensions are bounded by the largest layer
+//! input (d_ff = 2064 for proxy-3b), so straightforward cache-friendly
+//! loops are plenty; the serving hot path never touches this module.
+
+use anyhow::{bail, Result};
+
+/// Accumulate `g += x^T x` for a batch of rows. `x` is row-major `[n, k]`,
+/// `g` is row-major `[k, k]`.
+pub fn gram_accumulate(g: &mut [f64], x: &[f32], k: usize) {
+    assert_eq!(g.len(), k * k);
+    assert_eq!(x.len() % k, 0);
+    for row in x.chunks_exact(k) {
+        for i in 0..k {
+            let xi = row[i] as f64;
+            if xi == 0.0 {
+                continue;
+            }
+            let gi = &mut g[i * k..(i + 1) * k];
+            for (gij, &xj) in gi.iter_mut().zip(row.iter()) {
+                *gij += xi * xj as f64;
+            }
+        }
+    }
+}
+
+/// In-place lower Cholesky factorization of a symmetric positive-definite
+/// row-major `[n, n]` matrix. Returns an error if the matrix is not PD
+/// (callers add damping and retry).
+pub fn cholesky_in_place(a: &mut [f64], n: usize) -> Result<()> {
+    assert_eq!(a.len(), n * n);
+    for j in 0..n {
+        let mut d = a[j * n + j];
+        for k in 0..j {
+            let l = a[j * n + k];
+            d -= l * l;
+        }
+        if d <= 0.0 {
+            bail!("matrix not positive definite at pivot {j} (d = {d:.3e})");
+        }
+        let d = d.sqrt();
+        a[j * n + j] = d;
+        for i in (j + 1)..n {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= a[i * n + k] * a[j * n + k];
+            }
+            a[i * n + j] = s / d;
+        }
+        // zero the upper triangle for cleanliness
+        for i in 0..j {
+            a[i * n + j] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Solve `L y = b` in place for lower-triangular `L` (row-major `[n, n]`).
+pub fn forward_substitute(l: &[f64], b: &mut [f64], n: usize) {
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * b[k];
+        }
+        b[i] = s / l[i * n + i];
+    }
+}
+
+/// Solve `L^T y = b` in place for lower-triangular `L`.
+pub fn backward_substitute_t(l: &[f64], b: &mut [f64], n: usize) {
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in (i + 1)..n {
+            s -= l[k * n + i] * b[k];
+        }
+        b[i] = s / l[i * n + i];
+    }
+}
+
+/// Full inverse of an SPD matrix via its Cholesky factor: `a` row-major
+/// `[n, n]`, overwritten with `a^{-1}`. Used by GPTQ to obtain `H^{-1}`.
+pub fn spd_inverse(a: &mut Vec<f64>, n: usize) -> Result<()> {
+    let mut l = a.clone();
+    cholesky_in_place(&mut l, n)?;
+    let mut inv = vec![0.0f64; n * n];
+    let mut col = vec![0.0f64; n];
+    for j in 0..n {
+        col.iter_mut().for_each(|c| *c = 0.0);
+        col[j] = 1.0;
+        forward_substitute(&l, &mut col, n);
+        backward_substitute_t(&l, &mut col, n);
+        for i in 0..n {
+            inv[i * n + j] = col[i];
+        }
+    }
+    *a = inv;
+    Ok(())
+}
+
+/// Upper Cholesky factor of the *inverse* of an SPD matrix — the exact
+/// object the GPTQ recurrence consumes (`Hinv = U^T U`, it uses `U`).
+pub fn cholesky_inverse_upper(mut h: Vec<f64>, n: usize) -> Result<Vec<f64>> {
+    spd_inverse(&mut h, n)?;
+    // upper factor of Hinv = transpose of lower factor of Hinv
+    cholesky_in_place(&mut h, n)?;
+    let mut u = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            u[j * n + i] = h[i * n + j];
+        }
+    }
+    Ok(u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn matmul(a: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+        let mut c = vec![0.0; n * n];
+        for i in 0..n {
+            for k in 0..n {
+                let aik = a[i * n + k];
+                for j in 0..n {
+                    c[i * n + j] += aik * b[k * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn random_spd(n: usize, seed: u64) -> Vec<f64> {
+                let mut rng = crate::util::Rng::seed_from_u64(seed);
+        let m: Vec<f64> = (0..n * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut a = vec![0.0; n * n];
+        // a = m m^T + n * I
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += m[i * n + k] * m[j * n + k];
+                }
+                a[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let n = 8;
+        let a = random_spd(n, 1);
+        let mut l = a.clone();
+        cholesky_in_place(&mut l, n).unwrap();
+        // L L^T == A
+        let mut lt = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                lt[i * n + j] = l[j * n + i];
+            }
+        }
+        let rec = matmul(&l, &lt, n);
+        for (x, y) in rec.iter().zip(&a) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_non_pd() {
+        let mut a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky_in_place(&mut a, 2).is_err());
+    }
+
+    #[test]
+    fn spd_inverse_identity() {
+        let n = 6;
+        let a = random_spd(n, 2);
+        let mut inv = a.clone();
+        spd_inverse(&mut inv, n).unwrap();
+        let prod = matmul(&a, &inv, n);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[i * n + j] - want).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_inverse_upper_factorizes_inverse() {
+        let n = 5;
+        let a = random_spd(n, 3);
+        let mut inv = a.clone();
+        spd_inverse(&mut inv, n).unwrap();
+        let u = cholesky_inverse_upper(a, n).unwrap();
+        // U^T U == inv
+        let mut ut = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                ut[i * n + j] = u[j * n + i];
+            }
+        }
+        let rec = matmul(&ut, &u, n);
+        for (x, y) in rec.iter().zip(&inv) {
+            assert!((x - y).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn gram_matches_naive() {
+        let k = 4;
+        let x: Vec<f32> = (0..12).map(|i| i as f32 * 0.5 - 2.0).collect();
+        let mut g = vec![0.0f64; k * k];
+        gram_accumulate(&mut g, &x, k);
+        for i in 0..k {
+            for j in 0..k {
+                let mut want = 0.0f64;
+                for r in 0..3 {
+                    want += x[r * k + i] as f64 * x[r * k + j] as f64;
+                }
+                assert!((g[i * k + j] - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let n = 3;
+        let l = vec![2.0, 0.0, 0.0, 1.0, 3.0, 0.0, 0.5, -1.0, 1.5];
+        let mut b = vec![4.0, 7.0, 2.0];
+        forward_substitute(&l, &mut b, n);
+        // check L b' == [4,7,2]
+        assert!((2.0 * b[0] - 4.0).abs() < 1e-12);
+        assert!((1.0 * b[0] + 3.0 * b[1] - 7.0).abs() < 1e-12);
+        assert!((0.5 * b[0] - 1.0 * b[1] + 1.5 * b[2] - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,127 @@
+//! Minimal dense-tensor substrate (S1).
+//!
+//! The coordinator needs just enough tensor machinery to quantize, measure
+//! and ship weights: shaped `f32` / `u8` buffers, the TQW reader for the
+//! python-trained checkpoints ([`io`]), and the small amount of linear
+//! algebra GPTQ needs ([`math`]). Heavy compute belongs to the XLA
+//! executables, not here.
+
+pub mod io;
+pub mod math;
+
+use anyhow::{bail, Result};
+
+/// Dense f32 tensor, C-order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Dense u8 tensor, C-order (quantized codes, raw byte streams).
+#[derive(Clone, Debug, PartialEq)]
+pub struct U8Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        if numel(&shape) != data.len() {
+            bail!("shape {:?} != data len {}", shape, data.len());
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = numel(&shape);
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Number of rows / row length for a 2-D view (errors otherwise).
+    pub fn dims2(&self) -> Result<(usize, usize)> {
+        match self.shape.as_slice() {
+            [r, c] => Ok((*r, *c)),
+            s => bail!("expected 2-D tensor, got {:?}", s),
+        }
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        let (_, c) = (self.shape[0], self.shape[1]);
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    /// Mean squared difference against another tensor of the same shape.
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        let n = self.data.len().max(1) as f64;
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / n
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+impl U8Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<u8>) -> Result<Self> {
+        if numel(&shape) != data.len() {
+            bail!("shape {:?} != data len {}", shape, data.len());
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(U8Tensor::new(vec![4], vec![0; 3]).is_err());
+    }
+
+    #[test]
+    fn zeros_and_numel() {
+        let t = Tensor::zeros(vec![3, 4]);
+        assert_eq!(t.numel(), 12);
+        assert_eq!(t.dims2().unwrap(), (3, 4));
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn mse_basics() {
+        let a = Tensor::new(vec![2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(vec![2], vec![1.0, 4.0]).unwrap();
+        assert!((a.mse(&b) - 2.0).abs() < 1e-12);
+        assert_eq!(a.mse(&a), 0.0);
+    }
+
+    #[test]
+    fn row_view() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+}

@@ -1,0 +1,167 @@
+//! Mini benchmark harness (no criterion offline): warmup, timed
+//! iterations, robust stats, aligned table printing. All `rust/benches/*`
+//! binaries (harness = false) are built on this.
+
+use std::time::Instant;
+
+/// Result of one measured benchmark.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl Measurement {
+    pub fn throughput(&self, units: f64) -> f64 {
+        units / self.mean_s.max(1e-12)
+    }
+}
+
+/// Time `f` adaptively: warm up, then run until `budget_s` of wall clock
+/// or `max_iters`, whichever first (at least 3 iterations).
+pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> Measurement {
+    // warmup
+    let w0 = Instant::now();
+    f();
+    let first = w0.elapsed().as_secs_f64();
+    let target_iters = ((budget_s / first.max(1e-9)) as usize).clamp(3, 10_000);
+    let mut samples = Vec::with_capacity(target_iters);
+    let start = Instant::now();
+    for _ in 0..target_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if start.elapsed().as_secs_f64() > budget_s * 2.0 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    Measurement {
+        name: name.to_string(),
+        iters: n,
+        mean_s: samples.iter().sum::<f64>() / n as f64,
+        p50_s: samples[n / 2],
+        p95_s: samples[(n * 95 / 100).min(n - 1)],
+        min_s: samples[0],
+    }
+}
+
+/// Pretty-print a table with aligned columns.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for i in 0..ncols {
+                line.push_str(&format!("{:width$} | ", cells[i], width = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("|{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "|";
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format helpers shared by bench binaries.
+pub fn fmt_bytes(b: usize) -> String {
+    if b >= 10 * 1024 * 1024 {
+        format!("{:.1} MB", b as f64 / (1024.0 * 1024.0))
+    } else if b >= 10 * 1024 {
+        format!("{:.1} kB", b as f64 / 1024.0)
+    } else {
+        format!("{b} B")
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench("spin", 0.05, || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert!(m.iters >= 3);
+        assert!(m.mean_s > 0.0);
+        assert!(m.p50_s <= m.p95_s);
+        assert!(m.min_s <= m.mean_s * 1.5);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "long-header"]);
+        t.row(vec!["xxxxx".into(), "1".into()]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("xxxxx"));
+        let lines: Vec<&str> = s.lines().filter(|l| l.starts_with('|')).collect();
+        assert_eq!(lines.len(), 3);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_bytes(100), "100 B");
+        assert!(fmt_bytes(100 * 1024 * 1024).contains("MB"));
+        assert!(fmt_secs(0.002).contains("ms"));
+        assert!(fmt_secs(2.0).contains("s"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Hand-rolled utility substrates. The build is fully offline against a
+//! small vendored crate set (see Cargo.toml), so JSON, RNG, temp dirs, a
+//! mini property-test driver and a mini benchmark harness live here
+//! instead of serde_json / rand / tempfile / proptest / criterion.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod tempdir;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use tempdir::TempDir;

@@ -1,0 +1,67 @@
+//! Self-deleting temporary directories (no `tempfile` crate offline).
+
+use std::path::{Path, PathBuf};
+
+/// A directory under the system temp root, removed on drop.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn new() -> std::io::Result<Self> {
+        // entropy: pid + monotonic counter + coarse time
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let nonce = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let path = std::env::temp_dir().join(format!(
+            "tqm-{}-{}-{:x}",
+            std::process::id(),
+            nonce,
+            t
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(Self { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn join(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_and_cleans_up() {
+        let p;
+        {
+            let d = TempDir::new().unwrap();
+            p = d.path().to_path_buf();
+            std::fs::write(d.join("x.txt"), b"hello").unwrap();
+            assert!(p.exists());
+        }
+        assert!(!p.exists());
+    }
+
+    #[test]
+    fn unique_paths() {
+        let a = TempDir::new().unwrap();
+        let b = TempDir::new().unwrap();
+        assert_ne!(a.path(), b.path());
+    }
+}

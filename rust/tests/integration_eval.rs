@@ -1,0 +1,171 @@
+//! Integration: the eval harness + coordinator on real tiny artifacts —
+//! accuracy sanity across variants, and a concurrency stress test over
+//! the serving thread (random prompt lengths, random arrival, mixed
+//! samplers), checking nothing is lost, reordered across a session, or
+//! left hanging.
+
+use tiny_qmoe::compress::CodecId;
+use tiny_qmoe::config::{default_artifacts_root, Manifest, QuantizeOptions, Residency, ServeOptions};
+use tiny_qmoe::coordinator::{Coordinator, GenRequest, ModelSpec};
+use tiny_qmoe::data::DataDir;
+use tiny_qmoe::eval::{run_eval, validate};
+use tiny_qmoe::gen::SamplerKind;
+use tiny_qmoe::model::{quantize_checkpoint, Checkpoint};
+use tiny_qmoe::util::{Rng, TempDir};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let root = default_artifacts_root();
+    if root.join("tiny/manifest.json").exists() {
+        Some(root)
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+#[test]
+fn eval_sets_validate_and_variants_agree_on_tiny() {
+    let Some(root) = artifacts() else { return };
+    let manifest = Manifest::load(&root, "tiny").unwrap();
+    let data = DataDir::open_for_vocab(&root, manifest.config.vocab).unwrap();
+
+    // variant agreement through the real pipeline, small question budget
+    let ckpt = Checkpoint::load(root.join("tiny").join(&manifest.weights_file)).unwrap();
+    let opts = QuantizeOptions::default();
+    let w = quantize_checkpoint(&manifest.config, &ckpt, &opts, CodecId::FreqSeqPacked, None, "ie")
+        .unwrap();
+    let dir = TempDir::new().unwrap();
+    let tqm = dir.join("tiny.tqm");
+    w.write(&tqm).unwrap();
+
+    let max_t = *manifest.config.prefill_t.iter().max().unwrap();
+    for fam in tiny_qmoe::data::EVAL_FAMILIES {
+        let es = data.eval_set(fam).unwrap();
+        validate(&es).unwrap();
+        // tiny's prefill buckets cap at T=32; families whose prompts do
+        // not fit (5-shot mmlu) are exercised on the e2e config instead
+        let longest = es
+            .questions
+            .iter()
+            .map(|q| q.prompt.len() + q.options.iter().map(|o| o.len()).max().unwrap())
+            .max()
+            .unwrap();
+        if longest > max_t {
+            continue;
+        }
+
+        let rt = std::sync::Arc::new(tiny_qmoe::runtime::Runtime::new(&root, "tiny").unwrap());
+        let quant = tiny_qmoe::pipeline::Engine::new(
+            rt,
+            tiny_qmoe::model::WeightSource::open_resident(&tqm, &manifest.config).unwrap(),
+            &ServeOptions { residency: Residency::AlwaysResident, ..Default::default() },
+        )
+        .unwrap();
+        let rt2 = std::sync::Arc::new(tiny_qmoe::runtime::Runtime::new(&root, "tiny").unwrap());
+        let comp = tiny_qmoe::pipeline::Engine::new(
+            rt2,
+            tiny_qmoe::model::WeightSource::open_compressed(&tqm).unwrap(),
+            &ServeOptions { residency: Residency::StreamPerLayer, ..Default::default() },
+        )
+        .unwrap();
+
+        let limit = 6;
+        let rq = run_eval(&es, "quant", limit, |t| quant.forward_logits(t)).unwrap();
+        let rc = run_eval(&es, "comp", limit, |t| comp.forward_logits(t)).unwrap();
+        // THE paper invariant: identical picks, question by question
+        assert_eq!(rq.n_correct, rc.n_correct, "{fam}: lossless serving violated");
+    }
+}
+
+#[test]
+fn coordinator_stress_random_load() {
+    let Some(root) = artifacts() else { return };
+    let manifest = Manifest::load(&root, "tiny").unwrap();
+    let ckpt = Checkpoint::load(root.join("tiny").join(&manifest.weights_file)).unwrap();
+    let w = quantize_checkpoint(
+        &manifest.config,
+        &ckpt,
+        &QuantizeOptions::default(),
+        CodecId::Lzw,
+        None,
+        "stress",
+    )
+    .unwrap();
+    let dir = TempDir::new().unwrap();
+    let tqm = dir.join("tiny.tqm");
+    w.write(&tqm).unwrap();
+
+    let mut coord = Coordinator::new();
+    coord
+        .register(ModelSpec {
+            name: "tiny".into(),
+            artifacts_root: root.clone(),
+            manifest_model: "tiny".into(),
+            tqm_path: tqm,
+            serve: ServeOptions {
+                residency: Residency::StreamPerLayer,
+                prefetch: true,
+                max_batch: 2,
+                max_wait_ms: 1,
+                max_new_tokens: 6,
+            },
+        })
+        .unwrap();
+
+    let mut rng = Rng::seed_from_u64(0x57AE55);
+    let n = 24;
+    let mut pending = Vec::new();
+    for i in 0..n {
+        let plen = rng.gen_range_usize(1, 12);
+        let prompt: Vec<u32> =
+            (0..plen).map(|_| rng.gen_range(1, manifest.config.vocab as u64) as u32).collect();
+        let max_new = rng.gen_range_usize(1, 6);
+        let sampler = if rng.gen_bool(0.5) {
+            SamplerKind::Greedy
+        } else {
+            SamplerKind::TopK { k: 4, temperature: 0.9 }
+        };
+        pending.push((
+            max_new,
+            coord
+                .submit("tiny", GenRequest { prompt, max_new, sampler, seed: i, stop_token: None })
+                .unwrap(),
+        ));
+        if rng.gen_bool(0.3) {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+    for (max_new, rx) in pending {
+        let resp = rx
+            .recv_timeout(std::time::Duration::from_secs(120))
+            .expect("request left hanging")
+            .expect("request failed");
+        assert!(!resp.tokens.is_empty());
+        assert!(resp.tokens.len() <= max_new);
+    }
+    let snap = coord.metrics("tiny").unwrap().snapshot();
+    assert_eq!(snap.requests, n as u64);
+    assert!(snap.batches >= (n as u64 + 1) / 2);
+    coord.shutdown();
+}
+
+#[test]
+fn trained_tiny_beats_chance_on_easy() {
+    // the tiny model got 60 build-time training steps — enough to beat
+    // chance on arc-easy (sanity that eval plumbing measures *skill*)
+    let Some(root) = artifacts() else { return };
+    let manifest = Manifest::load(&root, "tiny").unwrap();
+    let data = DataDir::open_for_vocab(&root, manifest.config.vocab).unwrap();
+    let es = data.eval_set("arc-easy").unwrap();
+    let ckpt = Checkpoint::load(root.join("tiny").join(&manifest.weights_file)).unwrap();
+    let rt = std::sync::Arc::new(tiny_qmoe::runtime::Runtime::new(&root, "tiny").unwrap());
+    let engine = tiny_qmoe::pipeline::Engine::new_f32(rt, &ckpt).unwrap();
+    let rep = run_eval(&es, "tiny-f32", 40, |t| engine.forward_logits(t)).unwrap();
+    let chance = tiny_qmoe::eval::chance_accuracy(&es);
+    assert!(
+        rep.accuracy() > chance + 0.10,
+        "tiny accuracy {:.2} not above chance {:.2}",
+        rep.accuracy(),
+        chance
+    );
+}

@@ -1,0 +1,166 @@
+//! Integration: the full three-layer stack on the real `tiny` artifacts —
+//! cross-language weight flow (python-trained TQW -> rust quantize ->
+//! TQM -> PJRT serving) and the numerical contracts between every
+//! execution path.
+//!
+//! All tests no-op gracefully when artifacts are absent (CI without
+//! `make artifacts`), mirroring the in-crate convention.
+
+use std::sync::Arc;
+
+use tiny_qmoe::compress::CodecId;
+use tiny_qmoe::config::{default_artifacts_root, Manifest, QuantizeOptions, Residency, ServeOptions};
+use tiny_qmoe::model::{forward_f32, quantize_checkpoint, Checkpoint, WeightSource};
+use tiny_qmoe::pipeline::Engine;
+use tiny_qmoe::runtime::Runtime;
+use tiny_qmoe::util::TempDir;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let root = default_artifacts_root();
+    if root.join("tiny/manifest.json").exists() {
+        Some(root)
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+fn tiny_tqm(root: &std::path::Path, dir: &TempDir, codec: CodecId) -> std::path::PathBuf {
+    let manifest = Manifest::load(root, "tiny").unwrap();
+    let ckpt = Checkpoint::load(root.join("tiny").join(&manifest.weights_file)).unwrap();
+    let opts = QuantizeOptions { per_channel: true, ..Default::default() };
+    let w = quantize_checkpoint(&manifest.config, &ckpt, &opts, codec, None, "it").unwrap();
+    let p = dir.join("tiny.tqm");
+    w.write(&p).unwrap();
+    p
+}
+
+#[test]
+fn f32_engine_matches_scalar_forward() {
+    // The strongest cross-check in the repo: the XLA-lowered f32 stages
+    // (jax/pallas authored) against the independent rust scalar forward.
+    let Some(root) = artifacts() else { return };
+    let manifest = Manifest::load(&root, "tiny").unwrap();
+    let ckpt = Checkpoint::load(root.join("tiny").join(&manifest.weights_file)).unwrap();
+    let rt = Arc::new(Runtime::new(&root, "tiny").unwrap());
+    let engine = Engine::new_f32(rt, &ckpt).unwrap();
+
+    let tokens: Vec<u32> = vec![1, 2, 20, 3, 40, 17];
+    let xla = engine.forward_logits(&tokens).unwrap();
+    let scalar = forward_f32::forward(&manifest.config, &ckpt, &tokens, None).unwrap();
+    assert_eq!(xla.data.len(), scalar.len());
+    let mut max_err = 0.0f32;
+    for (a, b) in xla.data.iter().zip(&scalar) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 2e-3, "xla vs scalar forward max err {max_err}");
+}
+
+#[test]
+fn all_codecs_serve_identically() {
+    // lossless contract across the entire codec family, through the full
+    // container + pipeline path
+    let Some(root) = artifacts() else { return };
+    let tokens: Vec<u32> = vec![1, 5, 9, 13, 2];
+    let mut reference: Option<Vec<f32>> = None;
+    for codec in tiny_qmoe::compress::all_codec_ids() {
+        let dir = TempDir::new().unwrap();
+        let p = tiny_tqm(&root, &dir, codec);
+        let rt = Arc::new(Runtime::new(&root, "tiny").unwrap());
+        let source = WeightSource::open_compressed(&p).unwrap();
+        let opts = ServeOptions { residency: Residency::StreamPerLayer, prefetch: false, ..Default::default() };
+        let engine = Engine::new(rt, source, &opts).unwrap();
+        let logits = engine.forward_logits(&tokens).unwrap();
+        match &reference {
+            None => reference = Some(logits.data),
+            Some(r) => assert_eq!(r, &logits.data, "codec {codec:?} changed the logits"),
+        }
+    }
+}
+
+#[test]
+fn quantized_tracks_f32_logits() {
+    // 8-bit quantization should perturb logits only slightly (the paper's
+    // central accuracy-preservation claim, at the logit level)
+    let Some(root) = artifacts() else { return };
+    let manifest = Manifest::load(&root, "tiny").unwrap();
+    let ckpt = Checkpoint::load(root.join("tiny").join(&manifest.weights_file)).unwrap();
+    let tokens: Vec<u32> = vec![1, 2, 20, 3];
+
+    let f32_engine =
+        Engine::new_f32(Arc::new(Runtime::new(&root, "tiny").unwrap()), &ckpt).unwrap();
+    let lf = f32_engine.forward_logits(&tokens).unwrap();
+
+    let dir = TempDir::new().unwrap();
+    let p = tiny_tqm(&root, &dir, CodecId::Lzw);
+    let q_engine = Engine::new(
+        Arc::new(Runtime::new(&root, "tiny").unwrap()),
+        WeightSource::open_compressed(&p).unwrap(),
+        &ServeOptions::default(),
+    )
+    .unwrap();
+    let lq = q_engine.forward_logits(&tokens).unwrap();
+
+    let sig: f32 = lf.data.iter().map(|v| v.abs()).sum::<f32>() / lf.data.len() as f32;
+    let err: f32 = lf
+        .data
+        .iter()
+        .zip(&lq.data)
+        .map(|(a, b)| (a - b).abs())
+        .sum::<f32>()
+        / lf.data.len() as f32;
+    assert!(err / sig < 0.25, "quantization error too large: {} vs signal {}", err, sig);
+    assert!(err > 0.0, "quantized must differ from f32 (else the test is vacuous)");
+}
+
+#[test]
+fn gptq_full_path_through_container() {
+    // calibrate -> GPTQ quantize -> container -> serve
+    let Some(root) = artifacts() else { return };
+    let manifest = Manifest::load(&root, "tiny").unwrap();
+    let ckpt = Checkpoint::load(root.join("tiny").join(&manifest.weights_file)).unwrap();
+    let data = tiny_qmoe::data::DataDir::open_for_vocab(&root, manifest.config.vocab).unwrap();
+    let calib = data.calibration_tokens().unwrap();
+    let cap = forward_f32::calibrate(&manifest.config, &ckpt, &calib, 512, 32).unwrap();
+    let opts = QuantizeOptions { gptq: true, per_channel: true, ..Default::default() };
+    let w = quantize_checkpoint(
+        &manifest.config,
+        &ckpt,
+        &opts,
+        CodecId::Huffman,
+        Some(&cap.hessians),
+        "gptq-it",
+    )
+    .unwrap();
+    let dir = TempDir::new().unwrap();
+    let p = dir.join("gptq.tqm");
+    w.write(&p).unwrap();
+    let reader = tiny_qmoe::format::TqmReader::open(&p).unwrap();
+    assert_eq!(reader.meta.quantizer, "gptq");
+    let engine = Engine::new(
+        Arc::new(Runtime::new(&root, "tiny").unwrap()),
+        WeightSource::open_compressed(&p).unwrap(),
+        &ServeOptions::default(),
+    )
+    .unwrap();
+    let logits = engine.forward_logits(&[1, 2, 20, 3]).unwrap();
+    assert!(logits.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn long_generation_stays_within_cache() {
+    let Some(root) = artifacts() else { return };
+    let dir = TempDir::new().unwrap();
+    let p = tiny_tqm(&root, &dir, CodecId::FreqSeqPacked);
+    let engine = Engine::new(
+        Arc::new(Runtime::new(&root, "tiny").unwrap()),
+        WeightSource::open_compressed(&p).unwrap(),
+        &ServeOptions::default(),
+    )
+    .unwrap();
+    let mut sampler = tiny_qmoe::gen::Sampler::top_k(4, 1.0, 1);
+    // ask for far more tokens than the KV capacity — must stop gracefully
+    let g = tiny_qmoe::gen::generate(&engine, &[1, 2, 3], 10_000, &mut sampler, None).unwrap();
+    assert!(g.tokens.len() < engine.cfg().max_seq);
+    assert!(!g.tokens.is_empty());
+}

@@ -1,0 +1,167 @@
+//! Property tests (hand-rolled driver — no proptest crate offline) for the
+//! compression substrate: the lossless contract under adversarial inputs,
+//! many seeds, every codec; plus packing and the JSON parser fuzz.
+
+use tiny_qmoe::compress::{self, CodecId};
+use tiny_qmoe::quant::packing;
+use tiny_qmoe::util::{Json, Rng};
+
+/// Random byte stream with a randomly chosen "texture" per case, so the
+/// sweep hits repetitive / skewed / uniform / structured regimes.
+fn random_stream(rng: &mut Rng) -> Vec<u8> {
+    let n = rng.gen_range_usize(0, 5000);
+    match rng.gen_range(0, 5) {
+        0 => vec![rng.gen_range(0, 256) as u8; n],
+        1 => (0..n).map(|_| rng.gen_range(0, 4) as u8).collect(),
+        2 => (0..n).map(|i| ((i * 7) % 251) as u8).collect(),
+        3 => (0..n)
+            .map(|_| (128.0 + 15.0 * rng.normal_f32()).clamp(0.0, 255.0) as u8)
+            .collect(),
+        _ => rng.bytes(n),
+    }
+}
+
+#[test]
+fn prop_all_codecs_roundtrip_256_cases() {
+    let mut rng = Rng::seed_from_u64(0xC0DEC);
+    for case in 0..256 {
+        let data = random_stream(&mut rng);
+        for id in compress::all_codec_ids() {
+            let c = compress::codec(id);
+            let dict = c.train(&[&data]);
+            let payload = c.compress(&dict, &data).unwrap();
+            let mut out = Vec::new();
+            c.decompress(&dict, &payload, data.len(), &mut out)
+                .unwrap_or_else(|e| panic!("case {case} codec {id:?}: {e}"));
+            assert_eq!(out, data, "case {case} codec {id:?} roundtrip mismatch");
+        }
+    }
+}
+
+#[test]
+fn prop_shared_dict_roundtrips_foreign_streams() {
+    // dictionary trained on one distribution must LOSSLESSLY code another
+    // (ratio may be poor; correctness may not be)
+    let mut rng = Rng::seed_from_u64(0xD1C7);
+    for _ in 0..64 {
+        let train = random_stream(&mut rng);
+        let test = random_stream(&mut rng);
+        for id in [CodecId::FreqSeq, CodecId::FreqSeqPacked, CodecId::Huffman] {
+            let c = compress::codec(id);
+            let dict = c.train(&[&train]);
+            // huffman ignores dict; freqseq uses it
+            let payload = c.compress(&dict, &test).unwrap();
+            let mut out = Vec::new();
+            c.decompress(&dict, &payload, test.len(), &mut out).unwrap();
+            assert_eq!(out, test, "{id:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_truncated_payloads_never_panic() {
+    let mut rng = Rng::seed_from_u64(0x7A11);
+    for _ in 0..64 {
+        let data = random_stream(&mut rng);
+        if data.is_empty() {
+            continue;
+        }
+        for id in compress::all_codec_ids() {
+            let c = compress::codec(id);
+            let dict = c.train(&[&data]);
+            let payload = c.compress(&dict, &data).unwrap();
+            if payload.is_empty() {
+                continue;
+            }
+            let cut = rng.gen_range_usize(0, payload.len());
+            let mut out = Vec::new();
+            // must return Err or produce wrong-length output, never panic
+            match c.decompress(&dict, &payload[..cut], data.len(), &mut out) {
+                Ok(()) => assert_eq!(out, data, "{id:?}: truncated payload decoded 'successfully' to wrong data"),
+                Err(_) => {}
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_corrupted_payloads_never_panic() {
+    let mut rng = Rng::seed_from_u64(0xBADB);
+    for _ in 0..64 {
+        let data = random_stream(&mut rng);
+        if data.len() < 8 {
+            continue;
+        }
+        for id in compress::all_codec_ids() {
+            let c = compress::codec(id);
+            let dict = c.train(&[&data]);
+            let mut payload = c.compress(&dict, &data).unwrap();
+            if payload.is_empty() {
+                continue;
+            }
+            let i = rng.gen_range_usize(0, payload.len());
+            payload[i] ^= 1 << rng.gen_range(0, 8);
+            let mut out = Vec::new();
+            let _ = c.decompress(&dict, &payload, data.len(), &mut out); // any Result is fine
+        }
+    }
+}
+
+#[test]
+fn prop_packing_roundtrips() {
+    let mut rng = Rng::seed_from_u64(0xBA11);
+    for _ in 0..200 {
+        let bits = rng.gen_range(1, 9) as u32;
+        let n = rng.gen_range_usize(0, 2000);
+        let codes: Vec<u8> = (0..n).map(|_| rng.gen_range(0, 1 << bits) as u8).collect();
+        let packed = packing::pack(&codes, bits);
+        assert_eq!(packing::unpack(&packed, bits, n), codes);
+    }
+}
+
+#[test]
+fn prop_json_roundtrips_random_values() {
+    let mut rng = Rng::seed_from_u64(0x15011);
+
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 3 { rng.gen_range(0, 4) } else { rng.gen_range(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.gen_bool(0.5)),
+            2 => Json::Num((rng.gen_range(0, 1 << 20) as f64) - 500_000.0),
+            3 => {
+                let n = rng.gen_range_usize(0, 12);
+                Json::Str((0..n).map(|_| rng.gen_range(32, 127) as u8 as char).collect())
+            }
+            4 => {
+                let n = rng.gen_range_usize(0, 5);
+                Json::Arr((0..n).map(|_| random_json(rng, depth + 1)).collect())
+            }
+            _ => {
+                let n = rng.gen_range_usize(0, 5);
+                Json::Obj(
+                    (0..n)
+                        .map(|i| (format!("k{i}"), random_json(rng, depth + 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+
+    for _ in 0..300 {
+        let j = random_json(&mut rng, 0);
+        let text = j.to_string();
+        let parsed = Json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(parsed, j);
+    }
+}
+
+#[test]
+fn prop_json_parser_never_panics_on_garbage() {
+    let mut rng = Rng::seed_from_u64(0xF422);
+    for _ in 0..500 {
+        let n = rng.gen_range_usize(0, 60);
+        let bytes: Vec<u8> = (0..n).map(|_| rng.gen_range(32, 127) as u8).collect();
+        let s = String::from_utf8(bytes).unwrap();
+        let _ = Json::parse(&s); // Result either way; must not panic
+    }
+}

@@ -1,0 +1,115 @@
+//! Property tests for the coordinator substrate: batcher invariants and
+//! quantization/roundtrip invariants over random model shapes.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use tiny_qmoe::coordinator::{collect_batch, BatchPolicy};
+use tiny_qmoe::quant::{uniform, Bits, Granularity};
+use tiny_qmoe::tensor::Tensor;
+use tiny_qmoe::util::Rng;
+
+#[test]
+fn prop_batcher_preserves_order_and_loses_nothing() {
+    let mut rng = Rng::seed_from_u64(0xBA7C);
+    for _ in 0..100 {
+        let n = rng.gen_range_usize(1, 64);
+        let max_batch = rng.gen_range_usize(1, 9);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..n {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let policy = BatchPolicy { max_batch, max_wait: Duration::from_millis(1) };
+        let mut got = Vec::new();
+        loop {
+            let b = collect_batch(&rx, policy);
+            if b.is_empty() {
+                break;
+            }
+            assert!(b.len() <= max_batch, "batch overflow");
+            got.extend(b);
+        }
+        assert_eq!(got, (0..n).collect::<Vec<_>>(), "items lost or reordered");
+    }
+}
+
+#[test]
+fn prop_quantize_dequantize_bounded_all_shapes() {
+    let mut rng = Rng::seed_from_u64(0x0DD5);
+    for _ in 0..100 {
+        let rows = rng.gen_range_usize(1, 40);
+        let cols = rng.gen_range_usize(1, 40);
+        let scale_mag = 10f32.powi(rng.gen_range(0, 6) as i32 - 3);
+        let t = Tensor::new(
+            vec![rows, cols],
+            (0..rows * cols).map(|_| rng.normal_f32() * scale_mag).collect(),
+        )
+        .unwrap();
+        for bits in [Bits::B4, Bits::B8] {
+            for gran in [
+                Granularity::PerTensor,
+                Granularity::PerChannel { axis: 0 },
+                Granularity::PerChannel { axis: 1 },
+            ] {
+                let q = uniform::quantize(&t, bits, gran).unwrap();
+                let deq = q.dequantize();
+                // uniform-quantization bound: |err| <= scale/2 per element
+                for r in 0..rows {
+                    for c in 0..cols {
+                        let s = match gran {
+                            Granularity::PerTensor => q.scale[0],
+                            Granularity::PerChannel { axis: 0 } => q.scale[r],
+                            _ => q.scale[c],
+                        };
+                        let err = (t.data[r * cols + c] - deq.data[r * cols + c]).abs();
+                        assert!(err <= s * 0.5 + s * 1e-4, "err {err} scale {s}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_container_roundtrip_random_models() {
+    use tiny_qmoe::compress::CodecId;
+    use tiny_qmoe::format::{TqmMeta, TqmReader, TqmWriter};
+    let mut rng = Rng::seed_from_u64(0x70A7);
+    for case in 0..24 {
+        let codec = tiny_qmoe::compress::all_codec_ids()
+            [rng.gen_range_usize(0, 6)];
+        let meta = TqmMeta {
+            model_name: format!("rand{case}"),
+            codec,
+            bits: Bits::B8,
+            per_channel: rng.gen_bool(0.5),
+            quantizer: "naive".into(),
+            source_checkpoint: "prop".into(),
+        };
+        let mut w = TqmWriter::new(meta);
+        let n_tensors = rng.gen_range_usize(1, 6);
+        let mut originals = Vec::new();
+        for ti in 0..n_tensors {
+            let rows = rng.gen_range_usize(1, 30);
+            let cols = rng.gen_range_usize(1, 30);
+            let t = Tensor::new(
+                vec![rows, cols],
+                (0..rows * cols).map(|_| rng.normal_f32()).collect(),
+            )
+            .unwrap();
+            let q = uniform::quantize(&t, Bits::B8, Granularity::PerChannel { axis: 1 }).unwrap();
+            w.add_quantized(&format!("t{ti}"), &q);
+            originals.push(q);
+        }
+        let dir = tiny_qmoe::util::TempDir::new().unwrap();
+        let p = dir.join("m.tqm");
+        w.write(&p).unwrap();
+        let r = TqmReader::open(&p).unwrap();
+        for (ti, q) in originals.iter().enumerate() {
+            let got = r.load_quantized(&format!("t{ti}")).unwrap();
+            assert_eq!(got.codes, q.codes, "case {case} codec {codec:?}");
+            assert_eq!(got.scale, q.scale);
+        }
+    }
+}
