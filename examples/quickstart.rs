@@ -57,7 +57,7 @@ fn main() -> Result<()> {
     println!("PJRT platform: {}", rt.platform());
     let stream_opts = ServeOptions {
         residency: Residency::StreamPerLayer,
-        prefetch: true,
+        prefetch_depth: 1,
         ..Default::default()
     };
     let resident_opts =

@@ -51,7 +51,8 @@ fn main() -> Result<()> {
         tqm_path: tqm,
         serve: ServeOptions {
             residency: Residency::StreamPerLayer,
-            prefetch: true,
+            prefetch_depth: 1,
+            n_threads: 0,
             max_batch: 4,
             max_wait_ms: 4,
             max_new_tokens: 12,

@@ -1,29 +1,39 @@
-//! §Perf — decompression throughput per codec on a realistic quantized
-//! weight stream (the serving pipeline's hot auxiliary path).
+//! §Perf — decompression throughput on a realistic quantized weight
+//! stream (the serving pipeline's hot path), three angles:
+//!
+//! 1. flat per-codec decompress/compress MB/s (the original table);
+//! 2. chunk-parallel decode scaling: `Chunked::decompress_parallel` at
+//!    1/2/4/8 threads — the primitive the streaming engine fans layer
+//!    decode out over (acceptance: ≥2x at 4 threads on multicore);
+//! 3. the fused unpack+dequantize kernel vs the two-pass
+//!    unpack-then-dequantize it replaced, at 2/4/6/8 bits.
+use tiny_qmoe::compress::stream::Chunked;
 use tiny_qmoe::compress::{self, stats};
+use tiny_qmoe::quant::packing;
 use tiny_qmoe::util::bench::{bench, Table};
 use tiny_qmoe::util::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn gaussian_stream(n: usize) -> Vec<u8> {
     let mut rng = Rng::seed_from_u64(5);
-    let data: Vec<u8> = (0..8 << 20)
-        .map(|_| (128.0 + 22.0 * rng.normal_f32()).clamp(0.0, 255.0) as u8)
-        .collect();
+    (0..n).map(|_| (128.0 + 22.0 * rng.normal_f32()).clamp(0.0, 255.0) as u8).collect()
+}
+
+fn flat_table(data: &[u8]) -> anyhow::Result<()> {
     let mut t = Table::new(
         "decompression throughput (8 MiB gaussian-code stream)",
         &["codec", "ratio", "decompress MB/s", "compress MB/s"],
     );
     for id in compress::all_codec_ids() {
         let c = compress::codec(id);
-        let r = stats::measure(c.as_ref(), &data, None)?;
-        let dict = c.train(&[&data]);
-        let payload = c.compress(&dict, &data)?;
+        let r = stats::measure(c.as_ref(), data, None)?;
+        let dict = c.train(&[data]);
+        let payload = c.compress(&dict, data)?;
         let mut out = Vec::new();
         let m = bench(c.name(), 1.0, || {
             c.decompress(&dict, &payload, data.len(), &mut out).unwrap();
         });
         let mc = bench(c.name(), 1.0, || {
-            let _ = c.compress(&dict, &data).unwrap();
+            let _ = c.compress(&dict, data).unwrap();
         });
         t.row(vec![
             c.name().into(),
@@ -33,5 +43,79 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     t.print();
+    Ok(())
+}
+
+fn parallel_table(data: &[u8]) -> anyhow::Result<()> {
+    let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let mut t = Table::new(
+        &format!(
+            "chunk-parallel decode (256 KiB chunks, {cores} cores) — MB/s and speedup vs 1 thread"
+        ),
+        &["codec", "1 thread", "2 threads", "4 threads", "8 threads", "4T speedup"],
+    );
+    for id in compress::all_codec_ids() {
+        let c = compress::codec(id);
+        let ch = Chunked::new(c.as_ref());
+        let dict = c.train(&[data]);
+        let payload = ch.compress(&dict, data)?;
+        let mut mbps = Vec::new();
+        for threads in [1usize, 2, 4, 8] {
+            let m = bench(c.name(), 1.0, || {
+                let out = ch.decompress_parallel(&dict, &payload, data.len(), threads).unwrap();
+                assert_eq!(out.len(), data.len());
+            });
+            mbps.push(data.len() as f64 / 1e6 / m.mean_s);
+        }
+        t.row(vec![
+            c.name().into(),
+            format!("{:.0}", mbps[0]),
+            format!("{:.0}", mbps[1]),
+            format!("{:.0}", mbps[2]),
+            format!("{:.0}", mbps[3]),
+            format!("{:.2}x", mbps[2] / mbps[0]),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn fused_table(data: &[u8]) -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "fused unpack+dequant vs two-pass (Melem/s, per-tensor params)",
+        &["bits", "two-pass", "fused", "speedup"],
+    );
+    let n = data.len();
+    for bits in [2u32, 4, 6, 8] {
+        let mask = ((1u16 << bits) - 1) as u8;
+        let codes: Vec<u8> = data.iter().map(|&b| b & mask).collect();
+        let packed = packing::pack(&codes, bits);
+        let (scale, zero) = (0.0123f32, 3.0f32);
+        let mut f32_out = vec![0.0f32; n];
+        let two = bench("two-pass", 1.0, || {
+            let unpacked = packing::unpack(&packed, bits, n);
+            for (o, &c) in f32_out.iter_mut().zip(&unpacked) {
+                *o = (c as f32 - zero) * scale;
+            }
+        });
+        let fused = bench("fused", 1.0, || {
+            packing::unpack_dequant_into(&packed, bits, scale, zero, &mut f32_out);
+        });
+        t.row(vec![
+            format!("{bits}"),
+            format!("{:.0}", n as f64 / 1e6 / two.mean_s),
+            format!("{:.0}", n as f64 / 1e6 / fused.mean_s),
+            format!("{:.2}x", two.mean_s / fused.mean_s),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let data = gaussian_stream(8 << 20);
+    flat_table(&data)?;
+    parallel_table(&data)?;
+    fused_table(&data)?;
     Ok(())
 }

@@ -19,6 +19,73 @@ use super::Codec;
 
 pub const DEFAULT_CHUNK: usize = 256 * 1024;
 
+/// Parsed, bounds-validated view of a chunk-framed payload's index.
+///
+/// All the decode paths (serial, range, parallel, and the TQM reader's
+/// per-tensor fan-out) go through [`parse_chunk_index`], so a corrupt
+/// index is rejected in one place before any body slicing happens.
+#[derive(Clone, Debug)]
+pub struct ChunkIndex {
+    /// Per chunk: (byte offset into the body, uncompressed length).
+    pub entries: Vec<(usize, usize)>,
+    /// Uncompressed bytes per chunk (last chunk may be shorter).
+    pub chunk_len: usize,
+    /// Offset of the body (first chunk's compressed bytes) in the payload.
+    pub body_start: usize,
+}
+
+impl ChunkIndex {
+    /// The concatenated compressed chunk payloads.
+    pub fn body<'a>(&self, payload: &'a [u8]) -> &'a [u8] {
+        &payload[self.body_start..]
+    }
+
+    /// End offset (into the body) of chunk `i`'s compressed bytes.
+    pub fn chunk_end(&self, i: usize, body_len: usize) -> usize {
+        self.entries.get(i + 1).map(|&(o, _)| o).unwrap_or(body_len)
+    }
+
+    /// Total uncompressed length across all chunks.
+    pub fn raw_len(&self) -> usize {
+        self.entries.iter().map(|&(_, l)| l).sum()
+    }
+}
+
+/// Parse and validate the chunk index of a chunk-framed payload.
+///
+/// Validation covers everything the decode loops assume: header and index
+/// fit in the payload, chunk offsets are monotonically non-decreasing, and
+/// every offset lands inside the body — so `body[off..end]` can never
+/// slice out of bounds on a corrupt index (serial, range, or parallel).
+pub fn parse_chunk_index(payload: &[u8]) -> Result<ChunkIndex> {
+    anyhow::ensure!(payload.len() >= 8, "chunked: truncated header");
+    let n = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    let chunk_len = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
+    let idx_end = 8usize
+        .checked_add(n.checked_mul(16).ok_or_else(|| anyhow::anyhow!("chunked: huge index"))?)
+        .ok_or_else(|| anyhow::anyhow!("chunked: huge index"))?;
+    anyhow::ensure!(payload.len() >= idx_end, "chunked: truncated index");
+    anyhow::ensure!(n == 0 || chunk_len > 0, "chunked: zero chunk_len with {n} chunks");
+    let body_len = payload.len() - idx_end;
+    let mut entries = Vec::with_capacity(n);
+    let mut prev = 0usize;
+    for i in 0..n {
+        let off = 8 + i * 16;
+        let o = u64::from_le_bytes(payload[off..off + 8].try_into().unwrap()) as usize;
+        let l = u64::from_le_bytes(payload[off + 8..off + 16].try_into().unwrap()) as usize;
+        anyhow::ensure!(o >= prev, "chunked: non-monotone chunk offset {o} < {prev}");
+        anyhow::ensure!(o <= body_len, "chunked: chunk offset {o} beyond body ({body_len})");
+        // bound the decode-side allocation: no chunk expands past chunk_len
+        anyhow::ensure!(
+            l <= chunk_len,
+            "chunked: chunk raw_len {l} exceeds chunk_len {chunk_len}"
+        );
+        prev = o;
+        entries.push((o, l));
+    }
+    Ok(ChunkIndex { entries, chunk_len, body_start: idx_end })
+}
+
 pub struct Chunked<'a> {
     pub inner: &'a dyn Codec,
     pub chunk_len: usize,
@@ -56,22 +123,6 @@ impl<'a> Chunked<'a> {
         Ok(out)
     }
 
-    fn parse_index(payload: &[u8]) -> Result<(Vec<(usize, usize)>, usize, &[u8])> {
-        anyhow::ensure!(payload.len() >= 8, "chunked: truncated header");
-        let n = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
-        let chunk_len = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
-        let idx_end = 8 + n * 16;
-        anyhow::ensure!(payload.len() >= idx_end, "chunked: truncated index");
-        let mut index = Vec::with_capacity(n);
-        for i in 0..n {
-            let off = 8 + i * 16;
-            let o = u64::from_le_bytes(payload[off..off + 8].try_into().unwrap()) as usize;
-            let l = u64::from_le_bytes(payload[off + 8..off + 16].try_into().unwrap()) as usize;
-            index.push((o, l));
-        }
-        Ok((index, chunk_len, &payload[idx_end..]))
-    }
-
     pub fn decompress(
         &self,
         dict: &[u8],
@@ -79,13 +130,13 @@ impl<'a> Chunked<'a> {
         expected_len: usize,
         out: &mut Vec<u8>,
     ) -> Result<()> {
-        let (index, _cl, body) = Self::parse_index(payload)?;
+        let idx = parse_chunk_index(payload)?;
+        let body = idx.body(payload);
         out.clear();
         out.reserve(expected_len);
         let mut scratch = Vec::new();
-        for (i, &(off, raw_len)) in index.iter().enumerate() {
-            let end = index.get(i + 1).map(|&(o, _)| o).unwrap_or(body.len());
-            anyhow::ensure!(off <= end && end <= body.len(), "chunked: bad index");
+        for (i, &(off, raw_len)) in idx.entries.iter().enumerate() {
+            let end = idx.chunk_end(i, body.len());
             self.inner.decompress(dict, &body[off..end], raw_len, &mut scratch)?;
             out.extend_from_slice(&scratch);
         }
@@ -103,20 +154,21 @@ impl<'a> Chunked<'a> {
         start: usize,
         len: usize,
     ) -> Result<(Vec<u8>, usize)> {
-        let (index, chunk_len, body) = Self::parse_index(payload)?;
-        anyhow::ensure!(chunk_len > 0, "chunked: zero chunk_len");
-        let first = start / chunk_len;
-        let last = (start + len).saturating_sub(1) / chunk_len;
-        anyhow::ensure!(last < index.len(), "chunked: range beyond stream");
+        let idx = parse_chunk_index(payload)?;
+        let body = idx.body(payload);
+        anyhow::ensure!(idx.chunk_len > 0, "chunked: zero chunk_len");
+        let first = start / idx.chunk_len;
+        let last = (start + len).saturating_sub(1) / idx.chunk_len;
+        anyhow::ensure!(last < idx.entries.len(), "chunked: range beyond stream");
         let mut out = Vec::new();
         let mut scratch = Vec::new();
         for i in first..=last {
-            let (off, raw_len) = index[i];
-            let end = index.get(i + 1).map(|&(o, _)| o).unwrap_or(body.len());
+            let (off, raw_len) = idx.entries[i];
+            let end = idx.chunk_end(i, body.len());
             self.inner.decompress(dict, &body[off..end], raw_len, &mut scratch)?;
             out.extend_from_slice(&scratch);
         }
-        Ok((out, start - first * chunk_len))
+        Ok((out, start - first * idx.chunk_len))
     }
 
     /// Parallel decompression across chunks using scoped threads.
@@ -130,8 +182,9 @@ impl<'a> Chunked<'a> {
     where
         Self: Sync,
     {
-        let (index, _cl, body) = Self::parse_index(payload)?;
-        let n = index.len();
+        let idx = parse_chunk_index(payload)?;
+        let body = idx.body(payload);
+        let n = idx.entries.len();
         if n == 0 {
             anyhow::ensure!(expected_len == 0, "chunked: empty payload");
             return Ok(Vec::new());
@@ -141,13 +194,13 @@ impl<'a> Chunked<'a> {
         let stride = (n + threads - 1) / threads;
         std::thread::scope(|s| {
             for (tid, slot_chunk) in results.chunks_mut(stride).enumerate() {
-                let index = &index;
+                let idx = &idx;
                 let inner = self.inner;
                 s.spawn(move || {
                     for (j, slot) in slot_chunk.iter_mut().enumerate() {
                         let i = tid * stride + j;
-                        let (off, raw_len) = index[i];
-                        let end = index.get(i + 1).map(|&(o, _)| o).unwrap_or(body.len());
+                        let (off, raw_len) = idx.entries[i];
+                        let end = idx.chunk_end(i, body.len());
                         let mut buf = Vec::new();
                         *slot = inner
                             .decompress(dict, &body[off..end], raw_len, &mut buf)
@@ -229,5 +282,59 @@ mod tests {
         let mut payload = ch.compress(&[], &data).unwrap();
         payload.truncate(10);
         assert!(ch.decompress(&[], &payload, 100, &mut out).is_err());
+    }
+
+    /// Overwrite chunk `i`'s body offset in a framed payload.
+    fn poison_offset(payload: &mut [u8], i: usize, off: u64) {
+        payload[8 + i * 16..8 + i * 16 + 8].copy_from_slice(&off.to_le_bytes());
+    }
+
+    #[test]
+    fn corrupt_index_rejected_parallel_and_range() {
+        // The serial path always validated offsets; the parallel and range
+        // paths used to slice the body unchecked. Both must now reject a
+        // corrupt index instead of panicking or reading out of bounds.
+        let inner = codec(CodecId::Raw);
+        let ch = Chunked::new(inner.as_ref()).with_chunk_len(256);
+        let data = sample(1024);
+        let payload = ch.compress(&[], &data).unwrap();
+
+        // offset pointing far beyond the body
+        let mut beyond = payload.clone();
+        poison_offset(&mut beyond, 1, u64::MAX / 2);
+        for threads in [1usize, 4] {
+            assert!(ch.decompress_parallel(&[], &beyond, data.len(), threads).is_err());
+        }
+        assert!(ch.decompress_range(&[], &beyond, 300, 100).is_err());
+
+        // non-monotone offsets (chunk 2 "starts" before chunk 1)
+        let mut backwards = payload.clone();
+        poison_offset(&mut backwards, 2, 0);
+        for threads in [1usize, 4] {
+            assert!(ch.decompress_parallel(&[], &backwards, data.len(), threads).is_err());
+        }
+        assert!(ch.decompress_range(&[], &backwards, 600, 100).is_err());
+
+        // the untouched payload still decodes everywhere
+        assert_eq!(ch.decompress_parallel(&[], &payload, data.len(), 4).unwrap(), data);
+    }
+
+    #[test]
+    fn corrupt_raw_len_rejected_without_huge_allocation() {
+        // a corrupt per-chunk raw_len must be rejected at index-parse time,
+        // not passed to the codec where out.reserve(raw_len) would abort
+        let inner = codec(CodecId::Raw);
+        let ch = Chunked::new(inner.as_ref()).with_chunk_len(256);
+        let data = sample(1024);
+        let payload = ch.compress(&[], &data).unwrap();
+        let mut huge = payload.clone();
+        // raw_len of chunk 1 lives 8 bytes after its offset field
+        huge[8 + 16 + 8..8 + 16 + 16].copy_from_slice(&(u64::MAX / 4).to_le_bytes());
+        let mut out = Vec::new();
+        assert!(ch.decompress(&[], &huge, data.len(), &mut out).is_err());
+        for threads in [1usize, 4] {
+            assert!(ch.decompress_parallel(&[], &huge, data.len(), threads).is_err());
+        }
+        assert!(ch.decompress_range(&[], &huge, 300, 100).is_err());
     }
 }

@@ -181,8 +181,16 @@ impl Residency {
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
     pub residency: Residency,
-    /// Overlap next-layer decompression with current-layer execution.
-    pub prefetch: bool,
+    /// Decode→execute pipeline depth for `StreamPerLayer`: how many
+    /// layers ahead the prefetch worker may run while the current layer
+    /// executes. 0 disables prefetch (decode inline); 1 reproduces the
+    /// classic depth-1 overlap; deeper pipelines absorb decode-time
+    /// jitter at the cost of one extra expanded layer of memory each.
+    pub prefetch_depth: usize,
+    /// Worker threads for the chunk-parallel layer decode (a v2 TQM
+    /// container frames payloads in independently-decodable chunks).
+    /// 0 = one per available core; 1 = fully serial decode.
+    pub n_threads: usize,
     /// Dynamic batcher: max batch size (must match a lowered decode_b).
     pub max_batch: usize,
     /// Dynamic batcher: max queue wait before dispatching a partial batch.
@@ -195,10 +203,22 @@ impl Default for ServeOptions {
     fn default() -> Self {
         Self {
             residency: Residency::StreamPerLayer,
-            prefetch: true,
+            prefetch_depth: 1,
+            n_threads: 0,
             max_batch: 4,
             max_wait_ms: 2,
             max_new_tokens: 32,
+        }
+    }
+}
+
+impl ServeOptions {
+    /// Resolve the decode thread count (0 = auto-detect cores).
+    pub fn resolved_threads(&self) -> usize {
+        if self.n_threads == 0 {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+        } else {
+            self.n_threads
         }
     }
 }

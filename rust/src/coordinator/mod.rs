@@ -340,7 +340,8 @@ mod tests {
             tqm_path: tqm,
             serve: ServeOptions {
                 residency,
-                prefetch: false,
+                prefetch_depth: 0,
+                n_threads: 1,
                 max_batch: 2,
                 max_wait_ms: 5,
                 max_new_tokens: 8,

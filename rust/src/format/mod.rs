@@ -8,7 +8,7 @@
 //!
 //! ```text
 //! magic   b"TQM1"
-//! u32     format version
+//! u32     container version (see CONTAINER_VERSION)
 //! u32     codec id
 //! u32     model config json length | bytes (name, dims, ...)
 //! u64     dict length | bytes
@@ -17,6 +17,9 @@
 //!   u16   name_len | name utf-8
 //!   u8    kind      (0 = f32 raw, 1 = quantized-u8)
 //!   u8    bits      (storage bits; 8 for f32-raw, ignored)
+//!   u8    gran      (v2+ only: 0 = per-tensor, 1 = per-channel axis 0,
+//!                    2 = per-channel axis 1; absent in v1, where the
+//!                    reader infers per-channel as axis 1)
 //!   u8    ndim | u32*ndim dims
 //!   u32   n_channels | f32*n scales | f32*n zeros   (kind 1 only)
 //!   u64   raw_len  (uncompressed code/byte count)
@@ -27,6 +30,14 @@
 //!
 //! All integers little-endian. CRCs guard against torn writes — the paper
 //! targets phones, where that is not hypothetical.
+//!
+//! **Container versions.** v1 stores each quantized payload as one flat
+//! codec stream. v2 (current) wraps quantized payloads in the
+//! [`crate::compress::stream::Chunked`] framing, so a reader can
+//! decompress a tensor chunk-by-chunk — bounding decode memory and,
+//! crucially, letting the serving pipeline fan a layer's decode out
+//! across cores (chunks are independent streams). f32 payloads (norm
+//! vectors) stay raw in both versions. The reader accepts both.
 
 pub mod reader;
 pub mod writer;
@@ -41,6 +52,16 @@ use crate::quant::Bits;
 use crate::util::Json;
 
 pub const MAGIC: &[u8; 4] = b"TQM1";
+
+/// Current TQM container version (the `u32` after the magic).
+///
+/// Independent of [`crate::FORMAT_VERSION`] (the AOT-manifest / stage
+/// contract version): bumping how payload bytes are framed must not
+/// invalidate lowered HLO artifacts, and vice versa.
+pub const CONTAINER_VERSION: u32 = 2;
+
+/// Oldest container version the reader still understands.
+pub const MIN_CONTAINER_VERSION: u32 = 1;
 
 /// What kind of tensor a record holds.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -111,6 +132,10 @@ pub struct TensorRecord {
     pub name: String,
     pub kind: TensorKind,
     pub bits: Bits,
+    /// Quantization granularity. Stored explicitly in v2 containers; for
+    /// v1 files the reader infers per-channel parameters as axis 1 (the
+    /// historical assumption, ambiguous for square per-row tensors).
+    pub granularity: crate::quant::Granularity,
     pub shape: Vec<usize>,
     pub scale: Vec<f32>,
     pub zero: Vec<f32>,
@@ -125,6 +150,26 @@ impl TensorRecord {
     pub fn stored_bytes(&self) -> usize {
         self.payload_len + 4 * (self.scale.len() + self.zero.len())
     }
+}
+
+pub(crate) fn gran_to_u8(g: crate::quant::Granularity) -> u8 {
+    use crate::quant::Granularity;
+    match g {
+        Granularity::PerTensor => 0,
+        Granularity::PerChannel { axis: 0 } => 1,
+        Granularity::PerChannel { axis: 1 } => 2,
+        Granularity::PerChannel { axis } => panic!("unencodable channel axis {axis}"),
+    }
+}
+
+pub(crate) fn gran_from_u8(v: u8) -> Result<crate::quant::Granularity> {
+    use crate::quant::Granularity;
+    Ok(match v {
+        0 => Granularity::PerTensor,
+        1 => Granularity::PerChannel { axis: 0 },
+        2 => Granularity::PerChannel { axis: 1 },
+        _ => anyhow::bail!("bad granularity tag {v}"),
+    })
 }
 
 pub(crate) fn bits_to_u8(b: Bits) -> u8 {

@@ -4,22 +4,33 @@
 //! what fits), the index is parsed once, and `load_*` decompresses a
 //! single tensor on demand into a caller-supplied buffer.
 
+use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use super::{bits_from_u8, TensorKind, TensorRecord, TqmMeta, MAGIC};
+use super::{
+    bits_from_u8, gran_from_u8, TensorKind, TensorRecord, TqmMeta, CONTAINER_VERSION, MAGIC,
+    MIN_CONTAINER_VERSION,
+};
+use crate::compress::stream::parse_chunk_index;
 use crate::compress::{codec, Codec, CodecId};
-use crate::quant::{Bits, Granularity, QuantizedTensor};
+use crate::quant::{packing, Bits, Granularity, QuantizedTensor};
 use crate::tensor::{Tensor, U8Tensor};
 
 pub struct TqmReader {
     pub meta: TqmMeta,
     pub codec_id: CodecId,
+    /// Container version this file was written with (1 = flat payloads,
+    /// 2 = chunk-framed quantized payloads).
+    pub container_version: u32,
     data: Vec<u8>,
     dict_range: (usize, usize),
     records: Vec<TensorRecord>,
+    /// name -> records index (layer streaming resolves 9 tensors per
+    /// layer per pass; a linear scan was measurable on deep models).
+    by_name: HashMap<String, usize>,
     codec: Box<dyn Codec>,
     /// §Perf: the freqseq dictionary parsed once per container (the parse
     /// builds a 64k-entry hash map; doing it per tensor per layer pass
@@ -77,8 +88,10 @@ impl TqmReader {
             bail!("tqm: bad magic");
         }
         let version = c.u32()?;
-        if version != crate::FORMAT_VERSION {
-            bail!("tqm: format version {version} != {}", crate::FORMAT_VERSION);
+        if !(MIN_CONTAINER_VERSION..=CONTAINER_VERSION).contains(&version) {
+            bail!(
+                "tqm: container version {version} outside supported {MIN_CONTAINER_VERSION}..={CONTAINER_VERSION}"
+            );
         }
         let codec_id = CodecId::from_u32(c.u32()?)?;
         let meta_len = c.u32()? as usize;
@@ -101,6 +114,9 @@ impl TqmReader {
                 c.u8()?;
                 Bits::B8
             };
+            // v2 records carry the quantization granularity explicitly;
+            // v1 readers had to infer it from the scale-vector length
+            let gran_tag = if version >= 2 { Some(c.u8()?) } else { None };
             let ndim = c.u8()? as usize;
             let mut shape = Vec::with_capacity(ndim);
             for _ in 0..ndim {
@@ -120,7 +136,50 @@ impl TqmReader {
             } else {
                 (Vec::new(), Vec::new())
             };
+            let granularity = match gran_tag {
+                Some(t) => gran_from_u8(t)?,
+                // v1 files carry no tag: infer by matching the param count
+                // against the shape (out-channel axis first, then rows —
+                // the embedding table is per-row with vocab params)
+                None if scale.len() <= 1 => Granularity::PerTensor,
+                None if shape.len() == 2 && scale.len() == shape[1] => {
+                    Granularity::PerChannel { axis: 1 }
+                }
+                None if shape.len() == 2 && scale.len() == shape[0] => {
+                    Granularity::PerChannel { axis: 0 }
+                }
+                None => Granularity::PerChannel { axis: 1 },
+            };
+            if kind == TensorKind::QuantU8 {
+                if let Granularity::PerChannel { axis } = granularity {
+                    anyhow::ensure!(
+                        axis < shape.len() && scale.len() == shape[axis],
+                        "tqm: {name:?} has {} channel params for axis {axis} of {shape:?}",
+                        scale.len()
+                    );
+                }
+            }
             let raw_len = c.u64()? as usize;
+            // the payload CRC does not cover header fields; cross-check
+            // raw_len against shape×bits so a torn-write header cannot
+            // drive the decode arenas into a length-mismatch panic
+            match kind {
+                TensorKind::QuantU8 => {
+                    let n_codes = crate::tensor::numel(&shape);
+                    let expect = (n_codes * bits.storage_bits() as usize + 7) / 8;
+                    anyhow::ensure!(
+                        raw_len == expect,
+                        "tqm: {name:?} raw_len {raw_len} inconsistent with shape {shape:?} at {:?}",
+                        bits
+                    );
+                }
+                TensorKind::F32Raw => {
+                    anyhow::ensure!(
+                        raw_len == crate::tensor::numel(&shape) * 4,
+                        "tqm: {name:?} raw_len {raw_len} inconsistent with f32 shape {shape:?}"
+                    );
+                }
+            }
             let payload_len = c.u64()? as usize;
             let crc32 = c.u32()?;
             let payload_offset = c.pos;
@@ -129,6 +188,7 @@ impl TqmReader {
                 name,
                 kind,
                 bits,
+                granularity,
                 shape,
                 scale,
                 zero,
@@ -144,7 +204,19 @@ impl TqmReader {
             ),
             _ => None,
         };
-        Ok(Self { meta, codec_id, dict_range, records, codec: codec(codec_id), prepared_freq, data })
+        let by_name =
+            records.iter().enumerate().map(|(i, r)| (r.name.clone(), i)).collect();
+        Ok(Self {
+            meta,
+            codec_id,
+            container_version: version,
+            dict_range,
+            records,
+            by_name,
+            codec: codec(codec_id),
+            prepared_freq,
+            data,
+        })
     }
 
     pub fn records(&self) -> &[TensorRecord] {
@@ -152,23 +224,106 @@ impl TqmReader {
     }
 
     pub fn record(&self, name: &str) -> Result<&TensorRecord> {
-        self.records
-            .iter()
-            .find(|r| r.name == name)
+        Ok(&self.records[self.record_index(name)?])
+    }
+
+    /// Index of a tensor's record (stable for this reader's lifetime) —
+    /// lets hot paths resolve names once instead of per pass.
+    pub fn record_index(&self, name: &str) -> Result<usize> {
+        self.by_name
+            .get(name)
+            .copied()
             .ok_or_else(|| anyhow::anyhow!("tqm: no tensor {name:?}"))
+    }
+
+    pub fn record_at(&self, idx: usize) -> &TensorRecord {
+        &self.records[idx]
+    }
+
+    /// Whether quantized payloads carry the chunk framing (v2 containers).
+    pub fn is_chunked(&self) -> bool {
+        self.container_version >= 2
     }
 
     fn dict(&self) -> &[u8] {
         &self.data[self.dict_range.0..self.dict_range.1]
     }
 
-    fn payload(&self, r: &TensorRecord) -> Result<&[u8]> {
+    /// Whole container bytes — the layer decoder precomputes absolute
+    /// chunk ranges into this buffer so its hot loop can slice without
+    /// re-walking the index.
+    pub(crate) fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// CRC-checked payload bytes of a record.
+    pub fn payload_bytes(&self, r: &TensorRecord) -> Result<&[u8]> {
         let p = &self.data[r.payload_offset..r.payload_offset + r.payload_len];
         let crc = crc32fast::hash(p);
         if crc != r.crc32 {
             bail!("tqm: crc mismatch on {:?} ({:08x} != {:08x})", r.name, crc, r.crc32);
         }
         Ok(p)
+    }
+
+    fn payload(&self, r: &TensorRecord) -> Result<&[u8]> {
+        self.payload_bytes(r)
+    }
+
+    /// Decode one flat codec stream (a whole v1 payload, or a single v2
+    /// chunk) of known uncompressed length into `out`. Takes `&self` and
+    /// is thread-safe, which is what the parallel layer decode fans out
+    /// over.
+    pub(crate) fn decode_unit_into(
+        &self,
+        unit: &[u8],
+        raw_len: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
+        if let Some(table) = &self.prepared_freq {
+            crate::compress::freqseq::decode_with_table(
+                table,
+                self.codec_id == CodecId::FreqSeqPacked,
+                unit,
+                raw_len,
+                out,
+            )
+        } else {
+            self.codec.decompress(self.dict(), unit, raw_len, out)
+        }
+    }
+
+    /// Decode a quantized record's full payload (still bit-packed for
+    /// sub-8-bit tensors) into `out`, transparently handling both flat v1
+    /// payloads and chunk-framed v2 payloads.
+    fn decode_payload_into(
+        &self,
+        r: &TensorRecord,
+        payload: &[u8],
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
+        if self.is_chunked() && r.kind == TensorKind::QuantU8 {
+            let idx = parse_chunk_index(payload)?;
+            let body = idx.body(payload);
+            out.clear();
+            out.reserve(r.raw_len);
+            let mut chunk = Vec::new();
+            for (i, &(off, raw_len)) in idx.entries.iter().enumerate() {
+                let end = idx.chunk_end(i, body.len());
+                self.decode_unit_into(&body[off..end], raw_len, &mut chunk)?;
+                out.extend_from_slice(&chunk);
+            }
+            anyhow::ensure!(
+                out.len() == r.raw_len,
+                "tqm: {:?} chunked payload decoded {} bytes, expected {}",
+                r.name,
+                out.len(),
+                r.raw_len
+            );
+            Ok(())
+        } else {
+            self.decode_unit_into(payload, r.raw_len, out)
+        }
     }
 
     /// Decompress a quantized tensor's codes into `scratch` and return the
@@ -184,17 +339,7 @@ impl TqmReader {
             bail!("tqm: {name:?} is not quantized");
         }
         let payload = self.payload(r)?;
-        if let Some(table) = &self.prepared_freq {
-            crate::compress::freqseq::decode_with_table(
-                table,
-                self.codec_id == CodecId::FreqSeqPacked,
-                payload,
-                r.raw_len,
-                scratch,
-            )?;
-        } else {
-            self.codec.decompress(self.dict(), payload, r.raw_len, scratch)?;
-        }
+        self.decode_payload_into(r, payload, scratch)?;
         // sub-8-bit codes were bit-packed before coding; expand back to
         // one-code-per-byte (what the stage HLOs take)
         if r.bits.storage_bits() < 8 {
@@ -203,23 +348,71 @@ impl TqmReader {
                 crate::quant::packing::unpack(scratch, r.bits.storage_bits(), n_codes);
             *scratch = unpacked;
         }
-        let gran = if r.scale.len() == 1 {
-            Granularity::PerTensor
-        } else {
-            Granularity::PerChannel { axis: 1 }
-        };
         Ok(QuantizedTensor {
             codes: U8Tensor::new(r.shape.clone(), scratch.clone())?,
             scale: r.scale.clone(),
             zero: r.zero.clone(),
             bits: r.bits,
-            granularity: gran,
+            granularity: r.granularity,
         })
     }
 
     pub fn load_quantized(&self, name: &str) -> Result<QuantizedTensor> {
         let mut scratch = Vec::new();
         self.load_quantized_into(name, &mut scratch)
+    }
+
+    /// Decompress + dequantize a quantized tensor straight to f32 via the
+    /// fused [`packing::unpack_dequant_into`] kernel, never materializing
+    /// the one-byte-per-code expansion. `packed_scratch` holds the
+    /// intermediate decompressed (still bit-packed) stream and is reused
+    /// across calls; `out` is resized to the tensor's element count.
+    pub fn load_dequantized_into(
+        &self,
+        name: &str,
+        packed_scratch: &mut Vec<u8>,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let r = self.record(name)?;
+        if r.kind != TensorKind::QuantU8 {
+            bail!("tqm: {name:?} is not quantized");
+        }
+        let payload = self.payload(r)?;
+        self.decode_payload_into(r, payload, packed_scratch)?;
+        let n = crate::tensor::numel(&r.shape);
+        out.resize(n, 0.0);
+        let bits = r.bits.storage_bits();
+        match r.granularity {
+            Granularity::PerTensor => {
+                packing::unpack_dequant_into(packed_scratch, bits, r.scale[0], r.zero[0], out);
+            }
+            Granularity::PerChannel { axis } if r.shape.len() == 2 => {
+                // record validation guarantees scale.len() == shape[axis]
+                if axis == 1 {
+                    packing::unpack_dequant_cols_into(
+                        packed_scratch,
+                        bits,
+                        r.shape[1],
+                        &r.scale,
+                        &r.zero,
+                        out,
+                    );
+                } else {
+                    packing::unpack_dequant_rows_into(
+                        packed_scratch,
+                        bits,
+                        r.shape[1],
+                        &r.scale,
+                        &r.zero,
+                        out,
+                    );
+                }
+            }
+            Granularity::PerChannel { .. } => {
+                bail!("tqm: {name:?} per-channel params need a 2-D shape, got {:?}", r.shape)
+            }
+        }
+        Ok(())
     }
 
     /// Load a raw f32 tensor (norm vectors).
@@ -359,6 +552,7 @@ mod tests {
             )
             .unwrap();
             let q = uniform::quantize(&t, bits, Granularity::PerTensor).unwrap();
+            // flat v1 payloads so the packed length is directly visible
             let mut w = TqmWriter::new(TqmMeta {
                 model_name: "pack".into(),
                 codec: CodecId::Raw,
@@ -366,10 +560,12 @@ mod tests {
                 per_channel: false,
                 quantizer: "naive".into(),
                 source_checkpoint: "unit".into(),
-            });
+            })
+            .with_flat_payloads();
             w.add_quantized("w", &q);
             w.write(&p).unwrap();
             let r = TqmReader::open(&p).unwrap();
+            assert_eq!(r.container_version, 1, "{bits:?}");
             let got = r.load_quantized("w").unwrap();
             assert_eq!(got.codes, q.codes, "{bits:?}");
             // the stored payload really is packed (Raw codec => payload len
@@ -377,6 +573,74 @@ mod tests {
             let rec = r.record("w").unwrap();
             let expect = (64 * 32 * bits.storage_bits() as usize + 7) / 8;
             assert_eq!(rec.payload_len, expect, "{bits:?}");
+        }
+    }
+
+    #[test]
+    fn chunked_v2_roundtrip_all_codecs() {
+        // v2 containers frame quantized payloads in chunks; a chunk_len
+        // far below the tensor size forces multi-chunk payloads and the
+        // chunk-reassembly decode path for every codec.
+        for codec_id in crate::compress::all_codec_ids() {
+            let dir = crate::util::TempDir::new().unwrap();
+            let p = dir.path().join("m.tqm");
+            let q = sample_quantized(64, 48, 7);
+            let mut w = TqmWriter::new(meta(codec_id)).with_chunk_len(257);
+            w.add_quantized("w", &q);
+            w.write(&p).unwrap();
+            let r = TqmReader::open(&p).unwrap();
+            assert_eq!(r.container_version, crate::format::CONTAINER_VERSION);
+            assert!(r.is_chunked());
+            let got = r.load_quantized("w").unwrap();
+            assert_eq!(got.codes, q.codes, "{codec_id:?}");
+            assert_eq!(got.scale, q.scale, "{codec_id:?}");
+        }
+    }
+
+    #[test]
+    fn flat_v1_and_chunked_v2_decode_identically() {
+        let q = sample_quantized(32, 32, 8);
+        let dir = crate::util::TempDir::new().unwrap();
+        let (p1, p2) = (dir.path().join("v1.tqm"), dir.path().join("v2.tqm"));
+        let mut w1 = TqmWriter::new(meta(CodecId::Huffman)).with_flat_payloads();
+        w1.add_quantized("w", &q);
+        w1.write(&p1).unwrap();
+        let mut w2 = TqmWriter::new(meta(CodecId::Huffman)).with_chunk_len(100);
+        w2.add_quantized("w", &q);
+        w2.write(&p2).unwrap();
+        let r1 = TqmReader::open(&p1).unwrap();
+        let r2 = TqmReader::open(&p2).unwrap();
+        assert_eq!(r1.container_version, 1);
+        assert_eq!(r2.container_version, 2);
+        let a = r1.load_quantized("w").unwrap();
+        let b = r2.load_quantized("w").unwrap();
+        assert_eq!(a.codes, b.codes);
+    }
+
+    #[test]
+    fn fused_dequant_matches_two_step() {
+        // per-channel (axis 1), per-row (embed-style axis 0) and
+        // per-tensor records, sub-8 and 8-bit, flat and chunked
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("m.tqm");
+        let mut rng = crate::util::Rng::seed_from_u64(21);
+        let t = Tensor::new(vec![48, 24], (0..48 * 24).map(|_| rng.normal_f32()).collect())
+            .unwrap();
+        let q_cols = uniform::quantize(&t, Bits::B8, Granularity::PerChannel { axis: 1 }).unwrap();
+        let q_rows = uniform::quantize(&t, Bits::B4, Granularity::PerChannel { axis: 0 }).unwrap();
+        let q_scalar = uniform::quantize(&t, Bits::B6, Granularity::PerTensor).unwrap();
+        let mut w = TqmWriter::new(meta(CodecId::FreqSeqPacked)).with_chunk_len(333);
+        w.add_quantized("cols", &q_cols);
+        w.add_quantized("rows", &q_rows);
+        w.add_quantized("scalar", &q_scalar);
+        w.write(&p).unwrap();
+        let r = TqmReader::open(&p).unwrap();
+        let mut packed = Vec::new();
+        let mut out = Vec::new();
+        for (name, q) in [("cols", &q_cols), ("rows", &q_rows), ("scalar", &q_scalar)] {
+            r.load_dequantized_into(name, &mut packed, &mut out).unwrap();
+            let reference = q.dequantize();
+            assert_eq!(out, reference.data, "{name}: fused != unpack+dequantize");
         }
     }
 

@@ -5,23 +5,31 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use super::{bits_to_u8, TensorKind, TqmMeta, MAGIC};
+use super::{bits_to_u8, gran_to_u8, TensorKind, TqmMeta, CONTAINER_VERSION, MAGIC};
 use crate::compress::codec;
+use crate::compress::stream::{Chunked, DEFAULT_CHUNK};
 use crate::quant::QuantizedTensor;
 use crate::tensor::Tensor;
-use crate::FORMAT_VERSION;
 
 /// In-memory staging of a model about to be written.
 pub struct TqmWriter {
     meta: TqmMeta,
     // (name, kind, bits, shape, scale, zero, raw bytes)
     tensors: Vec<StagedTensor>,
+    /// Chunk granularity for quantized payloads (v2 framing). Chunks are
+    /// independently decodable, so smaller chunks mean more decode
+    /// parallelism but more per-chunk index/codec overhead.
+    chunk_len: usize,
+    /// Emit the legacy v1 container (flat payloads, no chunk framing) —
+    /// kept for compatibility tests and byte-size comparisons.
+    flat: bool,
 }
 
 struct StagedTensor {
     name: String,
     kind: TensorKind,
     bits: crate::quant::Bits,
+    gran: crate::quant::Granularity,
     shape: Vec<usize>,
     scale: Vec<f32>,
     zero: Vec<f32>,
@@ -30,7 +38,20 @@ struct StagedTensor {
 
 impl TqmWriter {
     pub fn new(meta: TqmMeta) -> Self {
-        Self { meta, tensors: Vec::new() }
+        Self { meta, tensors: Vec::new(), chunk_len: DEFAULT_CHUNK, flat: false }
+    }
+
+    /// Override the chunk granularity of quantized payloads.
+    pub fn with_chunk_len(mut self, n: usize) -> Self {
+        assert!(n > 0);
+        self.chunk_len = n;
+        self
+    }
+
+    /// Emit the legacy v1 container (flat payloads).
+    pub fn with_flat_payloads(mut self) -> Self {
+        self.flat = true;
+        self
     }
 
     /// Stage a quantized matrix (codes go through the container codec).
@@ -39,6 +60,7 @@ impl TqmWriter {
             name: name.to_string(),
             kind: TensorKind::QuantU8,
             bits: q.bits,
+            gran: q.granularity,
             shape: q.codes.shape.clone(),
             scale: q.scale.clone(),
             zero: q.zero.clone(),
@@ -56,6 +78,7 @@ impl TqmWriter {
             name: name.to_string(),
             kind: TensorKind::F32Raw,
             bits: crate::quant::Bits::B8,
+            gran: crate::quant::Granularity::PerTensor,
             shape: t.shape.clone(),
             scale: Vec::new(),
             zero: Vec::new(),
@@ -87,9 +110,10 @@ impl TqmWriter {
             .collect();
         let dict = c.train(&samples);
 
+        let version: u32 = if self.flat { 1 } else { CONTAINER_VERSION };
         let mut out: Vec<u8> = Vec::new();
         out.extend_from_slice(MAGIC);
-        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&version.to_le_bytes());
         out.extend_from_slice(&(self.meta.codec as u32).to_le_bytes());
         let meta_json = self.meta.to_json().to_string().into_bytes();
         out.extend_from_slice(&(meta_json.len() as u32).to_le_bytes());
@@ -110,8 +134,13 @@ impl TqmWriter {
                 }
                 _ => &t.raw,
             };
+            // quantized payloads are chunk-framed in v2 so readers can
+            // decode them range-by-range and in parallel across chunks
             let payload = match t.kind {
-                TensorKind::QuantU8 => c.compress(&dict, raw_for_codec)?,
+                TensorKind::QuantU8 if self.flat => c.compress(&dict, raw_for_codec)?,
+                TensorKind::QuantU8 => Chunked::new(c.as_ref())
+                    .with_chunk_len(self.chunk_len)
+                    .compress(&dict, raw_for_codec)?,
                 TensorKind::F32Raw => raw_for_codec.to_vec(),
             };
             let nb = t.name.as_bytes();
@@ -119,6 +148,12 @@ impl TqmWriter {
             out.extend_from_slice(nb);
             out.push(t.kind.to_u8());
             out.push(bits_to_u8(t.bits));
+            if version >= 2 {
+                // explicit quantization granularity (v1 readers inferred
+                // per-channel as axis 1, which is ambiguous for square
+                // per-row tensors)
+                out.push(gran_to_u8(t.gran));
+            }
             out.push(t.shape.len() as u8);
             for d in &t.shape {
                 out.extend_from_slice(&(*d as u32).to_le_bytes());

@@ -34,9 +34,13 @@ pub mod runtime;
 pub mod tables;
 pub mod tensor;
 pub mod util;
+pub mod xla;
 
 pub use anyhow::{anyhow, Context, Result};
 
-/// Crate-wide version for on-disk formats; bump together with any change
-/// to the TQM container layout or the stage argument contract.
+/// Version of the AOT manifest / stage argument contract; bump together
+/// with any change to the lowered-stage interface. The TQM container
+/// carries its own independent version
+/// ([`format::CONTAINER_VERSION`]) so payload-framing changes do not
+/// invalidate lowered artifacts.
 pub const FORMAT_VERSION: u32 = 1;

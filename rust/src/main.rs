@@ -10,6 +10,7 @@
 //!   tqm generate  --model e2e [--prompt-tokens 1,2,3] [--max-new 32]
 //!                 [--variant compressed] [--top-k 8] [--temp 0.8]
 //!   tqm serve-demo --model e2e [--requests 16] [--batch 4]
+//!                 [--threads 0] [--prefetch-depth 1]
 //!   tqm tables    --table 1|2|3|4|bits|codec|network|residency|all
 //!
 //! Run from anywhere inside the repo (artifacts are auto-discovered) after
@@ -245,7 +246,8 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         tqm_path: tqm,
         serve: ServeOptions {
             residency: Residency::StreamPerLayer,
-            prefetch: true,
+            prefetch_depth: args.get_usize("prefetch-depth", 1)?,
+            n_threads: args.get_usize("threads", 0)?,
             max_batch: batch,
             max_wait_ms: 4,
             max_new_tokens: 16,

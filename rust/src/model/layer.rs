@@ -14,6 +14,7 @@ use crate::format::TqmReader;
 use crate::quant::QuantizedTensor;
 use crate::runtime::literal;
 use crate::tensor::Tensor;
+use crate::xla;
 
 #[derive(Clone)]
 pub struct LayerWeights {

@@ -211,7 +211,7 @@ impl WeightSource {
 }
 
 #[cfg(test)]
-mod tests {
+pub(crate) mod tests {
     use super::*;
     use crate::compress::CodecId;
     use crate::quant::Bits;

@@ -1,0 +1,672 @@
+//! The multi-core, zero-allocation decompress→unpack fast path under
+//! `StreamPerLayer` serving.
+//!
+//! The legacy `LayerWeights::load` chain decodes one tensor at a time on
+//! one core and allocates fresh buffers per tensor per pass. This module
+//! replaces it on the streaming hot loop:
+//!
+//! * [`LayerDecoder`] — built once per engine. Precomputes, per layer,
+//!   every decode *chunk* (a v2 container frames each quantized payload
+//!   as independently-decompressable chunks) with absolute source byte
+//!   ranges and destination arena offsets, plus a partition of those
+//!   chunks into `n_threads` byte-balanced groups. The per-pass hot loop
+//!   therefore does no name lookups, no index parsing and no planning.
+//! * [`DecodedLayer`] — a reusable arena set (packed stream, unpacked
+//!   codes, norm f32s, broadcast-param staging) a layer is decoded into.
+//!   Buffers only ever grow; after a one-pass warmup the steady-state
+//!   loop performs **zero heap allocations** in this crate's code
+//!   (tracked by [`DecodedLayer::growth_count`] /
+//!   [`DecodeScratch::capacity_bytes`], asserted by tests).
+//! * [`DecodeScratch`] — per-worker decompression buffers + error/timing
+//!   slots, split across the scoped decode threads.
+//!
+//! Decode of one layer: CRC-verify the payloads, then fan the layer's
+//! chunks (across *all* of its tensors — parallelism is not limited to
+//! one tensor's chunks) out over scoped threads, each decompressing into
+//! its disjoint slice of the packed arena; then a single serial
+//! unpack/copy pass expands sub-8-bit streams into the codes arena. With
+//! `n_threads == 1` (or a single chunk) everything runs inline on the
+//! caller's thread — the 1-vCPU graceful fallback.
+
+use std::ops::Range;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::format::{TensorKind, TqmReader};
+use crate::model::MATRIX_NAMES;
+use crate::quant::packing;
+use crate::runtime::literal;
+use crate::xla;
+
+/// Grow-only resize that counts reallocation events (the zero-alloc
+/// assertion watches this counter go quiet after warmup).
+fn grow_to<T: Clone + Default>(v: &mut Vec<T>, n: usize, grew: &mut u64) {
+    if v.capacity() < n {
+        *grew += 1;
+    }
+    v.resize(n, T::default());
+}
+
+/// One decompression work unit: a chunk's compressed bytes (absolute
+/// range in the container) and its destination in the packed arena.
+#[derive(Clone, Debug)]
+struct ChunkPlan {
+    src: Range<usize>,
+    dst: Range<usize>,
+}
+
+/// Per-matrix layout within a layer's arenas.
+#[derive(Clone, Debug)]
+struct MatPlan {
+    rec: usize,
+    packed: Range<usize>,
+    codes: Range<usize>,
+}
+
+/// A contiguous run of chunks assigned to one decode thread, with the
+/// packed-arena range it owns (group ranges tile the arena in order, so
+/// the arena can be handed out via `split_at_mut` with no allocation).
+#[derive(Clone, Debug)]
+struct GroupPlan {
+    chunks: Range<usize>,
+    packed: Range<usize>,
+}
+
+#[derive(Clone, Debug)]
+struct LayerPlan {
+    mats: Vec<MatPlan>,      // 7 entries, MATRIX_NAMES order
+    norm_recs: [usize; 2],   // ln1, ln2
+    norm_lens: [usize; 2],   // element counts
+    chunks: Vec<ChunkPlan>,
+    groups: Vec<GroupPlan>,
+    packed_total: usize,
+    codes_total: usize,
+    expanded_bytes: usize,
+}
+
+/// Per-worker decode state. Lives in [`DecodeScratch`] so the buffers are
+/// reused across layers and passes.
+#[derive(Default)]
+struct WorkerSlot {
+    buf: Vec<u8>,
+    err: Option<anyhow::Error>,
+    busy_ns: u64,
+}
+
+/// Reusable worker-thread scratch for one decode loop.
+pub struct DecodeScratch {
+    slots: Vec<WorkerSlot>,
+}
+
+impl DecodeScratch {
+    pub fn new(n_threads: usize) -> Self {
+        Self { slots: (0..n_threads.max(1)).map(|_| WorkerSlot::default()).collect() }
+    }
+
+    /// Total capacity currently held by the worker buffers. The buffers
+    /// are grow-only and reused, so in steady state this is constant —
+    /// the zero-allocation test snapshots it after warmup.
+    pub fn capacity_bytes(&self) -> usize {
+        self.slots.iter().map(|s| s.buf.capacity()).sum()
+    }
+}
+
+/// Reusable arena set one decoded layer lands in.
+#[derive(Default)]
+pub struct DecodedLayer {
+    pub index: usize,
+    /// Decompressed (still bit-packed for sub-8-bit) streams, 7 matrices
+    /// laid out back to back.
+    packed: Vec<u8>,
+    /// One-byte-per-code expansion (what the stage HLOs take).
+    codes: Vec<u8>,
+    /// ln1 ++ ln2 f32 values.
+    norms: Vec<f32>,
+    /// Staging for broadcasting per-tensor scale/zero to channel vectors.
+    params: Vec<f32>,
+    grew: u64,
+}
+
+impl DecodedLayer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reallocation events inside this layer's arenas so far.
+    pub fn growth_count(&self) -> u64 {
+        self.grew
+    }
+
+    /// Unpacked codes of matrix `m` (MATRIX_NAMES order) — test hook.
+    pub fn codes_of(&self, decoder: &LayerDecoder, layer: usize, m: usize) -> &[u8] {
+        let plan = &decoder.layers[layer].mats[m];
+        &self.codes[plan.codes.clone()]
+    }
+}
+
+/// Timing/throughput sample for one layer decode.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DecodeStats {
+    /// Sum of per-worker busy time (≥ wall time × utilized cores).
+    pub busy_ns: u64,
+    /// Decompressed payload bytes produced (packed stream + norms).
+    pub payload_bytes: usize,
+}
+
+pub struct LayerDecoder {
+    reader: Arc<TqmReader>,
+    n_threads: usize,
+    layers: Vec<LayerPlan>,
+}
+
+impl LayerDecoder {
+    /// Plan the decode of every layer. `n_threads` is the worker count the
+    /// chunk fan-out targets (1 = always serial).
+    pub fn new(reader: Arc<TqmReader>, cfg: &ModelConfig, n_threads: usize) -> Result<Self> {
+        let n_threads = n_threads.max(1);
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            layers.push(Self::plan_layer(&reader, i, n_threads)?);
+        }
+        Ok(Self { reader, n_threads, layers })
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Bytes layer `i` occupies once expanded (codes + params + norms) —
+    /// same accounting as `LayerWeights::expanded_bytes`.
+    pub fn expanded_bytes(&self, i: usize) -> usize {
+        self.layers[i].expanded_bytes
+    }
+
+    fn plan_layer(reader: &TqmReader, i: usize, n_threads: usize) -> Result<LayerPlan> {
+        let rec_of = |name: &str| reader.record_index(&format!("layers.{i}.{name}"));
+        let norm_recs = [rec_of("ln1")?, rec_of("ln2")?];
+        let mut norm_lens = [0usize; 2];
+        for (k, &ri) in norm_recs.iter().enumerate() {
+            let r = reader.record_at(ri);
+            if r.kind != TensorKind::F32Raw {
+                bail!("tqm: layers.{i} norm {k} is not f32");
+            }
+            norm_lens[k] = r.raw_len / 4;
+        }
+
+        let mut mats = Vec::with_capacity(MATRIX_NAMES.len());
+        let mut chunks = Vec::new();
+        let mut packed_off = 0usize;
+        let mut codes_off = 0usize;
+        let mut expanded = norm_lens.iter().sum::<usize>() * 4;
+        for name in MATRIX_NAMES {
+            let ri = rec_of(name)?;
+            let r = reader.record_at(ri);
+            if r.kind != TensorKind::QuantU8 || r.shape.len() != 2 {
+                bail!("tqm: layers.{i}.{name} is not a quantized matrix");
+            }
+            // layer matmul weights are per-tensor or per-out-channel
+            // (axis 1); anything else would silently mis-broadcast params
+            if matches!(r.granularity, crate::quant::Granularity::PerChannel { axis } if axis != 1)
+            {
+                bail!("tqm: layers.{i}.{name} has unsupported granularity {:?}", r.granularity);
+            }
+            let n_codes = crate::tensor::numel(&r.shape);
+            let payload = reader
+                .payload_bytes(r)
+                .with_context(|| format!("planning layers.{i}.{name}"))?;
+            let mat_packed_start = packed_off;
+            if reader.is_chunked() {
+                let idx = crate::compress::stream::parse_chunk_index(payload)?;
+                anyhow::ensure!(
+                    idx.raw_len() == r.raw_len,
+                    "tqm: layers.{i}.{name} chunk raw lens sum {} != {}",
+                    idx.raw_len(),
+                    r.raw_len
+                );
+                let body_abs = r.payload_offset + idx.body_start;
+                let body_len = payload.len() - idx.body_start;
+                for (ci, &(off, raw_len)) in idx.entries.iter().enumerate() {
+                    let end = idx.chunk_end(ci, body_len);
+                    chunks.push(ChunkPlan {
+                        src: body_abs + off..body_abs + end,
+                        dst: packed_off..packed_off + raw_len,
+                    });
+                    packed_off += raw_len;
+                }
+            } else {
+                chunks.push(ChunkPlan {
+                    src: r.payload_offset..r.payload_offset + r.payload_len,
+                    dst: packed_off..packed_off + r.raw_len,
+                });
+                packed_off += r.raw_len;
+            }
+            mats.push(MatPlan {
+                rec: ri,
+                packed: mat_packed_start..packed_off,
+                codes: codes_off..codes_off + n_codes,
+            });
+            codes_off += n_codes;
+            expanded += n_codes + 4 * (r.scale.len() + r.zero.len());
+        }
+
+        // partition chunks into <= n_threads contiguous, byte-balanced
+        // groups; group packed ranges tile [0, packed_total)
+        let groups = Self::partition(&chunks, packed_off, n_threads);
+        Ok(LayerPlan {
+            mats,
+            norm_recs,
+            norm_lens,
+            chunks,
+            groups,
+            packed_total: packed_off,
+            codes_total: codes_off,
+            expanded_bytes: expanded,
+        })
+    }
+
+    fn partition(chunks: &[ChunkPlan], total: usize, n_threads: usize) -> Vec<GroupPlan> {
+        if chunks.is_empty() {
+            return Vec::new();
+        }
+        let n_groups = n_threads.clamp(1, chunks.len());
+        let target = (total + n_groups - 1) / n_groups.max(1);
+        let mut groups: Vec<GroupPlan> = Vec::with_capacity(n_groups);
+        let mut start = 0usize;
+        let mut bytes = 0usize;
+        for (ci, c) in chunks.iter().enumerate() {
+            bytes += c.dst.len();
+            let is_last = ci + 1 == chunks.len();
+            // close the group when it reached its byte target (but never
+            // leave fewer chunks than remaining groups), or when exactly
+            // one chunk per remaining group is left (forced close so every
+            // group gets work — e.g. 7 single-chunk tensors on 7 threads)
+            let groups_left = n_groups - groups.len();
+            let chunks_left = chunks.len() - (ci + 1);
+            let must_close = groups_left > 1 && chunks_left == groups_left - 1;
+            let may_close =
+                bytes >= target && groups_left > 1 && chunks_left >= groups_left - 1;
+            if is_last || must_close || may_close {
+                groups.push(GroupPlan {
+                    chunks: start..ci + 1,
+                    packed: chunks[start].dst.start..c.dst.end,
+                });
+                start = ci + 1;
+                bytes = 0;
+                if groups.len() == n_groups {
+                    break;
+                }
+            }
+        }
+        // the early-close conditions require groups_left > 1, so the final
+        // group is always closed by is_last and every chunk is assigned
+        debug_assert_eq!(start, chunks.len());
+        groups
+    }
+
+    /// Decode layer `i` into `out`, fanning out across `n_threads` scoped
+    /// workers. Zero allocations in steady state (arenas and worker
+    /// buffers are grow-only and reused).
+    pub fn decode_into(
+        &self,
+        i: usize,
+        out: &mut DecodedLayer,
+        scratch: &mut DecodeScratch,
+    ) -> Result<DecodeStats> {
+        let plan = &self.layers[i];
+        let reader = &*self.reader;
+        out.index = i;
+        grow_to(&mut out.packed, plan.packed_total, &mut out.grew);
+        grow_to(&mut out.codes, plan.codes_total, &mut out.grew);
+        let norms_total = plan.norm_lens.iter().sum::<usize>();
+        grow_to(&mut out.norms, norms_total, &mut out.grew);
+
+        // CRC pass: verify every payload this layer touches (the planner's
+        // absolute chunk ranges then slice the verified bytes directly).
+        // Deliberately re-checked every pass, matching the legacy loader:
+        // the container's torn-write/bit-flip protection stays on the
+        // serving path. crc32fast runs at multiple GB/s, well above codec
+        // decode throughput, so the serial cost ahead of the fan-out is
+        // a few percent.
+        for m in &plan.mats {
+            reader.payload_bytes(reader.record_at(m.rec))?;
+        }
+
+        // fan the chunk decodes out; groups tile the packed arena in
+        // order, so it can be carved up with split_at_mut, allocation-free
+        for s in scratch.slots.iter_mut() {
+            s.busy_ns = 0;
+            s.err = None;
+        }
+        let data = reader.bytes();
+        // serial fallback: one group, one worker slot, or a caller-supplied
+        // scratch smaller than the planned fan-out
+        if plan.groups.len() <= 1 || scratch.slots.len() < plan.groups.len() {
+            let slot = &mut scratch.slots[0];
+            let t0 = Instant::now();
+            for c in &plan.chunks {
+                reader.decode_unit_into(&data[c.src.clone()], c.dst.len(), &mut slot.buf)?;
+                out.packed[c.dst.clone()].copy_from_slice(&slot.buf);
+            }
+            slot.busy_ns = t0.elapsed().as_nanos() as u64;
+        } else {
+            // scoped threads are spawned per layer decode: simple, safe,
+            // and cheap relative to ms-scale layer decodes. If profiling
+            // ever shows spawn overhead on very small layers, the group
+            // plans are already shaped for a persistent worker pool.
+            std::thread::scope(|s| {
+                let mut rest: &mut [u8] = &mut out.packed[..plan.packed_total];
+                for (g, slot) in plan.groups.iter().zip(scratch.slots.iter_mut()) {
+                    // group packed ranges tile the arena in order (see
+                    // group_partition_tiles_arena), so peeling slices off
+                    // the front hands each worker exactly its range
+                    let (mine, tail) = rest.split_at_mut(g.packed.len());
+                    rest = tail;
+                    let chunks = &plan.chunks[g.chunks.clone()];
+                    let base = g.packed.start;
+                    s.spawn(move || {
+                        let t0 = Instant::now();
+                        for c in chunks {
+                            match reader.decode_unit_into(
+                                &data[c.src.clone()],
+                                c.dst.len(),
+                                &mut slot.buf,
+                            ) {
+                                Ok(()) => {
+                                    mine[c.dst.start - base..c.dst.end - base]
+                                        .copy_from_slice(&slot.buf);
+                                }
+                                Err(e) => {
+                                    slot.err = Some(e);
+                                    break;
+                                }
+                            }
+                        }
+                        slot.busy_ns = t0.elapsed().as_nanos() as u64;
+                    });
+                }
+            });
+            if let Some(e) = scratch.slots.iter_mut().find_map(|s| s.err.take()) {
+                return Err(e).with_context(|| format!("decoding layer {i}"));
+            }
+        }
+
+        // expand sub-8-bit streams to one byte per code (8-bit is a copy)
+        for m in &plan.mats {
+            let r = reader.record_at(m.rec);
+            let bits = r.bits.storage_bits();
+            let src = &out.packed[m.packed.clone()];
+            let dst = &mut out.codes[m.codes.clone()];
+            if bits < 8 {
+                packing::unpack_into(src, bits, dst);
+            } else {
+                dst.copy_from_slice(src);
+            }
+        }
+
+        // norm vectors: raw little-endian f32 payloads
+        let mut off = 0usize;
+        for (k, &ri) in plan.norm_recs.iter().enumerate() {
+            let r = reader.record_at(ri);
+            let p = reader.payload_bytes(r)?;
+            let n = plan.norm_lens[k];
+            for (dst, src) in out.norms[off..off + n].iter_mut().zip(p.chunks_exact(4)) {
+                *dst = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
+            }
+            off += n;
+        }
+
+        let busy_ns = scratch.slots.iter().map(|s| s.busy_ns).sum();
+        Ok(DecodeStats { busy_ns, payload_bytes: plan.packed_total + norms_total * 4 })
+    }
+
+    /// Flatten a decoded layer into the stage-argument literal list —
+    /// identical order and contents to `LayerWeights::to_literals`:
+    /// ln1, (wq,s,z), (wk,..), (wv,..), (wo,..), ln2, (w1,..), (w3,..),
+    /// (w2,..). Per-tensor params are broadcast through the layer's
+    /// reusable staging buffer, so no per-tensor Vec is allocated here
+    /// either (the xla literals themselves own fresh storage, of course).
+    pub fn to_literals(&self, layer: &mut DecodedLayer) -> Result<Vec<xla::Literal>> {
+        let plan = &self.layers[layer.index];
+        let reader = &*self.reader;
+        let mut out = Vec::with_capacity(2 + plan.mats.len() * 3);
+
+        let norm_lit = |layer: &DecodedLayer, k: usize| -> Result<xla::Literal> {
+            let start: usize = plan.norm_lens[..k].iter().sum();
+            let n = plan.norm_lens[k];
+            let r = reader.record_at(plan.norm_recs[k]);
+            literal::f32_literal(&r.shape, &layer.norms[start..start + n])
+        };
+
+        let mat_lits =
+            |layer: &mut DecodedLayer, m: &MatPlan, out: &mut Vec<xla::Literal>| -> Result<()> {
+                let r = reader.record_at(m.rec);
+                let ch = r.shape[1];
+                out.push(literal::u8_literal(&r.shape, &layer.codes[m.codes.clone()])?);
+                if r.scale.len() == 1 {
+                    grow_to(&mut layer.params, ch, &mut layer.grew);
+                    layer.params[..ch].fill(r.scale[0]);
+                    out.push(literal::f32_literal(&[ch], &layer.params[..ch])?);
+                    layer.params[..ch].fill(r.zero[0]);
+                    out.push(literal::f32_literal(&[ch], &layer.params[..ch])?);
+                } else {
+                    anyhow::ensure!(
+                        r.scale.len() == ch,
+                        "tqm: {:?} scale count {} != out channels {ch}",
+                        r.name,
+                        r.scale.len()
+                    );
+                    out.push(literal::f32_literal(&[ch], &r.scale)?);
+                    out.push(literal::f32_literal(&[ch], &r.zero)?);
+                }
+                Ok(())
+            };
+
+        out.push(norm_lit(layer, 0)?);
+        for mi in 0..4 {
+            let m = plan.mats[mi].clone();
+            mat_lits(layer, &m, &mut out)?;
+        }
+        out.push(norm_lit(layer, 1)?);
+        for mi in 4..plan.mats.len() {
+            let m = plan.mats[mi].clone();
+            mat_lits(layer, &m, &mut out)?;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CodecId;
+    use crate::config::QuantizeOptions;
+    use crate::model::tests::{fake_checkpoint, tiny_cfg};
+    use crate::model::{quantize_checkpoint, LayerWeights};
+    use crate::util::TempDir;
+
+    fn build_reader(codec: CodecId, chunk_len: usize, per_channel: bool) -> Arc<TqmReader> {
+        let cfg = tiny_cfg();
+        let ckpt = fake_checkpoint(&cfg, 11);
+        let opts = QuantizeOptions { per_channel, ..Default::default() };
+        let w = quantize_checkpoint(&cfg, &ckpt, &opts, codec, None, "unit")
+            .unwrap()
+            .with_chunk_len(chunk_len);
+        let dir = TempDir::new().unwrap();
+        let p = dir.join("m.tqm");
+        w.write(&p).unwrap();
+        Arc::new(TqmReader::open(&p).unwrap())
+    }
+
+    #[test]
+    fn parallel_matches_serial_for_every_codec() {
+        // tiny chunk_len forces multi-chunk payloads; the fan-out decode
+        // must reproduce the legacy single-threaded path byte for byte
+        let cfg = tiny_cfg();
+        for codec in crate::compress::all_codec_ids() {
+            let reader = build_reader(codec, 97, true);
+            let serial = LayerDecoder::new(reader.clone(), &cfg, 1).unwrap();
+            let parallel = LayerDecoder::new(reader.clone(), &cfg, 4).unwrap();
+            for i in 0..cfg.n_layers {
+                let legacy = LayerWeights::load(&reader, i).unwrap();
+                let mut a = DecodedLayer::new();
+                let mut b = DecodedLayer::new();
+                let mut sa = DecodeScratch::new(1);
+                let mut sb = DecodeScratch::new(4);
+                serial.decode_into(i, &mut a, &mut sa).unwrap();
+                parallel.decode_into(i, &mut b, &mut sb).unwrap();
+                assert_eq!(a.codes, b.codes, "{codec:?} layer {i}");
+                assert_eq!(a.norms, b.norms, "{codec:?} layer {i}");
+                // and both match the legacy per-tensor load
+                let legacy_mats =
+                    [&legacy.wq, &legacy.wk, &legacy.wv, &legacy.wo, &legacy.w1, &legacy.w3, &legacy.w2];
+                for (mi, q) in legacy_mats.iter().enumerate() {
+                    assert_eq!(
+                        a.codes_of(&serial, i, mi),
+                        q.codes.data.as_slice(),
+                        "{codec:?} layer {i} mat {mi}"
+                    );
+                }
+                assert_eq!(
+                    serial.expanded_bytes(i),
+                    legacy.expanded_bytes(),
+                    "{codec:?} layer {i} expanded accounting"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn steady_state_decode_is_allocation_free() {
+        // after one warmup pass over all layers, further passes must not
+        // grow any arena or worker buffer — the zero-alloc criterion
+        let cfg = tiny_cfg();
+        let reader = build_reader(CodecId::FreqSeqPacked, 64, true);
+        let dec = LayerDecoder::new(reader, &cfg, 4).unwrap();
+        let mut layer = DecodedLayer::new();
+        let mut scratch = DecodeScratch::new(4);
+        for i in 0..cfg.n_layers {
+            dec.decode_into(i, &mut layer, &mut scratch).unwrap();
+            let _ = dec.to_literals(&mut layer).unwrap();
+        }
+        let arena_growth = layer.growth_count();
+        let scratch_cap = scratch.capacity_bytes();
+        assert!(arena_growth > 0, "warmup must have grown the arenas");
+        for _pass in 0..3 {
+            for i in 0..cfg.n_layers {
+                dec.decode_into(i, &mut layer, &mut scratch).unwrap();
+                let _ = dec.to_literals(&mut layer).unwrap();
+            }
+        }
+        assert_eq!(layer.growth_count(), arena_growth, "steady-state arenas reallocated");
+        assert_eq!(scratch.capacity_bytes(), scratch_cap, "worker buffers grew in steady state");
+    }
+
+    #[test]
+    fn literals_match_legacy_layer_weights() {
+        let cfg = tiny_cfg();
+        for per_channel in [false, true] {
+            let reader = build_reader(CodecId::Huffman, 128, per_channel);
+            let dec = LayerDecoder::new(reader.clone(), &cfg, 2).unwrap();
+            let mut layer = DecodedLayer::new();
+            let mut scratch = DecodeScratch::new(2);
+            for i in 0..cfg.n_layers {
+                dec.decode_into(i, &mut layer, &mut scratch).unwrap();
+                let fast = dec.to_literals(&mut layer).unwrap();
+                let legacy = LayerWeights::load(&reader, i).unwrap().to_literals(&cfg).unwrap();
+                assert_eq!(fast.len(), legacy.len());
+                for (k, (f, l)) in fast.iter().zip(&legacy).enumerate() {
+                    assert_eq!(
+                        literal::literal_shape(f).unwrap(),
+                        literal::literal_shape(l).unwrap(),
+                        "arg {k} shape (per_channel={per_channel})"
+                    );
+                    let (ft, lt) = (f.ty().unwrap(), l.ty().unwrap());
+                    assert_eq!(ft, lt, "arg {k} dtype");
+                    if ft == xla::ElementType::U8 {
+                        assert_eq!(
+                            f.to_vec::<u8>().unwrap(),
+                            l.to_vec::<u8>().unwrap(),
+                            "arg {k} codes"
+                        );
+                    } else {
+                        assert_eq!(
+                            f.to_vec::<f32>().unwrap(),
+                            l.to_vec::<f32>().unwrap(),
+                            "arg {k} f32"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_payload_is_rejected_not_panicking() {
+        let cfg = tiny_cfg();
+        let ckpt = fake_checkpoint(&cfg, 12);
+        let opts = QuantizeOptions { per_channel: true, ..Default::default() };
+        let w = quantize_checkpoint(&cfg, &ckpt, &opts, CodecId::Lzw, None, "unit")
+            .unwrap()
+            .with_chunk_len(80);
+        let dir = TempDir::new().unwrap();
+        let p = dir.join("m.tqm");
+        w.write(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // poison a byte in the middle of a layer matrix payload
+        let clean = TqmReader::from_bytes(bytes.clone()).unwrap();
+        let rec = clean.record("layers.1.w2").unwrap();
+        let poison_at = rec.payload_offset + rec.payload_len / 2;
+        drop(clean);
+        bytes[poison_at] ^= 0xA5;
+        let reader = Arc::new(TqmReader::from_bytes(bytes).unwrap());
+        // the CRC fails either at plan time or at decode time — both are
+        // errors, never a panic or silent corruption
+        match LayerDecoder::new(reader, &cfg, 4) {
+            Err(_) => {}
+            Ok(dec) => {
+                let mut layer = DecodedLayer::new();
+                let mut scratch = DecodeScratch::new(4);
+                let mut saw_err = false;
+                for i in 0..cfg.n_layers {
+                    if dec.decode_into(i, &mut layer, &mut scratch).is_err() {
+                        saw_err = true;
+                    }
+                }
+                assert!(saw_err, "corruption went unnoticed");
+            }
+        }
+    }
+
+    #[test]
+    fn group_partition_tiles_arena() {
+        let chunks: Vec<ChunkPlan> = [10usize, 30, 5, 25, 40, 1, 9]
+            .iter()
+            .scan(0usize, |acc, &len| {
+                let c = ChunkPlan { src: 0..0, dst: *acc..*acc + len };
+                *acc += len;
+                Some(c)
+            })
+            .collect();
+        let total = 120;
+        for n_threads in 1..=9 {
+            let groups = LayerDecoder::partition(&chunks, total, n_threads);
+            assert!(!groups.is_empty());
+            assert!(groups.len() <= n_threads.max(1));
+            assert_eq!(groups[0].chunks.start, 0);
+            assert_eq!(groups[0].packed.start, 0);
+            assert_eq!(groups.last().unwrap().chunks.end, chunks.len());
+            assert_eq!(groups.last().unwrap().packed.end, total);
+            for w in groups.windows(2) {
+                assert_eq!(w[0].chunks.end, w[1].chunks.start, "n={n_threads}");
+                assert_eq!(w[0].packed.end, w[1].packed.start, "n={n_threads}");
+            }
+        }
+    }
+}

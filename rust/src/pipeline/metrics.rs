@@ -14,6 +14,12 @@ pub struct PipelineMetrics {
     decompress_ns: AtomicU64,
     decompress_bytes: AtomicU64,
     decompress_count: AtomicU64,
+    /// Sum of per-worker busy time inside the parallel layer decode —
+    /// `decode_busy_ns / decompress_ns` is the mean number of cores the
+    /// decode kept busy.
+    decode_busy_ns: AtomicU64,
+    /// Decode worker threads the engine was configured with.
+    decode_threads: AtomicUsize,
     exec_ns: AtomicU64,
     exec_count: AtomicU64,
     lru_hits: AtomicU64,
@@ -27,6 +33,32 @@ impl PipelineMetrics {
         self.decompress_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
         self.decompress_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         self.decompress_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one multi-core layer decode: wall time, expanded bytes, and
+    /// the summed busy time of the decode workers.
+    pub fn record_decode(&self, wall: Duration, bytes: usize, busy_ns: u64) {
+        self.record_decompress(wall, bytes);
+        self.decode_busy_ns.fetch_add(busy_ns, Ordering::Relaxed);
+    }
+
+    pub fn set_decode_threads(&self, n: usize) {
+        self.decode_threads.store(n, Ordering::Relaxed);
+    }
+
+    pub fn decode_threads(&self) -> usize {
+        self.decode_threads.load(Ordering::Relaxed)
+    }
+
+    /// Mean cores kept busy by the layer decode (busy time / wall time);
+    /// 0.0 until a decode has been recorded. A value near
+    /// `decode_threads()` means the chunk fan-out saturated its workers.
+    pub fn decode_utilization(&self) -> f64 {
+        let wall = self.decompress_ns.load(Ordering::Relaxed);
+        if wall == 0 {
+            return 0.0;
+        }
+        self.decode_busy_ns.load(Ordering::Relaxed) as f64 / wall as f64
     }
 
     pub fn record_exec(&self, d: Duration) {
@@ -93,10 +125,12 @@ impl PipelineMetrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "decompress: {} calls, {:.1} ms total ({:.0} MB/s); exec: {} calls, {:.1} ms; peak weights: {:.2} MB; lru hits: {}",
+            "decompress: {} calls, {:.1} ms total ({:.0} MB/s, {:.1}/{} cores busy); exec: {} calls, {:.1} ms; peak weights: {:.2} MB; lru hits: {}",
             self.decompress_count(),
             self.decompress_secs() * 1e3,
             self.decompress_mb_s(),
+            self.decode_utilization(),
+            self.decode_threads().max(1),
             self.exec_count.load(Ordering::Relaxed),
             self.exec_secs() * 1e3,
             self.peak_bytes() as f64 / 1e6,
@@ -108,6 +142,7 @@ impl PipelineMetrics {
         self.decompress_ns.store(0, Ordering::Relaxed);
         self.decompress_bytes.store(0, Ordering::Relaxed);
         self.decompress_count.store(0, Ordering::Relaxed);
+        self.decode_busy_ns.store(0, Ordering::Relaxed);
         self.exec_ns.store(0, Ordering::Relaxed);
         self.exec_count.store(0, Ordering::Relaxed);
     }
@@ -131,5 +166,19 @@ mod tests {
         m.reset_timers();
         assert_eq!(m.decompress_count(), 0);
         assert_eq!(m.peak_bytes(), 150, "residency survives timer reset");
+    }
+
+    #[test]
+    fn decode_utilization() {
+        let m = PipelineMetrics::default();
+        m.set_decode_threads(4);
+        assert_eq!(m.decode_threads(), 4);
+        assert_eq!(m.decode_utilization(), 0.0, "no samples yet");
+        // 10 ms wall, 35 ms of summed worker busy time -> 3.5 cores
+        m.record_decode(Duration::from_millis(10), 1_000, 35_000_000);
+        let u = m.decode_utilization();
+        assert!((u - 3.5).abs() < 0.01, "utilization {u}");
+        m.reset_timers();
+        assert_eq!(m.decode_utilization(), 0.0, "busy time resets with timers");
     }
 }

@@ -6,17 +6,25 @@
 //! weights just in time:
 //!
 //! * [`crate::config::Residency::StreamPerLayer`] — decompress layer i,
-//!   execute, drop (the paper's "Compressed" rows). With `prefetch`, a
-//!   worker thread decompresses layer i+1 while layer i executes, hiding
-//!   most of the decompression latency behind compute.
+//!   execute, drop (the paper's "Compressed" rows). The decode runs on
+//!   the multi-core fast path in [`decode`]: a v2 TQM container frames
+//!   each payload as independently-decodable chunks, and the engine fans
+//!   a layer's chunks out over `ServeOptions::n_threads` scoped workers
+//!   into reusable arenas (zero steady-state allocations). With
+//!   `ServeOptions::prefetch_depth > 0`, a pipeline worker decodes up to
+//!   `depth` layers ahead while the current layer executes, hiding
+//!   decompression latency behind compute; decoded-layer buffers recycle
+//!   through a pool, so the pipeline allocates nothing per pass either.
 //! * [`crate::config::Residency::AlwaysResident`] — expand everything once
 //!   (the paper's "Quantized" baseline).
 //! * [`crate::config::Residency::Lru(n)`] — keep n expanded layers cached
 //!   (the middle ground the paper's future-work section gestures at).
 //!
 //! The engine tracks peak expanded-weight residency so the E8 bench can
-//! plot memory-vs-latency across policies.
+//! plot memory-vs-latency across policies, plus decode throughput and
+//! worker utilization ([`PipelineMetrics::decode_utilization`]).
 
+pub mod decode;
 pub mod metrics;
 
 use std::sync::mpsc;
@@ -30,7 +38,9 @@ use crate::model::{LayerWeights, ResidentWeights, WeightSource};
 use crate::quant::QuantizedTensor;
 use crate::runtime::{literal, Runtime};
 use crate::tensor::Tensor;
+use crate::xla;
 
+pub use decode::{DecodeScratch, DecodedLayer, LayerDecoder};
 pub use metrics::PipelineMetrics;
 
 /// Host-side per-layer KV cache for one request (B dim stripped:
@@ -79,8 +89,18 @@ pub struct Engine {
     /// §Perf: per-layer weight literals for resident / f32 modes.
     layer_lits: Option<Vec<Vec<xla::Literal>>>,
     pub residency: Residency,
-    pub prefetch: bool,
+    /// Decode→execute pipeline depth (0 = decode inline).
+    pub prefetch_depth: usize,
     pub metrics: PipelineMetrics,
+    /// The multi-core streaming decode fast path (present whenever the
+    /// engine serves from a compressed container).
+    decoder: Option<LayerDecoder>,
+    /// Recycled [`DecodedLayer`] buffers — survive across passes so the
+    /// steady-state streaming loop allocates nothing.
+    decode_pool: std::sync::Mutex<Vec<DecodedLayer>>,
+    /// Worker scratch for the chunk fan-out (one set per engine; a pass
+    /// holds the lock for its duration).
+    decode_scratch: std::sync::Mutex<DecodeScratch>,
     /// LRU cache of expanded layers (index -> weights), used by Lru(n).
     lru: std::sync::Mutex<LruLayers>,
 }
@@ -148,6 +168,17 @@ impl Engine {
             Residency::Lru(n) => n,
             _ => 0,
         };
+        let n_threads = opts.resolved_threads();
+        // the decode fast path only serves StreamPerLayer; Lru/resident
+        // engines keep the owned LayerWeights path, so skip the planning
+        // (and its per-payload CRC pass) they would never use
+        let decoder = match (&reader, residency) {
+            (Some(r), Residency::StreamPerLayer) => {
+                Some(LayerDecoder::new(r.clone(), &rt.manifest.config, n_threads)?)
+            }
+            _ => None,
+        };
+        metrics.set_decode_threads(n_threads);
         let mut engine = Self {
             rt,
             reader,
@@ -158,8 +189,11 @@ impl Engine {
             final_lits: Vec::new(),
             layer_lits: None,
             residency,
-            prefetch: opts.prefetch,
+            prefetch_depth: opts.prefetch_depth,
             metrics,
+            decoder,
+            decode_pool: std::sync::Mutex::new(Vec::new()),
+            decode_scratch: std::sync::Mutex::new(DecodeScratch::new(n_threads)),
             lru: std::sync::Mutex::new(LruLayers { cap: lru_cap, entries: Vec::new() }),
         };
         engine.embed_lits = engine.build_embed_literals()?;
@@ -191,8 +225,11 @@ impl Engine {
             final_lits: Vec::new(),
             layer_lits: None,
             residency: Residency::AlwaysResident,
-            prefetch: false,
+            prefetch_depth: 0,
             metrics: PipelineMetrics::default(),
+            decoder: None,
+            decode_pool: std::sync::Mutex::new(Vec::new()),
+            decode_scratch: std::sync::Mutex::new(DecodeScratch::new(1)),
             lru: std::sync::Mutex::new(LruLayers::default()),
         };
         engine.embed_lits = engine.build_embed_literals()?;
@@ -278,53 +315,118 @@ impl Engine {
         Ok(w)
     }
 
-    /// Run `f` for every layer in order, materializing weights according
-    /// to the residency policy, optionally prefetching layer i+1 on a
-    /// worker thread while layer i executes.
+    /// Run `f` for every layer in order with that layer's stage-argument
+    /// literals, materializing weights according to the residency policy.
+    ///
+    /// `StreamPerLayer` takes the multi-core decode fast path: layers are
+    /// decoded into recycled [`DecodedLayer`] arenas (chunk fan-out across
+    /// `n_threads` workers), either inline (`prefetch_depth == 0`) or on a
+    /// pipeline worker running up to `prefetch_depth` layers ahead of
+    /// execution. `Lru` keeps the owned `LayerWeights` path so cached
+    /// layers stay materialized.
     fn walk_layers<F>(&self, mut f: F) -> Result<()>
     where
-        F: FnMut(usize, &LayerWeights) -> Result<()>,
+        F: FnMut(usize, &[xla::Literal]) -> Result<()>,
     {
         let n = self.cfg().n_layers;
         let stream = matches!(self.residency, Residency::StreamPerLayer);
-        if stream && self.prefetch {
-            let reader = self.reader.as_ref().expect("stream requires reader").clone();
-            let (tx, rx) = mpsc::sync_channel::<Result<LayerWeights>>(1);
-            std::thread::scope(|scope| -> Result<()> {
-                let metrics = &self.metrics;
-                scope.spawn(move || {
-                    let mut scratch = Vec::new();
-                    for i in 0..n {
-                        let t0 = std::time::Instant::now();
-                        let res = LayerWeights::load_into(&reader, i, &mut scratch);
-                        if let Ok(w) = &res {
-                            metrics.record_decompress(t0.elapsed(), w.expanded_bytes());
-                        }
-                        if tx.send(res).is_err() {
-                            return; // consumer bailed
-                        }
-                    }
-                });
-                for i in 0..n {
-                    let w = rx
-                        .recv()
-                        .map_err(|_| anyhow::anyhow!("prefetch thread died"))??;
-                    // streamed + the one being prefetched can coexist
-                    self.metrics.observe_transient(w.expanded_bytes() * 2);
-                    f(i, &w)?;
-                }
-                Ok(())
-            })?;
-        } else {
+        if !stream {
+            // Lru (resident/f32 never reach walk_layers — they use the
+            // prebuilt layer_lits cache)
             for i in 0..n {
                 let w = self.layer_arc(i)?;
-                if stream {
-                    self.metrics.observe_transient(w.expanded_bytes());
-                }
-                f(i, &w)?;
+                let lits = w.to_literals(self.cfg())?;
+                f(i, &lits)?;
             }
+            return Ok(());
         }
-        Ok(())
+
+        let decoder = self.decoder.as_ref().expect("stream requires a decoder");
+        let mut scratch = self.decode_scratch.lock().unwrap();
+        if self.prefetch_depth == 0 {
+            let mut buf = self.decode_pool.lock().unwrap().pop().unwrap_or_default();
+            for i in 0..n {
+                let t0 = std::time::Instant::now();
+                let stats = decoder.decode_into(i, &mut buf, &mut scratch)?;
+                self.metrics
+                    .record_decode(t0.elapsed(), stats.payload_bytes, stats.busy_ns);
+                self.metrics.observe_transient(decoder.expanded_bytes(i));
+                let lits = decoder.to_literals(&mut buf)?;
+                f(i, &lits)?;
+            }
+            self.decode_pool.lock().unwrap().push(buf);
+            return Ok(());
+        }
+
+        // pipelined: a worker decodes up to `depth` layers ahead; decoded
+        // buffers recycle through a free channel so the pass allocates
+        // nothing once the pool is warm. Channels are created inside the
+        // scope so an early error drops the receivers before the scope
+        // joins the worker (no send-deadlock on the error path).
+        let depth = self.prefetch_depth;
+        let metrics = &self.metrics;
+        let scratch = &mut *scratch;
+        std::thread::scope(|scope| -> Result<()> {
+            let (full_tx, full_rx) = mpsc::sync_channel::<Result<DecodedLayer>>(depth);
+            let (free_tx, free_rx) = mpsc::channel::<DecodedLayer>();
+            {
+                let mut pool = self.decode_pool.lock().unwrap();
+                for _ in 0..=depth {
+                    let _ = free_tx.send(pool.pop().unwrap_or_default());
+                }
+            }
+            let worker = scope.spawn(move || {
+                for i in 0..n {
+                    let mut buf = match free_rx.recv() {
+                        Ok(b) => b,
+                        Err(_) => return free_rx, // consumer bailed
+                    };
+                    let t0 = std::time::Instant::now();
+                    match decoder.decode_into(i, &mut buf, scratch) {
+                        Ok(stats) => {
+                            metrics.record_decode(
+                                t0.elapsed(),
+                                stats.payload_bytes,
+                                stats.busy_ns,
+                            );
+                            if full_tx.send(Ok(buf)).is_err() {
+                                return free_rx; // consumer bailed
+                            }
+                        }
+                        Err(e) => {
+                            let _ = full_tx.send(Err(e));
+                            return free_rx;
+                        }
+                    }
+                }
+                free_rx
+            });
+            let run = (|| -> Result<()> {
+                for i in 0..n {
+                    let mut buf = full_rx
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("prefetch pipeline died"))??;
+                    // executing layer + up to `depth` decoded ahead coexist
+                    self.metrics
+                        .observe_transient(decoder.expanded_bytes(i) * (depth + 1));
+                    let lits = decoder.to_literals(&mut buf)?;
+                    f(i, &lits)?;
+                    let _ = free_tx.send(buf);
+                }
+                Ok(())
+            })();
+            // unblock the worker whatever happened, then reclaim buffers
+            drop(full_rx);
+            drop(free_tx);
+            let free_rx = worker
+                .join()
+                .map_err(|_| anyhow::anyhow!("prefetch worker panicked"))?;
+            let mut pool = self.decode_pool.lock().unwrap();
+            while let Ok(buf) = free_rx.try_recv() {
+                pool.push(buf);
+            }
+            run
+        })
     }
 
     // -- stage plumbing --------------------------------------------------------
@@ -438,9 +540,8 @@ impl Engine {
                 out_caches.push(lc);
             }
         } else {
-            self.walk_layers(|i, w| {
-                let wlits = w.to_literals(cfg)?;
-                let (h2, lc) = self.exec_block(b, t, i, &h, init_caches, pos, &wlits)?;
+            self.walk_layers(|i, wlits| {
+                let (h2, lc) = self.exec_block(b, t, i, &h, init_caches, pos, wlits)?;
                 h = h2;
                 out_caches.push(lc);
                 Ok(())
@@ -582,6 +683,10 @@ mod tests {
     use crate::util::TempDir;
 
     fn build_engine(residency: Residency, prefetch: bool) -> Option<(Engine, TempDir)> {
+        if !crate::runtime::backend_available() {
+            eprintln!("skipping: pjrt backend not compiled in");
+            return None;
+        }
         let root = default_artifacts_root();
         if !root.join("tiny/manifest.json").exists() {
             eprintln!("skipping: artifacts not built");
@@ -608,7 +713,14 @@ mod tests {
             }
             _ => WeightSource::open_compressed(&p).unwrap(),
         };
-        let sopts = ServeOptions { residency, prefetch, ..Default::default() };
+        // prefetch=true exercises a depth-2 pipeline with multi-threaded
+        // chunk decode; prefetch=false is the inline serial path
+        let sopts = ServeOptions {
+            residency,
+            prefetch_depth: if prefetch { 2 } else { 0 },
+            n_threads: if prefetch { 0 } else { 1 },
+            ..Default::default()
+        };
         Some((Engine::new(rt, source, &sopts).unwrap(), dir))
     }
 

@@ -1,11 +1,24 @@
-//! Bit-packing for sub-8-bit code storage (S2).
+//! Bit-packing for sub-8-bit code storage (S2), plus the fused
+//! unpack+dequantize kernel the serving fast path uses.
 //!
 //! The unpacked `QuantizedTensor` keeps one byte per code for simplicity
 //! and because the stage HLOs take u8 inputs; this module provides the
 //! dense storage layout used by the TQM container for the §3 bit-width
-//! ablation (ternary/2/4/6-bit checkpoints) — LSB-first within each byte,
-//! codes never straddle... they DO straddle byte boundaries for 6-bit:
-//! a plain little-endian bit stream.
+//! ablation (ternary/2/4/6-bit checkpoints). The layout is a plain
+//! little-endian bit stream — LSB-first within each byte, and codes MAY
+//! straddle byte boundaries (6-bit codes necessarily do; 1/2/4/8-bit
+//! widths happen to divide 8 so theirs never straddle).
+//!
+//! Two read paths exist on purpose:
+//!
+//! * [`unpack`]/[`unpack_into`] — codes back to one-byte-per-code, the
+//!   form the stage HLOs consume;
+//! * [`unpack_dequant_into`] (and its per-channel variants) — a single
+//!   fused pass from the packed bit-stream straight to f32, replacing the
+//!   old unpack-then-dequantize double pass for host-side consumers. The
+//!   arithmetic is bit-identical to `QuantizedTensor::dequantize`
+//!   (`(code - zero) * scale` in f32), which a property test enforces for
+//!   every width.
 
 /// Pack `codes` (values < 2^bits) into a little-endian bit stream.
 pub fn pack(codes: &[u8], bits: u32) -> Vec<u8> {
@@ -26,31 +39,122 @@ pub fn pack(codes: &[u8], bits: u32) -> Vec<u8> {
     out
 }
 
-/// Unpack a little-endian bit stream into `n` codes of `bits` width.
-pub fn unpack(packed: &[u8], bits: u32, n: usize) -> Vec<u8> {
+/// Read the code at bit position `bitpos` from a little-endian bit stream.
+#[inline(always)]
+fn code_at(packed: &[u8], bitpos: usize, bits: u32, mask: u16) -> u8 {
+    let byte = bitpos / 8;
+    let off = bitpos % 8;
+    let lo = packed[byte] as u16 >> off;
+    let hi = if off + bits as usize > 8 {
+        (packed[byte + 1] as u16) << (8 - off)
+    } else {
+        0
+    };
+    ((lo | hi) & mask) as u8
+}
+
+#[inline(always)]
+fn width_mask(bits: u32) -> u16 {
+    if bits == 8 {
+        0xFF
+    } else {
+        (1u16 << bits) - 1
+    }
+}
+
+/// Unpack a little-endian bit stream into `out.len()` codes of `bits`
+/// width, allocation-free (the scratch-reuse form of [`unpack`]).
+pub fn unpack_into(packed: &[u8], bits: u32, out: &mut [u8]) {
     assert!((1..=8).contains(&bits));
-    let mask = if bits == 8 { 0xFFu16 } else { (1u16 << bits) - 1 };
-    let mut out = Vec::with_capacity(n);
+    if bits == 8 {
+        out.copy_from_slice(&packed[..out.len()]);
+        return;
+    }
+    let mask = width_mask(bits);
     let mut bitpos = 0usize;
-    for _ in 0..n {
-        let byte = bitpos / 8;
-        let off = bitpos % 8;
-        let lo = packed[byte] as u16 >> off;
-        let hi = if off + bits as usize > 8 {
-            (packed[byte + 1] as u16) << (8 - off)
-        } else {
-            0
-        };
-        out.push(((lo | hi) & mask) as u8);
+    for o in out.iter_mut() {
+        *o = code_at(packed, bitpos, bits, mask);
         bitpos += bits as usize;
     }
+}
+
+/// Unpack a little-endian bit stream into `n` codes of `bits` width.
+pub fn unpack(packed: &[u8], bits: u32, n: usize) -> Vec<u8> {
+    let mut out = vec![0u8; n];
+    unpack_into(packed, bits, &mut out);
     out
+}
+
+/// Fused unpack + dequantize, per-tensor parameters: emit
+/// `(code - zero) * scale` f32s straight from the packed bit-stream,
+/// one pass, no intermediate code buffer.
+pub fn unpack_dequant_into(packed: &[u8], bits: u32, scale: f32, zero: f32, out: &mut [f32]) {
+    assert!((1..=8).contains(&bits));
+    let mask = width_mask(bits);
+    let mut bitpos = 0usize;
+    for o in out.iter_mut() {
+        let c = code_at(packed, bitpos, bits, mask);
+        *o = (c as f32 - zero) * scale;
+        bitpos += bits as usize;
+    }
+}
+
+/// Fused unpack + dequantize with per-out-channel (axis 1) parameters:
+/// element (r, c) of a row-major `[rows, cols]` tensor uses
+/// `scale[c]`/`zero[c]` — the matmul-weight layout.
+pub fn unpack_dequant_cols_into(
+    packed: &[u8],
+    bits: u32,
+    cols: usize,
+    scale: &[f32],
+    zero: &[f32],
+    out: &mut [f32],
+) {
+    assert!((1..=8).contains(&bits));
+    assert_eq!(scale.len(), cols);
+    assert_eq!(zero.len(), cols);
+    assert!(cols > 0 && out.len() % cols == 0);
+    let mask = width_mask(bits);
+    let mut bitpos = 0usize;
+    for (i, o) in out.iter_mut().enumerate() {
+        let c = i % cols;
+        let code = code_at(packed, bitpos, bits, mask);
+        *o = (code as f32 - zero[c]) * scale[c];
+        bitpos += bits as usize;
+    }
+}
+
+/// Fused unpack + dequantize with per-row (axis 0) parameters: element
+/// (r, c) uses `scale[r]`/`zero[r]` — the embedding-table layout.
+pub fn unpack_dequant_rows_into(
+    packed: &[u8],
+    bits: u32,
+    cols: usize,
+    scale: &[f32],
+    zero: &[f32],
+    out: &mut [f32],
+) {
+    assert!((1..=8).contains(&bits));
+    assert!(cols > 0 && out.len() % cols == 0);
+    let rows = out.len() / cols;
+    assert_eq!(scale.len(), rows);
+    assert_eq!(zero.len(), rows);
+    let mask = width_mask(bits);
+    let mut bitpos = 0usize;
+    for (r, row) in out.chunks_mut(cols).enumerate() {
+        let (s, z) = (scale[r], zero[r]);
+        for o in row.iter_mut() {
+            let code = code_at(packed, bitpos, bits, mask);
+            *o = (code as f32 - z) * s;
+            bitpos += bits as usize;
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    
+
     #[test]
     fn roundtrip_all_widths() {
         let mut rng = crate::util::Rng::seed_from_u64(0);
@@ -61,6 +165,9 @@ mod tests {
                 let packed = pack(&codes, bits);
                 assert_eq!(packed.len(), (n * bits as usize + 7) / 8);
                 assert_eq!(unpack(&packed, bits, n), codes, "bits={bits} n={n}");
+                let mut into = vec![0u8; n];
+                unpack_into(&packed, bits, &mut into);
+                assert_eq!(into, codes, "unpack_into bits={bits} n={n}");
             }
         }
     }
@@ -85,5 +192,78 @@ mod tests {
         let codes = vec![1u8; 800];
         assert_eq!(pack(&codes, 2).len(), 200);
         assert_eq!(pack(&codes, 4).len(), 400);
+    }
+
+    /// Reference two-step path the fused kernels must match bit-exactly.
+    fn two_step(packed: &[u8], bits: u32, n: usize, sz: impl Fn(usize) -> (f32, f32)) -> Vec<f32> {
+        unpack(packed, bits, n)
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                let (s, z) = sz(i);
+                (c as f32 - z) * s
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fused_matches_two_step_all_widths() {
+        // property test: for widths 1..=8 and awkward lengths, the fused
+        // kernel equals unpack-then-dequantize bit for bit (f32 equality,
+        // not approximate)
+        let mut rng = crate::util::Rng::seed_from_u64(3);
+        for bits in 1..=8u32 {
+            for n in [1usize, 7, 64, 255, 1000] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| rng.gen_range(0, (1u16 << bits) as u64) as u8).collect();
+                let packed = pack(&codes, bits);
+                let (scale, zero) = (0.0173f32, 5.0f32);
+                let mut fused = vec![0.0f32; n];
+                unpack_dequant_into(&packed, bits, scale, zero, &mut fused);
+                let reference = two_step(&packed, bits, n, |_| (scale, zero));
+                assert_eq!(fused, reference, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_per_channel_matches_two_step() {
+        let mut rng = crate::util::Rng::seed_from_u64(4);
+        for bits in [2u32, 4, 6, 8] {
+            let (rows, cols) = (24usize, 20usize);
+            let n = rows * cols;
+            let codes: Vec<u8> =
+                (0..n).map(|_| rng.gen_range(0, (1u16 << bits) as u64) as u8).collect();
+            let packed = pack(&codes, bits);
+            let cs: Vec<f32> = (0..cols).map(|c| 0.001 + c as f32 * 0.01).collect();
+            let cz: Vec<f32> = (0..cols).map(|c| (c % 5) as f32).collect();
+            let mut fused = vec![0.0f32; n];
+            unpack_dequant_cols_into(&packed, bits, cols, &cs, &cz, &mut fused);
+            let reference = two_step(&packed, bits, n, |i| (cs[i % cols], cz[i % cols]));
+            assert_eq!(fused, reference, "cols bits={bits}");
+
+            let rs: Vec<f32> = (0..rows).map(|r| 0.002 + r as f32 * 0.02).collect();
+            let rz: Vec<f32> = (0..rows).map(|r| (r % 3) as f32).collect();
+            let mut fused_r = vec![0.0f32; n];
+            unpack_dequant_rows_into(&packed, bits, cols, &rs, &rz, &mut fused_r);
+            let reference_r = two_step(&packed, bits, n, |i| (rs[i / cols], rz[i / cols]));
+            assert_eq!(fused_r, reference_r, "rows bits={bits}");
+        }
+    }
+
+    #[test]
+    fn fused_matches_quantized_tensor_dequantize() {
+        // end-to-end against the canonical QuantizedTensor::dequantize
+        use crate::quant::{uniform, Bits, Granularity};
+        use crate::tensor::Tensor;
+        let mut rng = crate::util::Rng::seed_from_u64(5);
+        let t = Tensor::new(vec![16, 12], (0..192).map(|_| rng.normal_f32()).collect()).unwrap();
+        for bits in [Bits::Ternary, Bits::B2, Bits::B4, Bits::B6, Bits::B8] {
+            let q = uniform::quantize(&t, bits, Granularity::PerTensor).unwrap();
+            let packed = pack(&q.codes.data, bits.storage_bits());
+            let mut fused = vec![0.0f32; q.codes.data.len()];
+            unpack_dequant_into(&packed, bits.storage_bits(), q.scale[0], q.zero[0], &mut fused);
+            assert_eq!(fused, q.dequantize().data, "{bits:?}");
+        }
     }
 }

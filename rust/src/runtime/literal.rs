@@ -3,6 +3,7 @@
 use anyhow::Result;
 
 use crate::tensor::Tensor;
+use crate::xla;
 
 fn as_i64(dims: &[usize]) -> Vec<i64> {
     dims.iter().map(|&d| d as i64).collect()

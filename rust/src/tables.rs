@@ -241,7 +241,7 @@ pub fn build_engine(model: &str, variant: Variant, codec: CodecId) -> Result<Eng
             let source = WeightSource::open_compressed(&path)?;
             let opts = ServeOptions {
                 residency: Residency::StreamPerLayer,
-                prefetch: true,
+                prefetch_depth: 1,
                 ..Default::default()
             };
             Engine::new(rt, source, &opts)
@@ -494,6 +494,11 @@ pub struct ResidencyRow {
     pub peak_weight_bytes: usize,
     pub mean_latency_s: f64,
     pub decompress_share: f64,
+    /// Decode throughput over the run (decompressed MB/s).
+    pub decode_mb_s: f64,
+    /// Mean cores the layer decode kept busy / configured workers.
+    pub decode_util: f64,
+    pub decode_threads: usize,
 }
 
 pub fn residency_table(model: &str, codec: CodecId, limit: usize) -> Result<Vec<ResidencyRow>> {
@@ -506,20 +511,24 @@ pub fn residency_table(model: &str, codec: CodecId, limit: usize) -> Result<Vec<
     )?;
     let es = data.eval_set("arc-easy")?;
     let n_layers = crate::config::Manifest::load(&root, model)?.config.n_layers;
-    let policies: Vec<(String, Residency, bool)> = vec![
-        ("resident".into(), Residency::AlwaysResident, false),
-        ("stream".into(), Residency::StreamPerLayer, false),
-        ("stream+prefetch".into(), Residency::StreamPerLayer, true),
-        (format!("lru:{}", n_layers / 2), Residency::Lru(n_layers / 2), false),
+    // (label, residency, prefetch depth, decode threads); threads = 0 is
+    // one worker per core
+    let policies: Vec<(String, Residency, usize, usize)> = vec![
+        ("resident".into(), Residency::AlwaysResident, 0, 1),
+        ("stream".into(), Residency::StreamPerLayer, 0, 1),
+        ("stream+mt".into(), Residency::StreamPerLayer, 0, 0),
+        ("stream+prefetch".into(), Residency::StreamPerLayer, 1, 1),
+        ("stream+prefetch+mt".into(), Residency::StreamPerLayer, 2, 0),
+        (format!("lru:{}", n_layers / 2), Residency::Lru(n_layers / 2), 0, 1),
     ];
     let mut rows = Vec::new();
-    for (label, residency, prefetch) in policies {
+    for (label, residency, prefetch_depth, n_threads) in policies {
         let rt = Arc::new(Runtime::new(&root, model)?);
         let source = match residency {
             Residency::AlwaysResident => WeightSource::open_resident(&path, &rt.manifest.config)?,
             _ => WeightSource::open_compressed(&path)?,
         };
-        let opts = ServeOptions { residency, prefetch, ..Default::default() };
+        let opts = ServeOptions { residency, prefetch_depth, n_threads, ..Default::default() };
         let engine = Engine::new(rt, source, &opts)?;
         let rep = run_eval(&es, &label, limit, |t| engine.forward_logits(t))?;
         let d = engine.metrics.decompress_secs();
@@ -529,6 +538,9 @@ pub fn residency_table(model: &str, codec: CodecId, limit: usize) -> Result<Vec<
             peak_weight_bytes: engine.metrics.peak_bytes(),
             mean_latency_s: rep.mean_latency_s,
             decompress_share: d / (d + e).max(1e-12),
+            decode_mb_s: engine.metrics.decompress_mb_s(),
+            decode_util: engine.metrics.decode_utilization(),
+            decode_threads: engine.metrics.decode_threads(),
         });
     }
     Ok(rows)
@@ -536,8 +548,15 @@ pub fn residency_table(model: &str, codec: CodecId, limit: usize) -> Result<Vec<
 
 pub fn render_residency(rows: &[ResidencyRow]) -> Table {
     let mut t = Table::new(
-        "E8 — residency policy: peak weight memory vs latency",
-        &["policy", "peak weights", "latency/question (s)", "decompress share"],
+        "E8 — residency policy: peak weight memory vs latency vs decode throughput",
+        &[
+            "policy",
+            "peak weights",
+            "latency/question (s)",
+            "decompress share",
+            "decode MB/s",
+            "cores busy",
+        ],
     );
     for r in rows {
         t.row(vec![
@@ -545,6 +564,8 @@ pub fn render_residency(rows: &[ResidencyRow]) -> Table {
             fmt_bytes(r.peak_weight_bytes),
             format!("{:.4}", r.mean_latency_s),
             format!("{:.0}%", r.decompress_share * 100.0),
+            format!("{:.0}", r.decode_mb_s),
+            format!("{:.1}/{}", r.decode_util, r.decode_threads.max(1)),
         ]);
     }
     t

@@ -1,0 +1,254 @@
+//! Pure-Rust stand-in for the `xla` crate (active without the `pjrt`
+//! feature).
+//!
+//! [`Literal`] is fully functional — it really holds typed, shaped data —
+//! because the host side of this crate (literal conversion, layer
+//! flattening, the decode fast path) is exercised by tests that must run
+//! without the XLA toolchain. The PJRT client/executable types exist only
+//! so the code compiles; constructing a client fails with an explicit
+//! error, which is surfaced by `Runtime::new` long before any stage runs.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn err(msg: impl Into<String>) -> Error {
+    Error(msg.into())
+}
+
+/// Element dtypes used by the stage argument contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    F32,
+    S32,
+    U8,
+}
+
+impl ElementType {
+    pub fn byte_len(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+            ElementType::U8 => 1,
+        }
+    }
+}
+
+/// Rust scalar types that map onto an [`ElementType`].
+pub trait NativeElement: Copy {
+    const TY: ElementType;
+    fn write_le(self, out: &mut Vec<u8>);
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl NativeElement for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl NativeElement for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        i32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl NativeElement for u8 {
+    const TY: ElementType = ElementType::U8;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.push(self);
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        bytes[0]
+    }
+}
+
+/// Shaped, typed host buffer — mirrors the subset of `xla::Literal` the
+/// crate uses.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+}
+
+/// Array shape (dims only; dtype is queried via [`Literal::ty`]).
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+fn numel(dims: &[i64]) -> usize {
+    dims.iter().product::<i64>() as usize
+}
+
+impl Literal {
+    /// 1-D literal from a native slice.
+    pub fn vec1<T: NativeElement>(data: &[T]) -> Self {
+        let mut bytes = Vec::with_capacity(data.len() * std::mem::size_of::<T>());
+        for &v in data {
+            v.write_le(&mut bytes);
+        }
+        Self { ty: T::TY, dims: vec![data.len() as i64], data: bytes }
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Self, Error> {
+        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        if numel(&dims) * ty.byte_len() != data.len() {
+            return Err(err(format!(
+                "stub literal: {} bytes do not fill shape {dims:?} of {ty:?}",
+                data.len()
+            )));
+        }
+        Ok(Self { ty, dims, data: data.to_vec() })
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Self, Error> {
+        if numel(dims) != numel(&self.dims) {
+            return Err(err(format!(
+                "stub literal: cannot reshape {:?} into {dims:?}",
+                self.dims
+            )));
+        }
+        Ok(Self { ty: self.ty, dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn to_vec<T: NativeElement>(&self) -> Result<Vec<T>, Error> {
+        if self.ty != T::TY {
+            return Err(err(format!("stub literal: dtype {:?} != requested {:?}", self.ty, T::TY)));
+        }
+        let w = self.ty.byte_len();
+        Ok(self.data.chunks_exact(w).map(T::read_le).collect())
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn ty(&self) -> Result<ElementType, Error> {
+        Ok(self.ty)
+    }
+
+    /// Stage results are tuples; the stub never executes stages, so there
+    /// is nothing to untuple.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(err("stub literal: not a tuple (no PJRT backend)"))
+    }
+}
+
+const NO_BACKEND: &str =
+    "XLA PJRT backend not compiled in — rebuild with `--features pjrt` to execute stages";
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, Error> {
+        Err(err(NO_BACKEND))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(err(NO_BACKEND))
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<std::path::Path>) -> Result<Self, Error> {
+        Err(err(NO_BACKEND))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(err(NO_BACKEND))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(err(NO_BACKEND))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_roundtrip_f32() {
+        let lit = Literal::vec1(&[1.0f32, -2.0, 3.5]);
+        assert_eq!(lit.ty().unwrap(), ElementType::F32);
+        assert_eq!(lit.array_shape().unwrap().dims(), &[3]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, -2.0, 3.5]);
+    }
+
+    #[test]
+    fn reshape_checks_numel() {
+        let lit = Literal::vec1(&[0i32; 6]);
+        assert!(lit.reshape(&[2, 3]).is_ok());
+        assert!(lit.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn untyped_u8_checks_len() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::U8, &[2, 2], &[0; 4])
+            .is_ok());
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::U8, &[2, 2], &[0; 5])
+            .is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let lit = Literal::vec1(&[1.0f32]);
+        assert!(lit.to_vec::<u8>().is_err());
+    }
+
+    #[test]
+    fn backend_entry_points_error() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nope").is_err());
+    }
+}

@@ -14,6 +14,10 @@ use tiny_qmoe::model::{quantize_checkpoint, Checkpoint};
 use tiny_qmoe::util::{Rng, TempDir};
 
 fn artifacts() -> Option<std::path::PathBuf> {
+    if !tiny_qmoe::runtime::backend_available() {
+        eprintln!("skipping: pjrt backend not compiled in");
+        return None;
+    }
     let root = default_artifacts_root();
     if root.join("tiny/manifest.json").exists() {
         Some(root)
@@ -104,7 +108,8 @@ fn coordinator_stress_random_load() {
             tqm_path: tqm,
             serve: ServeOptions {
                 residency: Residency::StreamPerLayer,
-                prefetch: true,
+                prefetch_depth: 1,
+                n_threads: 0,
                 max_batch: 2,
                 max_wait_ms: 1,
                 max_new_tokens: 6,

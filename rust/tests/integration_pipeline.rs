@@ -16,6 +16,10 @@ use tiny_qmoe::runtime::Runtime;
 use tiny_qmoe::util::TempDir;
 
 fn artifacts() -> Option<std::path::PathBuf> {
+    if !tiny_qmoe::runtime::backend_available() {
+        eprintln!("skipping: pjrt backend not compiled in");
+        return None;
+    }
     let root = default_artifacts_root();
     if root.join("tiny/manifest.json").exists() {
         Some(root)
@@ -68,7 +72,11 @@ fn all_codecs_serve_identically() {
         let p = tiny_tqm(&root, &dir, codec);
         let rt = Arc::new(Runtime::new(&root, "tiny").unwrap());
         let source = WeightSource::open_compressed(&p).unwrap();
-        let opts = ServeOptions { residency: Residency::StreamPerLayer, prefetch: false, ..Default::default() };
+        let opts = ServeOptions {
+            residency: Residency::StreamPerLayer,
+            prefetch_depth: 0,
+            ..Default::default()
+        };
         let engine = Engine::new(rt, source, &opts).unwrap();
         let logits = engine.forward_logits(&tokens).unwrap();
         match &reference {
