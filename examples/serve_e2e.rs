@@ -15,6 +15,13 @@ use tiny_qmoe::gen::SamplerKind;
 use tiny_qmoe::tables;
 
 fn main() -> Result<()> {
+    // MoE scenario first: synthetic + host-side, so it reports even on
+    // machines without built artifacts (the dense serving part below
+    // needs `make artifacts`).
+    println!("=== MoE expert streaming + cache (synthetic trace) ===");
+    tables::render_moe(&tables::moe_table(512)?).print();
+    println!();
+
     let model = "e2e";
     let root = default_artifacts_root();
     let manifest = Manifest::load(&root, model)?;
@@ -56,6 +63,7 @@ fn main() -> Result<()> {
             max_batch: 4,
             max_wait_ms: 4,
             max_new_tokens: 12,
+            ..Default::default()
         },
     })?;
 
@@ -130,6 +138,9 @@ fn main() -> Result<()> {
         snap.decode.p50 * 1e3,
         snap.decode.p95 * 1e3
     );
+    if let Some(pm) = coord.pipeline_metrics(model) {
+        println!("pipeline: {}", pm.summary());
+    }
     coord.shutdown();
     Ok(())
 }

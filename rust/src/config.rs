@@ -9,6 +9,34 @@ use anyhow::{Context, Result};
 use crate::quant::Bits;
 use crate::util::Json;
 
+/// Mixture-of-Experts geometry: the FFN sublayer is `n_experts` SwiGLU
+/// experts behind a learned top-`top_k` router instead of one dense FFN.
+/// `None` in [`ModelConfig::moe`] selects the classic dense path.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MoeSpec {
+    pub n_experts: usize,
+    /// Experts activated per token (renormalized softmax gating).
+    pub top_k: usize,
+    /// Hidden width of each expert (the dense-equivalent FFN width is
+    /// `n_experts * d_expert`).
+    pub d_expert: usize,
+}
+
+impl MoeSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let s = Self {
+            n_experts: j.get("n_experts")?.as_usize()?,
+            top_k: j.get("top_k")?.as_usize()?,
+            d_expert: j.get("d_expert")?.as_usize()?,
+        };
+        anyhow::ensure!(
+            s.n_experts > 0 && s.d_expert > 0 && (1..=s.n_experts).contains(&s.top_k),
+            "bad moe spec {s:?} (need n_experts > 0, d_expert > 0, 1 <= top_k <= n_experts)"
+        );
+        Ok(s)
+    }
+}
+
 /// Model geometry parsed from `artifacts/<name>/manifest.json::config`.
 #[derive(Clone, Debug)]
 pub struct ModelConfig {
@@ -28,11 +56,18 @@ pub struct ModelConfig {
     pub prefill_t: Vec<usize>,
     pub prefill_b: Vec<usize>,
     pub decode_b: Vec<usize>,
+    /// MoE FFN geometry; `None` = dense FFN (`d_ff`). Optional in the
+    /// manifest, so dense configs parse unchanged.
+    pub moe: Option<MoeSpec>,
 }
 
 impl ModelConfig {
     fn from_json(j: &Json) -> Result<Self> {
         Ok(Self {
+            moe: match j.opt("moe") {
+                Some(m) => Some(MoeSpec::from_json(m)?),
+                None => None,
+            },
             name: j.get("name")?.as_str()?.to_string(),
             d_model: j.get("d_model")?.as_usize()?,
             n_layers: j.get("n_layers")?.as_usize()?,
@@ -197,6 +232,13 @@ pub struct ServeOptions {
     pub max_wait_ms: u64,
     /// Max generated tokens per request.
     pub max_new_tokens: usize,
+    /// Byte budget of the decoded-expert LRU cache (MoE serving): router
+    /// hits return a cached expert without touching the decoder; misses
+    /// decode on demand and evict least-recently-used experts until the
+    /// budget holds. Must be at least one expert's decoded bytes for the
+    /// cache to retain anything (smaller budgets degrade to pure
+    /// streaming). Irrelevant for dense models.
+    pub expert_budget_bytes: usize,
 }
 
 impl Default for ServeOptions {
@@ -208,6 +250,7 @@ impl Default for ServeOptions {
             max_batch: 4,
             max_wait_ms: 2,
             max_new_tokens: 32,
+            expert_budget_bytes: 64 << 20,
         }
     }
 }
@@ -252,6 +295,27 @@ mod tests {
         assert_eq!(Residency::parse("lru:3").unwrap(), Residency::Lru(3));
         assert!(Residency::parse("bogus").is_err());
         assert_eq!(Residency::Lru(2).label(), "lru:2");
+    }
+
+    #[test]
+    fn moe_spec_parse_and_validation() {
+        let j = crate::util::Json::parse(
+            r#"{"n_experts": 8, "top_k": 2, "d_expert": 64}"#,
+        )
+        .unwrap();
+        let s = MoeSpec::from_json(&j).unwrap();
+        assert_eq!(s, MoeSpec { n_experts: 8, top_k: 2, d_expert: 64 });
+        // top_k must not exceed n_experts
+        let bad = crate::util::Json::parse(
+            r#"{"n_experts": 2, "top_k": 3, "d_expert": 64}"#,
+        )
+        .unwrap();
+        assert!(MoeSpec::from_json(&bad).is_err());
+        let zero = crate::util::Json::parse(
+            r#"{"n_experts": 0, "top_k": 0, "d_expert": 64}"#,
+        )
+        .unwrap();
+        assert!(MoeSpec::from_json(&zero).is_err());
     }
 
     #[test]

@@ -80,6 +80,87 @@ mod tests {
     }
 
     #[test]
+    fn disconnect_mid_drain_returns_partial_batch() {
+        // the sender dies after delivering part of a batch: the batcher
+        // must return what it has promptly, not error or hang out the
+        // full deadline
+        let (tx, rx) = mpsc::channel();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(500) };
+        let sender = std::thread::spawn(move || {
+            tx.send(10).unwrap();
+            tx.send(11).unwrap();
+            std::thread::sleep(Duration::from_millis(10));
+            tx.send(12).unwrap();
+            // tx dropped here: disconnect mid-drain
+        });
+        let t0 = Instant::now();
+        let b = collect_batch(&rx, policy);
+        sender.join().unwrap();
+        assert_eq!(b, vec![10, 11, 12], "partial batch lost on disconnect");
+        assert!(
+            t0.elapsed() < Duration::from_millis(400),
+            "disconnect did not cut the wait short ({:?})",
+            t0.elapsed()
+        );
+        // subsequent calls observe the drained, disconnected channel
+        assert!(collect_batch(&rx, policy).is_empty());
+    }
+
+    #[test]
+    fn max_wait_deadline_honored_within_tolerance() {
+        // one item arrives and nothing else: the batcher must hold until
+        // (about) the deadline, then dispatch the partial batch
+        let (tx, rx) = mpsc::channel();
+        tx.send(7u32).unwrap();
+        let wait = Duration::from_millis(40);
+        let policy = BatchPolicy { max_batch: 4, max_wait: wait };
+        let t0 = Instant::now();
+        let b = collect_batch(&rx, policy);
+        let elapsed = t0.elapsed();
+        assert_eq!(b, vec![7]);
+        // lower bound minus scheduler slop; generous upper bound for CI
+        assert!(
+            elapsed >= wait - Duration::from_millis(5),
+            "dispatched {elapsed:?} before the {wait:?} deadline"
+        );
+        assert!(
+            elapsed < wait + Duration::from_millis(250),
+            "deadline overshot: {elapsed:?}"
+        );
+        drop(tx);
+    }
+
+    #[test]
+    fn max_batch_never_exceeded_under_flooding_producer() {
+        let (tx, rx) = mpsc::channel();
+        let total = 10_000usize;
+        let producer = std::thread::spawn(move || {
+            for i in 0..total {
+                tx.send(i).unwrap();
+            }
+            // tx drops: batcher eventually sees the drained channel
+        });
+        let policy = BatchPolicy { max_batch: 6, max_wait: Duration::from_millis(5) };
+        let mut seen = 0usize;
+        let mut next_expected = 0usize;
+        loop {
+            let b = collect_batch(&rx, policy);
+            if b.is_empty() {
+                break;
+            }
+            assert!(b.len() <= policy.max_batch, "batch of {} > max_batch", b.len());
+            // FIFO order is preserved across batches
+            for v in b {
+                assert_eq!(v, next_expected);
+                next_expected += 1;
+                seen += 1;
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(seen, total, "items lost under flood");
+    }
+
+    #[test]
     fn late_arrivals_within_window_join() {
         let (tx, rx) = mpsc::channel();
         let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(60) };

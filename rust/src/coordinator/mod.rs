@@ -25,7 +25,7 @@ use anyhow::Result;
 use crate::config::{Residency, ServeOptions};
 use crate::gen::{Sampler, SamplerKind};
 use crate::model::WeightSource;
-use crate::pipeline::{Engine, Session};
+use crate::pipeline::{Engine, PipelineMetrics, Session};
 use crate::runtime::Runtime;
 
 pub use batcher::{collect_batch, BatchPolicy};
@@ -67,6 +67,9 @@ pub struct ModelSpec {
 pub struct ModelHandle {
     tx: mpsc::Sender<Envelope>,
     pub metrics: Arc<ServeMetrics>,
+    /// Engine-level pipeline metrics (layer decode + expert cache),
+    /// shared out of the serving thread at registration time.
+    pub pipeline: Arc<PipelineMetrics>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -86,15 +89,18 @@ impl Coordinator {
         let metrics = Arc::new(ServeMetrics::default());
         let thread_metrics = metrics.clone();
         let name = spec.name.clone();
-        // engine construction errors must surface at register time
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        // engine construction errors must surface at register time; on
+        // success the thread hands back the engine's pipeline metrics so
+        // callers can watch decode/expert-cache health from outside
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<Arc<PipelineMetrics>>>();
         let join = std::thread::Builder::new()
             .name(format!("serve-{name}"))
             .spawn(move || serve_thread(spec, rx, thread_metrics, ready_tx))?;
-        ready_rx
+        let pipeline = ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("serving thread died during startup"))??;
-        self.models.insert(name, ModelHandle { tx, metrics, join: Some(join) });
+        self.models
+            .insert(name, ModelHandle { tx, metrics, pipeline, join: Some(join) });
         Ok(())
     }
 
@@ -104,6 +110,13 @@ impl Coordinator {
 
     pub fn metrics(&self, model: &str) -> Option<Arc<ServeMetrics>> {
         self.models.get(model).map(|h| h.metrics.clone())
+    }
+
+    /// Engine-level pipeline metrics of a model: layer-decode throughput
+    /// and residency, plus expert-cache hit-rate / resident bytes /
+    /// per-miss decode latency for MoE models.
+    pub fn pipeline_metrics(&self, model: &str) -> Option<Arc<PipelineMetrics>> {
+        self.models.get(model).map(|h| h.pipeline.clone())
     }
 
     /// Submit a request; returns a receiver for the response.
@@ -162,11 +175,11 @@ fn serve_thread(
     spec: ModelSpec,
     rx: mpsc::Receiver<Envelope>,
     metrics: Arc<ServeMetrics>,
-    ready: mpsc::Sender<Result<()>>,
+    ready: mpsc::Sender<Result<Arc<PipelineMetrics>>>,
 ) {
     let engine = match build_engine(&spec) {
         Ok(e) => {
-            let _ = ready.send(Ok(()));
+            let _ = ready.send(Ok(e.metrics.clone()));
             e
         }
         Err(e) => {
@@ -345,6 +358,7 @@ mod tests {
                 max_batch: 2,
                 max_wait_ms: 5,
                 max_new_tokens: 8,
+                ..Default::default()
             },
         })
     }
@@ -372,6 +386,11 @@ mod tests {
         let snap = coord.metrics("tiny").unwrap().snapshot();
         assert_eq!(snap.requests, 1);
         assert_eq!(snap.tokens_out, 4);
+        // pipeline metrics are reachable from outside the serving thread:
+        // a streamed model decompresses layers while generating
+        let pm = coord.pipeline_metrics("tiny").unwrap();
+        assert!(pm.decompress_count() > 0);
+        assert!(coord.pipeline_metrics("nope").is_none());
         coord.shutdown();
     }
 

@@ -152,6 +152,46 @@ impl TensorRecord {
     }
 }
 
+/// Canonical record name of one expert matrix: every MoE producer and
+/// consumer (writer, reader index, expert cache) goes through this, so
+/// the container layout is the single contract.
+pub fn expert_record_name(layer: usize, expert: usize, mat: &str) -> String {
+    format!("layers.{layer}.experts.{expert}.{mat}")
+}
+
+/// Canonical record name of a layer's router matrix (`[d_model, n_experts]`
+/// f32 — routers are tiny and precision-sensitive, so they ship raw).
+pub fn router_record_name(layer: usize) -> String {
+    format!("layers.{layer}.router")
+}
+
+/// Parse `layers.{l}.experts.{e}.{mat}` back into (layer, expert, mat).
+/// Returns `None` for non-expert records (dense layers, routers, heads).
+pub fn parse_expert_record_name(name: &str) -> Option<(usize, usize, &str)> {
+    let rest = name.strip_prefix("layers.")?;
+    let (layer, rest) = rest.split_once(".experts.")?;
+    let (expert, mat) = rest.split_once('.')?;
+    Some((layer.parse().ok()?, expert.parse().ok()?, mat))
+}
+
+/// One expert's slice of the container index: every record belonging to
+/// `(layer, expert)`, grouped at open time so a single expert can be
+/// located and decoded without touching its siblings (each record's
+/// payload is an independently-decodable chunked stream).
+#[derive(Clone, Debug)]
+pub struct ExpertEntry {
+    pub layer: usize,
+    pub expert: usize,
+    /// Record indices of this expert's tensors, in container walk order.
+    pub records: Vec<usize>,
+    /// Decoded f32 bytes of the expert's quantized tensors — what one
+    /// cache slot costs, known before any decode happens (the expert
+    /// cache evicts *ahead* of a miss using this).
+    pub decoded_f32_bytes: usize,
+    /// Compressed bytes on disk across the expert's payloads.
+    pub stored_bytes: usize,
+}
+
 pub(crate) fn gran_to_u8(g: crate::quant::Granularity) -> u8 {
     use crate::quant::Granularity;
     match g {

@@ -11,8 +11,8 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use super::{
-    bits_from_u8, gran_from_u8, TensorKind, TensorRecord, TqmMeta, CONTAINER_VERSION, MAGIC,
-    MIN_CONTAINER_VERSION,
+    bits_from_u8, gran_from_u8, parse_expert_record_name, ExpertEntry, TensorKind, TensorRecord,
+    TqmMeta, CONTAINER_VERSION, MAGIC, MIN_CONTAINER_VERSION,
 };
 use crate::compress::stream::parse_chunk_index;
 use crate::compress::{codec, Codec, CodecId};
@@ -31,6 +31,12 @@ pub struct TqmReader {
     /// name -> records index (layer streaming resolves 9 tensors per
     /// layer per pass; a linear scan was measurable on deep models).
     by_name: HashMap<String, usize>,
+    /// Expert-indexed view of the records: `layers.{l}.experts.{e}.*`
+    /// grouped per (layer, expert) at open time, so the expert cache can
+    /// locate and size one expert without scanning or decoding siblings.
+    experts: Vec<ExpertEntry>,
+    /// (layer, expert) -> index into `experts`.
+    expert_lookup: HashMap<(usize, usize), usize>,
     codec: Box<dyn Codec>,
     /// §Perf: the freqseq dictionary parsed once per container (the parse
     /// builds a 64k-entry hash map; doing it per tensor per layer pass
@@ -206,6 +212,32 @@ impl TqmReader {
         };
         let by_name =
             records.iter().enumerate().map(|(i, r)| (r.name.clone(), i)).collect();
+
+        // expert-indexed table: group expert records by (layer, expert),
+        // ordered by key so `expert_entries` walks layers then experts
+        let mut grouped: std::collections::BTreeMap<(usize, usize), ExpertEntry> =
+            std::collections::BTreeMap::new();
+        for (i, r) in records.iter().enumerate() {
+            if let Some((layer, expert, _)) = parse_expert_record_name(&r.name) {
+                let e = grouped.entry((layer, expert)).or_insert_with(|| ExpertEntry {
+                    layer,
+                    expert,
+                    records: Vec::new(),
+                    decoded_f32_bytes: 0,
+                    stored_bytes: 0,
+                });
+                e.records.push(i);
+                e.decoded_f32_bytes += crate::tensor::numel(&r.shape) * 4;
+                e.stored_bytes += r.stored_bytes();
+            }
+        }
+        let experts: Vec<ExpertEntry> = grouped.into_values().collect();
+        let expert_lookup = experts
+            .iter()
+            .enumerate()
+            .map(|(i, e)| ((e.layer, e.expert), i))
+            .collect();
+
         Ok(Self {
             meta,
             codec_id,
@@ -213,6 +245,8 @@ impl TqmReader {
             dict_range,
             records,
             by_name,
+            experts,
+            expert_lookup,
             codec: codec(codec_id),
             prepared_freq,
             data,
@@ -243,6 +277,26 @@ impl TqmReader {
     /// Whether quantized payloads carry the chunk framing (v2 containers).
     pub fn is_chunked(&self) -> bool {
         self.container_version >= 2
+    }
+
+    /// All expert index entries, ordered by (layer, expert). Empty for
+    /// dense containers.
+    pub fn expert_entries(&self) -> &[ExpertEntry] {
+        &self.experts
+    }
+
+    /// Index entry of one expert (its record set, decoded size and stored
+    /// size) — errors if the container has no such expert.
+    pub fn expert_entry(&self, layer: usize, expert: usize) -> Result<&ExpertEntry> {
+        self.expert_lookup
+            .get(&(layer, expert))
+            .map(|&i| &self.experts[i])
+            .ok_or_else(|| anyhow::anyhow!("tqm: no expert ({layer}, {expert}) in container"))
+    }
+
+    /// Experts recorded for `layer` (0 for dense containers/layers).
+    pub fn n_experts(&self, layer: usize) -> usize {
+        self.experts.iter().filter(|e| e.layer == layer).count()
     }
 
     fn dict(&self) -> &[u8] {
@@ -642,6 +696,76 @@ mod tests {
             let reference = q.dequantize();
             assert_eq!(out, reference.data, "{name}: fused != unpack+dequantize");
         }
+    }
+
+    #[test]
+    fn expert_index_groups_records() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("m.tqm");
+        let mut w = TqmWriter::new(meta(CodecId::Lzw)).with_chunk_len(128);
+        let router = Tensor::new(vec![8, 4], vec![0.5; 32]).unwrap();
+        for layer in 0..2 {
+            w.add_router(layer, &router);
+            for expert in 0..3 {
+                for (mi, mat) in ["w1", "w3", "w2"].iter().enumerate() {
+                    let q = sample_quantized(16, 8, (layer * 10 + expert * 3 + mi) as u64);
+                    w.add_expert_quantized(layer, expert, mat, &q);
+                }
+            }
+        }
+        w.write(&p).unwrap();
+        let r = TqmReader::open(&p).unwrap();
+        assert_eq!(r.expert_entries().len(), 6);
+        assert_eq!(r.n_experts(0), 3);
+        assert_eq!(r.n_experts(1), 3);
+        assert_eq!(r.n_experts(2), 0);
+        let e = r.expert_entry(1, 2).unwrap();
+        assert_eq!((e.layer, e.expert), (1, 2));
+        assert_eq!(e.records.len(), 3);
+        // decoded f32 size is known without decoding: 3 matrices of 16x8
+        assert_eq!(e.decoded_f32_bytes, 3 * 16 * 8 * 4);
+        for &ri in &e.records {
+            let rec = r.record_at(ri);
+            let parsed = crate::format::parse_expert_record_name(&rec.name).unwrap();
+            assert_eq!((parsed.0, parsed.1), (1, 2));
+        }
+        // routers are not expert records
+        assert!(crate::format::parse_expert_record_name("layers.0.router").is_none());
+        assert!(r.expert_entry(0, 9).is_err());
+    }
+
+    #[test]
+    fn corrupt_expert_does_not_poison_siblings() {
+        // one expert decodes without touching its siblings: corrupting
+        // expert (0,1)'s payload must leave (0,0) loadable and make (0,1)
+        // fail with a CRC error
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("m.tqm");
+        let mut w = TqmWriter::new(meta(CodecId::Huffman)).with_chunk_len(64);
+        let mut originals = Vec::new();
+        for expert in 0..2 {
+            for (mi, mat) in ["w1", "w3", "w2"].iter().enumerate() {
+                let q = sample_quantized(16, 8, (expert * 3 + mi + 40) as u64);
+                w.add_expert_quantized(0, expert, mat, &q);
+                originals.push((crate::format::expert_record_name(0, expert, mat), q));
+            }
+        }
+        w.write(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let clean = TqmReader::from_bytes(bytes.clone()).unwrap();
+        let victim = clean.record(&crate::format::expert_record_name(0, 1, "w3")).unwrap();
+        let poison_at = victim.payload_offset + victim.payload_len / 2;
+        drop(clean);
+        bytes[poison_at] ^= 0x5A;
+        let r = TqmReader::from_bytes(bytes).unwrap();
+        for (name, q) in &originals {
+            let (_, expert, _) = crate::format::parse_expert_record_name(name).unwrap();
+            if expert == 0 {
+                let got = r.load_quantized(name).unwrap();
+                assert_eq!(got.codes, q.codes, "{name}");
+            }
+        }
+        assert!(r.load_quantized(&crate::format::expert_record_name(0, 1, "w3")).is_err());
     }
 
     #[test]

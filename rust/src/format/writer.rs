@@ -68,6 +68,26 @@ impl TqmWriter {
         });
     }
 
+    /// Stage one expert matrix under the canonical expert record name
+    /// (`layers.{l}.experts.{e}.{mat}`), so the reader's expert index
+    /// picks it up. Each expert matrix is its own record — and in a v2
+    /// container its own chunked stream — so one expert decodes without
+    /// touching its siblings.
+    pub fn add_expert_quantized(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        mat: &str,
+        q: &QuantizedTensor,
+    ) {
+        self.add_quantized(&super::expert_record_name(layer, expert, mat), q);
+    }
+
+    /// Stage a layer's router matrix (raw f32 under the canonical name).
+    pub fn add_router(&mut self, layer: usize, w: &Tensor) {
+        self.add_f32(&super::router_record_name(layer), w);
+    }
+
     /// Stage a raw f32 tensor (norm vectors — stored uncompressed).
     pub fn add_f32(&mut self, name: &str, t: &Tensor) {
         let mut raw = Vec::with_capacity(t.data.len() * 4);

@@ -11,7 +11,8 @@
 //!                 [--variant compressed] [--top-k 8] [--temp 0.8]
 //!   tqm serve-demo --model e2e [--requests 16] [--batch 4]
 //!                 [--threads 0] [--prefetch-depth 1]
-//!   tqm tables    --table 1|2|3|4|bits|codec|network|residency|all
+//!   tqm tables    --table 1|2|3|4|bits|codec|network|residency|moe|all
+//!                 [--tokens 512]   (moe: trace length)
 //!
 //! Run from anywhere inside the repo (artifacts are auto-discovered) after
 //! `make artifacts`.
@@ -251,6 +252,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
             max_batch: batch,
             max_wait_ms: 4,
             max_new_tokens: 16,
+            ..Default::default()
         },
     })?;
     let data = tiny_qmoe::data::DataDir::open_for_vocab(
@@ -294,6 +296,9 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         snap.decode.p95 * 1e3,
         snap.tokens_per_s
     );
+    if let Some(pm) = coord.pipeline_metrics(&model) {
+        println!("pipeline: {}", pm.summary());
+    }
     coord.shutdown();
     Ok(())
 }
@@ -348,6 +353,10 @@ fn cmd_tables(args: &Args) -> Result<()> {
             let rows = tables::residency_table(&model, codec, limit.min(10))?;
             tables::render_residency(&rows).print();
         }
+        "moe" => {
+            let rows = tables::moe_table(args.get_usize("tokens", 512)?)?;
+            tables::render_moe(&rows).print();
+        }
         "all" => {
             t1()?;
             eval_t("mmlu", "paper Table 2")?;
@@ -360,6 +369,8 @@ fn cmd_tables(args: &Args) -> Result<()> {
             tables::network_table(&model, codec, limit)?.print();
             let rows = tables::residency_table(&model, codec, limit.min(10))?;
             tables::render_residency(&rows).print();
+            let rows = tables::moe_table(512)?;
+            tables::render_moe(&rows).print();
         }
         other => bail!("unknown table {other:?}"),
     }

@@ -4,6 +4,7 @@
 
 pub mod forward_f32;
 pub mod layer;
+pub mod moe;
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -281,6 +282,7 @@ pub(crate) mod tests {
             prefill_t: vec![8],
             prefill_b: vec![1],
             decode_b: vec![1],
+            moe: None,
         }
     }
 

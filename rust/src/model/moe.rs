@@ -1,0 +1,506 @@
+//! Mixture-of-Experts FFN sublayer (the "QMoE" in Tiny-QMoE): a learned
+//! top-k router in front of `n_experts` SwiGLU experts, with every expert
+//! quantized and compressed as its **own** set of TQM records so the
+//! serving side can decode exactly the experts a token routes to.
+//!
+//! Selection is config-driven: a [`crate::config::ModelConfig`] whose
+//! `moe` field is `Some(spec)` uses this sublayer in place of the dense
+//! FFN. The host-side forward here is the reference implementation the
+//! expert-cache integration tests and the MoE eval scenario run against;
+//! it is deliberately plain f32 math, identical regardless of whether the
+//! expert weights came from a cache hit, a streamed miss, or a fully
+//! resident decode — which is what makes the bit-exactness invariant
+//! testable.
+//!
+//! Container contract (canonical names live in [`crate::format`]):
+//!   layers.{l}.router           f32 [d_model, n_experts]
+//!   layers.{l}.experts.{e}.w1   quant [d_model, d_expert]
+//!   layers.{l}.experts.{e}.w3   quant [d_model, d_expert]
+//!   layers.{l}.experts.{e}.w2   quant [d_expert, d_model]
+
+use anyhow::{Context, Result};
+
+use crate::compress::CodecId;
+use crate::config::{ModelConfig, MoeSpec, QuantizeOptions};
+use crate::format::{expert_record_name, router_record_name, TqmMeta, TqmReader, TqmWriter};
+use crate::model::Checkpoint;
+use crate::quant::{uniform, Granularity};
+use crate::tensor::Tensor;
+
+/// Expert matrix names, container walk order (mirrors the dense FFN's
+/// w1/w3/w2 slice of `MATRIX_NAMES`).
+pub const EXPERT_MATRIX_NAMES: [&str; 3] = ["w1", "w3", "w2"];
+
+// ---------------------------------------------------------------------------
+// Router
+// ---------------------------------------------------------------------------
+
+/// A layer's routing matrix plus the top-k gating math.
+#[derive(Clone, Debug)]
+pub struct Router {
+    pub layer: usize,
+    /// `[d_model, n_experts]` f32.
+    pub w: Tensor,
+}
+
+impl Router {
+    pub fn load(reader: &TqmReader, layer: usize) -> Result<Self> {
+        let w = reader
+            .load_f32(&router_record_name(layer))
+            .with_context(|| format!("loading router of layer {layer}"))?;
+        anyhow::ensure!(w.shape.len() == 2, "router of layer {layer} must be 2-D");
+        Ok(Self { layer, w })
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.w.shape[1]
+    }
+
+    /// Raw routing logits `x @ W` for one token vector.
+    pub fn logits(&self, x: &[f32]) -> Vec<f32> {
+        let (d, e) = (self.w.shape[0], self.w.shape[1]);
+        assert_eq!(x.len(), d, "router input dim mismatch");
+        let mut out = vec![0.0f32; e];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &self.w.data[i * e..(i + 1) * e];
+            for (o, &wij) in out.iter_mut().zip(row) {
+                *o += xi * wij;
+            }
+        }
+        out
+    }
+
+    /// Top-k expert picks with renormalized softmax gates, deterministic
+    /// under ties (lower expert index wins).
+    pub fn top_k(&self, x: &[f32], k: usize) -> Vec<(usize, f32)> {
+        let logits = self.logits(x);
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        idx.sort_unstable_by(|&a, &b| {
+            logits[b]
+                .partial_cmp(&logits[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        idx.truncate(k.clamp(1, logits.len()));
+        let m = logits[idx[0]];
+        let weights: Vec<f32> = idx.iter().map(|&i| (logits[i] - m).exp()).collect();
+        let total: f32 = weights.iter().sum();
+        idx.into_iter().zip(weights).map(|(i, w)| (i, w / total)).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Expert weights + SwiGLU forward
+// ---------------------------------------------------------------------------
+
+/// One expert's decoded (dequantized f32) weights — the unit the expert
+/// cache holds, sizes, and evicts.
+#[derive(Clone, Debug)]
+pub struct ExpertWeights {
+    pub layer: usize,
+    pub expert: usize,
+    pub d_model: usize,
+    pub d_expert: usize,
+    /// `[d_model, d_expert]` row-major.
+    pub w1: Vec<f32>,
+    /// `[d_model, d_expert]` row-major.
+    pub w3: Vec<f32>,
+    /// `[d_expert, d_model]` row-major.
+    pub w2: Vec<f32>,
+}
+
+impl ExpertWeights {
+    /// Decode one expert from the container into fresh buffers via the
+    /// fused decompress→dequantize kernel (the same kernel the expert
+    /// cache uses, so cached and uncached decodes are bit-identical).
+    pub fn load(reader: &TqmReader, layer: usize, expert: usize) -> Result<Self> {
+        let mut scratch = Vec::new();
+        let mut bufs = [Vec::new(), Vec::new(), Vec::new()];
+        for (mat, out) in EXPERT_MATRIX_NAMES.iter().zip(bufs.iter_mut()) {
+            reader
+                .load_dequantized_into(&expert_record_name(layer, expert, mat), &mut scratch, out)
+                .with_context(|| format!("decoding expert ({layer}, {expert}) {mat}"))?;
+        }
+        let [w1, w3, w2] = bufs;
+        let r1 = reader.record(&expert_record_name(layer, expert, "w1"))?;
+        let (d_model, d_expert) = (r1.shape[0], r1.shape[1]);
+        let out = Self { layer, expert, d_model, d_expert, w1, w3, w2 };
+        out.validate()?;
+        Ok(out)
+    }
+
+    /// Shape sanity: w1/w3 `[d, de]`, w2 `[de, d]`.
+    pub fn validate(&self) -> Result<()> {
+        let (d, de) = (self.d_model, self.d_expert);
+        anyhow::ensure!(
+            self.w1.len() == d * de && self.w3.len() == d * de && self.w2.len() == de * d,
+            "expert ({}, {}) weight sizes inconsistent with [{d}, {de}]",
+            self.layer,
+            self.expert
+        );
+        Ok(())
+    }
+
+    /// Decoded size in bytes (what this expert costs the cache budget).
+    pub fn bytes(&self) -> usize {
+        (self.w1.len() + self.w3.len() + self.w2.len()) * 4
+    }
+
+    /// SwiGLU expert FFN for one token vector:
+    /// `(silu(x W1) ⊙ (x W3)) W2`.
+    pub fn ffn(&self, x: &[f32]) -> Vec<f32> {
+        let (d, de) = (self.d_model, self.d_expert);
+        assert_eq!(x.len(), d, "expert input dim mismatch");
+        let mut h1 = vec![0.0f32; de];
+        let mut h3 = vec![0.0f32; de];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let r1 = &self.w1[i * de..(i + 1) * de];
+            let r3 = &self.w3[i * de..(i + 1) * de];
+            for j in 0..de {
+                h1[j] += xi * r1[j];
+                h3[j] += xi * r3[j];
+            }
+        }
+        let mut out = vec![0.0f32; d];
+        for j in 0..de {
+            let a = h1[j];
+            let g = a / (1.0 + (-a).exp()) * h3[j]; // silu(a) * h3
+            if g == 0.0 {
+                continue;
+            }
+            let r2 = &self.w2[j * d..(j + 1) * d];
+            for (o, &w) in out.iter_mut().zip(r2) {
+                *o += g * w;
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward
+// ---------------------------------------------------------------------------
+
+/// One MoE sublayer forward for a single token vector: route, run the
+/// top-k experts fetched through `expert`, and sum gate-weighted outputs.
+/// `expert` is the residency seam — the cache, a resident table, and a
+/// pure streamer all plug in here, running identical math.
+pub fn moe_forward_token<F>(
+    x: &[f32],
+    router: &Router,
+    top_k: usize,
+    mut expert: F,
+) -> Result<Vec<f32>>
+where
+    F: FnMut(usize) -> Result<std::sync::Arc<ExpertWeights>>,
+{
+    let picks = router.top_k(x, top_k);
+    let mut out = vec![0.0f32; x.len()];
+    for (e, gate) in picks {
+        let w = expert(e)?;
+        let y = w.ffn(x);
+        for (o, v) in out.iter_mut().zip(y) {
+            *o += gate * v;
+        }
+    }
+    Ok(out)
+}
+
+/// Forward one token vector through a stack of MoE sublayers with
+/// residual connections: `x <- x + moe_l(x)` for each layer. `expert`
+/// receives `(layer, expert)`.
+pub fn moe_stack_forward<F>(
+    routers: &[Router],
+    spec: &MoeSpec,
+    x0: &[f32],
+    mut expert: F,
+) -> Result<Vec<f32>>
+where
+    F: FnMut(usize, usize) -> Result<std::sync::Arc<ExpertWeights>>,
+{
+    let mut x = x0.to_vec();
+    for (l, router) in routers.iter().enumerate() {
+        let y = moe_forward_token(&x, router, spec.top_k, |e| expert(l, e))?;
+        for (xi, yi) in x.iter_mut().zip(y) {
+            *xi += yi;
+        }
+    }
+    Ok(x)
+}
+
+/// Load every router of an MoE container, layer order.
+pub fn load_routers(reader: &TqmReader, n_layers: usize) -> Result<Vec<Router>> {
+    (0..n_layers).map(|l| Router::load(reader, l)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Quantize / synthesize
+// ---------------------------------------------------------------------------
+
+/// Quantize an MoE checkpoint (routers + per-expert SwiGLU matrices) and
+/// stage it for writing. Every expert matrix is quantized independently —
+/// per-expert scale/zero parameters — and staged as its own record, so
+/// the container's expert index lets one expert decode alone.
+pub fn quantize_moe_checkpoint(
+    cfg: &ModelConfig,
+    ckpt: &Checkpoint,
+    opts: &QuantizeOptions,
+    codec: CodecId,
+    source: &str,
+) -> Result<TqmWriter> {
+    let spec = cfg
+        .moe
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("config {:?} has no moe spec", cfg.name))?;
+    let meta = TqmMeta {
+        model_name: cfg.name.clone(),
+        codec,
+        bits: opts.bits,
+        per_channel: opts.per_channel,
+        quantizer: "naive".into(),
+        source_checkpoint: source.to_string(),
+    };
+    let mut w = TqmWriter::new(meta);
+    let gran = if opts.per_channel {
+        Granularity::PerChannel { axis: 1 }
+    } else {
+        Granularity::PerTensor
+    };
+    for l in 0..cfg.n_layers {
+        w.add_router(l, ckpt.f32(&router_record_name(l))?);
+        for e in 0..spec.n_experts {
+            for mat in EXPERT_MATRIX_NAMES {
+                let name = expert_record_name(l, e, mat);
+                let t = ckpt.f32(&name)?;
+                w.add_expert_quantized(l, e, mat, &uniform::quantize(t, opts.bits, gran)?);
+            }
+        }
+    }
+    Ok(w)
+}
+
+/// A small MoE geometry for the eval scenario, examples and tests (no
+/// lowered artifacts required — the MoE forward runs host-side).
+pub fn moe_demo_config() -> ModelConfig {
+    ModelConfig {
+        name: "moe-demo".into(),
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        n_kv_heads: 2,
+        d_ff: 8 * 48, // dense-equivalent FFN width
+        vocab: 64,
+        max_seq: 16,
+        rope_theta: 10000.0,
+        norm_eps: 1e-5,
+        head_dim: 8,
+        kv_dim: 16,
+        n_params: 0,
+        prefill_t: vec![8],
+        prefill_b: vec![1],
+        decode_b: vec![1],
+        moe: Some(MoeSpec { n_experts: 8, top_k: 2, d_expert: 48 }),
+    }
+}
+
+/// Synthesize an MoE checkpoint matching `cfg` (routers + experts),
+/// deterministic in `seed`.
+pub fn synth_moe_checkpoint(cfg: &ModelConfig, seed: u64) -> Result<Checkpoint> {
+    let spec = cfg
+        .moe
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("config {:?} has no moe spec", cfg.name))?;
+    let mut rng = crate::util::Rng::seed_from_u64(seed);
+    let (d, de, ne) = (cfg.d_model, spec.d_expert, spec.n_experts);
+    let mut tensors = std::collections::BTreeMap::new();
+    let std_in = 1.0 / (d as f32).sqrt();
+    let std_out = 1.0 / (de as f32).sqrt();
+    for l in 0..cfg.n_layers {
+        tensors.insert(
+            router_record_name(l),
+            crate::tensor::io::TqwTensor::F32(Tensor::new(
+                vec![d, ne],
+                rng.normal_vec(d * ne, std_in),
+            )?),
+        );
+        for e in 0..ne {
+            for (mat, shape, std) in [
+                ("w1", vec![d, de], std_in),
+                ("w3", vec![d, de], std_in),
+                ("w2", vec![de, d], std_out),
+            ] {
+                let n = crate::tensor::numel(&shape);
+                tensors.insert(
+                    expert_record_name(l, e, mat),
+                    crate::tensor::io::TqwTensor::F32(Tensor::new(
+                        shape,
+                        rng.normal_vec(n, std),
+                    )?),
+                );
+            }
+        }
+    }
+    Ok(Checkpoint { tensors })
+}
+
+/// A reuse-heavy token-vector trace for expert-cache experiments: `n`
+/// vectors drawn from `clusters` centers in runs of `run_len` (temporal
+/// locality — consecutive tokens route to the same experts, like real
+/// decode traffic with topic-coherent prompts).
+pub fn clustered_trace(
+    d_model: usize,
+    clusters: usize,
+    run_len: usize,
+    n: usize,
+    seed: u64,
+) -> Vec<Vec<f32>> {
+    let mut rng = crate::util::Rng::seed_from_u64(seed);
+    let centers: Vec<Vec<f32>> =
+        (0..clusters.max(1)).map(|_| rng.normal_vec(d_model, 1.0)).collect();
+    (0..n)
+        .map(|t| centers[(t / run_len.max(1)) % centers.len()].clone())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+    use std::sync::Arc;
+
+    fn demo_container() -> (ModelConfig, TempDir, TqmReader) {
+        let cfg = moe_demo_config();
+        let ckpt = synth_moe_checkpoint(&cfg, 7).unwrap();
+        let opts = QuantizeOptions { per_channel: true, ..Default::default() };
+        let w = quantize_moe_checkpoint(&cfg, &ckpt, &opts, CodecId::FreqSeqPacked, "unit")
+            .unwrap()
+            .with_chunk_len(512);
+        let dir = TempDir::new().unwrap();
+        let p = dir.join("moe.tqm");
+        w.write(&p).unwrap();
+        let reader = TqmReader::open(&p).unwrap();
+        (cfg, dir, reader)
+    }
+
+    #[test]
+    fn container_carries_all_experts() {
+        let (cfg, _dir, reader) = demo_container();
+        let spec = cfg.moe.as_ref().unwrap();
+        assert_eq!(reader.expert_entries().len(), cfg.n_layers * spec.n_experts);
+        for l in 0..cfg.n_layers {
+            assert_eq!(reader.n_experts(l), spec.n_experts);
+        }
+        // records per expert: w1, w3, w2
+        let e = reader.expert_entry(0, 0).unwrap();
+        assert_eq!(e.records.len(), 3);
+        assert_eq!(
+            e.decoded_f32_bytes,
+            (2 * cfg.d_model * spec.d_expert + spec.d_expert * cfg.d_model) * 4
+        );
+    }
+
+    #[test]
+    fn expert_load_matches_two_step_dequant() {
+        let (_cfg, _dir, reader) = demo_container();
+        let w = ExpertWeights::load(&reader, 1, 3).unwrap();
+        for (mat, data) in EXPERT_MATRIX_NAMES.iter().zip([&w.w1, &w.w3, &w.w2]) {
+            let q = reader.load_quantized(&expert_record_name(1, 3, mat)).unwrap();
+            assert_eq!(data, &q.dequantize().data, "{mat}");
+        }
+    }
+
+    #[test]
+    fn router_top_k_properties() {
+        let (cfg, _dir, reader) = demo_container();
+        let spec = cfg.moe.as_ref().unwrap();
+        let router = Router::load(&reader, 0).unwrap();
+        assert_eq!(router.n_experts(), spec.n_experts);
+        let mut rng = crate::util::Rng::seed_from_u64(3);
+        for _ in 0..50 {
+            let x = rng.normal_vec(cfg.d_model, 1.0);
+            let picks = router.top_k(&x, spec.top_k);
+            assert_eq!(picks.len(), spec.top_k);
+            // distinct experts, gates positive and normalized
+            let mut ids: Vec<usize> = picks.iter().map(|p| p.0).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), spec.top_k);
+            let total: f32 = picks.iter().map(|p| p.1).sum();
+            assert!((total - 1.0).abs() < 1e-5, "gates sum to {total}");
+            assert!(picks.iter().all(|p| p.1 > 0.0));
+            // picked experts really are the argmax set of the logits
+            let logits = router.logits(&x);
+            let min_picked =
+                picks.iter().map(|p| logits[p.0]).fold(f32::INFINITY, f32::min);
+            let unpicked_max = logits
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !picks.iter().any(|p| p.0 == *i))
+                .map(|(_, &v)| v)
+                .fold(f32::NEG_INFINITY, f32::max);
+            assert!(min_picked >= unpicked_max);
+        }
+    }
+
+    #[test]
+    fn moe_forward_is_gated_expert_sum() {
+        let (cfg, _dir, reader) = demo_container();
+        let spec = cfg.moe.as_ref().unwrap();
+        let router = Router::load(&reader, 0).unwrap();
+        let all: Vec<Arc<ExpertWeights>> = (0..spec.n_experts)
+            .map(|e| Arc::new(ExpertWeights::load(&reader, 0, e).unwrap()))
+            .collect();
+        let mut rng = crate::util::Rng::seed_from_u64(9);
+        let x = rng.normal_vec(cfg.d_model, 1.0);
+        let y =
+            moe_forward_token(&x, &router, spec.top_k, |e| Ok(all[e].clone())).unwrap();
+        // manual recompute
+        let mut want = vec![0.0f32; cfg.d_model];
+        for (e, g) in router.top_k(&x, spec.top_k) {
+            for (w, v) in want.iter_mut().zip(all[e].ffn(&x)) {
+                *w += g * v;
+            }
+        }
+        assert_eq!(y, want);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn per_tensor_quantization_roundtrips_too() {
+        let cfg = moe_demo_config();
+        let ckpt = synth_moe_checkpoint(&cfg, 21).unwrap();
+        let opts = QuantizeOptions::default(); // per-tensor
+        let w = quantize_moe_checkpoint(&cfg, &ckpt, &opts, CodecId::Lzw, "unit").unwrap();
+        let dir = TempDir::new().unwrap();
+        let p = dir.join("moe.tqm");
+        w.write(&p).unwrap();
+        let reader = TqmReader::open(&p).unwrap();
+        let e = ExpertWeights::load(&reader, 0, 1).unwrap();
+        e.validate().unwrap();
+        // quantization error stays small at 8 bits
+        let orig = ckpt.f32(&expert_record_name(0, 1, "w1")).unwrap();
+        let mse: f64 = orig
+            .data
+            .iter()
+            .zip(&e.w1)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / orig.data.len() as f64;
+        assert!(mse < 1e-4, "mse {mse}");
+    }
+
+    #[test]
+    fn clustered_trace_repeats_within_runs() {
+        let trace = clustered_trace(8, 3, 4, 24, 1);
+        assert_eq!(trace.len(), 24);
+        assert_eq!(trace[0], trace[3]); // same run
+        assert_ne!(trace[0], trace[4]); // next cluster
+        assert_eq!(trace[0], trace[12]); // cluster cycle repeats
+    }
+}

@@ -90,20 +90,78 @@ mod tests {
     }
 
     #[test]
-    fn tail_events_lift_p99() {
-        let no_tail = NetworkModel { tail_p: 0.0, ..NetworkModel::paper_chatgpt() };
-        let tail = NetworkModel { tail_p: 0.2, ..NetworkModel::paper_chatgpt() };
-        let a = no_tail.summarize(20_000, 2);
-        let b = tail.summarize(20_000, 2);
-        assert!(b.p99_s > a.p99_s);
-    }
-
-    #[test]
     fn deterministic_given_seed() {
         let m = NetworkModel::mobile_lte();
         let a = m.summarize(1000, 7);
         let b = m.summarize(1000, 7);
         assert_eq!(a.p50_s, b.p50_s);
+    }
+
+    #[test]
+    fn percentiles_monotone_across_models_and_seeds() {
+        // p50 <= p95 <= p99 (and mean positive) must hold for every model
+        // shape and any seed — percentile extraction is order statistics,
+        // not luck
+        let models = [
+            NetworkModel::paper_chatgpt(),
+            NetworkModel::fast_fiber(),
+            NetworkModel::mobile_lte(),
+        ];
+        for m in &models {
+            for seed in 0..25u64 {
+                let s = m.summarize(2000, seed);
+                assert!(s.mean_s > 0.0, "seed {seed}");
+                assert!(s.p50_s > 0.0, "seed {seed}");
+                assert!(s.p50_s <= s.p95_s, "seed {seed}: p50 {} > p95 {}", s.p50_s, s.p95_s);
+                assert!(s.p95_s <= s.p99_s, "seed {seed}: p95 {} > p99 {}", s.p95_s, s.p99_s);
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_seed_summaries_bit_identical() {
+        // not just "close": every field of the summary must be the exact
+        // same f64 bits run to run, for each model
+        for (i, m) in [
+            NetworkModel::paper_chatgpt(),
+            NetworkModel::fast_fiber(),
+            NetworkModel::mobile_lte(),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let seed = 1000 + i as u64;
+            let a = m.summarize(5000, seed);
+            let b = m.summarize(5000, seed);
+            assert_eq!(a.mean_s.to_bits(), b.mean_s.to_bits());
+            assert_eq!(a.p50_s.to_bits(), b.p50_s.to_bits());
+            assert_eq!(a.p95_s.to_bits(), b.p95_s.to_bits());
+            assert_eq!(a.p99_s.to_bits(), b.p99_s.to_bits());
+            // a different seed moves at least one statistic
+            let c = m.summarize(5000, seed + 1);
+            assert!(
+                a.mean_s.to_bits() != c.mean_s.to_bits()
+                    || a.p99_s.to_bits() != c.p99_s.to_bits(),
+                "model {i}: different seeds produced identical summaries"
+            );
+        }
+    }
+
+    #[test]
+    fn tail_probability_and_multiplier_widen_p99_not_p50() {
+        // the tail knobs must do what the docs claim: lift the far tail
+        // while leaving the median essentially untouched
+        let base = NetworkModel { tail_p: 0.0, ..NetworkModel::paper_chatgpt() };
+        let spiky = NetworkModel { tail_p: 0.05, ..base.clone() };
+        let spikier = NetworkModel { tail_p: 0.05, tail_mult: 8.0, ..base.clone() };
+        let n = 40_000;
+        let b = base.summarize(n, 13);
+        let s1 = spiky.summarize(n, 13);
+        let s2 = spikier.summarize(n, 13);
+        assert!(s1.p99_s > b.p99_s, "tail events must widen p99");
+        assert!(s2.p99_s > s1.p99_s, "a larger multiplier must widen p99 further");
+        // median moves by at most a few percent (5% of samples are tails)
+        assert!((s1.p50_s - b.p50_s).abs() / b.p50_s < 0.05);
     }
 
     #[test]

@@ -1,0 +1,410 @@
+//! Byte-budgeted LRU cache of decoded experts — the MoE counterpart of
+//! the layer-streaming pipeline.
+//!
+//! The serving premise is the same as for dense layers (weights live
+//! compressed; decoding is the cost), but the access pattern is sparser:
+//! a token touches only its routed `top_k` experts, and real traffic
+//! reuses experts heavily across consecutive tokens. The cache exploits
+//! that:
+//!
+//! * **hits** return an `Arc<ExpertWeights>` without touching the decoder
+//!   at all;
+//! * **misses** decode the expert's three matrices through the fused
+//!   decompress→dequantize kernel, fanning the per-matrix decodes out
+//!   over scoped threads when `n_threads > 1` (each matrix is its own
+//!   chunk-framed record, so the decodes are independent);
+//! * **eviction is planned, not reactive**: the expert index knows each
+//!   expert's decoded f32 size before any decode happens, so the cache
+//!   evicts LRU entries *ahead* of the miss, and the decoded-expert
+//!   high-water mark (tracked through
+//!   [`PipelineMetrics::expert_peak_resident_bytes`], including
+//!   in-flight decode bytes) stays under the budget whenever enough
+//!   unpinned bytes are evictable to admit the routed expert — the two
+//!   documented exceptions are an expert larger than the entire budget
+//!   (pure streaming: the miss still decodes, uncached) and pinned
+//!   bytes crowding the budget, in both of which the peak metric
+//!   honestly reports the overshoot;
+//! * **buffers recycle** (the PR-1 machinery): evicted experts donate
+//!   their f32 arenas back to a pool the next miss draws from, and the
+//!   packed-stream scratch per decode worker is grow-only, so the
+//!   steady-state miss path allocates nothing new.
+//!
+//! Pinning exempts hot experts (e.g. a shared expert, or the top experts
+//! of a known-hot tenant) from eviction; pinned bytes still count toward
+//! the budget.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::ServeOptions;
+use crate::format::{expert_record_name, TqmReader};
+use crate::model::moe::{ExpertWeights, EXPERT_MATRIX_NAMES};
+use crate::pipeline::PipelineMetrics;
+
+/// A cached decoded expert plus its last-use stamp (monotonic clock —
+/// exact LRU with O(1) hits; eviction scans for the minimum stamp, so
+/// only misses that actually evict pay O(entries)).
+struct Slot {
+    w: Arc<ExpertWeights>,
+    last_used: u64,
+}
+
+pub struct ExpertCache {
+    reader: Arc<TqmReader>,
+    metrics: Arc<PipelineMetrics>,
+    budget_bytes: usize,
+    n_threads: usize,
+    /// (layer, expert) -> decoded weights + LRU stamp.
+    map: HashMap<(usize, usize), Slot>,
+    /// Monotonic use counter backing the LRU stamps.
+    clock: u64,
+    pinned: HashSet<(usize, usize)>,
+    resident_bytes: usize,
+    /// Recycled f32 arenas from evicted experts.
+    pool: Vec<Vec<f32>>,
+    /// Grow-only packed-stream scratch, one per decode worker.
+    scratch: Vec<Vec<u8>>,
+}
+
+impl ExpertCache {
+    /// `budget_bytes` bounds the decoded-expert residency; `n_threads > 1`
+    /// fans an expert's three matrix decodes out over scoped threads.
+    pub fn new(
+        reader: Arc<TqmReader>,
+        metrics: Arc<PipelineMetrics>,
+        budget_bytes: usize,
+        n_threads: usize,
+    ) -> Self {
+        Self {
+            reader,
+            metrics,
+            budget_bytes,
+            n_threads: n_threads.max(1),
+            map: HashMap::new(),
+            clock: 0,
+            pinned: HashSet::new(),
+            resident_bytes: 0,
+            pool: Vec::new(),
+            scratch: vec![Vec::new(); EXPERT_MATRIX_NAMES.len()],
+        }
+    }
+
+    /// Build from the serving options: budget from
+    /// [`ServeOptions::expert_budget_bytes`], decode fan-out from the
+    /// resolved thread count — the constructor the serving paths
+    /// ([`crate::pipeline::Engine::expert_cache`], the MoE eval
+    /// scenario) go through, so the knobs are honored everywhere.
+    pub fn from_options(
+        reader: Arc<TqmReader>,
+        metrics: Arc<PipelineMetrics>,
+        opts: &ServeOptions,
+    ) -> Self {
+        Self::new(reader, metrics, opts.expert_budget_bytes, opts.resolved_threads())
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Decoded bytes currently cached.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    /// Cached expert count.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, layer: usize, expert: usize) -> bool {
+        self.map.contains_key(&(layer, expert))
+    }
+
+    /// Fetch an expert: cached -> LRU bump + hit; missing -> evict ahead,
+    /// decode, and cache (unless it alone exceeds the budget, in which
+    /// case it is returned uncached — pure streaming).
+    pub fn get(&mut self, layer: usize, expert: usize) -> Result<Arc<ExpertWeights>> {
+        let key = (layer, expert);
+        self.clock += 1;
+        if let Some(slot) = self.map.get_mut(&key) {
+            slot.last_used = self.clock;
+            let w = slot.w.clone();
+            self.metrics.expert_hit();
+            return Ok(w);
+        }
+        // size known from the expert index — make room before decoding so
+        // cached + in-flight bytes never exceed the budget (when a single
+        // expert fits it at all)
+        let need = self.reader.expert_entry(layer, expert)?.decoded_f32_bytes;
+        self.evict_until_fits(need);
+        let t0 = Instant::now();
+        let w = Arc::new(self.decode_expert(layer, expert)?);
+        self.metrics.record_expert_miss(t0.elapsed(), need);
+        self.metrics.observe_expert_transient(self.resident_bytes + need);
+        debug_assert_eq!(w.bytes(), need, "expert index size disagrees with decode");
+        if self.resident_bytes + need <= self.budget_bytes {
+            self.map.insert(key, Slot { w: w.clone(), last_used: self.clock });
+            self.resident_bytes += need;
+            self.metrics.set_expert_resident(self.resident_bytes);
+        }
+        Ok(w)
+    }
+
+    /// Decode (if needed) and exempt an expert from eviction. Errors if
+    /// the expert cannot be retained within the budget.
+    pub fn pin(&mut self, layer: usize, expert: usize) -> Result<()> {
+        let _ = self.get(layer, expert)?;
+        anyhow::ensure!(
+            self.contains(layer, expert),
+            "expert ({layer}, {expert}) does not fit the cache budget; cannot pin"
+        );
+        self.pinned.insert((layer, expert));
+        Ok(())
+    }
+
+    pub fn unpin(&mut self, layer: usize, expert: usize) {
+        self.pinned.remove(&(layer, expert));
+    }
+
+    pub fn is_pinned(&self, layer: usize, expert: usize) -> bool {
+        self.pinned.contains(&(layer, expert))
+    }
+
+    /// Evict least-recently-used entries (skipping pinned ones) until
+    /// `need` more bytes fit in the budget, or nothing evictable remains.
+    fn evict_until_fits(&mut self, need: usize) {
+        while self.resident_bytes + need > self.budget_bytes {
+            let victim = self
+                .map
+                .iter()
+                .filter(|(k, _)| !self.pinned.contains(*k))
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| *k);
+            let Some(key) = victim else { break };
+            if let Some(slot) = self.map.remove(&key) {
+                self.resident_bytes -= slot.w.bytes();
+                self.metrics.record_expert_eviction();
+                // sole owner -> recycle the arenas for the next miss
+                if let Ok(mut owned) = Arc::try_unwrap(slot.w) {
+                    self.pool.push(std::mem::take(&mut owned.w1));
+                    self.pool.push(std::mem::take(&mut owned.w3));
+                    self.pool.push(std::mem::take(&mut owned.w2));
+                }
+            }
+        }
+        self.metrics.set_expert_resident(self.resident_bytes);
+    }
+
+    /// Decode one expert into pooled arenas, fanning the three matrix
+    /// decodes out over scoped threads when configured. Produces exactly
+    /// the bytes [`ExpertWeights::load`] would (same fused kernel), which
+    /// the bit-exactness tests rely on.
+    fn decode_expert(&mut self, layer: usize, expert: usize) -> Result<ExpertWeights> {
+        let names = [
+            expert_record_name(layer, expert, EXPERT_MATRIX_NAMES[0]),
+            expert_record_name(layer, expert, EXPERT_MATRIX_NAMES[1]),
+            expert_record_name(layer, expert, EXPERT_MATRIX_NAMES[2]),
+        ];
+        let mut w1 = self.pool.pop().unwrap_or_default();
+        let mut w3 = self.pool.pop().unwrap_or_default();
+        let mut w2 = self.pool.pop().unwrap_or_default();
+        {
+            let reader = &*self.reader;
+            let parallel = self.n_threads > 1;
+            let outs: [&mut Vec<f32>; 3] = [&mut w1, &mut w3, &mut w2];
+            let jobs: Vec<(&String, &mut Vec<u8>, &mut Vec<f32>)> = names
+                .iter()
+                .zip(self.scratch.iter_mut())
+                .zip(outs)
+                .map(|((n, s), o)| (n, s, o))
+                .collect();
+            if parallel {
+                let results: Vec<Result<()>> = std::thread::scope(|scope| {
+                    let handles: Vec<_> = jobs
+                        .into_iter()
+                        .map(|(name, scratch, out)| {
+                            scope.spawn(move || {
+                                reader.load_dequantized_into(name, scratch, out)
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("expert decode worker panicked"))
+                        .collect()
+                });
+                for r in results {
+                    r?;
+                }
+            } else {
+                for (name, scratch, out) in jobs {
+                    reader.load_dequantized_into(name, scratch, out)?;
+                }
+            }
+        }
+        let r1 = self.reader.record(&names[0])?;
+        let (d_model, d_expert) = (r1.shape[0], r1.shape[1]);
+        let w = ExpertWeights { layer, expert, d_model, d_expert, w1, w3, w2 };
+        w.validate()?;
+        Ok(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CodecId;
+    use crate::config::QuantizeOptions;
+    use crate::model::moe::{
+        moe_demo_config, quantize_moe_checkpoint, synth_moe_checkpoint,
+    };
+    use crate::util::TempDir;
+
+    fn demo_reader(chunk_len: usize) -> (crate::config::ModelConfig, TempDir, Arc<TqmReader>) {
+        let cfg = moe_demo_config();
+        let ckpt = synth_moe_checkpoint(&cfg, 17).unwrap();
+        let opts = QuantizeOptions { per_channel: true, ..Default::default() };
+        let w = quantize_moe_checkpoint(&cfg, &ckpt, &opts, CodecId::FreqSeqPacked, "unit")
+            .unwrap()
+            .with_chunk_len(chunk_len);
+        let dir = TempDir::new().unwrap();
+        let p = dir.join("moe.tqm");
+        w.write(&p).unwrap();
+        (cfg, dir, Arc::new(TqmReader::open(&p).unwrap()))
+    }
+
+    fn expert_bytes(reader: &TqmReader) -> usize {
+        reader.expert_entry(0, 0).unwrap().decoded_f32_bytes
+    }
+
+    #[test]
+    fn hit_miss_and_budget_eviction() {
+        let (_cfg, _dir, reader) = demo_reader(512);
+        let metrics = Arc::new(PipelineMetrics::default());
+        let one = expert_bytes(&reader);
+        // room for exactly two experts
+        let mut cache = ExpertCache::new(reader, metrics.clone(), 2 * one, 1);
+        let a = cache.get(0, 0).unwrap();
+        let b = cache.get(0, 1).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.resident_bytes(), 2 * one);
+        // hits do not decode
+        let a2 = cache.get(0, 0).unwrap();
+        assert!(Arc::ptr_eq(&a, &a2));
+        assert_eq!(metrics.expert_hits_count(), 1);
+        assert_eq!(metrics.expert_misses_count(), 2);
+        // third expert evicts the LRU one — which is (0,1): (0,0) was
+        // touched more recently by the hit
+        let _c = cache.get(0, 2).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert!(cache.contains(0, 0));
+        assert!(!cache.contains(0, 1));
+        assert!(cache.contains(0, 2));
+        assert_eq!(metrics.expert_evictions_count(), 1);
+        // the peak never exceeded the budget
+        assert!(metrics.expert_peak_resident_bytes() <= 2 * one);
+        drop(b);
+    }
+
+    #[test]
+    fn from_options_honors_the_serving_knobs() {
+        let (_cfg, _dir, reader) = demo_reader(512);
+        let metrics = Arc::new(PipelineMetrics::default());
+        let one = expert_bytes(&reader);
+        let opts = ServeOptions {
+            expert_budget_bytes: 2 * one,
+            n_threads: 1,
+            ..Default::default()
+        };
+        let mut cache = ExpertCache::from_options(reader, metrics, &opts);
+        assert_eq!(cache.budget_bytes(), 2 * one);
+        // the budget really bounds retention: a third expert evicts
+        let _ = cache.get(0, 0).unwrap();
+        let _ = cache.get(0, 1).unwrap();
+        let _ = cache.get(0, 2).unwrap();
+        assert_eq!(cache.len(), 2, "expert_budget_bytes knob not applied");
+    }
+
+    #[test]
+    fn parallel_and_serial_decode_identical() {
+        let (_cfg, _dir, reader) = demo_reader(256); // multi-chunk payloads
+        let m1 = Arc::new(PipelineMetrics::default());
+        let m2 = Arc::new(PipelineMetrics::default());
+        let mut serial = ExpertCache::new(reader.clone(), m1, usize::MAX, 1);
+        let mut parallel = ExpertCache::new(reader.clone(), m2, usize::MAX, 4);
+        for layer in 0..2 {
+            for e in 0..3 {
+                let a = serial.get(layer, e).unwrap();
+                let b = parallel.get(layer, e).unwrap();
+                assert_eq!(a.w1, b.w1, "layer {layer} expert {e}");
+                assert_eq!(a.w3, b.w3, "layer {layer} expert {e}");
+                assert_eq!(a.w2, b.w2, "layer {layer} expert {e}");
+                // and both match the fresh-buffer reference decode
+                let r = ExpertWeights::load(&reader, layer, e).unwrap();
+                assert_eq!(a.w1, r.w1);
+                assert_eq!(a.w2, r.w2);
+            }
+        }
+    }
+
+    #[test]
+    fn pinned_experts_survive_pressure() {
+        let (_cfg, _dir, reader) = demo_reader(512);
+        let metrics = Arc::new(PipelineMetrics::default());
+        let one = expert_bytes(&reader);
+        let mut cache = ExpertCache::new(reader, metrics, 2 * one, 1);
+        cache.pin(0, 5).unwrap();
+        assert!(cache.is_pinned(0, 5));
+        // churn through every other expert; (0,5) must never leave
+        for e in [0usize, 1, 2, 3, 4, 6, 7, 0, 1, 2] {
+            let _ = cache.get(0, e).unwrap();
+            assert!(cache.contains(0, 5), "pinned expert evicted at {e}");
+        }
+        cache.unpin(0, 5);
+        for e in [0usize, 1, 2] {
+            let _ = cache.get(0, e).unwrap();
+        }
+        assert!(!cache.contains(0, 5), "unpinned expert should age out");
+    }
+
+    #[test]
+    fn oversized_expert_streams_without_caching() {
+        let (_cfg, _dir, reader) = demo_reader(512);
+        let metrics = Arc::new(PipelineMetrics::default());
+        let one = expert_bytes(&reader);
+        let mut cache = ExpertCache::new(reader, metrics.clone(), one / 2, 1);
+        let w = cache.get(0, 0).unwrap();
+        assert!(w.bytes() > 0);
+        assert!(cache.is_empty(), "over-budget expert must not be retained");
+        assert_eq!(cache.resident_bytes(), 0);
+        // a second fetch is another miss (pure streaming)
+        let _ = cache.get(0, 0).unwrap();
+        assert_eq!(metrics.expert_misses_count(), 2);
+        assert_eq!(metrics.expert_hits_count(), 0);
+        // pinning something that cannot fit is an error
+        assert!(cache.pin(0, 1).is_err());
+    }
+
+    #[test]
+    fn eviction_recycles_buffers() {
+        let (_cfg, _dir, reader) = demo_reader(512);
+        let metrics = Arc::new(PipelineMetrics::default());
+        let one = expert_bytes(&reader);
+        let mut cache = ExpertCache::new(reader, metrics, one, 1);
+        // each get evicts the previous expert; its arenas go to the pool,
+        // and the next decode drains the pool again
+        let w0 = cache.get(0, 0).unwrap();
+        drop(w0); // cache holds the only other Arc -> recyclable
+        let _w1 = cache.get(0, 1).unwrap();
+        let _w2 = cache.get(0, 2).unwrap();
+        // pool never grows past one evicted expert's three arenas
+        assert!(cache.pool.len() <= 3, "pool holds {} arenas", cache.pool.len());
+    }
+}

@@ -26,6 +26,18 @@ pub struct PipelineMetrics {
     constant_bytes: AtomicUsize,
     peak_transient_bytes: AtomicUsize,
     lru_resident_bytes: AtomicUsize,
+    // -- expert cache (MoE serving) -----------------------------------------
+    expert_hits: AtomicU64,
+    expert_misses: AtomicU64,
+    expert_evictions: AtomicU64,
+    /// Wall time spent decoding experts on cache misses.
+    expert_decode_ns: AtomicU64,
+    expert_decoded_bytes: AtomicU64,
+    /// Decoded-expert bytes currently held by the cache.
+    expert_resident_bytes: AtomicUsize,
+    /// High-water mark of decoded-expert bytes (cached + in-flight decode)
+    /// — the number the cache-budget acceptance test asserts against.
+    expert_peak_resident_bytes: AtomicUsize,
 }
 
 impl PipelineMetrics {
@@ -115,6 +127,77 @@ impl PipelineMetrics {
         self.lru_hits.load(Ordering::Relaxed)
     }
 
+    // -- expert cache -------------------------------------------------------
+
+    /// A router pick found its expert decoded in the cache (no decode).
+    pub fn expert_hit(&self) {
+        self.expert_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A router pick missed: `d` is the decode wall time, `bytes` the
+    /// decoded f32 size of the expert.
+    pub fn record_expert_miss(&self, d: Duration, bytes: usize) {
+        self.expert_misses.fetch_add(1, Ordering::Relaxed);
+        self.expert_decode_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.expert_decoded_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_expert_eviction(&self) {
+        self.expert_evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Cached decoded-expert bytes after an insert/evict (also advances
+    /// the peak).
+    pub fn set_expert_resident(&self, bytes: usize) {
+        self.expert_resident_bytes.store(bytes, Ordering::Relaxed);
+        self.expert_peak_resident_bytes.fetch_max(bytes, Ordering::Relaxed);
+    }
+
+    /// Advance the decoded-expert high-water mark without changing the
+    /// resident figure (in-flight decode bytes during a miss).
+    pub fn observe_expert_transient(&self, bytes: usize) {
+        self.expert_peak_resident_bytes.fetch_max(bytes, Ordering::Relaxed);
+    }
+
+    pub fn expert_hits_count(&self) -> u64 {
+        self.expert_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn expert_misses_count(&self) -> u64 {
+        self.expert_misses.load(Ordering::Relaxed)
+    }
+
+    pub fn expert_evictions_count(&self) -> u64 {
+        self.expert_evictions.load(Ordering::Relaxed)
+    }
+
+    /// Hit fraction of expert lookups so far (0.0 before any lookup).
+    pub fn expert_hit_rate(&self) -> f64 {
+        let h = self.expert_hits_count();
+        let m = self.expert_misses_count();
+        if h + m == 0 {
+            return 0.0;
+        }
+        h as f64 / (h + m) as f64
+    }
+
+    pub fn expert_resident_bytes(&self) -> usize {
+        self.expert_resident_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn expert_peak_resident_bytes(&self) -> usize {
+        self.expert_peak_resident_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Mean decode latency per expert-cache miss, in milliseconds.
+    pub fn expert_miss_mean_ms(&self) -> f64 {
+        let m = self.expert_misses_count();
+        if m == 0 {
+            return 0.0;
+        }
+        self.expert_decode_ns.load(Ordering::Relaxed) as f64 / 1e6 / m as f64
+    }
+
     pub fn decompress_mb_s(&self) -> f64 {
         let secs = self.decompress_secs();
         if secs == 0.0 {
@@ -124,7 +207,7 @@ impl PipelineMetrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "decompress: {} calls, {:.1} ms total ({:.0} MB/s, {:.1}/{} cores busy); exec: {} calls, {:.1} ms; peak weights: {:.2} MB; lru hits: {}",
             self.decompress_count(),
             self.decompress_secs() * 1e3,
@@ -135,7 +218,20 @@ impl PipelineMetrics {
             self.exec_secs() * 1e3,
             self.peak_bytes() as f64 / 1e6,
             self.lru_hits_count(),
-        )
+        );
+        let (h, m) = (self.expert_hits_count(), self.expert_misses_count());
+        if h + m > 0 {
+            s.push_str(&format!(
+                "; experts: {:.0}% hit ({h}/{}), resident {:.2} MB (peak {:.2} MB), {:.3} ms/miss, {} evictions",
+                self.expert_hit_rate() * 100.0,
+                h + m,
+                self.expert_resident_bytes() as f64 / 1e6,
+                self.expert_peak_resident_bytes() as f64 / 1e6,
+                self.expert_miss_mean_ms(),
+                self.expert_evictions_count(),
+            ));
+        }
+        s
     }
 
     pub fn reset_timers(&self) {
@@ -166,6 +262,29 @@ mod tests {
         m.reset_timers();
         assert_eq!(m.decompress_count(), 0);
         assert_eq!(m.peak_bytes(), 150, "residency survives timer reset");
+    }
+
+    #[test]
+    fn expert_accounting() {
+        let m = PipelineMetrics::default();
+        assert_eq!(m.expert_hit_rate(), 0.0, "no lookups yet");
+        m.record_expert_miss(Duration::from_millis(2), 1000);
+        m.observe_expert_transient(1000);
+        m.set_expert_resident(1000);
+        m.expert_hit();
+        m.expert_hit();
+        m.expert_hit();
+        assert_eq!(m.expert_hits_count(), 3);
+        assert_eq!(m.expert_misses_count(), 1);
+        assert!((m.expert_hit_rate() - 0.75).abs() < 1e-12);
+        assert!(m.expert_miss_mean_ms() >= 2.0);
+        m.record_expert_eviction();
+        m.set_expert_resident(0);
+        assert_eq!(m.expert_resident_bytes(), 0);
+        assert_eq!(m.expert_peak_resident_bytes(), 1000, "peak survives eviction");
+        assert_eq!(m.expert_evictions_count(), 1);
+        // expert section shows up in the human summary once active
+        assert!(m.summary().contains("experts:"));
     }
 
     #[test]

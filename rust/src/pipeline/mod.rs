@@ -25,6 +25,7 @@
 //! worker utilization ([`PipelineMetrics::decode_utilization`]).
 
 pub mod decode;
+pub mod expert_cache;
 pub mod metrics;
 
 use std::sync::mpsc;
@@ -41,6 +42,7 @@ use crate::tensor::Tensor;
 use crate::xla;
 
 pub use decode::{DecodeScratch, DecodedLayer, LayerDecoder};
+pub use expert_cache::ExpertCache;
 pub use metrics::PipelineMetrics;
 
 /// Host-side per-layer KV cache for one request (B dim stripped:
@@ -91,7 +93,12 @@ pub struct Engine {
     pub residency: Residency,
     /// Decode→execute pipeline depth (0 = decode inline).
     pub prefetch_depth: usize,
-    pub metrics: PipelineMetrics,
+    /// Decoded-expert LRU budget ([`ServeOptions::expert_budget_bytes`])
+    /// applied by [`Engine::expert_cache`] for MoE containers.
+    pub expert_budget_bytes: usize,
+    /// Shared so the coordinator can report pipeline/expert-cache health
+    /// for a model without reaching into its serving thread.
+    pub metrics: Arc<PipelineMetrics>,
     /// The multi-core streaming decode fast path (present whenever the
     /// engine serves from a compressed container).
     decoder: Option<LayerDecoder>,
@@ -144,7 +151,7 @@ impl LruLayers {
 
 impl Engine {
     pub fn new(rt: Arc<Runtime>, source: WeightSource, opts: &ServeOptions) -> Result<Self> {
-        let metrics = PipelineMetrics::default();
+        let metrics = Arc::new(PipelineMetrics::default());
         let (reader, resident, heads) = match source {
             WeightSource::Compressed(r) => {
                 let heads = HeadParts {
@@ -190,6 +197,7 @@ impl Engine {
             layer_lits: None,
             residency,
             prefetch_depth: opts.prefetch_depth,
+            expert_budget_bytes: opts.expert_budget_bytes,
             metrics,
             decoder,
             decode_pool: std::sync::Mutex::new(Vec::new()),
@@ -226,7 +234,8 @@ impl Engine {
             layer_lits: None,
             residency: Residency::AlwaysResident,
             prefetch_depth: 0,
-            metrics: PipelineMetrics::default(),
+            expert_budget_bytes: 0,
+            metrics: Arc::new(PipelineMetrics::default()),
             decoder: None,
             decode_pool: std::sync::Mutex::new(Vec::new()),
             decode_scratch: std::sync::Mutex::new(DecodeScratch::new(1)),
@@ -275,6 +284,40 @@ impl Engine {
 
     pub fn cfg(&self) -> &ModelConfig {
         &self.rt.manifest.config
+    }
+
+    /// Build a decoded-expert LRU cache over this engine's compressed
+    /// container (MoE serving) using the configured knobs
+    /// ([`ServeOptions::expert_budget_bytes`] and the engine's decode
+    /// thread count): hits skip the decoder, misses decode per-expert
+    /// records and account against the budget. Shares the engine's
+    /// [`PipelineMetrics`], so expert hit-rate / residency show up in the
+    /// same report. Errors if the engine is not serving from a compressed
+    /// source or the container carries no expert records.
+    pub fn expert_cache(&self) -> Result<ExpertCache> {
+        self.expert_cache_with(self.expert_budget_bytes, self.metrics.decode_threads())
+    }
+
+    /// [`Engine::expert_cache`] with explicit budget/thread overrides.
+    pub fn expert_cache_with(
+        &self,
+        budget_bytes: usize,
+        n_threads: usize,
+    ) -> Result<ExpertCache> {
+        let reader = self
+            .reader
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("expert cache requires a compressed weight source"))?;
+        anyhow::ensure!(
+            !reader.expert_entries().is_empty(),
+            "container has no expert records (dense model?)"
+        );
+        Ok(ExpertCache::new(
+            reader.clone(),
+            self.metrics.clone(),
+            budget_bytes,
+            n_threads.max(1),
+        ))
     }
 
     fn charge_constant_residency(&self) {

@@ -113,6 +113,7 @@ fn coordinator_stress_random_load() {
                 max_batch: 2,
                 max_wait_ms: 1,
                 max_new_tokens: 6,
+                ..Default::default()
             },
         })
         .unwrap();

@@ -1,0 +1,144 @@
+//! MoE end-to-end invariants (the acceptance criterion of the expert
+//! streaming work): forwarding a routing trace through the byte-budgeted
+//! expert cache must be **bit-exact** against a fully-resident decode of
+//! the same checkpoint, while the decoded-expert high-water mark stays
+//! under the configured budget and a reuse-heavy trace produces cache
+//! hits. Host-side throughout — no lowered artifacts or PJRT backend
+//! required.
+
+use std::sync::Arc;
+
+use tiny_qmoe::compress::CodecId;
+use tiny_qmoe::config::QuantizeOptions;
+use tiny_qmoe::format::TqmReader;
+use tiny_qmoe::model::moe::{
+    clustered_trace, load_routers, moe_demo_config, moe_stack_forward, quantize_moe_checkpoint,
+    synth_moe_checkpoint, ExpertWeights,
+};
+use tiny_qmoe::pipeline::{ExpertCache, PipelineMetrics};
+use tiny_qmoe::util::TempDir;
+
+fn build_container(chunk_len: usize, per_channel: bool) -> (tiny_qmoe::config::ModelConfig, TempDir, Arc<TqmReader>) {
+    let cfg = moe_demo_config();
+    let ckpt = synth_moe_checkpoint(&cfg, 101).unwrap();
+    let opts = QuantizeOptions { per_channel, ..Default::default() };
+    let w = quantize_moe_checkpoint(&cfg, &ckpt, &opts, CodecId::FreqSeqPacked, "itest")
+        .unwrap()
+        .with_chunk_len(chunk_len);
+    let dir = TempDir::new().unwrap();
+    let p = dir.join("moe.tqm");
+    w.write(&p).unwrap();
+    let reader = Arc::new(TqmReader::open(&p).unwrap());
+    (cfg, dir, reader)
+}
+
+#[test]
+fn cached_forward_bit_exact_under_budget_with_hits() {
+    let (cfg, _dir, reader) = build_container(300, true);
+    let spec = cfg.moe.clone().unwrap();
+    let routers = load_routers(&reader, cfg.n_layers).unwrap();
+
+    // fully-resident reference: every expert decoded up front, fresh
+    // buffers, same fused kernel
+    let resident: Vec<Vec<Arc<ExpertWeights>>> = (0..cfg.n_layers)
+        .map(|l| {
+            (0..spec.n_experts)
+                .map(|e| Arc::new(ExpertWeights::load(&reader, l, e).unwrap()))
+                .collect()
+        })
+        .collect();
+
+    // budget: top_k experts per layer stay warm, plus half an expert of
+    // slack — far below all-resident (n_layers * n_experts experts)
+    let one = reader.expert_entry(0, 0).unwrap().decoded_f32_bytes;
+    let budget = spec.top_k * cfg.n_layers * one + one / 2;
+    let metrics = Arc::new(PipelineMetrics::default());
+    let mut cache = ExpertCache::new(reader.clone(), metrics.clone(), budget, 2);
+
+    // reuse-heavy trace: runs of identical token vectors (real decode
+    // traffic is topic-coherent), cycling through 4 clusters
+    let trace = clustered_trace(cfg.d_model, 4, 6, 48, 9);
+
+    for x in &trace {
+        let via_cache =
+            moe_stack_forward(&routers, &spec, x, |l, e| cache.get(l, e)).unwrap();
+        let via_resident =
+            moe_stack_forward(&routers, &spec, x, |l, e| Ok(resident[l][e].clone()))
+                .unwrap();
+        // THE invariant: lossless serving — the cache changes residency,
+        // never values
+        assert_eq!(via_cache, via_resident, "cached forward diverged");
+        assert!(via_cache.iter().all(|v| v.is_finite()));
+    }
+
+    // budget held at every instant (cached + in-flight decode)
+    assert!(
+        metrics.expert_peak_resident_bytes() <= budget,
+        "peak {} exceeded budget {budget}",
+        metrics.expert_peak_resident_bytes()
+    );
+    assert!(metrics.expert_resident_bytes() <= budget);
+    // the reused trace hit the cache
+    assert!(metrics.expert_hits_count() > 0, "no cache hits on a reused trace");
+    assert!(metrics.expert_hit_rate() > 0.0);
+    // and the cache really was too small to go miss-free: some experts
+    // were decoded more than once (evict + re-decode)
+    let total_lookups = metrics.expert_hits_count() + metrics.expert_misses_count();
+    assert_eq!(
+        total_lookups as usize,
+        trace.len() * cfg.n_layers * spec.top_k,
+        "every routed pick goes through the cache"
+    );
+    assert!(metrics.expert_miss_mean_ms() > 0.0, "miss decode latency recorded");
+}
+
+#[test]
+fn streaming_only_budget_still_bit_exact() {
+    // budget 0: nothing is ever retained; every pick decodes. Output must
+    // still be identical — streaming is a residency policy, not a model.
+    let (cfg, _dir, reader) = build_container(300, false);
+    let spec = cfg.moe.clone().unwrap();
+    let routers = load_routers(&reader, cfg.n_layers).unwrap();
+    let metrics = Arc::new(PipelineMetrics::default());
+    let mut cache = ExpertCache::new(reader.clone(), metrics.clone(), 0, 1);
+    let trace = clustered_trace(cfg.d_model, 2, 4, 8, 3);
+    for x in &trace {
+        let a = moe_stack_forward(&routers, &spec, x, |l, e| cache.get(l, e)).unwrap();
+        let b = moe_stack_forward(&routers, &spec, x, |l, e| {
+            Ok(Arc::new(ExpertWeights::load(&reader, l, e).unwrap()))
+        })
+        .unwrap();
+        assert_eq!(a, b);
+    }
+    assert_eq!(metrics.expert_hits_count(), 0);
+    assert_eq!(cache.resident_bytes(), 0);
+}
+
+#[test]
+fn routing_is_sparse_and_deterministic() {
+    let (cfg, _dir, reader) = build_container(600, true);
+    let spec = cfg.moe.clone().unwrap();
+    let routers = load_routers(&reader, cfg.n_layers).unwrap();
+    let metrics = Arc::new(PipelineMetrics::default());
+    let mut cache = ExpertCache::new(reader.clone(), metrics.clone(), usize::MAX, 1);
+    let trace = clustered_trace(cfg.d_model, 3, 5, 30, 11);
+    let out1: Vec<Vec<f32>> = trace
+        .iter()
+        .map(|x| moe_stack_forward(&routers, &spec, x, |l, e| cache.get(l, e)).unwrap())
+        .collect();
+    // unlimited budget: at most n_layers * n_experts distinct decodes,
+    // and with top-k routing strictly fewer than "touch everything per
+    // token" would require
+    assert!(
+        (metrics.expert_misses_count() as usize) <= cfg.n_layers * spec.n_experts,
+        "unbounded cache re-decoded an expert"
+    );
+    // the same trace replayed is all hits and identical output
+    let misses_before = metrics.expert_misses_count();
+    let out2: Vec<Vec<f32>> = trace
+        .iter()
+        .map(|x| moe_stack_forward(&routers, &spec, x, |l, e| cache.get(l, e)).unwrap())
+        .collect();
+    assert_eq!(out1, out2, "replay must be deterministic");
+    assert_eq!(metrics.expert_misses_count(), misses_before, "replay decoded again");
+}

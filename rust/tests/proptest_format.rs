@@ -1,0 +1,159 @@
+//! Container-level property tests (hand-rolled driver — no proptest crate
+//! offline): random tensors through the v2 writer must come back
+//! bit-exact for every granularity/bit-width/codec mix; legacy v1 files
+//! must keep opening; truncated files must be rejected, never panic.
+
+use tiny_qmoe::compress::{self, CodecId};
+use tiny_qmoe::format::{TqmMeta, TqmReader, TqmWriter};
+use tiny_qmoe::quant::{uniform, Bits, Granularity, QuantizedTensor};
+use tiny_qmoe::tensor::Tensor;
+use tiny_qmoe::util::{Rng, TempDir};
+
+fn meta(codec: CodecId, bits: Bits) -> TqmMeta {
+    TqmMeta {
+        model_name: "fuzz".into(),
+        codec,
+        bits,
+        per_channel: false,
+        quantizer: "naive".into(),
+        source_checkpoint: "unit".into(),
+    }
+}
+
+fn random_tensor(rng: &mut Rng) -> Tensor {
+    let rows = rng.gen_range_usize(1, 48);
+    let cols = rng.gen_range_usize(1, 48);
+    let spread = 0.1 + rng.f32() * 4.0;
+    Tensor::new(
+        vec![rows, cols],
+        (0..rows * cols).map(|_| rng.normal_f32() * spread).collect(),
+    )
+    .unwrap()
+}
+
+fn random_bits(rng: &mut Rng) -> Bits {
+    Bits::ALL[rng.gen_range_usize(0, Bits::ALL.len())]
+}
+
+fn random_gran(rng: &mut Rng) -> Granularity {
+    match rng.gen_range(0, 3) {
+        0 => Granularity::PerTensor,
+        1 => Granularity::PerChannel { axis: 0 },
+        _ => Granularity::PerChannel { axis: 1 },
+    }
+}
+
+#[test]
+fn prop_v2_roundtrip_bit_exact_all_granularities() {
+    let mut rng = Rng::seed_from_u64(0xF0_127);
+    let codecs = compress::all_codec_ids();
+    for case in 0..60 {
+        let codec = codecs[case % codecs.len()];
+        let bits = random_bits(&mut rng);
+        let n_tensors = rng.gen_range_usize(1, 5);
+        let chunk_len = rng.gen_range_usize(32, 2048);
+        let mut staged: Vec<(String, QuantizedTensor)> = Vec::new();
+        let mut norms: Vec<(String, Tensor)> = Vec::new();
+        let mut w = TqmWriter::new(meta(codec, bits)).with_chunk_len(chunk_len);
+        for t in 0..n_tensors {
+            let tensor = random_tensor(&mut rng);
+            let gran = random_gran(&mut rng);
+            let q = uniform::quantize(&tensor, bits, gran).unwrap();
+            let name = format!("t{t}");
+            w.add_quantized(&name, &q);
+            staged.push((name, q));
+            if rng.gen_bool(0.5) {
+                let n = rng.gen_range_usize(1, 64);
+                let norm =
+                    Tensor::new(vec![n], (0..n).map(|_| rng.normal_f32()).collect()).unwrap();
+                let nname = format!("n{t}");
+                w.add_f32(&nname, &norm);
+                norms.push((nname, norm));
+            }
+        }
+        let dir = TempDir::new().unwrap();
+        let p = dir.join("fuzz.tqm");
+        w.write(&p).unwrap();
+        let r = TqmReader::open(&p).unwrap();
+        assert_eq!(r.container_version, tiny_qmoe::format::CONTAINER_VERSION);
+        for (name, q) in &staged {
+            let got = r
+                .load_quantized(name)
+                .unwrap_or_else(|e| panic!("case {case} {name}: {e}"));
+            assert_eq!(got.codes, q.codes, "case {case} {name} codes");
+            assert_eq!(got.scale, q.scale, "case {case} {name} scale");
+            assert_eq!(got.zero, q.zero, "case {case} {name} zero");
+            assert_eq!(got.bits, q.bits, "case {case} {name} bits");
+            assert_eq!(got.granularity, q.granularity, "case {case} {name} gran");
+            // the fused dequant path agrees with two-step exactly
+            let mut scratch = Vec::new();
+            let mut out = Vec::new();
+            r.load_dequantized_into(name, &mut scratch, &mut out).unwrap();
+            assert_eq!(out, q.dequantize().data, "case {case} {name} fused dequant");
+        }
+        for (name, norm) in &norms {
+            assert_eq!(&r.load_f32(name).unwrap(), norm, "case {case} {name}");
+        }
+    }
+}
+
+#[test]
+fn v1_flat_container_still_opens_bit_exact() {
+    // regression: the legacy flat-payload container (version 1) must keep
+    // reading even as v2 grows features
+    let mut rng = Rng::seed_from_u64(0x01D);
+    for codec in compress::all_codec_ids() {
+        let t = random_tensor(&mut rng);
+        let q = uniform::quantize(&t, Bits::B8, Granularity::PerChannel { axis: 1 }).unwrap();
+        let mut w = TqmWriter::new(meta(codec, Bits::B8)).with_flat_payloads();
+        w.add_quantized("w", &q);
+        let dir = TempDir::new().unwrap();
+        let p = dir.join("v1.tqm");
+        w.write(&p).unwrap();
+        let r = TqmReader::open(&p).unwrap();
+        assert_eq!(r.container_version, 1, "{codec:?}");
+        assert!(!r.is_chunked());
+        let got = r.load_quantized("w").unwrap();
+        assert_eq!(got.codes, q.codes, "{codec:?}");
+        assert_eq!(got.scale, q.scale, "{codec:?}");
+    }
+}
+
+#[test]
+fn truncated_files_rejected_at_every_cut() {
+    // a valid container cut anywhere (header, dict, index, payload) must
+    // fail parsing with an error — never panic, never read garbage
+    let mut rng = Rng::seed_from_u64(0x7256);
+    let mut w = TqmWriter::new(meta(CodecId::Huffman, Bits::B8)).with_chunk_len(100);
+    for t in 0..3 {
+        let tensor = random_tensor(&mut rng);
+        let q = uniform::quantize(&tensor, Bits::B8, Granularity::PerTensor).unwrap();
+        w.add_quantized(&format!("t{t}"), &q);
+    }
+    let dir = TempDir::new().unwrap();
+    let p = dir.join("cut.tqm");
+    w.write(&p).unwrap();
+    let full = std::fs::read(&p).unwrap();
+    // the intact file parses
+    assert!(TqmReader::from_bytes(full.clone()).is_ok());
+    // every strict prefix must be rejected (step keeps the sweep fast but
+    // still covers all regions; always include the first and last bytes)
+    let mut cuts: Vec<usize> = (0..full.len()).step_by(11).collect();
+    cuts.extend([0, 1, 3, 4, full.len() - 1]);
+    for cut in cuts {
+        let truncated = full[..cut].to_vec();
+        assert!(
+            TqmReader::from_bytes(truncated).is_err(),
+            "prefix of {cut}/{} bytes parsed as a valid container",
+            full.len()
+        );
+    }
+    // corrupting the magic is rejected too
+    let mut bad_magic = full.clone();
+    bad_magic[0] ^= 0xFF;
+    assert!(TqmReader::from_bytes(bad_magic).is_err());
+    // and an unsupported version number
+    let mut bad_version = full;
+    bad_version[4..8].copy_from_slice(&99u32.to_le_bytes());
+    assert!(TqmReader::from_bytes(bad_version).is_err());
+}
