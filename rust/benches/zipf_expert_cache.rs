@@ -1,0 +1,23 @@
+//! Zipf-workload expert-cache bench (ROADMAP "expert-cache policy"):
+//! replay a synthetic zipfian routing trace through the byte-budgeted
+//! expert cache across an `expert_budget_bytes` sweep, printing hit-rate
+//! and decode-stall per budget — the data behind the default-budget
+//! choice. Two skews: a mild one (broad reuse) and a heavy one (a few
+//! hot experts dominate, the regime QMoE-style traffic reports).
+//!
+//! Run: `cargo bench --bench zipf_expert_cache` (host-side, no
+//! artifacts needed). `TQM_ZIPF_TOKENS` overrides the trace length.
+
+use tiny_qmoe::tables;
+
+fn main() -> anyhow::Result<()> {
+    let tokens = std::env::var("TQM_ZIPF_TOKENS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4000usize);
+    for alpha in [0.8f64, 1.3] {
+        let rows = tables::zipf_table(alpha, tokens)?;
+        tables::render_zipf(&rows, alpha).print();
+    }
+    Ok(())
+}

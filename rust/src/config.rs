@@ -239,6 +239,18 @@ pub struct ServeOptions {
     /// cache to retain anything (smaller budgets degrade to pure
     /// streaming). Irrelevant for dense models.
     pub expert_budget_bytes: usize,
+    /// Byte budget of the expert scheduler's *speculative* slice: how
+    /// many decoded bytes the prefetch workers may hold in the cache
+    /// ahead of a demand. Kept separate from `expert_budget_bytes` so a
+    /// prefetch can never evict what the current step needs; total
+    /// decoded residency is bounded by the sum of the two. `0` disables
+    /// prefetch entirely.
+    pub prefetch_budget_bytes: usize,
+    /// Background prefetch decode workers (scheduler worker pool).
+    pub prefetch_workers: usize,
+    /// Decay of the scheduler's EWMA expert-popularity prior (closer to
+    /// 1.0 = longer memory of which experts a workload keeps routing to).
+    pub prefetch_ewma_decay: f64,
 }
 
 impl Default for ServeOptions {
@@ -251,6 +263,9 @@ impl Default for ServeOptions {
             max_wait_ms: 2,
             max_new_tokens: 32,
             expert_budget_bytes: 64 << 20,
+            prefetch_budget_bytes: 16 << 20,
+            prefetch_workers: 1,
+            prefetch_ewma_decay: 0.8,
         }
     }
 }

@@ -14,6 +14,7 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod moe_host;
 
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -30,6 +31,7 @@ use crate::runtime::Runtime;
 
 pub use batcher::{collect_batch, BatchPolicy};
 pub use metrics::{ServeMetrics, ServeSnapshot};
+pub use moe_host::{MoeHost, MoeHostSpec, MoeTraceRequest, MoeTraceResponse};
 
 /// What a client submits.
 pub struct GenRequest {

@@ -1,0 +1,302 @@
+//! Host-side MoE serving: the seam where the dynamic batcher hands the
+//! expert scheduler *whole batches*.
+//!
+//! The XLA engine does not lower MoE block stages yet (ROADMAP), so the
+//! MoE forward runs host-side — but the serving topology is the same as
+//! the dense coordinator's: one dedicated thread per model, an mpsc
+//! queue in front, and [`collect_batch`] grouping concurrent requests up
+//! to the batch policy. Every forward step then routes **all** live
+//! sequences together through [`ExpertScheduler::forward_batch`], which
+//! is exactly where cross-request expert-decode dedup and router-logit
+//! prefetch pay off: two users whose tokens route to the same expert
+//! cost one decode, and the next layer's likely experts warm while the
+//! current one computes.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::{MoeSpec, ServeOptions};
+use crate::coordinator::batcher::{collect_batch, BatchPolicy};
+use crate::format::TqmReader;
+use crate::model::moe::{load_routers, Router};
+use crate::pipeline::{ExpertCache, ExpertScheduler, PipelineMetrics, SchedOptions};
+
+/// What a client submits: a trace of token vectors (one per decode step)
+/// to forward through the MoE stack.
+pub struct MoeTraceRequest {
+    pub trace: Vec<Vec<f32>>,
+}
+
+/// Per-request result: the stack output for every step of the trace.
+#[derive(Clone, Debug)]
+pub struct MoeTraceResponse {
+    pub outputs: Vec<Vec<f32>>,
+    pub queue_s: f64,
+    pub forward_s: f64,
+}
+
+struct Envelope {
+    req: MoeTraceRequest,
+    enqueued: Instant,
+    resp: mpsc::Sender<Result<MoeTraceResponse>>,
+}
+
+/// How to build the host: the compressed MoE container plus the serving
+/// knobs (batcher policy, expert budget, prefetch slice/workers).
+pub struct MoeHostSpec {
+    pub reader: Arc<TqmReader>,
+    pub n_layers: usize,
+    pub moe: MoeSpec,
+    pub serve: ServeOptions,
+    /// Scheduler overrides; `None` derives them from `serve`.
+    pub sched: Option<SchedOptions>,
+}
+
+/// Handle to one MoE serving thread.
+pub struct MoeHost {
+    tx: mpsc::Sender<Envelope>,
+    /// Shared scheduler/cache metrics (dedup factor, prefetch hit/waste,
+    /// expert stall) — live while the thread serves.
+    pub metrics: Arc<PipelineMetrics>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MoeHost {
+    /// Start the serving thread. Routers load eagerly so container
+    /// problems surface here, not on the first request.
+    pub fn start(spec: MoeHostSpec) -> Result<Self> {
+        anyhow::ensure!(
+            !spec.reader.expert_entries().is_empty(),
+            "container has no expert records (dense model?)"
+        );
+        let routers = load_routers(&spec.reader, spec.n_layers)?;
+        let metrics = Arc::new(PipelineMetrics::default());
+        let cache = ExpertCache::from_options(spec.reader.clone(), metrics.clone(), &spec.serve);
+        let sched_opts = spec
+            .sched
+            .clone()
+            .unwrap_or_else(|| SchedOptions::from_serve(&spec.serve));
+        let sched = ExpertScheduler::new(
+            spec.reader.clone(),
+            metrics.clone(),
+            cache,
+            spec.n_layers,
+            spec.moe.n_experts,
+            sched_opts,
+        );
+        let policy = BatchPolicy {
+            max_batch: spec.serve.max_batch.max(1),
+            max_wait: Duration::from_millis(spec.serve.max_wait_ms),
+        };
+        let moe = spec.moe.clone();
+        let (tx, rx) = mpsc::channel::<Envelope>();
+        let join = std::thread::Builder::new()
+            .name("serve-moe-host".into())
+            .spawn(move || serve_loop(rx, policy, sched, routers, moe))?;
+        Ok(Self { tx, metrics, join: Some(join) })
+    }
+
+    /// Submit a trace; returns a receiver for the response.
+    pub fn submit(
+        &self,
+        req: MoeTraceRequest,
+    ) -> Result<mpsc::Receiver<Result<MoeTraceResponse>>> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        self.tx
+            .send(Envelope { req, enqueued: Instant::now(), resp: resp_tx })
+            .map_err(|_| anyhow::anyhow!("MoE serving thread is gone"))?;
+        Ok(resp_rx)
+    }
+
+    /// Submit and block for the response.
+    pub fn generate(&self, req: MoeTraceRequest) -> Result<MoeTraceResponse> {
+        let rx = self.submit(req)?;
+        rx.recv().map_err(|_| anyhow::anyhow!("response channel closed"))?
+    }
+
+    /// Stop the serving thread (drains the queue first).
+    pub fn shutdown(self) {
+        let MoeHost { tx, join, .. } = self;
+        drop(tx);
+        if let Some(j) = join {
+            let _ = j.join();
+        }
+    }
+}
+
+/// One request mid-flight: its trace cursor and accumulated outputs.
+struct ActiveTrace {
+    env: Envelope,
+    outputs: Vec<Vec<f32>>,
+    cursor: usize,
+    started: Instant,
+}
+
+fn serve_loop(
+    rx: mpsc::Receiver<Envelope>,
+    policy: BatchPolicy,
+    sched: ExpertScheduler,
+    routers: Vec<Router>,
+    moe: MoeSpec,
+) {
+    loop {
+        let batch = collect_batch(&rx, policy);
+        if batch.is_empty() {
+            return; // disconnected and drained
+        }
+        serve_trace_batch(&sched, &routers, &moe, batch);
+    }
+}
+
+fn serve_trace_batch(
+    sched: &ExpertScheduler,
+    routers: &[Router],
+    moe: &MoeSpec,
+    batch: Vec<Envelope>,
+) {
+    let now = Instant::now();
+    let mut active: Vec<ActiveTrace> = batch
+        .into_iter()
+        .map(|env| ActiveTrace { env, outputs: Vec::new(), cursor: 0, started: now })
+        .collect();
+    loop {
+        let live: Vec<usize> = (0..active.len())
+            .filter(|&i| active[i].cursor < active[i].env.req.trace.len())
+            .collect();
+        if live.is_empty() {
+            break;
+        }
+        // the batcher's whole batch, one step at a time: every live
+        // sequence's current vector goes to the scheduler together
+        let xs: Vec<Vec<f32>> =
+            live.iter().map(|&i| active[i].env.req.trace[active[i].cursor].clone()).collect();
+        match sched.forward_batch(routers, moe, &xs) {
+            Ok(outs) => {
+                for (&i, y) in live.iter().zip(outs) {
+                    let a = &mut active[i];
+                    a.outputs.push(y);
+                    a.cursor += 1;
+                }
+            }
+            Err(e) => {
+                let msg = format!("moe forward failed: {e}");
+                for &i in &live {
+                    let _ = active[i].env.resp.send(Err(anyhow::anyhow!("{msg}")));
+                    active[i].cursor = active[i].env.req.trace.len(); // retire
+                    active[i].outputs.clear();
+                }
+                return;
+            }
+        }
+        // retire finished traces immediately (short requests don't wait
+        // for the longest one in the batch)
+        for &i in &live {
+            let a = &mut active[i];
+            if a.cursor == a.env.req.trace.len() {
+                let queue_s = (a.started - a.env.enqueued).as_secs_f64().max(0.0);
+                let _ = a.env.resp.send(Ok(MoeTraceResponse {
+                    outputs: std::mem::take(&mut a.outputs),
+                    queue_s,
+                    forward_s: a.started.elapsed().as_secs_f64(),
+                }));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CodecId;
+    use crate::config::QuantizeOptions;
+    use crate::model::moe::{
+        clustered_trace, moe_demo_config, moe_stack_forward, quantize_moe_checkpoint,
+        synth_moe_checkpoint, ExpertWeights,
+    };
+    use crate::util::TempDir;
+
+    fn demo() -> (crate::config::ModelConfig, TempDir, Arc<TqmReader>) {
+        let cfg = moe_demo_config();
+        let ckpt = synth_moe_checkpoint(&cfg, 77).unwrap();
+        let opts = QuantizeOptions { per_channel: true, ..Default::default() };
+        let w = quantize_moe_checkpoint(&cfg, &ckpt, &opts, CodecId::FreqSeqPacked, "unit")
+            .unwrap()
+            .with_chunk_len(512);
+        let dir = TempDir::new().unwrap();
+        let p = dir.join("moe.tqm");
+        w.write(&p).unwrap();
+        (cfg, dir, Arc::new(TqmReader::open(&p).unwrap()))
+    }
+
+    #[test]
+    fn concurrent_traces_batch_and_match_the_reference_forward() {
+        let (cfg, _dir, reader) = demo();
+        let spec = cfg.moe.clone().unwrap();
+        let routers = load_routers(&reader, cfg.n_layers).unwrap();
+        let host = MoeHost::start(MoeHostSpec {
+            reader: reader.clone(),
+            n_layers: cfg.n_layers,
+            moe: spec.clone(),
+            serve: ServeOptions {
+                max_batch: 3,
+                max_wait_ms: 100,
+                n_threads: 1,
+                ..Default::default()
+            },
+            sched: Some(SchedOptions {
+                sync_prefetch: true,
+                ..SchedOptions::from_serve(&ServeOptions::default())
+            }),
+        })
+        .unwrap();
+        let trace = clustered_trace(cfg.d_model, 2, 3, 6, 19);
+        let rxs: Vec<_> = (0..3)
+            .map(|_| host.submit(MoeTraceRequest { trace: trace.clone() }).unwrap())
+            .collect();
+        // reference: fully-resident per-sequence forward, fresh decodes
+        let resident: Vec<Vec<Arc<ExpertWeights>>> = (0..cfg.n_layers)
+            .map(|l| {
+                (0..spec.n_experts)
+                    .map(|e| Arc::new(ExpertWeights::load(&reader, l, e).unwrap()))
+                    .collect()
+            })
+            .collect();
+        let want: Vec<Vec<f32>> = trace
+            .iter()
+            .map(|x| {
+                moe_stack_forward(&routers, &spec, x, |l, e| Ok(resident[l][e].clone()))
+                    .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.outputs, want, "hosted MoE forward diverged");
+            assert!(resp.forward_s >= 0.0);
+        }
+        let m = host.metrics.clone();
+        // every step planned through the scheduler; identical concurrent
+        // traces can never fetch more than the per-sequence pick count
+        assert!(m.sched_plans_count() > 0, "requests bypassed the scheduler");
+        assert!(m.sched_planned_fetches() <= m.sched_routed_picks());
+        host.shutdown();
+    }
+
+    #[test]
+    fn empty_trace_completes_immediately() {
+        let (cfg, _dir, reader) = demo();
+        let host = MoeHost::start(MoeHostSpec {
+            reader,
+            n_layers: cfg.n_layers,
+            moe: cfg.moe.clone().unwrap(),
+            serve: ServeOptions { max_wait_ms: 1, ..Default::default() },
+            sched: None,
+        })
+        .unwrap();
+        let resp = host.generate(MoeTraceRequest { trace: Vec::new() }).unwrap();
+        assert!(resp.outputs.is_empty());
+        host.shutdown();
+    }
+}

@@ -11,8 +11,10 @@
 //!                 [--variant compressed] [--top-k 8] [--temp 0.8]
 //!   tqm serve-demo --model e2e [--requests 16] [--batch 4]
 //!                 [--threads 0] [--prefetch-depth 1]
-//!   tqm tables    --table 1|2|3|4|bits|codec|network|residency|moe|all
-//!                 [--tokens 512]   (moe: trace length)
+//!   tqm tables    --table 1|2|3|4|bits|codec|network|residency|moe|sched|zipf|all
+//!                 [--tokens 512]   (moe/sched/zipf: trace length)
+//!                 [--batch 4]      (sched: concurrent sequences)
+//!                 [--alpha 1.1]    (zipf: popularity skew)
 //!
 //! Run from anywhere inside the repo (artifacts are auto-discovered) after
 //! `make artifacts`.
@@ -357,6 +359,18 @@ fn cmd_tables(args: &Args) -> Result<()> {
             let rows = tables::moe_table(args.get_usize("tokens", 512)?)?;
             tables::render_moe(&rows).print();
         }
+        "sched" => {
+            let rows = tables::sched_table(
+                args.get_usize("tokens", 256)?,
+                args.get_usize("batch", 4)?,
+            )?;
+            tables::render_sched(&rows).print();
+        }
+        "zipf" => {
+            let alpha: f64 = args.get("alpha", "1.1").parse()?;
+            let rows = tables::zipf_table(alpha, args.get_usize("tokens", 2000)?)?;
+            tables::render_zipf(&rows, alpha).print();
+        }
         "all" => {
             t1()?;
             eval_t("mmlu", "paper Table 2")?;
@@ -371,6 +385,10 @@ fn cmd_tables(args: &Args) -> Result<()> {
             tables::render_residency(&rows).print();
             let rows = tables::moe_table(512)?;
             tables::render_moe(&rows).print();
+            let rows = tables::sched_table(256, 4)?;
+            tables::render_sched(&rows).print();
+            let rows = tables::zipf_table(1.1, 2000)?;
+            tables::render_zipf(&rows, 1.1).print();
         }
         other => bail!("unknown table {other:?}"),
     }

@@ -73,6 +73,21 @@ impl Router {
         out
     }
 
+    /// Full softmax gating distribution over the experts — the prefetch
+    /// scorer wants probability mass per expert, not just the top-k set.
+    pub fn gating_probs(&self, x: &[f32]) -> Vec<f32> {
+        let logits = self.logits(x);
+        let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut p: Vec<f32> = logits.iter().map(|&l| (l - m).exp()).collect();
+        let total: f32 = p.iter().sum();
+        if total > 0.0 {
+            for v in &mut p {
+                *v /= total;
+            }
+        }
+        p
+    }
+
     /// Top-k expert picks with renormalized softmax gates, deterministic
     /// under ties (lower expert index wins).
     pub fn top_k(&self, x: &[f32], k: usize) -> Vec<(usize, f32)> {
@@ -187,6 +202,30 @@ impl ExpertWeights {
 // Forward
 // ---------------------------------------------------------------------------
 
+/// The gated expert sum for one token vector given *precomputed* picks,
+/// accumulated in pick order. Every MoE forward in the crate — the
+/// per-sequence path, the scheduler's batched path — bottoms out here,
+/// which is what makes "scheduling changes residency, never values"
+/// structurally true rather than merely tested.
+pub fn moe_token_from_picks<F>(
+    x: &[f32],
+    picks: &[(usize, f32)],
+    mut expert: F,
+) -> Result<Vec<f32>>
+where
+    F: FnMut(usize) -> Result<std::sync::Arc<ExpertWeights>>,
+{
+    let mut out = vec![0.0f32; x.len()];
+    for &(e, gate) in picks {
+        let w = expert(e)?;
+        let y = w.ffn(x);
+        for (o, v) in out.iter_mut().zip(y) {
+            *o += gate * v;
+        }
+    }
+    Ok(out)
+}
+
 /// One MoE sublayer forward for a single token vector: route, run the
 /// top-k experts fetched through `expert`, and sum gate-weighted outputs.
 /// `expert` is the residency seam — the cache, a resident table, and a
@@ -195,21 +234,32 @@ pub fn moe_forward_token<F>(
     x: &[f32],
     router: &Router,
     top_k: usize,
-    mut expert: F,
+    expert: F,
 ) -> Result<Vec<f32>>
 where
     F: FnMut(usize) -> Result<std::sync::Arc<ExpertWeights>>,
 {
-    let picks = router.top_k(x, top_k);
-    let mut out = vec![0.0f32; x.len()];
-    for (e, gate) in picks {
-        let w = expert(e)?;
-        let y = w.ffn(x);
-        for (o, v) in out.iter_mut().zip(y) {
-            *o += gate * v;
-        }
-    }
-    Ok(out)
+    moe_token_from_picks(x, &router.top_k(x, top_k), expert)
+}
+
+/// Batched MoE sublayer forward consuming a decode plan's picks: each
+/// sequence's picks are applied in router order (bit-exact vs the
+/// per-sequence path), while `expert` is consulted per pick — the
+/// scheduler passes a closure over the experts it fetched **once** for
+/// the whole batch, which is where the decode dedup lands.
+pub fn moe_layer_forward_batched<F>(
+    xs: &[Vec<f32>],
+    picks: &[Vec<(usize, f32)>],
+    mut expert: F,
+) -> Result<Vec<Vec<f32>>>
+where
+    F: FnMut(usize) -> Result<std::sync::Arc<ExpertWeights>>,
+{
+    anyhow::ensure!(xs.len() == picks.len(), "batch/picks length mismatch");
+    xs.iter()
+        .zip(picks)
+        .map(|(x, p)| moe_token_from_picks(x, p, &mut expert))
+        .collect()
 }
 
 /// Forward one token vector through a stack of MoE sublayers with

@@ -32,6 +32,23 @@
 //! Pinning exempts hot experts (e.g. a shared expert, or the top experts
 //! of a known-hot tenant) from eviction; pinned bytes still count toward
 //! the budget.
+//!
+//! **Speculative (prefetch) entries.** The expert scheduler's prefetch
+//! workers land experts *ahead* of a demand through a reserve→commit
+//! protocol ([`ExpertCache::begin_speculative`] before the decode,
+//! [`ExpertCache::commit_speculative`] /
+//! [`ExpertCache::cancel_speculative`] after). Speculative bytes are
+//! charged to a separate prefetch slice (`prefetch_budget_bytes`),
+//! never to the demand budget, and admission is size-aware *and paid up
+//! front*: a prefetch that cannot fit the remaining slice is rejected
+//! before any decode allocation exists (older *unused* prefetches may
+//! be dropped to make room, demand-resident experts never). A demand
+//! `get` that lands on a speculative entry counts as a hit, and the
+//! entry is promoted into the demand budget (evicting demand LRU ahead,
+//! exactly like a miss admission). Cache-charged residency — demand +
+//! speculative, including in-flight prefetch reservations — is
+//! therefore bounded by `budget_bytes + prefetch_budget_bytes` at every
+//! instant.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
@@ -50,6 +67,10 @@ use crate::pipeline::PipelineMetrics;
 struct Slot {
     w: Arc<ExpertWeights>,
     last_used: u64,
+    /// Inserted by a prefetch worker and not yet demanded: charged to the
+    /// prefetch slice instead of the demand budget, invisible to demand
+    /// eviction, dropped (LRU) to admit newer prefetches.
+    speculative: bool,
 }
 
 pub struct ExpertCache {
@@ -62,7 +83,10 @@ pub struct ExpertCache {
     /// Monotonic use counter backing the LRU stamps.
     clock: u64,
     pinned: HashSet<(usize, usize)>,
+    /// Demand-resident decoded bytes (excludes the speculative slice).
     resident_bytes: usize,
+    /// Speculative (prefetched, not yet demanded) decoded bytes.
+    speculative_bytes: usize,
     /// Recycled f32 arenas from evicted experts.
     pool: Vec<Vec<f32>>,
     /// Grow-only packed-stream scratch, one per decode worker.
@@ -87,6 +111,7 @@ impl ExpertCache {
             clock: 0,
             pinned: HashSet::new(),
             resident_bytes: 0,
+            speculative_bytes: 0,
             pool: Vec::new(),
             scratch: vec![Vec::new(); EXPERT_MATRIX_NAMES.len()],
         }
@@ -109,9 +134,27 @@ impl ExpertCache {
         self.budget_bytes
     }
 
-    /// Decoded bytes currently cached.
+    /// Demand-resident decoded bytes (the part charged to
+    /// `budget_bytes`; speculative bytes are reported separately).
     pub fn resident_bytes(&self) -> usize {
         self.resident_bytes
+    }
+
+    /// Speculative (prefetched, not yet demanded) decoded bytes — the
+    /// part charged to the scheduler's prefetch slice.
+    pub fn speculative_bytes(&self) -> usize {
+        self.speculative_bytes
+    }
+
+    /// Demand + speculative decoded bytes held right now (bounded by
+    /// `budget_bytes + prefetch_budget_bytes`).
+    pub fn total_resident_bytes(&self) -> usize {
+        self.resident_bytes + self.speculative_bytes
+    }
+
+    /// Cached speculative-entry count.
+    pub fn speculative_len(&self) -> usize {
+        self.map.values().filter(|s| s.speculative).count()
     }
 
     /// Cached expert count.
@@ -127,34 +170,178 @@ impl ExpertCache {
         self.map.contains_key(&(layer, expert))
     }
 
-    /// Fetch an expert: cached -> LRU bump + hit; missing -> evict ahead,
-    /// decode, and cache (unless it alone exceeds the budget, in which
-    /// case it is returned uncached — pure streaming).
+    /// Fetch an expert: cached -> LRU bump + hit (promoting speculative
+    /// entries into the demand budget); missing -> evict ahead, decode,
+    /// and cache (unless it alone exceeds the budget, in which case it is
+    /// returned uncached — pure streaming).
     pub fn get(&mut self, layer: usize, expert: usize) -> Result<Arc<ExpertWeights>> {
         let key = (layer, expert);
         self.clock += 1;
         if let Some(slot) = self.map.get_mut(&key) {
             slot.last_used = self.clock;
             let w = slot.w.clone();
+            let promote = slot.speculative;
             self.metrics.expert_hit();
+            if promote {
+                // a prefetch landed before the demand — no decode stall
+                self.metrics.prefetch_hit();
+                self.promote(key);
+            }
             return Ok(w);
         }
         // size known from the expert index — make room before decoding so
         // cached + in-flight bytes never exceed the budget (when a single
         // expert fits it at all)
         let need = self.reader.expert_entry(layer, expert)?.decoded_f32_bytes;
-        self.evict_until_fits(need);
+        self.evict_until_fits(need, None);
         let t0 = Instant::now();
         let w = Arc::new(self.decode_expert(layer, expert)?);
         self.metrics.record_expert_miss(t0.elapsed(), need);
-        self.metrics.observe_expert_transient(self.resident_bytes + need);
+        self.metrics
+            .observe_expert_transient(self.resident_bytes + self.speculative_bytes + need);
         debug_assert_eq!(w.bytes(), need, "expert index size disagrees with decode");
         if self.resident_bytes + need <= self.budget_bytes {
-            self.map.insert(key, Slot { w: w.clone(), last_used: self.clock });
+            self.map
+                .insert(key, Slot { w: w.clone(), last_used: self.clock, speculative: false });
             self.resident_bytes += need;
             self.metrics.set_expert_resident(self.resident_bytes);
         }
         Ok(w)
+    }
+
+    /// Move a just-demanded speculative entry from the prefetch slice
+    /// into the demand budget, evicting demand LRU entries ahead exactly
+    /// like a miss admission. If the demand budget cannot hold it even
+    /// after eviction (pinned bytes crowding it), the entry is dropped —
+    /// the caller already holds the `Arc`, so this degrades to the same
+    /// pure-streaming semantics an oversized miss has.
+    fn promote(&mut self, key: (usize, usize)) {
+        let need = self.map[&key].w.bytes();
+        self.speculative_bytes -= need;
+        self.evict_until_fits(need, Some(key));
+        if self.resident_bytes + need <= self.budget_bytes {
+            self.map.get_mut(&key).expect("promoted entry vanished").speculative = false;
+            self.resident_bytes += need;
+        } else {
+            self.map.remove(&key);
+        }
+        self.metrics.set_expert_resident(self.resident_bytes);
+        self.metrics.set_expert_speculative(self.speculative_bytes);
+    }
+
+    /// Size-aware admission gate for a speculative decode, called
+    /// **before** the decode happens: reserve `decoded_f32_bytes` of the
+    /// prefetch slice (`prefetch_budget_bytes`) for `(layer, expert)`.
+    /// LRU *speculative* entries may be dropped to make room (an unused
+    /// prefetch displacing an older unused prefetch); demand-resident
+    /// experts are never evicted for a prefetch, and an expert that
+    /// could never fit the slice is rejected up front — without
+    /// disturbing anything. Because the reservation is charged before
+    /// any decode allocation exists, demand + speculative bytes
+    /// (including in-flight prefetch decodes) stay bounded by
+    /// `budget_bytes + prefetch_budget_bytes` at every instant.
+    ///
+    /// Returns the reserved byte count; the caller must follow up with
+    /// exactly one [`ExpertCache::commit_speculative`] or
+    /// [`ExpertCache::cancel_speculative`]. `None` = rejected (already
+    /// cached, unknown expert, or cannot fit the slice).
+    pub fn begin_speculative(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        prefetch_budget_bytes: usize,
+    ) -> Option<usize> {
+        let key = (layer, expert);
+        if self.map.contains_key(&key) {
+            return None; // already resident (demand or an earlier prefetch)
+        }
+        let need = self.reader.expert_entry(layer, expert).ok()?.decoded_f32_bytes;
+        if need > prefetch_budget_bytes {
+            return None; // could never fit: reject before evicting anything
+        }
+        while self.speculative_bytes + need > prefetch_budget_bytes {
+            let victim = self
+                .map
+                .iter()
+                .filter(|(_, s)| s.speculative)
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| *k);
+            let Some(vk) = victim else {
+                // remaining slice bytes are in-flight reservations of
+                // other workers — nothing evictable, reject
+                return None;
+            };
+            self.drop_slot(vk);
+            self.metrics.record_prefetch_evicted_unused();
+        }
+        self.speculative_bytes += need;
+        self.metrics.set_expert_speculative(self.speculative_bytes);
+        self.metrics
+            .observe_expert_transient(self.resident_bytes + self.speculative_bytes);
+        Some(need)
+    }
+
+    /// Land a decoded expert on its reservation. Returns `false` (and
+    /// releases the reservation) when the demand path decoded the same
+    /// expert while the prefetch was in flight.
+    pub fn commit_speculative(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        w: Arc<ExpertWeights>,
+    ) -> bool {
+        let key = (layer, expert);
+        if self.map.contains_key(&key) {
+            self.cancel_speculative(w.bytes());
+            return false;
+        }
+        self.clock += 1;
+        self.map.insert(key, Slot { w, last_used: self.clock, speculative: true });
+        self.metrics.record_prefetch_insert();
+        true
+    }
+
+    /// Release an unfulfilled reservation (decode failed, or the demand
+    /// path won the race).
+    pub fn cancel_speculative(&mut self, reserved_bytes: usize) {
+        self.speculative_bytes -= reserved_bytes;
+        self.metrics.set_expert_speculative(self.speculative_bytes);
+    }
+
+    /// One-shot reserve + commit for callers that already hold a decoded
+    /// expert (tests, synchronous paths). Returns `false` when admission
+    /// rejects it.
+    pub fn insert_speculative(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        w: Arc<ExpertWeights>,
+        prefetch_budget_bytes: usize,
+    ) -> bool {
+        match self.begin_speculative(layer, expert, prefetch_budget_bytes) {
+            Some(reserved) => {
+                debug_assert_eq!(reserved, w.bytes(), "index size disagrees with decode");
+                self.commit_speculative(layer, expert, w)
+            }
+            None => false,
+        }
+    }
+
+    /// Remove one entry, fixing whichever byte pool it was charged to and
+    /// recycling its arenas when this cache held the only reference.
+    fn drop_slot(&mut self, key: (usize, usize)) {
+        if let Some(slot) = self.map.remove(&key) {
+            if slot.speculative {
+                self.speculative_bytes -= slot.w.bytes();
+            } else {
+                self.resident_bytes -= slot.w.bytes();
+            }
+            if let Ok(mut owned) = Arc::try_unwrap(slot.w) {
+                self.pool.push(std::mem::take(&mut owned.w1));
+                self.pool.push(std::mem::take(&mut owned.w3));
+                self.pool.push(std::mem::take(&mut owned.w2));
+            }
+        }
     }
 
     /// Decode (if needed) and exempt an expert from eviction. Errors if
@@ -177,27 +364,24 @@ impl ExpertCache {
         self.pinned.contains(&(layer, expert))
     }
 
-    /// Evict least-recently-used entries (skipping pinned ones) until
-    /// `need` more bytes fit in the budget, or nothing evictable remains.
-    fn evict_until_fits(&mut self, need: usize) {
+    /// Evict least-recently-used *demand* entries (skipping pinned and
+    /// speculative ones — speculative bytes are not charged to this
+    /// budget, so evicting them could never help) until `need` more bytes
+    /// fit in the budget, or nothing evictable remains. `protect` shields
+    /// a key mid-promotion from being chosen as its own victim.
+    fn evict_until_fits(&mut self, need: usize, protect: Option<(usize, usize)>) {
         while self.resident_bytes + need > self.budget_bytes {
             let victim = self
                 .map
                 .iter()
-                .filter(|(k, _)| !self.pinned.contains(*k))
+                .filter(|(k, s)| {
+                    !s.speculative && !self.pinned.contains(*k) && Some(**k) != protect
+                })
                 .min_by_key(|(_, s)| s.last_used)
                 .map(|(k, _)| *k);
             let Some(key) = victim else { break };
-            if let Some(slot) = self.map.remove(&key) {
-                self.resident_bytes -= slot.w.bytes();
-                self.metrics.record_expert_eviction();
-                // sole owner -> recycle the arenas for the next miss
-                if let Ok(mut owned) = Arc::try_unwrap(slot.w) {
-                    self.pool.push(std::mem::take(&mut owned.w1));
-                    self.pool.push(std::mem::take(&mut owned.w3));
-                    self.pool.push(std::mem::take(&mut owned.w2));
-                }
-            }
+            self.drop_slot(key);
+            self.metrics.record_expert_eviction();
         }
         self.metrics.set_expert_resident(self.resident_bytes);
     }
@@ -390,6 +574,90 @@ mod tests {
         assert_eq!(metrics.expert_hits_count(), 0);
         // pinning something that cannot fit is an error
         assert!(cache.pin(0, 1).is_err());
+    }
+
+    #[test]
+    fn speculative_inserts_respect_the_prefetch_slice() {
+        let (_cfg, _dir, reader) = demo_reader(512);
+        let metrics = Arc::new(PipelineMetrics::default());
+        let one = expert_bytes(&reader);
+        let mut cache = ExpertCache::new(reader.clone(), metrics.clone(), 2 * one, 1);
+        // slice holds exactly two experts
+        let slice = 2 * one;
+        let w0 = Arc::new(ExpertWeights::load(&reader, 0, 0).unwrap());
+        let w1 = Arc::new(ExpertWeights::load(&reader, 0, 1).unwrap());
+        let w2 = Arc::new(ExpertWeights::load(&reader, 0, 2).unwrap());
+        assert!(cache.insert_speculative(0, 0, w0, slice));
+        assert!(cache.insert_speculative(0, 1, w1, slice));
+        assert_eq!(cache.speculative_bytes(), 2 * one);
+        assert_eq!(cache.resident_bytes(), 0, "slice never charges the demand budget");
+        // a third prefetch displaces the LRU *speculative* entry
+        assert!(cache.insert_speculative(0, 2, w2, slice));
+        assert_eq!(cache.speculative_len(), 2);
+        assert!(!cache.contains(0, 0), "oldest unused prefetch dropped");
+        assert_eq!(metrics.prefetch_wasted_count(), 1, "displaced prefetch counted as waste");
+        // an expert bigger than the whole slice is rejected outright
+        let big = Arc::new(ExpertWeights::load(&reader, 1, 0).unwrap());
+        assert!(!cache.insert_speculative(1, 0, big, one / 2));
+        // duplicate of a cached entry is rejected
+        let dup = Arc::new(ExpertWeights::load(&reader, 0, 1).unwrap());
+        assert!(!cache.insert_speculative(0, 1, dup, slice));
+        assert_eq!(metrics.prefetch_inserted_count(), 3);
+    }
+
+    #[test]
+    fn demanded_speculative_entry_promotes_into_the_budget() {
+        let (_cfg, _dir, reader) = demo_reader(512);
+        let metrics = Arc::new(PipelineMetrics::default());
+        let one = expert_bytes(&reader);
+        let mut cache = ExpertCache::new(reader.clone(), metrics.clone(), 2 * one, 1);
+        // fill the demand budget, then prefetch a third expert
+        let _ = cache.get(0, 0).unwrap();
+        let _ = cache.get(0, 1).unwrap();
+        let w2 = Arc::new(ExpertWeights::load(&reader, 0, 2).unwrap());
+        assert!(cache.insert_speculative(0, 2, w2, one));
+        assert_eq!(cache.total_resident_bytes(), 3 * one);
+        // demand for the prefetched expert: a hit (no decode), promoted
+        // into the demand budget by evicting the demand LRU (0,0)
+        let misses_before = metrics.expert_misses_count();
+        let got = cache.get(0, 2).unwrap();
+        assert!(got.bytes() > 0);
+        assert_eq!(metrics.expert_misses_count(), misses_before, "promotion decoded");
+        assert_eq!(metrics.prefetch_hits_count(), 1);
+        assert_eq!(cache.speculative_bytes(), 0);
+        assert_eq!(cache.resident_bytes(), 2 * one);
+        assert!(!cache.contains(0, 0), "demand LRU evicted to admit the promotion");
+        assert!(cache.contains(0, 1));
+        assert!(cache.contains(0, 2));
+        // the combined peak never exceeded budget + slice
+        assert!(metrics.expert_peak_resident_bytes() <= 3 * one);
+    }
+
+    #[test]
+    fn prefetch_never_evicts_demand_and_pins_survive_storms() {
+        let (_cfg, _dir, reader) = demo_reader(512);
+        let metrics = Arc::new(PipelineMetrics::default());
+        let one = expert_bytes(&reader);
+        let mut cache = ExpertCache::new(reader.clone(), metrics.clone(), 2 * one, 1);
+        // pin of a not-yet-resident expert decodes it immediately
+        assert!(!cache.contains(0, 7));
+        cache.pin(0, 7).unwrap();
+        assert!(cache.contains(0, 7), "pin must decode a cold expert");
+        assert_eq!(metrics.expert_misses_count(), 1);
+        let _ = cache.get(0, 6).unwrap(); // budget now full: {pinned 7, 6}
+        // prefetch storm far beyond the slice: every layer-1 expert
+        let slice = one; // room for a single speculative expert
+        for e in 0..8 {
+            let w = Arc::new(ExpertWeights::load(&reader, 1, e).unwrap());
+            let _ = cache.insert_speculative(1, e, w, slice);
+        }
+        // demand residents untouched, pinned expert still there, and the
+        // slice held at most one speculative expert throughout
+        assert!(cache.contains(0, 7), "pinned expert lost to a prefetch storm");
+        assert!(cache.contains(0, 6), "demand expert evicted by a prefetch");
+        assert_eq!(cache.resident_bytes(), 2 * one);
+        assert!(cache.speculative_bytes() <= slice);
+        assert!(metrics.expert_peak_resident_bytes() <= 2 * one + slice);
     }
 
     #[test]

@@ -37,7 +37,34 @@ pub struct PipelineMetrics {
     expert_resident_bytes: AtomicUsize,
     /// High-water mark of decoded-expert bytes (cached + in-flight decode)
     /// — the number the cache-budget acceptance test asserts against.
+    /// With a prefetch slice active it covers demand + speculative bytes,
+    /// so the bound it is tested against becomes
+    /// `expert_budget_bytes + prefetch_budget_bytes`.
     expert_peak_resident_bytes: AtomicUsize,
+    // -- expert scheduler (batch dedup + prefetch) ---------------------------
+    /// Routed (sequence, layer, expert) picks the scheduler planned for.
+    sched_routed_picks: AtomicU64,
+    /// Unique (layer, expert) entries across those plans — what actually
+    /// had to be fetched. `routed / planned` is the batch dedup factor.
+    sched_planned_fetches: AtomicU64,
+    /// Scheduler layer-plans built (one per layer per forward step).
+    sched_plans: AtomicU64,
+    /// Prefetch jobs handed to the worker pool.
+    prefetch_issued: AtomicU64,
+    /// Speculative decodes admitted into the cache's prefetch slice.
+    prefetch_inserted: AtomicU64,
+    /// Demand lookups served by a speculative entry (stall fully hidden).
+    prefetch_hits: AtomicU64,
+    /// Prefetches rejected by the size-aware admission check (or lost a
+    /// race with the demand path) — decode work that bought nothing.
+    prefetch_rejected: AtomicU64,
+    /// Speculative entries dropped without ever being demanded.
+    prefetch_evicted_unused: AtomicU64,
+    /// Background decode wall time — work moved *off* the forward step.
+    prefetch_decode_ns: AtomicU64,
+    prefetch_decoded_bytes: AtomicU64,
+    /// Speculative (prefetched, not yet demanded) bytes currently cached.
+    expert_speculative_bytes: AtomicUsize,
 }
 
 impl PipelineMetrics {
@@ -198,6 +225,114 @@ impl PipelineMetrics {
         self.expert_decode_ns.load(Ordering::Relaxed) as f64 / 1e6 / m as f64
     }
 
+    /// Total decode wall time spent *at the forward step* on expert-cache
+    /// misses — the stall the scheduler's prefetch exists to hide
+    /// (speculative decodes run on background workers and are accounted
+    /// separately by [`PipelineMetrics::prefetch_hidden_secs`]).
+    pub fn expert_stall_secs(&self) -> f64 {
+        self.expert_decode_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    // -- expert scheduler ---------------------------------------------------
+
+    /// One layer plan built: `routed` picks across the batch collapsed
+    /// into `planned` unique expert fetches.
+    pub fn record_sched_plan(&self, routed: u64, planned: u64) {
+        self.sched_routed_picks.fetch_add(routed, Ordering::Relaxed);
+        self.sched_planned_fetches.fetch_add(planned, Ordering::Relaxed);
+        self.sched_plans.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn sched_routed_picks(&self) -> u64 {
+        self.sched_routed_picks.load(Ordering::Relaxed)
+    }
+
+    pub fn sched_planned_fetches(&self) -> u64 {
+        self.sched_planned_fetches.load(Ordering::Relaxed)
+    }
+
+    pub fn sched_plans_count(&self) -> u64 {
+        self.sched_plans.load(Ordering::Relaxed)
+    }
+
+    /// Routed picks per unique fetch across all plans so far (1.0 = no
+    /// batch overlap; 0.0 before any plan).
+    pub fn sched_dedup_factor(&self) -> f64 {
+        let planned = self.sched_planned_fetches();
+        if planned == 0 {
+            return 0.0;
+        }
+        self.sched_routed_picks() as f64 / planned as f64
+    }
+
+    pub fn prefetch_issue(&self) {
+        self.prefetch_issued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_prefetch_insert(&self) {
+        self.prefetch_inserted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn prefetch_hit(&self) {
+        self.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_prefetch_rejected(&self) {
+        self.prefetch_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_prefetch_evicted_unused(&self) {
+        self.prefetch_evicted_unused.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One background (speculative) expert decode: wall time + decoded
+    /// f32 bytes. This time is *hidden* from the forward step.
+    pub fn record_prefetch_decode(&self, d: Duration, bytes: usize) {
+        self.prefetch_decode_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.prefetch_decoded_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Speculative bytes gauge. Peak maintenance is the caller's job:
+    /// the cache pairs its mutations with
+    /// [`PipelineMetrics::observe_expert_transient`] calls.
+    pub fn set_expert_speculative(&self, bytes: usize) {
+        self.expert_speculative_bytes.store(bytes, Ordering::Relaxed);
+    }
+
+    pub fn expert_speculative_bytes(&self) -> usize {
+        self.expert_speculative_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn prefetch_issued_count(&self) -> u64 {
+        self.prefetch_issued.load(Ordering::Relaxed)
+    }
+
+    pub fn prefetch_inserted_count(&self) -> u64 {
+        self.prefetch_inserted.load(Ordering::Relaxed)
+    }
+
+    pub fn prefetch_hits_count(&self) -> u64 {
+        self.prefetch_hits.load(Ordering::Relaxed)
+    }
+
+    /// Prefetch work that bought nothing: rejected inserts plus
+    /// speculative entries evicted before a demand touched them.
+    pub fn prefetch_wasted_count(&self) -> u64 {
+        self.prefetch_rejected.load(Ordering::Relaxed)
+            + self.prefetch_evicted_unused.load(Ordering::Relaxed)
+    }
+
+    /// Decode wall time moved off the forward step onto the prefetch
+    /// workers (compare with [`PipelineMetrics::expert_stall_secs`]).
+    pub fn prefetch_hidden_secs(&self) -> f64 {
+        self.prefetch_decode_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Decoded f32 bytes produced by the prefetch workers.
+    pub fn prefetch_decoded_bytes(&self) -> u64 {
+        self.prefetch_decoded_bytes.load(Ordering::Relaxed)
+    }
+
     pub fn decompress_mb_s(&self) -> f64 {
         let secs = self.decompress_secs();
         if secs == 0.0 {
@@ -229,6 +364,24 @@ impl PipelineMetrics {
                 self.expert_peak_resident_bytes() as f64 / 1e6,
                 self.expert_miss_mean_ms(),
                 self.expert_evictions_count(),
+            ));
+        }
+        if self.sched_plans_count() > 0 {
+            s.push_str(&format!(
+                "; sched: {:.2}x dedup ({} picks -> {} fetches), stall {:.1} ms",
+                self.sched_dedup_factor(),
+                self.sched_routed_picks(),
+                self.sched_planned_fetches(),
+                self.expert_stall_secs() * 1e3,
+            ));
+        }
+        if self.prefetch_issued_count() > 0 {
+            s.push_str(&format!(
+                "; prefetch: {} issued, {} hits, {} wasted, {:.1} ms hidden",
+                self.prefetch_issued_count(),
+                self.prefetch_hits_count(),
+                self.prefetch_wasted_count(),
+                self.prefetch_hidden_secs() * 1e3,
             ));
         }
         s
@@ -285,6 +438,43 @@ mod tests {
         assert_eq!(m.expert_evictions_count(), 1);
         // expert section shows up in the human summary once active
         assert!(m.summary().contains("experts:"));
+    }
+
+    #[test]
+    fn scheduler_and_prefetch_accounting() {
+        let m = PipelineMetrics::default();
+        assert_eq!(m.sched_dedup_factor(), 0.0, "no plans yet");
+        // 8 routed picks collapsed into 2 fetches, twice
+        m.record_sched_plan(8, 2);
+        m.record_sched_plan(8, 2);
+        assert_eq!(m.sched_routed_picks(), 16);
+        assert_eq!(m.sched_planned_fetches(), 4);
+        assert!((m.sched_dedup_factor() - 4.0).abs() < 1e-12);
+        assert_eq!(m.sched_plans_count(), 2);
+        // prefetch: 3 issued, 2 inserted, 1 hit, 1 rejected, 1 aged out
+        m.prefetch_issue();
+        m.prefetch_issue();
+        m.prefetch_issue();
+        m.record_prefetch_insert();
+        m.record_prefetch_insert();
+        m.prefetch_hit();
+        m.record_prefetch_rejected();
+        m.record_prefetch_evicted_unused();
+        m.record_prefetch_decode(Duration::from_millis(3), 1000);
+        assert_eq!(m.prefetch_issued_count(), 3);
+        assert_eq!(m.prefetch_inserted_count(), 2);
+        assert_eq!(m.prefetch_hits_count(), 1);
+        assert_eq!(m.prefetch_wasted_count(), 2);
+        assert!(m.prefetch_hidden_secs() >= 0.003);
+        m.set_expert_speculative(4096);
+        assert_eq!(m.expert_speculative_bytes(), 4096);
+        // stall is the demand-miss decode time, not the hidden decode time
+        m.record_expert_miss(Duration::from_millis(5), 2000);
+        assert!(m.expert_stall_secs() >= 0.005);
+        assert!(m.expert_stall_secs() < 0.008, "prefetch time leaked into stall");
+        let s = m.summary();
+        assert!(s.contains("sched:"));
+        assert!(s.contains("prefetch:"));
     }
 
     #[test]

@@ -27,6 +27,7 @@
 pub mod decode;
 pub mod expert_cache;
 pub mod metrics;
+pub mod scheduler;
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -44,6 +45,7 @@ use crate::xla;
 pub use decode::{DecodeScratch, DecodedLayer, LayerDecoder};
 pub use expert_cache::ExpertCache;
 pub use metrics::PipelineMetrics;
+pub use scheduler::{ExpertScheduler, SchedOptions};
 
 /// Host-side per-layer KV cache for one request (B dim stripped:
 /// shape [KV, S, Dh]).
@@ -96,6 +98,10 @@ pub struct Engine {
     /// Decoded-expert LRU budget ([`ServeOptions::expert_budget_bytes`])
     /// applied by [`Engine::expert_cache`] for MoE containers.
     pub expert_budget_bytes: usize,
+    /// Expert-scheduler knobs (prefetch slice / workers / prior decay),
+    /// resolved from [`ServeOptions`] and applied by
+    /// [`Engine::expert_scheduler`].
+    pub sched_opts: SchedOptions,
     /// Shared so the coordinator can report pipeline/expert-cache health
     /// for a model without reaching into its serving thread.
     pub metrics: Arc<PipelineMetrics>,
@@ -198,6 +204,7 @@ impl Engine {
             residency,
             prefetch_depth: opts.prefetch_depth,
             expert_budget_bytes: opts.expert_budget_bytes,
+            sched_opts: SchedOptions::from_serve(opts),
             metrics,
             decoder,
             decode_pool: std::sync::Mutex::new(Vec::new()),
@@ -235,6 +242,7 @@ impl Engine {
             residency: Residency::AlwaysResident,
             prefetch_depth: 0,
             expert_budget_bytes: 0,
+            sched_opts: SchedOptions { prefetch: false, ..SchedOptions::default() },
             metrics: Arc::new(PipelineMetrics::default()),
             decoder: None,
             decode_pool: std::sync::Mutex::new(Vec::new()),
@@ -317,6 +325,28 @@ impl Engine {
             self.metrics.clone(),
             budget_bytes,
             n_threads.max(1),
+        ))
+    }
+
+    /// Build the full expert-scheduling subsystem over this engine's
+    /// compressed container: the byte-budgeted cache from
+    /// [`Engine::expert_cache`], wrapped by an [`ExpertScheduler`] doing
+    /// batch-aware decode dedup and router-logit prefetch with the knobs
+    /// resolved from [`ServeOptions`] (`prefetch_budget_bytes`,
+    /// `prefetch_workers`, `prefetch_ewma_decay`). Shares the engine's
+    /// [`PipelineMetrics`].
+    pub fn expert_scheduler(&self) -> Result<ExpertScheduler> {
+        let cache = self.expert_cache()?;
+        let reader = self.reader.as_ref().expect("expert_cache checked the source").clone();
+        let n_layers = self.cfg().n_layers;
+        let n_experts = (0..n_layers).map(|l| reader.n_experts(l)).max().unwrap_or(0);
+        Ok(ExpertScheduler::new(
+            reader,
+            self.metrics.clone(),
+            cache,
+            n_layers,
+            n_experts,
+            self.sched_opts.clone(),
         ))
     }
 

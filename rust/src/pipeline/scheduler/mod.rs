@@ -1,0 +1,403 @@
+//! Expert scheduler: the proactive half of MoE serving (the reactive
+//! half being the byte-budgeted [`ExpertCache`]). It sits between the
+//! coordinator's batcher and the cache and does three things per forward
+//! step:
+//!
+//! 1. **Batch-aware decode dedup** — the routed top-k picks of *all*
+//!    sequences in a batch are collected into one [`LayerPlan`] per
+//!    layer, so an expert chosen by eight sequences is fetched (and, on a
+//!    miss, decoded) exactly once and held for the whole step.
+//! 2. **Router-logit prefetch** — while layer *l*'s math executes, a
+//!    background [`PrefetchPool`] decodes layer *l+1*'s likeliest
+//!    experts into the cache's speculative slice (kicked after layer
+//!    *l*'s fetch, so fresh reservations can only displace *stale*
+//!    prefetches, never entries this step is about to consume).
+//!    Prediction blends the next router's gating probabilities on the
+//!    batch's current hidden states with an [`EwmaPrior`] of expert
+//!    popularity. The slice is bounded by `prefetch_budget_bytes`,
+//!    charged by reservation *before* the background decode, and
+//!    admission is size-aware, so prefetch can never evict what the
+//!    current step needs. Known limit: a demand *miss* decodes inside
+//!    the cache lock, so background commits wait for it — the overlap
+//!    hides decode behind the execute phase; reserving demand decodes
+//!    outside the lock is a ROADMAP follow-up.
+//! 3. **Scheduling counters** — dedup factor, prefetch hit/waste, and
+//!    the decode stall the forward step actually paid, all through the
+//!    shared [`PipelineMetrics`].
+//!
+//! Dataflow: `batcher -> ExpertScheduler::forward_batch -> LayerPlan ->
+//! ExpertCache (demand) + PrefetchPool (speculative) -> MoE math`.
+
+pub mod plan;
+pub mod prefetch;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::config::{MoeSpec, ServeOptions};
+use crate::format::TqmReader;
+use crate::model::moe::{moe_layer_forward_batched, ExpertWeights, Router};
+use crate::pipeline::{ExpertCache, PipelineMetrics};
+
+pub use plan::LayerPlan;
+pub use prefetch::{EwmaPrior, PrefetchPool};
+
+/// Weight of the EWMA popularity prior relative to the (mean) router
+/// gating probability when ranking prefetch candidates.
+const PRIOR_WEIGHT: f64 = 0.25;
+
+/// Scheduler configuration, usually derived from [`ServeOptions`].
+#[derive(Clone, Debug)]
+pub struct SchedOptions {
+    /// Master switch for the speculative half (dedup always applies).
+    pub prefetch: bool,
+    /// Byte bound of the cache's speculative slice.
+    pub prefetch_budget_bytes: usize,
+    /// Background decode workers.
+    pub prefetch_workers: usize,
+    /// Decay of the EWMA popularity prior.
+    pub ewma_decay: f64,
+    /// Deterministic mode: wait for queued prefetches to land before
+    /// fetching each layer (tests/benches want reproducible hit counts;
+    /// production leaves this off so decode overlaps compute). Fully
+    /// reproducible slice contents additionally require
+    /// `prefetch_workers == 1` — with more workers the commit order,
+    /// and thus the slice's LRU stamps, still race.
+    pub sync_prefetch: bool,
+}
+
+impl Default for SchedOptions {
+    fn default() -> Self {
+        Self::from_serve(&ServeOptions::default())
+    }
+}
+
+impl SchedOptions {
+    pub fn from_serve(o: &ServeOptions) -> Self {
+        Self {
+            prefetch: o.prefetch_budget_bytes > 0,
+            prefetch_budget_bytes: o.prefetch_budget_bytes,
+            prefetch_workers: o.prefetch_workers,
+            ewma_decay: o.prefetch_ewma_decay,
+            sync_prefetch: false,
+        }
+    }
+}
+
+/// The scheduling subsystem: owns the expert cache (behind a mutex so the
+/// prefetch workers can feed its speculative slice) and the worker pool.
+pub struct ExpertScheduler {
+    cache: Arc<Mutex<ExpertCache>>,
+    /// Container index — candidate selection caps a step's prefetch set
+    /// to what the slice can hold, using the known decoded sizes.
+    reader: Arc<TqmReader>,
+    metrics: Arc<PipelineMetrics>,
+    /// Popularity prior, persisted across steps (and batches) — the
+    /// workload-skew half of the prefetch score.
+    prior: Mutex<EwmaPrior>,
+    pool: Option<PrefetchPool>,
+    opts: SchedOptions,
+}
+
+impl ExpertScheduler {
+    /// Wrap `cache` (built for the same container `reader` serves) into a
+    /// scheduler for a model of `n_layers` MoE sublayers with `n_experts`
+    /// experts each.
+    pub fn new(
+        reader: Arc<TqmReader>,
+        metrics: Arc<PipelineMetrics>,
+        cache: ExpertCache,
+        n_layers: usize,
+        n_experts: usize,
+        opts: SchedOptions,
+    ) -> Self {
+        let cache = Arc::new(Mutex::new(cache));
+        let pool = (opts.prefetch && opts.prefetch_budget_bytes > 0).then(|| {
+            PrefetchPool::new(
+                cache.clone(),
+                reader.clone(),
+                metrics.clone(),
+                opts.prefetch_budget_bytes,
+                opts.prefetch_workers,
+            )
+        });
+        Self {
+            cache,
+            reader,
+            metrics,
+            prior: Mutex::new(EwmaPrior::new(n_layers, n_experts, opts.ewma_decay)),
+            pool,
+            opts,
+        }
+    }
+
+    pub fn metrics(&self) -> &Arc<PipelineMetrics> {
+        &self.metrics
+    }
+
+    /// Shared handle to the underlying cache (pin management, tests).
+    pub fn cache_handle(&self) -> Arc<Mutex<ExpertCache>> {
+        self.cache.clone()
+    }
+
+    /// Demand-fetch one expert through the cache (single-sequence paths
+    /// that still want the scheduler's cache + prefetch machinery).
+    pub fn get(&self, layer: usize, expert: usize) -> Result<Arc<ExpertWeights>> {
+        self.cache.lock().unwrap().get(layer, expert)
+    }
+
+    /// Decode (if needed) and exempt an expert from eviction.
+    pub fn pin(&self, layer: usize, expert: usize) -> Result<()> {
+        self.cache.lock().unwrap().pin(layer, expert)
+    }
+
+    pub fn unpin(&self, layer: usize, expert: usize) {
+        self.cache.lock().unwrap().unpin(layer, expert)
+    }
+
+    /// Wait until every queued prefetch job has been processed.
+    pub fn quiesce(&self) {
+        if let Some(pool) = &self.pool {
+            pool.quiesce();
+        }
+    }
+
+    /// One forward step for a whole batch through a stack of MoE
+    /// sublayers with residual connections (`x <- x + moe_l(x)`):
+    /// plan -> prefetch next layer -> fetch each unique expert once ->
+    /// per-sequence gated math in router order. Bit-exact against running
+    /// [`crate::model::moe::moe_stack_forward`] per sequence.
+    pub fn forward_batch(
+        &self,
+        routers: &[Router],
+        spec: &MoeSpec,
+        xs0: &[Vec<f32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        if xs0.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut xs: Vec<Vec<f32>> = xs0.to_vec();
+        for (l, router) in routers.iter().enumerate() {
+            let plan = LayerPlan::build(l, router, &xs, spec.top_k);
+            self.metrics
+                .record_sched_plan(plan.routed_picks() as u64, plan.n_unique() as u64);
+            self.prior.lock().unwrap().observe(l, &plan.unique);
+            if self.opts.sync_prefetch {
+                // deterministic mode: the jobs kicked at layer l-1 (for
+                // this layer) must land before the fetch below
+                self.quiesce();
+            }
+            // the dedup: each unique expert fetched once, held for the
+            // whole step (a tight budget can no longer force two decodes
+            // of one expert within a step). Fetching *before* kicking the
+            // next layer's prefetch also promotes this layer's
+            // speculative entries out of the slice, so the new
+            // reservations below can only ever displace stale prefetches,
+            // never the ones this step is about to consume.
+            let mut fetched: HashMap<usize, Arc<ExpertWeights>> =
+                HashMap::with_capacity(plan.n_unique());
+            for &e in &plan.unique {
+                let w = self.cache.lock().unwrap().get(l, e)?;
+                fetched.insert(e, w);
+            }
+            if let Some(pool) = &self.pool {
+                // warm layer l+1 while this layer's math executes
+                // (prediction uses xs before the residual update — the
+                // same one-layer-early basis either way)
+                if let Some(next) = routers.get(l + 1) {
+                    for e in self.prefetch_candidates(next, l + 1, &xs, spec.top_k) {
+                        pool.enqueue(l + 1, e);
+                    }
+                }
+            }
+            // honest residency: under a budget smaller than the batch's
+            // union, some held Arcs outlive their cache slots (evicted
+            // or never admitted) — the dedup trades bounded decode count
+            // for holding one layer's unique set. Fold that overhang
+            // into the shared peak so it is visible, never silent.
+            {
+                let cache = self.cache.lock().unwrap();
+                let held_uncached: usize = fetched
+                    .iter()
+                    .filter(|(e, _)| !cache.contains(l, **e))
+                    .map(|(_, w)| w.bytes())
+                    .sum();
+                if held_uncached > 0 {
+                    self.metrics.observe_expert_transient(
+                        cache.total_resident_bytes() + held_uncached,
+                    );
+                }
+            }
+            let ys = moe_layer_forward_batched(&xs, &plan.picks, |e| {
+                fetched
+                    .get(&e)
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("expert {e} missing from plan"))
+            })?;
+            for (x, y) in xs.iter_mut().zip(ys) {
+                for (xi, yi) in x.iter_mut().zip(y) {
+                    *xi += yi;
+                }
+            }
+        }
+        Ok(xs)
+    }
+
+    /// Rank layer `layer`'s experts for prefetch: mean gating probability
+    /// of its router over the batch's *current* hidden states (the step
+    /// is still one layer earlier, so this is a one-layer-early estimate)
+    /// blended with the EWMA popularity prior; already-resident experts
+    /// are skipped. Best candidates first, capped at one batch worth of
+    /// picks plus `top_k` slack.
+    fn prefetch_candidates(
+        &self,
+        router: &Router,
+        layer: usize,
+        xs: &[Vec<f32>],
+        top_k: usize,
+    ) -> Vec<usize> {
+        let ne = router.n_experts();
+        let mut score = vec![0f64; ne];
+        for x in xs {
+            for (e, p) in router.gating_probs(x).into_iter().enumerate() {
+                score[e] += p as f64;
+            }
+        }
+        let n = xs.len().max(1) as f64;
+        {
+            let prior = self.prior.lock().unwrap();
+            for (e, s) in score.iter_mut().enumerate() {
+                *s = *s / n + PRIOR_WEIGHT * prior.score(layer, e);
+            }
+        }
+        let mut idx: Vec<usize> = (0..ne).collect();
+        idx.sort_by(|&a, &b| {
+            score[b]
+                .partial_cmp(&score[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        idx.truncate((top_k * xs.len() + top_k).min(ne));
+        {
+            let cache = self.cache.lock().unwrap();
+            idx.retain(|&e| !cache.contains(layer, e));
+        }
+        // cap the step's candidate set to what the slice can hold, best
+        // first — otherwise a burst of same-step inserts would displace
+        // its own best predictions through the slice's LRU
+        let mut bytes = 0usize;
+        let mut kept = Vec::with_capacity(idx.len());
+        for e in idx {
+            let need = match self.reader.expert_entry(layer, e) {
+                Ok(entry) => entry.decoded_f32_bytes,
+                Err(_) => continue,
+            };
+            if bytes + need > self.opts.prefetch_budget_bytes {
+                break;
+            }
+            bytes += need;
+            kept.push(e);
+        }
+        kept
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CodecId;
+    use crate::config::QuantizeOptions;
+    use crate::model::moe::{
+        clustered_trace, load_routers, moe_demo_config, moe_stack_forward,
+        quantize_moe_checkpoint, synth_moe_checkpoint,
+    };
+    use crate::util::TempDir;
+
+    fn demo(seed: u64) -> (crate::config::ModelConfig, TempDir, Arc<TqmReader>) {
+        let cfg = moe_demo_config();
+        let ckpt = synth_moe_checkpoint(&cfg, seed).unwrap();
+        let opts = QuantizeOptions { per_channel: true, ..Default::default() };
+        let w = quantize_moe_checkpoint(&cfg, &ckpt, &opts, CodecId::FreqSeqPacked, "unit")
+            .unwrap()
+            .with_chunk_len(512);
+        let dir = TempDir::new().unwrap();
+        let p = dir.join("moe.tqm");
+        w.write(&p).unwrap();
+        (cfg, dir, Arc::new(TqmReader::open(&p).unwrap()))
+    }
+
+    fn scheduler(
+        reader: &Arc<TqmReader>,
+        cfg: &crate::config::ModelConfig,
+        budget: usize,
+        opts: SchedOptions,
+    ) -> (ExpertScheduler, Arc<PipelineMetrics>) {
+        let spec = cfg.moe.as_ref().unwrap();
+        let metrics = Arc::new(PipelineMetrics::default());
+        let cache = ExpertCache::new(reader.clone(), metrics.clone(), budget, 1);
+        let sched = ExpertScheduler::new(
+            reader.clone(),
+            metrics.clone(),
+            cache,
+            cfg.n_layers,
+            spec.n_experts,
+            opts,
+        );
+        (sched, metrics)
+    }
+
+    #[test]
+    fn batched_forward_matches_per_sequence_path() {
+        let (cfg, _dir, reader) = demo(41);
+        let spec = cfg.moe.clone().unwrap();
+        let routers = load_routers(&reader, cfg.n_layers).unwrap();
+        let opts = SchedOptions {
+            sync_prefetch: true,
+            prefetch_budget_bytes: 1 << 20,
+            ..SchedOptions::default()
+        };
+        let (sched, _m) = scheduler(&reader, &cfg, usize::MAX, opts);
+        let xs = clustered_trace(cfg.d_model, 3, 1, 4, 13);
+        let batched = sched.forward_batch(&routers, &spec, &xs).unwrap();
+        for (x, got) in xs.iter().zip(&batched) {
+            let want = moe_stack_forward(&routers, &spec, x, |l, e| sched.get(l, e)).unwrap();
+            assert_eq!(got, &want, "scheduled forward diverged");
+        }
+    }
+
+    #[test]
+    fn shared_picks_are_fetched_once() {
+        let (cfg, _dir, reader) = demo(42);
+        let spec = cfg.moe.clone().unwrap();
+        let routers = load_routers(&reader, cfg.n_layers).unwrap();
+        let opts = SchedOptions { prefetch: false, ..SchedOptions::default() };
+        let (sched, m) = scheduler(&reader, &cfg, usize::MAX, opts);
+        let mut rng = crate::util::Rng::seed_from_u64(5);
+        let x = rng.normal_vec(cfg.d_model, 1.0);
+        let xs = vec![x.clone(), x.clone(), x.clone(), x];
+        sched.forward_batch(&routers, &spec, &xs).unwrap();
+        let routed = m.sched_routed_picks();
+        assert_eq!(routed as usize, 4 * cfg.n_layers * spec.top_k);
+        assert_eq!(
+            m.sched_planned_fetches() as usize,
+            cfg.n_layers * spec.top_k,
+            "identical sequences must collapse"
+        );
+        // decode count == planned fetches, not routed picks
+        assert_eq!(m.expert_misses_count(), m.sched_planned_fetches());
+        assert!((m.sched_dedup_factor() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let (cfg, _dir, reader) = demo(43);
+        let spec = cfg.moe.clone().unwrap();
+        let routers = load_routers(&reader, cfg.n_layers).unwrap();
+        let (sched, m) = scheduler(&reader, &cfg, usize::MAX, SchedOptions::default());
+        let out = sched.forward_batch(&routers, &spec, &[]).unwrap();
+        assert!(out.is_empty());
+        assert_eq!(m.sched_plans_count(), 0);
+    }
+}

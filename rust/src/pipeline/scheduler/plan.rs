@@ -1,0 +1,115 @@
+//! Batch-aware decode plans: collapse a batch's routed top-k picks into
+//! one fetch per (layer, expert).
+//!
+//! The per-sequence MoE path fetches every routed pick independently —
+//! eight sequences routing to expert 3 cost eight cache lookups and, under
+//! a tight budget, potentially eight decodes (an expert evicted between
+//! two sequences of the *same step* decodes again). A [`LayerPlan`] keeps
+//! the per-sequence picks (router order — the math consumes them in that
+//! order, which is what keeps the scheduled forward bit-exact against the
+//! per-sequence path) but derives the sorted deduplicated expert set, so
+//! the scheduler fetches each expert once and holds it for the whole step.
+
+use crate::model::moe::Router;
+
+/// One layer's decode plan for a batch of sequences.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    pub layer: usize,
+    /// Per-sequence routed `(expert, gate)` picks, router order.
+    pub picks: Vec<Vec<(usize, f32)>>,
+    /// Sorted, deduplicated expert ids across all picks — the decode
+    /// order. Sorting makes the plan independent of batch order.
+    pub unique: Vec<usize>,
+}
+
+impl LayerPlan {
+    /// Route every sequence of the batch through `router` and dedupe the
+    /// picks. Pure math — no cache or decoder involvement — so plans can
+    /// be built (and tested) without a container.
+    pub fn build(layer: usize, router: &Router, xs: &[Vec<f32>], top_k: usize) -> Self {
+        let picks: Vec<Vec<(usize, f32)>> =
+            xs.iter().map(|x| router.top_k(x, top_k)).collect();
+        let mut unique: Vec<usize> = picks.iter().flatten().map(|p| p.0).collect();
+        unique.sort_unstable();
+        unique.dedup();
+        Self { layer, picks, unique }
+    }
+
+    /// Total routed picks across the batch (what the per-sequence path
+    /// would have fetched).
+    pub fn routed_picks(&self) -> usize {
+        self.picks.iter().map(|p| p.len()).sum()
+    }
+
+    /// Unique experts to fetch (what the scheduler actually fetches).
+    pub fn n_unique(&self) -> usize {
+        self.unique.len()
+    }
+
+    /// Routed picks per unique fetch (>= 1.0 for a non-empty batch; the
+    /// batch-dedup win). 0.0 for an empty plan.
+    pub fn dedup_factor(&self) -> f64 {
+        if self.unique.is_empty() {
+            return 0.0;
+        }
+        self.routed_picks() as f64 / self.unique.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn demo_router(d: usize, ne: usize) -> Router {
+        let mut rng = crate::util::Rng::seed_from_u64(17);
+        Router {
+            layer: 0,
+            w: Tensor::new(vec![d, ne], rng.normal_vec(d * ne, 0.5)).unwrap(),
+        }
+    }
+
+    #[test]
+    fn identical_sequences_collapse_to_one_fetch_each() {
+        let router = demo_router(16, 8);
+        let mut rng = crate::util::Rng::seed_from_u64(3);
+        let x = rng.normal_vec(16, 1.0);
+        let xs = vec![x.clone(), x.clone(), x.clone(), x.clone()];
+        let plan = LayerPlan::build(0, &router, &xs, 2);
+        assert_eq!(plan.routed_picks(), 8);
+        assert_eq!(plan.n_unique(), 2, "4 identical sequences share their picks");
+        assert!((plan.dedup_factor() - 4.0).abs() < 1e-12);
+        // picks preserved per sequence, router order
+        for p in &plan.picks {
+            assert_eq!(p, &router.top_k(&x, 2));
+        }
+    }
+
+    #[test]
+    fn unique_set_is_sorted_and_batch_order_independent() {
+        let router = demo_router(16, 8);
+        let mut rng = crate::util::Rng::seed_from_u64(9);
+        let xs: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(16, 1.0)).collect();
+        let plan = LayerPlan::build(0, &router, &xs, 2);
+        assert!(plan.unique.windows(2).all(|w| w[0] < w[1]), "sorted + deduped");
+        let mut rev = xs.clone();
+        rev.reverse();
+        let plan_rev = LayerPlan::build(0, &router, &rev, 2);
+        assert_eq!(plan.unique, plan_rev.unique, "plan depends on batch order");
+        // per-sequence picks just permute with the batch
+        for (i, p) in plan.picks.iter().enumerate() {
+            assert_eq!(p, &plan_rev.picks[xs.len() - 1 - i]);
+        }
+    }
+
+    #[test]
+    fn empty_batch_yields_empty_plan() {
+        let router = demo_router(8, 4);
+        let plan = LayerPlan::build(3, &router, &[], 2);
+        assert_eq!(plan.layer, 3);
+        assert_eq!(plan.routed_picks(), 0);
+        assert_eq!(plan.n_unique(), 0);
+        assert_eq!(plan.dedup_factor(), 0.0);
+    }
+}

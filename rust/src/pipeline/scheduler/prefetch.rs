@@ -1,0 +1,225 @@
+//! Router-logit-driven expert prefetch: background workers that decode
+//! *predicted* experts into the cache's speculative slice while the
+//! demand path is still computing the previous layer.
+//!
+//! Two signals feed the prediction (scored in
+//! [`super::ExpertScheduler`]): the **next layer's router logits** applied
+//! to the batch's current hidden states (a one-layer-early estimate of
+//! where the step is about to route), and an [`EwmaPrior`] of which
+//! experts the workload has been picking lately (real traffic is heavily
+//! skewed — QMoE/MobileMoE both report zipf-like expert popularity).
+//!
+//! The pool never blocks the demand path: jobs are queued, workers decode
+//! with fresh buffers (the demand path keeps the recycled-arena fast
+//! path to itself), and the size-aware admission check in
+//! [`crate::pipeline::ExpertCache::insert_speculative`] guarantees a
+//! prefetch can only ever displace another unused prefetch, never a
+//! demand-resident expert.
+
+use std::collections::HashSet;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::format::TqmReader;
+use crate::model::moe::ExpertWeights;
+use crate::pipeline::{ExpertCache, PipelineMetrics};
+
+/// EWMA of the per-step pick indicator for every (layer, expert): each
+/// scheduling step every expert's score decays by `decay`, and the
+/// experts the step actually routed to gain `1 - decay`. Scores live in
+/// [0, 1] — a long-run pick frequency with exponentially fading memory.
+pub struct EwmaPrior {
+    decay: f64,
+    scores: Vec<Vec<f64>>,
+}
+
+impl EwmaPrior {
+    pub fn new(n_layers: usize, n_experts: usize, decay: f64) -> Self {
+        Self { decay: decay.clamp(0.0, 1.0), scores: vec![vec![0.0; n_experts]; n_layers] }
+    }
+
+    /// Fold one step's picked expert set for `layer` into the prior.
+    pub fn observe(&mut self, layer: usize, picked: &[usize]) {
+        let Some(row) = self.scores.get_mut(layer) else { return };
+        for s in row.iter_mut() {
+            *s *= self.decay;
+        }
+        for &e in picked {
+            if let Some(s) = row.get_mut(e) {
+                *s += 1.0 - self.decay;
+            }
+        }
+    }
+
+    /// Popularity score of one expert (0.0 for out-of-range indices).
+    pub fn score(&self, layer: usize, expert: usize) -> f64 {
+        self.scores
+            .get(layer)
+            .and_then(|r| r.get(expert))
+            .copied()
+            .unwrap_or(0.0)
+    }
+}
+
+type Job = (usize, usize);
+
+/// Fixed pool of background decode workers feeding the cache's
+/// speculative slice. Shut down on drop (queue closed, workers joined).
+pub struct PrefetchPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<PipelineMetrics>,
+    /// Jobs queued or executing; [`PrefetchPool::quiesce`] waits for 0.
+    inflight: Arc<(Mutex<usize>, Condvar)>,
+    /// Keys queued or executing — consecutive steps predicting the same
+    /// expert must not decode it twice while the first job is in flight.
+    pending: Arc<Mutex<HashSet<Job>>>,
+}
+
+impl PrefetchPool {
+    pub fn new(
+        cache: Arc<Mutex<ExpertCache>>,
+        reader: Arc<TqmReader>,
+        metrics: Arc<PipelineMetrics>,
+        budget_bytes: usize,
+        n_workers: usize,
+    ) -> Self {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let inflight = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let pending = Arc::new(Mutex::new(HashSet::new()));
+        let workers = (0..n_workers.max(1))
+            .map(|i| {
+                let rx = rx.clone();
+                let cache = cache.clone();
+                let reader = reader.clone();
+                let metrics = metrics.clone();
+                let inflight = inflight.clone();
+                let pending = pending.clone();
+                std::thread::Builder::new()
+                    .name(format!("expert-prefetch-{i}"))
+                    .spawn(move || loop {
+                        // take the receiver lock only for the blocking
+                        // recv, never while decoding
+                        let job = rx.lock().unwrap().recv();
+                        let Ok((layer, expert)) = job else { return };
+                        run_job(&cache, &reader, &metrics, budget_bytes, layer, expert);
+                        pending.lock().unwrap().remove(&(layer, expert));
+                        let (count, cv) = &*inflight;
+                        *count.lock().unwrap() -= 1;
+                        cv.notify_all();
+                    })
+                    .expect("spawning prefetch worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers, metrics, inflight, pending }
+    }
+
+    /// Queue one (layer, expert) for speculative decode. Never blocks on
+    /// the decode itself; a key already queued or executing is skipped
+    /// (not an issue, not a waste — just a duplicate prediction).
+    pub fn enqueue(&self, layer: usize, expert: usize) {
+        if !self.pending.lock().unwrap().insert((layer, expert)) {
+            return; // already in flight
+        }
+        let (count, cv) = &*self.inflight;
+        *count.lock().unwrap() += 1;
+        self.metrics.prefetch_issue();
+        let sent = self
+            .tx
+            .as_ref()
+            .map(|tx| tx.send((layer, expert)).is_ok())
+            .unwrap_or(false);
+        if !sent {
+            // pool shutting down: roll the accounting back
+            self.pending.lock().unwrap().remove(&(layer, expert));
+            *count.lock().unwrap() -= 1;
+            cv.notify_all();
+            self.metrics.record_prefetch_rejected();
+        }
+    }
+
+    /// Block until every queued job has been processed — the scheduler's
+    /// deterministic (`sync_prefetch`) mode, and how tests/benches draw a
+    /// line between "prefetch landed" and "prefetch still in flight".
+    pub fn quiesce(&self) {
+        let (count, cv) = &*self.inflight;
+        let mut n = count.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+}
+
+impl Drop for PrefetchPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// One speculative decode, admission **first**: reserve slice capacity
+/// through [`ExpertCache::begin_speculative`] (rejects already-resident,
+/// unknown, and could-never-fit experts before any decode allocation
+/// exists — the reservation is what keeps in-flight prefetch bytes
+/// inside the `budget + prefetch_budget` bound), then decode with fresh
+/// buffers and commit onto the reservation.
+fn run_job(
+    cache: &Mutex<ExpertCache>,
+    reader: &Arc<TqmReader>,
+    metrics: &PipelineMetrics,
+    budget_bytes: usize,
+    layer: usize,
+    expert: usize,
+) {
+    let reserved = cache.lock().unwrap().begin_speculative(layer, expert, budget_bytes);
+    let Some(need) = reserved else {
+        metrics.record_prefetch_rejected();
+        return;
+    };
+    let t0 = Instant::now();
+    match ExpertWeights::load(reader, layer, expert) {
+        Ok(w) => {
+            metrics.record_prefetch_decode(t0.elapsed(), w.bytes());
+            let admitted =
+                cache.lock().unwrap().commit_speculative(layer, expert, Arc::new(w));
+            if !admitted {
+                // demand decoded it while we were in flight
+                metrics.record_prefetch_rejected();
+            }
+        }
+        Err(_) => {
+            cache.lock().unwrap().cancel_speculative(need);
+            metrics.record_prefetch_rejected();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_prior_tracks_pick_frequency() {
+        let mut p = EwmaPrior::new(2, 4, 0.5);
+        assert_eq!(p.score(0, 0), 0.0);
+        p.observe(0, &[1, 2]);
+        assert!((p.score(0, 1) - 0.5).abs() < 1e-12);
+        assert_eq!(p.score(0, 0), 0.0);
+        // repeated picks converge toward 1.0, unpicked decay toward 0.0
+        for _ in 0..20 {
+            p.observe(0, &[1]);
+        }
+        assert!(p.score(0, 1) > 0.99);
+        assert!(p.score(0, 2) < 0.01);
+        // other layers untouched; out-of-range indices are inert
+        assert_eq!(p.score(1, 1), 0.0);
+        p.observe(7, &[0]);
+        p.observe(0, &[99]);
+        assert_eq!(p.score(7, 0), 0.0);
+        assert_eq!(p.score(0, 3), 0.0);
+    }
+}

@@ -700,6 +700,303 @@ pub fn render_moe(rows: &[MoeRow]) -> Table {
     t
 }
 
+// ===========================================================================
+// E10 — expert scheduler: batch dedup + router-logit prefetch
+// ===========================================================================
+
+pub struct SchedRow {
+    pub scenario: String,
+    pub mean_token_us: f64,
+    /// Routed (seq, layer, expert) picks the scenario looked up.
+    pub routed_picks: u64,
+    /// Expert decodes actually performed (cache misses).
+    pub decodes: u64,
+    /// Plan-level dedup factor (`None` for the unscheduled row).
+    pub dedup_factor: Option<f64>,
+    pub hit_rate: f64,
+    /// Demand-miss decode time paid at the forward step.
+    pub stall_ms: f64,
+    pub prefetch_hits: Option<u64>,
+    pub prefetch_wasted: Option<u64>,
+}
+
+/// The scheduler scenario: one synthetic MoE checkpoint, one batched
+/// workload (each sequence walks the same clustered trace at a phase
+/// offset, so picks overlap heavily but not perfectly), three serving
+/// shapes under the *same tight expert budget* — per-sequence forwards
+/// sharing the cache (PR-3 state), the scheduler's batch-dedup plan, and
+/// dedup plus router-logit prefetch (synchronous mode, so the numbers
+/// are reproducible). Host-side, no lowered artifacts needed.
+pub fn sched_table(tokens: usize, batch: usize) -> Result<Vec<SchedRow>> {
+    use crate::model::moe;
+    use crate::pipeline::scheduler::SchedOptions;
+    use crate::pipeline::{ExpertCache, ExpertScheduler, PipelineMetrics};
+
+    let cfg = moe::moe_demo_config();
+    let spec = cfg.moe.clone().expect("demo config is MoE");
+    let ckpt = moe::synth_moe_checkpoint(&cfg, 55)?;
+    let opts = QuantizeOptions { per_channel: true, ..Default::default() };
+    let w = moe::quantize_moe_checkpoint(&cfg, &ckpt, &opts, CodecId::FreqSeqPacked, "synthetic")?;
+    let dir = crate::util::TempDir::new()?;
+    let path = dir.join("moe.tqm");
+    w.write(&path)?;
+    let reader = Arc::new(crate::format::TqmReader::open(&path)?);
+    let routers = moe::load_routers(&reader, cfg.n_layers)?;
+    let one = reader.expert_entry(0, 0)?.decoded_f32_bytes;
+    // tight: one sequence's per-step working set, not the batch union
+    let budget = spec.top_k * cfg.n_layers * one + one / 2;
+    let prefetch_slice = spec.top_k * cfg.n_layers * one;
+
+    let tokens = tokens.max(1);
+    let batch = batch.max(1);
+    let base = moe::clustered_trace(cfg.d_model, 4, 6, tokens.max(8), 5);
+    // sequence s at step t (phase-shifted shared trace)
+    let step_xs = |t: usize| -> Vec<Vec<f32>> {
+        (0..batch).map(|s| base[(t + 3 * s) % base.len()].clone()).collect()
+    };
+
+    let mut rows = Vec::new();
+
+    // 1) unscheduled: each sequence forwarded alone, shared cache
+    {
+        let metrics = Arc::new(PipelineMetrics::default());
+        let mut cache = ExpertCache::new(reader.clone(), metrics.clone(), budget, 1);
+        let t0 = std::time::Instant::now();
+        for t in 0..tokens {
+            for x in step_xs(t) {
+                let y = moe::moe_stack_forward(&routers, &spec, &x, |l, e| cache.get(l, e))?;
+                std::hint::black_box(y);
+            }
+        }
+        rows.push(SchedRow {
+            scenario: "unscheduled (per-sequence)".into(),
+            mean_token_us: t0.elapsed().as_secs_f64() * 1e6 / (tokens * batch) as f64,
+            routed_picks: metrics.expert_hits_count() + metrics.expert_misses_count(),
+            decodes: metrics.expert_misses_count(),
+            dedup_factor: None,
+            hit_rate: metrics.expert_hit_rate(),
+            stall_ms: metrics.expert_stall_secs() * 1e3,
+            prefetch_hits: None,
+            prefetch_wasted: None,
+        });
+    }
+
+    // 2 + 3) scheduled: dedup only, then dedup + prefetch
+    let run_sched = |label: &str, prefetch: bool| -> Result<SchedRow> {
+        let metrics = Arc::new(PipelineMetrics::default());
+        let cache = ExpertCache::new(reader.clone(), metrics.clone(), budget, 1);
+        let sopts = SchedOptions {
+            prefetch,
+            prefetch_budget_bytes: if prefetch { prefetch_slice } else { 0 },
+            prefetch_workers: 1,
+            ewma_decay: 0.8,
+            sync_prefetch: true,
+        };
+        let sched = ExpertScheduler::new(
+            reader.clone(),
+            metrics.clone(),
+            cache,
+            cfg.n_layers,
+            spec.n_experts,
+            sopts,
+        );
+        let t0 = std::time::Instant::now();
+        for t in 0..tokens {
+            let y = sched.forward_batch(&routers, &spec, &step_xs(t))?;
+            std::hint::black_box(y);
+        }
+        sched.quiesce();
+        Ok(SchedRow {
+            scenario: label.into(),
+            mean_token_us: t0.elapsed().as_secs_f64() * 1e6 / (tokens * batch) as f64,
+            routed_picks: metrics.sched_routed_picks(),
+            decodes: metrics.expert_misses_count(),
+            dedup_factor: Some(metrics.sched_dedup_factor()),
+            hit_rate: metrics.expert_hit_rate(),
+            stall_ms: metrics.expert_stall_secs() * 1e3,
+            prefetch_hits: prefetch.then(|| metrics.prefetch_hits_count()),
+            prefetch_wasted: prefetch.then(|| metrics.prefetch_wasted_count()),
+        })
+    };
+    rows.push(run_sched("scheduled (batch dedup)", false)?);
+    rows.push(run_sched("scheduled (dedup + prefetch)", true)?);
+    Ok(rows)
+}
+
+pub fn render_sched(rows: &[SchedRow]) -> Table {
+    let mut t = Table::new(
+        "E10 — expert scheduler: per-sequence vs batch dedup vs dedup+prefetch (tight budget)",
+        &[
+            "scenario",
+            "us/token",
+            "picks",
+            "decodes",
+            "dedup",
+            "hit rate",
+            "stall ms",
+            "pf hits",
+            "pf waste",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.scenario.clone(),
+            format!("{:.1}", r.mean_token_us),
+            format!("{}", r.routed_picks),
+            format!("{}", r.decodes),
+            r.dedup_factor.map(|d| format!("{d:.2}x")).unwrap_or_else(|| "-".into()),
+            format!("{:.0}%", r.hit_rate * 100.0),
+            format!("{:.2}", r.stall_ms),
+            r.prefetch_hits.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
+            r.prefetch_wasted.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t
+}
+
+// ===========================================================================
+// E11 — zipf expert-cache bench (budget sweep for the default knob)
+// ===========================================================================
+
+pub struct ZipfRow {
+    pub budget_experts: usize,
+    pub budget_bytes: usize,
+    pub hit_rate: f64,
+    pub decodes: u64,
+    pub evictions: u64,
+    /// Decode stall paid at the forward step over the whole trace.
+    pub stall_ms: f64,
+    pub peak_bytes: usize,
+}
+
+/// Synthetic zipfian routing trace (skew `alpha`) replayed through the
+/// expert cache across a sweep of `expert_budget_bytes` — hit-rate and
+/// decode-stall per budget, the data behind the default-budget choice.
+/// Routing bypasses the routers on purpose: this measures cache *policy*
+/// against a controlled popularity law, not router behavior.
+pub fn zipf_table(alpha: f64, tokens: usize) -> Result<Vec<ZipfRow>> {
+    use crate::model::moe;
+    use crate::pipeline::{ExpertCache, PipelineMetrics};
+
+    let cfg = moe::moe_demo_config();
+    let spec = cfg.moe.clone().expect("demo config is MoE");
+    let ckpt = moe::synth_moe_checkpoint(&cfg, 91)?;
+    let qopts = QuantizeOptions { per_channel: true, ..Default::default() };
+    let w = moe::quantize_moe_checkpoint(&cfg, &ckpt, &qopts, CodecId::FreqSeqPacked, "synthetic")?;
+    let dir = crate::util::TempDir::new()?;
+    let path = dir.join("moe.tqm");
+    w.write(&path)?;
+    let reader = Arc::new(crate::format::TqmReader::open(&path)?);
+    let one = reader.expert_entry(0, 0)?.decoded_f32_bytes;
+    let total_experts = cfg.n_layers * spec.n_experts;
+
+    let trace = zipf_routing_trace(
+        cfg.n_layers,
+        spec.n_experts,
+        spec.top_k,
+        alpha,
+        tokens.max(1),
+        23,
+    );
+    let mut rows = Vec::new();
+    for budget_experts in [1usize, 2, 4, 6, 8, 12, 16] {
+        let budget_experts = budget_experts.min(total_experts);
+        let metrics = Arc::new(PipelineMetrics::default());
+        let mut cache = ExpertCache::new(reader.clone(), metrics.clone(), budget_experts * one, 1);
+        for step in &trace {
+            for (l, picks) in step.iter().enumerate() {
+                for &e in picks {
+                    let w = cache.get(l, e)?;
+                    std::hint::black_box(w.bytes());
+                }
+            }
+        }
+        rows.push(ZipfRow {
+            budget_experts,
+            budget_bytes: budget_experts * one,
+            hit_rate: metrics.expert_hit_rate(),
+            decodes: metrics.expert_misses_count(),
+            evictions: metrics.expert_evictions_count(),
+            stall_ms: metrics.expert_stall_secs() * 1e3,
+            peak_bytes: metrics.expert_peak_resident_bytes(),
+        });
+        if budget_experts == total_experts {
+            break;
+        }
+    }
+    Ok(rows)
+}
+
+/// `trace[t][layer]` = `top_k` distinct expert picks, drawn from a
+/// zipf(`alpha`) popularity law over expert *ranks*, with an independent
+/// rank->expert permutation per layer (popular experts differ across
+/// layers, as they do in real checkpoints).
+fn zipf_routing_trace(
+    n_layers: usize,
+    n_experts: usize,
+    top_k: usize,
+    alpha: f64,
+    tokens: usize,
+    seed: u64,
+) -> Vec<Vec<Vec<usize>>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    // rank -> cumulative probability
+    let weights: Vec<f64> = (0..n_experts).map(|r| 1.0 / ((r + 1) as f64).powf(alpha)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut cdf = Vec::with_capacity(n_experts);
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w / total;
+        cdf.push(acc);
+    }
+    let perms: Vec<Vec<usize>> = (0..n_layers)
+        .map(|_| {
+            let mut p: Vec<usize> = (0..n_experts).collect();
+            rng.shuffle(&mut p);
+            p
+        })
+        .collect();
+    let top_k = top_k.clamp(1, n_experts);
+    (0..tokens)
+        .map(|_| {
+            perms
+                .iter()
+                .map(|perm| {
+                    let mut picks: Vec<usize> = Vec::with_capacity(top_k);
+                    while picks.len() < top_k {
+                        let u = rng.f64();
+                        let rank = cdf.iter().position(|&c| u <= c).unwrap_or(n_experts - 1);
+                        let e = perm[rank];
+                        if !picks.contains(&e) {
+                            picks.push(e);
+                        }
+                    }
+                    picks
+                })
+                .collect()
+        })
+        .collect()
+}
+
+pub fn render_zipf(rows: &[ZipfRow], alpha: f64) -> Table {
+    let mut t = Table::new(
+        &format!("E11 — expert-cache budget sweep on a zipf({alpha:.2}) routing trace"),
+        &["budget (experts)", "budget", "hit rate", "decodes", "evictions", "stall ms", "peak"],
+    );
+    for r in rows {
+        t.row(vec![
+            format!("{}", r.budget_experts),
+            fmt_bytes(r.budget_bytes),
+            format!("{:.1}%", r.hit_rate * 100.0),
+            format!("{}", r.decodes),
+            format!("{}", r.evictions),
+            format!("{:.2}", r.stall_ms),
+            fmt_bytes(r.peak_bytes),
+        ]);
+    }
+    t
+}
+
 /// Convenience: codec everything defaults to.
 pub fn default_codec() -> CodecId {
     CodecId::FreqSeqPacked
@@ -717,6 +1014,58 @@ fn unused_fmt_hook() {
 
 #[cfg(test)]
 mod tests {
+    #[test]
+    fn sched_table_rows_sane() {
+        // host-side scenario: three rows, and the scheduled paths never
+        // decode more than the unscheduled one on the same workload
+        let rows = super::sched_table(24, 4).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().all(|r| r.mean_token_us > 0.0 && r.routed_picks > 0));
+        let unsched = &rows[0];
+        let dedup = &rows[1];
+        let pf = &rows[2];
+        assert!(unsched.dedup_factor.is_none());
+        assert_eq!(unsched.routed_picks, dedup.routed_picks, "same workload, same picks");
+        assert!(dedup.decodes <= unsched.decodes, "dedup increased decode count");
+        assert!(
+            dedup.dedup_factor.unwrap() > 1.0,
+            "phase-shifted sequences must overlap in picks"
+        );
+        assert!(pf.prefetch_hits.is_some() && pf.prefetch_wasted.is_some());
+        let rendered = super::render_sched(&rows).render();
+        assert!(rendered.contains("dedup + prefetch"));
+    }
+
+    #[test]
+    fn zipf_table_budget_sweep_is_monotone_in_hits() {
+        let rows = super::zipf_table(1.1, 300).unwrap();
+        assert!(rows.len() >= 4);
+        // hit-rate must not degrade as the budget grows (same trace)
+        for pair in rows.windows(2) {
+            assert!(
+                pair[1].hit_rate >= pair[0].hit_rate - 1e-9,
+                "hit rate fell from {} to {} as budget grew",
+                pair[0].hit_rate,
+                pair[1].hit_rate
+            );
+            assert!(pair[1].decodes <= pair[0].decodes);
+        }
+        // budgets really bound the peak (uniform expert sizes, budget >=
+        // one expert: cached + in-flight stays under the budget)
+        for r in &rows {
+            assert!(
+                r.peak_bytes <= r.budget_bytes,
+                "peak {} over budget {}",
+                r.peak_bytes,
+                r.budget_bytes
+            );
+        }
+        let last = rows.last().unwrap();
+        assert!(last.hit_rate > 0.5, "full-residency sweep should mostly hit");
+        let rendered = super::render_zipf(&rows, 1.1).render();
+        assert!(rendered.contains("zipf"));
+    }
+
     #[test]
     fn moe_table_rows_sane() {
         // host-side scenario: must run with no artifacts, produce a dense

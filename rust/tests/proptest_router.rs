@@ -1,0 +1,120 @@
+//! Property tests (hand-rolled driver — no proptest crate offline) for
+//! router determinism: top-k tie-breaking is stable across runs and
+//! independent of batch order — the prerequisite for reproducible
+//! scheduler decode plans (two replicas planning the same batch must
+//! build the same plan, or dedup'd decode work would diverge).
+
+use tiny_qmoe::model::moe::Router;
+use tiny_qmoe::pipeline::scheduler::LayerPlan;
+use tiny_qmoe::tensor::Tensor;
+use tiny_qmoe::util::Rng;
+
+fn random_router(rng: &mut Rng) -> Router {
+    let d = rng.gen_range_usize(4, 48);
+    let ne = rng.gen_range_usize(2, 16);
+    Router {
+        layer: 0,
+        w: Tensor::new(vec![d, ne], rng.normal_vec(d * ne, 0.5)).unwrap(),
+    }
+}
+
+/// A router whose expert columns are drawn from a small pool of distinct
+/// columns — duplicated columns produce *exactly* equal logits (same
+/// inputs, same f32 operations in the same order), forcing the
+/// tie-breaking path.
+fn tied_router(rng: &mut Rng, d: usize, ne: usize, pool: usize) -> Router {
+    let cols: Vec<Vec<f32>> = (0..pool.max(1)).map(|_| rng.normal_vec(d, 0.5)).collect();
+    let assign: Vec<usize> = (0..ne).map(|e| e % cols.len()).collect();
+    let mut w = vec![0.0f32; d * ne];
+    for r in 0..d {
+        for (e, &c) in assign.iter().enumerate() {
+            w[r * ne + e] = cols[c][r];
+        }
+    }
+    Router { layer: 0, w: Tensor::new(vec![d, ne], w).unwrap() }
+}
+
+#[test]
+fn prop_top_k_is_stable_across_runs() {
+    let mut rng = Rng::seed_from_u64(0x707e1);
+    for case in 0..200 {
+        let router = random_router(&mut rng);
+        let d = router.w.shape[0];
+        let ne = router.n_experts();
+        let x = rng.normal_vec(d, 1.0);
+        let k = rng.gen_range_usize(1, ne + 1);
+        let p1 = router.top_k(&x, k);
+        let p2 = router.top_k(&x, k);
+        assert_eq!(p1, p2, "case {case}: same input, different picks");
+        // gates bitwise identical too (not just the expert set)
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "case {case}: gate drift");
+        }
+    }
+}
+
+#[test]
+fn prop_exact_ties_break_toward_lower_expert_index() {
+    let mut rng = Rng::seed_from_u64(0x5eed);
+    for case in 0..200 {
+        let d = rng.gen_range_usize(4, 32);
+        let ne = rng.gen_range_usize(4, 12);
+        let pool = rng.gen_range_usize(1, 4); // heavy duplication
+        let router = tied_router(&mut rng, d, ne, pool);
+        let x = rng.normal_vec(d, 1.0);
+        let k = rng.gen_range_usize(1, ne + 1);
+        let picks = router.top_k(&x, k);
+        let logits = router.logits(&x);
+        // within any group of exactly-equal logits, picked indices must
+        // be the smallest of the group (lower index wins the tie)
+        for &(e, _) in &picks {
+            let better_unpicked = (0..e)
+                .filter(|&j| logits[j] == logits[e])
+                .find(|&j| !picks.iter().any(|p| p.0 == j));
+            assert!(
+                better_unpicked.is_none(),
+                "case {case}: expert {e} picked while tied lower index {:?} was not",
+                better_unpicked
+            );
+        }
+        // determinism under ties as well
+        assert_eq!(picks, router.top_k(&x, k), "case {case}");
+    }
+}
+
+#[test]
+fn prop_layer_plans_are_independent_of_batch_order() {
+    let mut rng = Rng::seed_from_u64(0xba7c4);
+    for case in 0..120 {
+        let router = random_router(&mut rng);
+        let d = router.w.shape[0];
+        let ne = router.n_experts();
+        let k = rng.gen_range_usize(1, ne + 1);
+        let n_seq = rng.gen_range_usize(1, 9);
+        // duplicates across the batch exercise the dedup
+        let mut xs: Vec<Vec<f32>> = (0..n_seq).map(|_| rng.normal_vec(d, 1.0)).collect();
+        if n_seq >= 2 {
+            let src = rng.gen_range_usize(0, n_seq);
+            let dst = rng.gen_range_usize(0, n_seq);
+            let copy = xs[src].clone();
+            xs[dst] = copy;
+        }
+        let plan = LayerPlan::build(0, &router, &xs, k);
+        // shuffle the batch: the unique decode set must not move
+        let mut order: Vec<usize> = (0..n_seq).collect();
+        rng.shuffle(&mut order);
+        let shuffled: Vec<Vec<f32>> = order.iter().map(|&i| xs[i].clone()).collect();
+        let plan2 = LayerPlan::build(0, &router, &shuffled, k);
+        assert_eq!(plan.unique, plan2.unique, "case {case}: plan depends on batch order");
+        assert_eq!(plan.routed_picks(), plan2.routed_picks());
+        // per-sequence picks simply permute with the batch
+        for (slot, &i) in order.iter().enumerate() {
+            assert_eq!(plan2.picks[slot], plan.picks[i], "case {case}");
+        }
+        // sorted + deduplicated, and consistent with the picks
+        assert!(plan.unique.windows(2).all(|w| w[0] < w[1]), "case {case}");
+        for p in plan.picks.iter().flatten() {
+            assert!(plan.unique.binary_search(&p.0).is_ok(), "case {case}");
+        }
+    }
+}
