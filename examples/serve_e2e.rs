@@ -21,6 +21,9 @@ fn main() -> Result<()> {
     println!("=== MoE expert streaming + cache (synthetic trace) ===");
     tables::render_moe(&tables::moe_table(512)?).print();
     println!();
+    println!("=== Expert residency: decoded vs packed at equal byte budget ===");
+    tables::render_expert_residency(&tables::expert_residency_table(512)?).print();
+    println!();
     println!("=== Expert scheduler: batch dedup + router-logit prefetch ===");
     tables::render_sched(&tables::sched_table(256, 4)?).print();
     println!();

@@ -1,0 +1,124 @@
+//! Packed-vs-decoded GEMV throughput (the qGEMV kernel bench): for each
+//! bit width, time `out = x · W` computed (a) the decoded way — weights
+//! pre-expanded to f32, plain matmul — and (b) the quantized-domain way —
+//! fused qGEMV straight off the bit-packed codes. Threads scale by
+//! running independent matrices per worker (the expert-parallel shape:
+//! different experts decode/execute on different cores, they do not
+//! split one GEMV).
+//!
+//! Throughput is reported as decoded-equivalent MB/s (rows*cols*4 bytes
+//! of weight touched per GEMV), so the two paths are directly
+//! comparable; the last column is the resident-bytes ratio — the cache
+//! capacity multiplier packed residency buys at that width.
+//!
+//! Run: `cargo bench --bench qgemv` (host-side, no artifacts needed).
+//! `TQM_QGEMV_REPS` overrides the per-thread repetition count.
+
+use tiny_qmoe::quant::packing;
+use tiny_qmoe::util::bench::Table;
+use tiny_qmoe::util::Rng;
+
+const ROWS: usize = 512;
+const COLS: usize = 512;
+
+struct Fixture {
+    packed: Vec<u8>,
+    decoded: Vec<f32>,
+    x: Vec<f32>,
+}
+
+fn fixture(bits: u32, seed: u64) -> Fixture {
+    let mut rng = Rng::seed_from_u64(seed);
+    let n = ROWS * COLS;
+    let codes: Vec<u8> = (0..n).map(|_| rng.gen_range(0, (1u16 << bits) as u64) as u8).collect();
+    let packed = packing::pack(&codes, bits);
+    let (scale, zero) = (0.0127f32, (1u32 << (bits - 1)) as f32);
+    let mut decoded = vec![0.0f32; n];
+    packing::unpack_dequant_into(&packed, bits, scale, zero, &mut decoded);
+    let x = (0..ROWS).map(|_| rng.normal_f32()).collect();
+    Fixture { packed, decoded, x }
+}
+
+/// The decoded baseline: the expert FFN's matmul shape (rows ascending,
+/// zero activations skipped).
+fn f32_gemv(w: &[f32], x: &[f32], out: &mut [f32]) {
+    out.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * COLS..(i + 1) * COLS];
+        for (o, &wij) in out.iter_mut().zip(row) {
+            *o += xi * wij;
+        }
+    }
+}
+
+/// Run `reps` GEMVs on each of `threads` workers (independent fixtures)
+/// and return aggregate decoded-equivalent MB/s.
+fn throughput(fixtures: &[Fixture], reps: usize, packed: bool, bits: u32) -> f64 {
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for f in fixtures {
+            scope.spawn(move || {
+                let mut out = vec![0.0f32; COLS];
+                let (scale, zero) = (0.0127f32, (1u32 << (bits - 1)) as f32);
+                for _ in 0..reps {
+                    if packed {
+                        packing::qgemv(&f.packed, bits, COLS, scale, zero, &f.x, &mut out);
+                    } else {
+                        f32_gemv(&f.decoded, &f.x, &mut out);
+                    }
+                    std::hint::black_box(&mut out);
+                }
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    (ROWS * COLS * 4 * reps * fixtures.len()) as f64 / 1e6 / secs
+}
+
+fn main() {
+    let reps: usize = std::env::var("TQM_QGEMV_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    let mut t = Table::new(
+        &format!(
+            "qGEMV — packed vs decoded GEMV throughput ({ROWS}x{COLS}, per-tensor params, \
+             {reps} reps/thread, decoded-equivalent MB/s)"
+        ),
+        &["bits", "threads", "decoded MB/s", "qgemv MB/s", "qgemv/decoded", "capacity x"],
+    );
+    for bits in [2u32, 4, 6, 8] {
+        for threads in [1usize, 2, 4, 8] {
+            let fixtures: Vec<Fixture> =
+                (0..threads).map(|i| fixture(bits, 100 + i as u64)).collect();
+            // correctness guard: the two paths must agree bit for bit
+            {
+                let f = &fixtures[0];
+                let (scale, zero) = (0.0127f32, (1u32 << (bits - 1)) as f32);
+                let mut a = vec![0.0f32; COLS];
+                let mut b = vec![0.0f32; COLS];
+                packing::qgemv(&f.packed, bits, COLS, scale, zero, &f.x, &mut a);
+                f32_gemv(&f.decoded, &f.x, &mut b);
+                assert_eq!(a, b, "qgemv diverged from the decoded path at {bits} bits");
+            }
+            // warm-up, then measure
+            let _ = throughput(&fixtures, reps.div_ceil(8).max(1), true, bits);
+            let dec = throughput(&fixtures, reps, false, bits);
+            let pkd = throughput(&fixtures, reps, true, bits);
+            let resident_packed = fixtures[0].packed.len() + 8; // + scale/zero
+            let resident_decoded = ROWS * COLS * 4;
+            t.row(vec![
+                format!("{bits}"),
+                format!("{threads}"),
+                format!("{dec:.0}"),
+                format!("{pkd:.0}"),
+                format!("{:.2}x", pkd / dec.max(1e-9)),
+                format!("{:.2}x", resident_decoded as f64 / resident_packed as f64),
+            ]);
+        }
+    }
+    t.print();
+}

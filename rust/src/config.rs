@@ -212,6 +212,36 @@ impl Residency {
     }
 }
 
+/// How the MoE expert cache holds a resident expert.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExpertResidency {
+    /// Dequantized f32 arenas — fastest per-token math, largest
+    /// footprint (4 bytes/weight regardless of quantization width).
+    Decoded,
+    /// The container's bit-packed codes + quant params, computed against
+    /// directly by the fused qGEMV kernels: ~`32/bits`× more experts
+    /// resident per byte of budget, and a miss skips the
+    /// unpack→dequantize pass entirely. Bit-exact vs `Decoded`.
+    Packed,
+}
+
+impl ExpertResidency {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "decoded" => Ok(ExpertResidency::Decoded),
+            "packed" => Ok(ExpertResidency::Packed),
+            _ => anyhow::bail!("bad expert residency {s:?} (decoded|packed)"),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ExpertResidency::Decoded => "decoded",
+            ExpertResidency::Packed => "packed",
+        }
+    }
+}
+
 /// Serving configuration (coordinator).
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
@@ -239,6 +269,13 @@ pub struct ServeOptions {
     /// cache to retain anything (smaller budgets degrade to pure
     /// streaming). Irrelevant for dense models.
     pub expert_budget_bytes: usize,
+    /// What a resident expert *is*: decoded f32 arenas, or the
+    /// container's bit-packed codes served through the qGEMV kernels.
+    /// Packed residency multiplies the experts per byte of
+    /// `expert_budget_bytes` by ~`32/bits` and removes the dequantize
+    /// pass from the miss path, at a per-token matmul cost; outputs are
+    /// bit-identical either way.
+    pub expert_residency: ExpertResidency,
     /// Byte budget of the expert scheduler's *speculative* slice: how
     /// many decoded bytes the prefetch workers may hold in the cache
     /// ahead of a demand. Kept separate from `expert_budget_bytes` so a
@@ -263,6 +300,7 @@ impl Default for ServeOptions {
             max_wait_ms: 2,
             max_new_tokens: 32,
             expert_budget_bytes: 64 << 20,
+            expert_residency: ExpertResidency::Decoded,
             prefetch_budget_bytes: 16 << 20,
             prefetch_workers: 1,
             prefetch_ewma_decay: 0.8,
@@ -310,6 +348,15 @@ mod tests {
         assert_eq!(Residency::parse("lru:3").unwrap(), Residency::Lru(3));
         assert!(Residency::parse("bogus").is_err());
         assert_eq!(Residency::Lru(2).label(), "lru:2");
+    }
+
+    #[test]
+    fn expert_residency_parse() {
+        assert_eq!(ExpertResidency::parse("decoded").unwrap(), ExpertResidency::Decoded);
+        assert_eq!(ExpertResidency::parse("packed").unwrap(), ExpertResidency::Packed);
+        assert!(ExpertResidency::parse("fp32").is_err());
+        assert_eq!(ExpertResidency::Packed.label(), "packed");
+        assert_eq!(ServeOptions::default().expert_residency, ExpertResidency::Decoded);
     }
 
     #[test]

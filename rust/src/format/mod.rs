@@ -188,6 +188,13 @@ pub struct ExpertEntry {
     /// cache slot costs, known before any decode happens (the expert
     /// cache evicts *ahead* of a miss using this).
     pub decoded_f32_bytes: usize,
+    /// What one *packed-resident* cache slot costs: the bit-packed code
+    /// streams plus quant params plus the per-column dequant LUTs the
+    /// qGEMV path stores when profitable
+    /// ([`crate::quant::packing::col_lut_bytes`]) — also known before
+    /// any decode, so the packed residency mode evicts ahead the same
+    /// way the decoded mode does.
+    pub packed_resident_bytes: usize,
     /// Compressed bytes on disk across the expert's payloads.
     pub stored_bytes: usize,
 }

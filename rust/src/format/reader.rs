@@ -224,10 +224,29 @@ impl TqmReader {
                     expert,
                     records: Vec::new(),
                     decoded_f32_bytes: 0,
+                    packed_resident_bytes: 0,
                     stored_bytes: 0,
                 });
                 e.records.push(i);
-                e.decoded_f32_bytes += crate::tensor::numel(&r.shape) * 4;
+                let numel = crate::tensor::numel(&r.shape);
+                e.decoded_f32_bytes += numel * 4;
+                // packed residency: code stream + params (+ the stored
+                // per-column LUT, whose size rule is deterministic from
+                // this metadata — must mirror PackedMatrix::new)
+                e.packed_resident_bytes += match r.kind {
+                    TensorKind::QuantU8 => {
+                        let lut = match r.granularity {
+                            Granularity::PerChannel { axis: 1 } => packing::col_lut_bytes(
+                                r.bits.storage_bits(),
+                                r.shape[1],
+                                r.raw_len,
+                            ),
+                            _ => 0,
+                        };
+                        r.raw_len + 4 * (r.scale.len() + r.zero.len()) + lut
+                    }
+                    TensorKind::F32Raw => numel * 4,
+                };
                 e.stored_bytes += r.stored_bytes();
             }
         }
@@ -469,6 +488,28 @@ impl TqmReader {
         Ok(())
     }
 
+    /// Decompress a quantized tensor's payload into `out` **leaving the
+    /// codes bit-packed** — the raw little-endian code stream the qGEMV
+    /// kernels consume directly. Quantization parameters live on the
+    /// record ([`TqmReader::record`]); `out` ends up exactly
+    /// `raw_len` bytes. This is the packed-residency decode: no unpack,
+    /// no dequantize, no f32 arena.
+    pub fn load_packed_into(&self, name: &str, out: &mut Vec<u8>) -> Result<()> {
+        let r = self.record(name)?;
+        if r.kind != TensorKind::QuantU8 {
+            bail!("tqm: {name:?} is not quantized");
+        }
+        let payload = self.payload(r)?;
+        self.decode_payload_into(r, payload, out)?;
+        anyhow::ensure!(
+            out.len() == r.raw_len,
+            "tqm: {name:?} packed decode produced {} bytes, expected {}",
+            out.len(),
+            r.raw_len
+        );
+        Ok(())
+    }
+
     /// Load a raw f32 tensor (norm vectors).
     pub fn load_f32(&self, name: &str) -> Result<Tensor> {
         let r = self.record(name)?;
@@ -699,6 +740,45 @@ mod tests {
     }
 
     #[test]
+    fn load_packed_returns_the_bit_packed_stream() {
+        // the packed read path must hand back exactly pack(codes, bits)
+        // for every width, flat and chunked framing alike
+        for bits in [Bits::B2, Bits::B4, Bits::B6, Bits::B8] {
+            let mut rng = crate::util::Rng::seed_from_u64(31);
+            let t = Tensor::new(vec![48, 16], (0..48 * 16).map(|_| rng.normal_f32()).collect())
+                .unwrap();
+            let q = uniform::quantize(&t, bits, Granularity::PerChannel { axis: 1 }).unwrap();
+            let want = packing::pack(&q.codes.data, bits.storage_bits());
+            for chunked in [false, true] {
+                let dir = crate::util::TempDir::new().unwrap();
+                let p = dir.path().join("m.tqm");
+                let mut w = if chunked {
+                    TqmWriter::new(meta(CodecId::FreqSeqPacked)).with_chunk_len(129)
+                } else {
+                    TqmWriter::new(meta(CodecId::FreqSeqPacked)).with_flat_payloads()
+                };
+                w.add_quantized("w", &q);
+                w.write(&p).unwrap();
+                let r = TqmReader::open(&p).unwrap();
+                let mut got = Vec::new();
+                r.load_packed_into("w", &mut got).unwrap();
+                assert_eq!(got, want, "{bits:?} chunked={chunked}");
+                let rec = r.record("w").unwrap();
+                assert_eq!(rec.raw_len, want.len());
+                assert_eq!(rec.scale, q.scale);
+            }
+        }
+        // f32 records reject the packed read path
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("m.tqm");
+        let mut w = TqmWriter::new(meta(CodecId::Raw));
+        w.add_f32("norm", &Tensor::new(vec![4], vec![1.0; 4]).unwrap());
+        w.write(&p).unwrap();
+        let r = TqmReader::open(&p).unwrap();
+        assert!(r.load_packed_into("norm", &mut Vec::new()).is_err());
+    }
+
+    #[test]
     fn expert_index_groups_records() {
         let dir = crate::util::TempDir::new().unwrap();
         let p = dir.path().join("m.tqm");
@@ -724,6 +804,11 @@ mod tests {
         assert_eq!(e.records.len(), 3);
         // decoded f32 size is known without decoding: 3 matrices of 16x8
         assert_eq!(e.decoded_f32_bytes, 3 * 16 * 8 * 4);
+        // packed-resident size too: 8-bit codes + per-col params, and at
+        // this tiny geometry the col LUT (8*256*4 B > 128 B of codes) is
+        // skipped by the profitability rule
+        assert_eq!(e.packed_resident_bytes, 3 * (16 * 8 + 4 * (8 + 8)));
+        assert!(e.packed_resident_bytes < e.decoded_f32_bytes);
         for &ri in &e.records {
             let rec = r.record_at(ri);
             let parsed = crate::format::parse_expert_record_name(&rec.name).unwrap();

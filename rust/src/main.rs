@@ -11,10 +11,15 @@
 //!                 [--variant compressed] [--top-k 8] [--temp 0.8]
 //!   tqm serve-demo --model e2e [--requests 16] [--batch 4]
 //!                 [--threads 0] [--prefetch-depth 1]
+//!                 [--expert-residency decoded|packed]
 //!   tqm tables    --table 1|2|3|4|bits|codec|network|residency|moe|sched|zipf|all
-//!                 [--tokens 512]   (moe/sched/zipf: trace length)
+//!                 [--tokens 512]   (residency/moe/sched/zipf: trace length)
 //!                 [--batch 4]      (sched: concurrent sequences)
 //!                 [--alpha 1.1]    (zipf: popularity skew)
+//!
+//! `--table residency` prints the host-side expert residency table
+//! (decoded vs packed expert cache at equal byte budget) followed by the
+//! artifact-dependent E8 layer-residency sweep.
 //!
 //! Run from anywhere inside the repo (artifacts are auto-discovered) after
 //! `make artifacts`.
@@ -23,7 +28,9 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 use tiny_qmoe::compress::CodecId;
-use tiny_qmoe::config::{default_artifacts_root, QuantizeOptions, Residency, ServeOptions};
+use tiny_qmoe::config::{
+    default_artifacts_root, ExpertResidency, QuantizeOptions, Residency, ServeOptions,
+};
 use tiny_qmoe::gen::SamplerKind;
 use tiny_qmoe::quant::Bits;
 use tiny_qmoe::tables;
@@ -254,6 +261,9 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
             max_batch: batch,
             max_wait_ms: 4,
             max_new_tokens: 16,
+            expert_residency: ExpertResidency::parse(
+                &args.get("expert-residency", "decoded"),
+            )?,
             ..Default::default()
         },
     })?;
@@ -352,6 +362,10 @@ fn cmd_tables(args: &Args) -> Result<()> {
         }
         "network" => tables::network_table(&model, codec, limit)?.print(),
         "residency" => {
+            // host-side expert residency table first (runs anywhere),
+            // then the artifact-dependent E8 layer-residency sweep
+            let rows = tables::expert_residency_table(args.get_usize("tokens", 512)?)?;
+            tables::render_expert_residency(&rows).print();
             let rows = tables::residency_table(&model, codec, limit.min(10))?;
             tables::render_residency(&rows).print();
         }
@@ -383,6 +397,8 @@ fn cmd_tables(args: &Args) -> Result<()> {
             tables::network_table(&model, codec, limit)?.print();
             let rows = tables::residency_table(&model, codec, limit.min(10))?;
             tables::render_residency(&rows).print();
+            let rows = tables::expert_residency_table(512)?;
+            tables::render_expert_residency(&rows).print();
             let rows = tables::moe_table(512)?;
             tables::render_moe(&rows).print();
             let rows = tables::sched_table(256, 4)?;

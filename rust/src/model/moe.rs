@@ -6,11 +6,14 @@
 //! Selection is config-driven: a [`crate::config::ModelConfig`] whose
 //! `moe` field is `Some(spec)` uses this sublayer in place of the dense
 //! FFN. The host-side forward here is the reference implementation the
-//! expert-cache integration tests and the MoE eval scenario run against;
-//! it is deliberately plain f32 math, identical regardless of whether the
-//! expert weights came from a cache hit, a streamed miss, or a fully
-//! resident decode — which is what makes the bit-exactness invariant
-//! testable.
+//! expert-cache integration tests and the MoE eval scenario run against.
+//! An expert's weights live behind [`ExpertBody`]: `Decoded` holds plain
+//! f32 arenas, `Packed` holds the container's bit-packed codes and runs
+//! the SwiGLU through the quantized-domain qGEMV kernels
+//! ([`crate::quant::packing::qgemv`]) — bit-exact against the decoded
+//! math, identical regardless of whether the weights came from a cache
+//! hit, a streamed miss, or a fully resident decode, which is what makes
+//! the bit-exactness invariant testable.
 //!
 //! Container contract (canonical names live in [`crate::format`]):
 //!   layers.{l}.router           f32 [d_model, n_experts]
@@ -21,10 +24,12 @@
 use anyhow::{Context, Result};
 
 use crate::compress::CodecId;
-use crate::config::{ModelConfig, MoeSpec, QuantizeOptions};
-use crate::format::{expert_record_name, router_record_name, TqmMeta, TqmReader, TqmWriter};
+use crate::config::{ExpertResidency, ModelConfig, MoeSpec, QuantizeOptions};
+use crate::format::{
+    expert_record_name, router_record_name, TensorRecord, TqmMeta, TqmReader, TqmWriter,
+};
 use crate::model::Checkpoint;
-use crate::quant::{uniform, Granularity};
+use crate::quant::{packing, uniform, Granularity};
 use crate::tensor::Tensor;
 
 /// Expert matrix names, container walk order (mirrors the dense FFN's
@@ -111,23 +116,193 @@ impl Router {
 // Expert weights + SwiGLU forward
 // ---------------------------------------------------------------------------
 
-/// One expert's decoded (dequantized f32) weights — the unit the expert
-/// cache holds, sizes, and evicts.
+/// One expert matrix kept in its container (bit-packed) form: the raw
+/// little-endian code stream plus quantization parameters, consumed
+/// directly by the qGEMV kernels — never expanded to f32. This is what a
+/// packed-resident cache slot holds; a 4-bit matrix costs ~1/8 of its
+/// decoded footprint, which is the whole point.
+#[derive(Clone, Debug)]
+pub struct PackedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Storage bit width of the packed codes (1..=8).
+    pub bits: u32,
+    pub granularity: Granularity,
+    /// Little-endian bit-packed codes, `rows * cols` of them.
+    pub codes: Vec<u8>,
+    pub scale: Vec<f32>,
+    pub zero: Vec<f32>,
+    /// Per-column dequant LUT (`cols * 2^bits` entries) for axis-1
+    /// granularity, built once here and reused every token — stored only
+    /// when no larger than the code stream
+    /// ([`packing::col_lut_bytes`]); empty otherwise.
+    pub col_lut: Vec<f32>,
+}
+
+impl PackedMatrix {
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        bits: u32,
+        granularity: Granularity,
+        codes: Vec<u8>,
+        scale: Vec<f32>,
+        zero: Vec<f32>,
+    ) -> Self {
+        let col_lut = match granularity {
+            Granularity::PerChannel { axis: 1 }
+                if packing::col_lut_bytes(bits, cols, codes.len()) > 0 =>
+            {
+                packing::build_col_lut(bits, &scale, &zero)
+            }
+            _ => Vec::new(),
+        };
+        Self { rows, cols, bits, granularity, codes, scale, zero, col_lut }
+    }
+
+    /// Build from a container record plus its decompressed (still
+    /// bit-packed) code stream — the single place record metadata
+    /// becomes packed-matrix form.
+    pub fn from_record(r: &TensorRecord, codes: Vec<u8>) -> Self {
+        Self::new(
+            r.shape[0],
+            r.shape[1],
+            r.bits.storage_bits(),
+            r.granularity,
+            codes,
+            r.scale.clone(),
+            r.zero.clone(),
+        )
+    }
+
+    /// Resident footprint: packed codes + quant params + stored LUT.
+    /// Matches [`crate::format::ExpertEntry::packed_resident_bytes`]'s
+    /// per-record formula, which the cache accounting relies on.
+    pub fn resident_bytes(&self) -> usize {
+        self.codes.len() + 4 * (self.scale.len() + self.zero.len() + self.col_lut.len())
+    }
+
+    /// `out = x · W` straight from the packed codes, bit-exact in value
+    /// and accumulation order against dequantizing to f32 and running
+    /// the decoded matmul.
+    pub fn gemv_into(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.rows, "packed gemv input dim mismatch");
+        match self.granularity {
+            Granularity::PerTensor => packing::qgemv(
+                &self.codes,
+                self.bits,
+                self.cols,
+                self.scale[0],
+                self.zero[0],
+                x,
+                out,
+            ),
+            Granularity::PerChannel { axis: 0 } => packing::qgemv_rows(
+                &self.codes,
+                self.bits,
+                self.cols,
+                &self.scale,
+                &self.zero,
+                x,
+                out,
+            ),
+            Granularity::PerChannel { axis: 1 } if self.col_lut.is_empty() => packing::qgemv_cols(
+                &self.codes,
+                self.bits,
+                self.cols,
+                &self.scale,
+                &self.zero,
+                x,
+                out,
+            ),
+            Granularity::PerChannel { axis: 1 } => packing::qgemv_cols_lut(
+                &self.codes,
+                self.bits,
+                self.cols,
+                &self.col_lut,
+                x,
+                out,
+            ),
+            Granularity::PerChannel { axis } => panic!("bad channel axis {axis}"),
+        }
+    }
+}
+
+/// The three packed matrices of one expert (boxed behind
+/// [`ExpertBody::Packed`] so the enum's variants stay similar in size).
+#[derive(Clone, Debug)]
+pub struct PackedExpert {
+    /// `[d_model, d_expert]`.
+    pub w1: PackedMatrix,
+    /// `[d_model, d_expert]`.
+    pub w3: PackedMatrix,
+    /// `[d_expert, d_model]`.
+    pub w2: PackedMatrix,
+}
+
+/// How an expert's three matrices are held in memory — the residency
+/// seam behind [`ExpertWeights::ffn`]. Both bodies run the identical
+/// SwiGLU math (the qGEMV kernels are bit-exact against the decoded
+/// matmul), so callers never observe which one they got.
+#[derive(Clone, Debug)]
+pub enum ExpertBody {
+    /// Dequantized f32 arenas — the classic form.
+    Decoded {
+        /// `[d_model, d_expert]` row-major.
+        w1: Vec<f32>,
+        /// `[d_model, d_expert]` row-major.
+        w3: Vec<f32>,
+        /// `[d_expert, d_model]` row-major.
+        w2: Vec<f32>,
+    },
+    /// Container-form bit-packed codes, computed against directly.
+    Packed(Box<PackedExpert>),
+}
+
+/// One expert's weights — the unit the expert cache holds, sizes, and
+/// evicts — in either decoded (f32) or packed (quantized-domain) form.
 #[derive(Clone, Debug)]
 pub struct ExpertWeights {
     pub layer: usize,
     pub expert: usize,
     pub d_model: usize,
     pub d_expert: usize,
-    /// `[d_model, d_expert]` row-major.
-    pub w1: Vec<f32>,
-    /// `[d_model, d_expert]` row-major.
-    pub w3: Vec<f32>,
-    /// `[d_expert, d_model]` row-major.
-    pub w2: Vec<f32>,
+    pub body: ExpertBody,
 }
 
 impl ExpertWeights {
+    /// Assemble a decoded expert from f32 arenas.
+    pub fn decoded(
+        layer: usize,
+        expert: usize,
+        d_model: usize,
+        d_expert: usize,
+        w1: Vec<f32>,
+        w3: Vec<f32>,
+        w2: Vec<f32>,
+    ) -> Self {
+        Self { layer, expert, d_model, d_expert, body: ExpertBody::Decoded { w1, w3, w2 } }
+    }
+
+    /// Assemble a packed expert from container-form matrices.
+    pub fn packed(
+        layer: usize,
+        expert: usize,
+        d_model: usize,
+        d_expert: usize,
+        w1: PackedMatrix,
+        w3: PackedMatrix,
+        w2: PackedMatrix,
+    ) -> Self {
+        Self {
+            layer,
+            expert,
+            d_model,
+            d_expert,
+            body: ExpertBody::Packed(Box::new(PackedExpert { w1, w3, w2 })),
+        }
+    }
+
     /// Decode one expert from the container into fresh buffers via the
     /// fused decompress→dequantize kernel (the same kernel the expert
     /// cache uses, so cached and uncached decodes are bit-identical).
@@ -142,59 +317,195 @@ impl ExpertWeights {
         let [w1, w3, w2] = bufs;
         let r1 = reader.record(&expert_record_name(layer, expert, "w1"))?;
         let (d_model, d_expert) = (r1.shape[0], r1.shape[1]);
-        let out = Self { layer, expert, d_model, d_expert, w1, w3, w2 };
+        let out = Self::decoded(layer, expert, d_model, d_expert, w1, w3, w2);
         out.validate()?;
         Ok(out)
+    }
+
+    /// Load one expert in container (bit-packed) form: the payloads are
+    /// decompressed but the codes stay packed; quantization parameters
+    /// ride along and the per-column dequant LUTs are built here, once.
+    /// No f32 weight arena is ever allocated.
+    pub fn load_packed(reader: &TqmReader, layer: usize, expert: usize) -> Result<Self> {
+        let mut bufs: [Vec<u8>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for (mat, out) in EXPERT_MATRIX_NAMES.iter().zip(bufs.iter_mut()) {
+            reader
+                .load_packed_into(&expert_record_name(layer, expert, mat), out)
+                .with_context(|| format!("packed-decoding expert ({layer}, {expert}) {mat}"))?;
+        }
+        Self::assemble_packed(reader, layer, expert, bufs)
+    }
+
+    /// Assemble a packed expert from the three matrices' decompressed
+    /// (still bit-packed) code streams, container walk order (w1, w3,
+    /// w2). Shared by [`ExpertWeights::load_packed`] and the expert
+    /// cache's pooled-arena miss path, so record metadata turns into
+    /// [`PackedMatrix`] form in exactly one place.
+    pub fn assemble_packed(
+        reader: &TqmReader,
+        layer: usize,
+        expert: usize,
+        codes: [Vec<u8>; 3],
+    ) -> Result<Self> {
+        let mut mats = Vec::with_capacity(EXPERT_MATRIX_NAMES.len());
+        for (mat, c) in EXPERT_MATRIX_NAMES.iter().zip(codes) {
+            let r = reader.record(&expert_record_name(layer, expert, mat))?;
+            mats.push(PackedMatrix::from_record(r, c));
+        }
+        let m2 = mats.pop().expect("three expert matrices");
+        let m3 = mats.pop().expect("three expert matrices");
+        let m1 = mats.pop().expect("three expert matrices");
+        let (d_model, d_expert) = (m1.rows, m1.cols);
+        let out = Self::packed(layer, expert, d_model, d_expert, m1, m3, m2);
+        out.validate()?;
+        Ok(out)
+    }
+
+    /// Load one expert in the given residency mode — the single seam the
+    /// cache, the scheduler's demand path, and the prefetch workers all
+    /// decode through.
+    pub fn load_with(
+        reader: &TqmReader,
+        layer: usize,
+        expert: usize,
+        residency: ExpertResidency,
+    ) -> Result<Self> {
+        match residency {
+            ExpertResidency::Decoded => Self::load(reader, layer, expert),
+            ExpertResidency::Packed => Self::load_packed(reader, layer, expert),
+        }
+    }
+
+    pub fn is_packed(&self) -> bool {
+        matches!(self.body, ExpertBody::Packed(_))
+    }
+
+    /// Decoded `w1` arena — panics for packed experts (test/debug view).
+    pub fn w1(&self) -> &[f32] {
+        match &self.body {
+            ExpertBody::Decoded { w1, .. } => w1,
+            ExpertBody::Packed(_) => panic!("packed expert has no f32 w1"),
+        }
+    }
+
+    /// Decoded `w3` arena — panics for packed experts (test/debug view).
+    pub fn w3(&self) -> &[f32] {
+        match &self.body {
+            ExpertBody::Decoded { w3, .. } => w3,
+            ExpertBody::Packed(_) => panic!("packed expert has no f32 w3"),
+        }
+    }
+
+    /// Decoded `w2` arena — panics for packed experts (test/debug view).
+    pub fn w2(&self) -> &[f32] {
+        match &self.body {
+            ExpertBody::Decoded { w2, .. } => w2,
+            ExpertBody::Packed(_) => panic!("packed expert has no f32 w2"),
+        }
     }
 
     /// Shape sanity: w1/w3 `[d, de]`, w2 `[de, d]`.
     pub fn validate(&self) -> Result<()> {
         let (d, de) = (self.d_model, self.d_expert);
-        anyhow::ensure!(
-            self.w1.len() == d * de && self.w3.len() == d * de && self.w2.len() == de * d,
-            "expert ({}, {}) weight sizes inconsistent with [{d}, {de}]",
-            self.layer,
-            self.expert
-        );
+        match &self.body {
+            ExpertBody::Decoded { w1, w3, w2 } => anyhow::ensure!(
+                w1.len() == d * de && w3.len() == d * de && w2.len() == de * d,
+                "expert ({}, {}) weight sizes inconsistent with [{d}, {de}]",
+                self.layer,
+                self.expert
+            ),
+            ExpertBody::Packed(p) => {
+                anyhow::ensure!(
+                    p.w1.rows == d
+                        && p.w1.cols == de
+                        && p.w3.rows == d
+                        && p.w3.cols == de
+                        && p.w2.rows == de
+                        && p.w2.cols == d,
+                    "expert ({}, {}) packed shapes inconsistent with [{d}, {de}]",
+                    self.layer,
+                    self.expert
+                );
+                for m in [&p.w1, &p.w3, &p.w2] {
+                    let want = (m.rows * m.cols * m.bits as usize + 7) / 8;
+                    anyhow::ensure!(
+                        m.codes.len() == want,
+                        "expert ({}, {}) packed stream is {} bytes, expected {want}",
+                        self.layer,
+                        self.expert,
+                        m.codes.len()
+                    );
+                }
+            }
+        }
         Ok(())
     }
 
-    /// Decoded size in bytes (what this expert costs the cache budget).
+    /// Resident size in bytes (what this expert costs the cache budget):
+    /// f32 arenas when decoded, code streams + params + LUTs when packed.
     pub fn bytes(&self) -> usize {
-        (self.w1.len() + self.w3.len() + self.w2.len()) * 4
+        match &self.body {
+            ExpertBody::Decoded { w1, w3, w2 } => (w1.len() + w3.len() + w2.len()) * 4,
+            ExpertBody::Packed(p) => {
+                p.w1.resident_bytes() + p.w3.resident_bytes() + p.w2.resident_bytes()
+            }
+        }
     }
 
     /// SwiGLU expert FFN for one token vector:
-    /// `(silu(x W1) ⊙ (x W3)) W2`.
+    /// `(silu(x W1) ⊙ (x W3)) W2`. Decoded and packed bodies run the
+    /// identical float operations in the identical order (the qGEMV
+    /// kernels replicate the decoded matmul exactly), so the two forms
+    /// are bit-exact — `integration_moe` asserts it end to end.
     pub fn ffn(&self, x: &[f32]) -> Vec<f32> {
         let (d, de) = (self.d_model, self.d_expert);
         assert_eq!(x.len(), d, "expert input dim mismatch");
-        let mut h1 = vec![0.0f32; de];
-        let mut h3 = vec![0.0f32; de];
-        for (i, &xi) in x.iter().enumerate() {
-            if xi == 0.0 {
-                continue;
+        match &self.body {
+            ExpertBody::Decoded { w1, w3, w2 } => {
+                let mut h1 = vec![0.0f32; de];
+                let mut h3 = vec![0.0f32; de];
+                for (i, &xi) in x.iter().enumerate() {
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let r1 = &w1[i * de..(i + 1) * de];
+                    let r3 = &w3[i * de..(i + 1) * de];
+                    for j in 0..de {
+                        h1[j] += xi * r1[j];
+                        h3[j] += xi * r3[j];
+                    }
+                }
+                let mut out = vec![0.0f32; d];
+                for j in 0..de {
+                    let a = h1[j];
+                    let g = a / (1.0 + (-a).exp()) * h3[j]; // silu(a) * h3
+                    if g == 0.0 {
+                        continue;
+                    }
+                    let r2 = &w2[j * d..(j + 1) * d];
+                    for (o, &w) in out.iter_mut().zip(r2) {
+                        *o += g * w;
+                    }
+                }
+                out
             }
-            let r1 = &self.w1[i * de..(i + 1) * de];
-            let r3 = &self.w3[i * de..(i + 1) * de];
-            for j in 0..de {
-                h1[j] += xi * r1[j];
-                h3[j] += xi * r3[j];
+            ExpertBody::Packed(p) => {
+                // same math, quantized domain: the gate vector is built
+                // with the identical expression, and w2's qGEMV skips
+                // g[j] == 0.0 rows exactly like the decoded `continue`
+                let mut h1 = vec![0.0f32; de];
+                let mut h3 = vec![0.0f32; de];
+                p.w1.gemv_into(x, &mut h1);
+                p.w3.gemv_into(x, &mut h3);
+                let mut g = vec![0.0f32; de];
+                for ((gj, &a), &h) in g.iter_mut().zip(&h1).zip(&h3) {
+                    *gj = a / (1.0 + (-a).exp()) * h;
+                }
+                let mut out = vec![0.0f32; d];
+                p.w2.gemv_into(&g, &mut out);
+                out
             }
         }
-        let mut out = vec![0.0f32; d];
-        for j in 0..de {
-            let a = h1[j];
-            let g = a / (1.0 + (-a).exp()) * h3[j]; // silu(a) * h3
-            if g == 0.0 {
-                continue;
-            }
-            let r2 = &self.w2[j * d..(j + 1) * d];
-            for (o, &w) in out.iter_mut().zip(r2) {
-                *o += g * w;
-            }
-        }
-        out
     }
 }
 
@@ -459,9 +770,66 @@ mod tests {
     fn expert_load_matches_two_step_dequant() {
         let (_cfg, _dir, reader) = demo_container();
         let w = ExpertWeights::load(&reader, 1, 3).unwrap();
-        for (mat, data) in EXPERT_MATRIX_NAMES.iter().zip([&w.w1, &w.w3, &w.w2]) {
+        for (mat, data) in EXPERT_MATRIX_NAMES.iter().zip([w.w1(), w.w3(), w.w2()]) {
             let q = reader.load_quantized(&expert_record_name(1, 3, mat)).unwrap();
-            assert_eq!(data, &q.dequantize().data, "{mat}");
+            assert_eq!(data, q.dequantize().data, "{mat}");
+        }
+    }
+
+    #[test]
+    fn packed_and_decoded_ffn_bit_exact_all_widths() {
+        // THE packed-execution invariant: for every bit width and both
+        // granularities, the quantized-domain SwiGLU equals the decoded
+        // one bit for bit — on random vectors and on vectors with exact
+        // zeros (the skip branch)
+        use crate::quant::Bits;
+        for bits in [Bits::Ternary, Bits::B2, Bits::B4, Bits::B6, Bits::B8] {
+            for per_channel in [false, true] {
+                let cfg = moe_demo_config();
+                let ckpt = synth_moe_checkpoint(&cfg, 57).unwrap();
+                let opts = QuantizeOptions { bits, per_channel, ..Default::default() };
+                let w =
+                    quantize_moe_checkpoint(&cfg, &ckpt, &opts, CodecId::FreqSeqPacked, "unit")
+                        .unwrap()
+                        .with_chunk_len(300);
+                let dir = TempDir::new().unwrap();
+                let p = dir.join("moe.tqm");
+                w.write(&p).unwrap();
+                let reader = TqmReader::open(&p).unwrap();
+                let dec = ExpertWeights::load(&reader, 1, 2).unwrap();
+                let pkd = ExpertWeights::load_packed(&reader, 1, 2).unwrap();
+                assert!(pkd.is_packed() && !dec.is_packed());
+                assert!(
+                    pkd.bytes() < dec.bytes(),
+                    "{bits:?}: packed {} B not below decoded {} B",
+                    pkd.bytes(),
+                    dec.bytes()
+                );
+                let mut rng = crate::util::Rng::seed_from_u64(13);
+                for t in 0..8 {
+                    let mut x = rng.normal_vec(cfg.d_model, 1.0);
+                    if t % 2 == 1 {
+                        for v in x.iter_mut().step_by(3) {
+                            *v = 0.0;
+                        }
+                    }
+                    assert_eq!(
+                        dec.ffn(&x),
+                        pkd.ffn(&x),
+                        "{bits:?} per_channel={per_channel}: packed ffn diverged"
+                    );
+                }
+                // load_with is the same two paths behind the knob
+                let via_knob =
+                    ExpertWeights::load_with(&reader, 1, 2, ExpertResidency::Packed).unwrap();
+                assert_eq!(via_knob.bytes(), pkd.bytes());
+                // and the index predicted the packed footprint exactly
+                assert_eq!(
+                    reader.expert_entry(1, 2).unwrap().packed_resident_bytes,
+                    pkd.bytes(),
+                    "{bits:?} per_channel={per_channel}: index size disagrees with decode"
+                );
+            }
         }
     }
 
@@ -538,7 +906,7 @@ mod tests {
         let mse: f64 = orig
             .data
             .iter()
-            .zip(&e.w1)
+            .zip(e.w1())
             .map(|(a, b)| ((a - b) as f64).powi(2))
             .sum::<f64>()
             / orig.data.len() as f64;

@@ -33,6 +33,36 @@
 //! of a known-hot tenant) from eviction; pinned bytes still count toward
 //! the budget.
 //!
+//! **Residency modes.** What a cache slot *holds* is the
+//! [`crate::config::ExpertResidency`] knob:
+//!
+//! * `Decoded` — dequantized f32 arenas (the classic mode above);
+//! * `Packed` — the container's bit-packed code streams plus quant
+//!   params, served through the quantized-domain qGEMV kernels
+//!   ([`crate::quant::packing::qgemv`]). A resident expert then costs
+//!   its *packed* size (~`bits/32` of decoded), so the same byte budget
+//!   keeps ~`32/bits`× more experts warm — and a miss skips the
+//!   unpack→dequantize pass entirely (the payload decompress is the
+//!   whole decode). Outputs are bit-identical in both modes; only the
+//!   residency economics change. Sizing still happens *ahead* of every
+//!   decode: the expert index precomputes
+//!   [`crate::format::ExpertEntry::packed_resident_bytes`] next to
+//!   `decoded_f32_bytes`.
+//!
+//! **Demand-side reservations.** A demand miss follows the same
+//! reserve → decode-outside-lock → commit shape the prefetch workers
+//! use: [`ExpertCache::begin_get`] either returns the cached expert or
+//! evicts ahead, charges the expert's bytes to an in-flight demand
+//! reservation, and hands back a [`DemandReservation`]; the caller
+//! decodes **without holding the cache lock** and lands the result with
+//! [`ExpertCache::commit_demand`] (or releases it with
+//! [`ExpertCache::cancel_demand`]). Residency accounting therefore
+//! covers demand-resident + demand-in-flight + speculative bytes at
+//! every instant, and a slow miss no longer serializes prefetch commits
+//! against the cache lock. [`ExpertCache::get`] keeps the one-call
+//! synchronous form (reserve, decode through the pooled-arena fast
+//! path, commit) for single-threaded callers.
+//!
 //! **Speculative (prefetch) entries.** The expert scheduler's prefetch
 //! workers land experts *ahead* of a demand through a reserve→commit
 //! protocol ([`ExpertCache::begin_speculative`] before the decode,
@@ -52,14 +82,21 @@
 
 use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::config::ServeOptions;
+use crate::config::{ExpertResidency, ServeOptions};
 use crate::format::{expert_record_name, TqmReader};
-use crate::model::moe::{ExpertWeights, EXPERT_MATRIX_NAMES};
+use crate::model::moe::{ExpertBody, ExpertWeights, PackedExpert, EXPERT_MATRIX_NAMES};
 use crate::pipeline::PipelineMetrics;
+
+/// Upper bound on recycled arenas held per pool. The synchronous miss
+/// path drains the pools, but the scheduler's out-of-lock demand decodes
+/// never do — without a cap, a budget-constrained long run would push
+/// one evicted expert's buffers per eviction forever. Beyond the cap,
+/// freed buffers are simply dropped.
+const ARENA_POOL_CAP: usize = 12;
 
 /// A cached decoded expert plus its last-use stamp (monotonic clock —
 /// exact LRU with O(1) hits; eviction scans for the minimum stamp, so
@@ -78,19 +115,64 @@ pub struct ExpertCache {
     metrics: Arc<PipelineMetrics>,
     budget_bytes: usize,
     n_threads: usize,
-    /// (layer, expert) -> decoded weights + LRU stamp.
+    /// What a resident slot holds: decoded f32 arenas or packed codes.
+    residency: ExpertResidency,
+    /// (layer, expert) -> resident weights + LRU stamp.
     map: HashMap<(usize, usize), Slot>,
     /// Monotonic use counter backing the LRU stamps.
     clock: u64,
     pinned: HashSet<(usize, usize)>,
-    /// Demand-resident decoded bytes (excludes the speculative slice).
+    /// Demand-resident bytes (excludes the speculative slice).
     resident_bytes: usize,
-    /// Speculative (prefetched, not yet demanded) decoded bytes.
+    /// Bytes reserved by in-flight demand decodes
+    /// ([`ExpertCache::begin_get`] charged them, no commit/cancel yet) —
+    /// part of the budget bound, so concurrent misses cannot overshoot.
+    demand_inflight_bytes: usize,
+    /// Speculative (prefetched, not yet demanded) bytes.
     speculative_bytes: usize,
-    /// Recycled f32 arenas from evicted experts.
+    /// Recycled f32 weight arenas from evicted *decoded* experts,
+    /// capped at [`ARENA_POOL_CAP`]. (Packed experts' col LUTs are
+    /// dropped on eviction, not pooled — they are rebuilt fresh per
+    /// admission.)
     pool: Vec<Vec<f32>>,
+    /// Recycled packed-code arenas from evicted packed experts, capped
+    /// at [`ARENA_POOL_CAP`].
+    pool_u8: Vec<Vec<u8>>,
     /// Grow-only packed-stream scratch, one per decode worker.
     scratch: Vec<Vec<u8>>,
+}
+
+/// Outcome of [`ExpertCache::begin_get`]: either the resident expert, or
+/// a charged reservation the caller must decode against and then
+/// [`ExpertCache::commit_demand`] / [`ExpertCache::cancel_demand`].
+pub enum DemandFetch {
+    Hit(Arc<ExpertWeights>),
+    Miss(DemandReservation),
+}
+
+/// An in-flight demand decode's byte reservation (see the module docs):
+/// created by [`ExpertCache::begin_get`] on a miss, consumed by exactly
+/// one [`ExpertCache::commit_demand`] or [`ExpertCache::cancel_demand`].
+/// It deliberately holds no back-reference to the cache, so merely
+/// dropping it leaks the reserved bytes — a caller whose decode can
+/// unwind must cancel on the panic path (as
+/// [`crate::pipeline::ExpertScheduler::get`] does) before re-raising.
+#[derive(Debug)]
+pub struct DemandReservation {
+    key: (usize, usize),
+    bytes: usize,
+}
+
+impl DemandReservation {
+    /// Reserved byte count (the expert's resident size in this cache's
+    /// residency mode).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn key(&self) -> (usize, usize) {
+        self.key
+    }
 }
 
 impl ExpertCache {
@@ -107,18 +189,30 @@ impl ExpertCache {
             metrics,
             budget_bytes,
             n_threads: n_threads.max(1),
+            residency: ExpertResidency::Decoded,
             map: HashMap::new(),
             clock: 0,
             pinned: HashSet::new(),
             resident_bytes: 0,
+            demand_inflight_bytes: 0,
             speculative_bytes: 0,
             pool: Vec::new(),
+            pool_u8: Vec::new(),
             scratch: vec![Vec::new(); EXPERT_MATRIX_NAMES.len()],
         }
     }
 
+    /// Select what a resident slot holds (builder form; the cache must
+    /// be empty, so call it at construction time).
+    pub fn with_residency(mut self, residency: ExpertResidency) -> Self {
+        assert!(self.map.is_empty(), "cannot switch residency of a populated cache");
+        self.residency = residency;
+        self
+    }
+
     /// Build from the serving options: budget from
-    /// [`ServeOptions::expert_budget_bytes`], decode fan-out from the
+    /// [`ServeOptions::expert_budget_bytes`], residency mode from
+    /// [`ServeOptions::expert_residency`], decode fan-out from the
     /// resolved thread count — the constructor the serving paths
     /// ([`crate::pipeline::Engine::expert_cache`], the MoE eval
     /// scenario) go through, so the knobs are honored everywhere.
@@ -128,10 +222,31 @@ impl ExpertCache {
         opts: &ServeOptions,
     ) -> Self {
         Self::new(reader, metrics, opts.expert_budget_bytes, opts.resolved_threads())
+            .with_residency(opts.expert_residency)
     }
 
     pub fn budget_bytes(&self) -> usize {
         self.budget_bytes
+    }
+
+    pub fn residency(&self) -> ExpertResidency {
+        self.residency
+    }
+
+    /// What one resident slot for `(layer, expert)` costs this cache's
+    /// budget — decoded f32 bytes or packed bytes, both known from the
+    /// expert index before any decode happens.
+    pub fn need_bytes(&self, layer: usize, expert: usize) -> Result<usize> {
+        let e = self.reader.expert_entry(layer, expert)?;
+        Ok(match self.residency {
+            ExpertResidency::Decoded => e.decoded_f32_bytes,
+            ExpertResidency::Packed => e.packed_resident_bytes,
+        })
+    }
+
+    /// Bytes currently reserved by in-flight demand decodes.
+    pub fn demand_inflight_bytes(&self) -> usize {
+        self.demand_inflight_bytes
     }
 
     /// Demand-resident decoded bytes (the part charged to
@@ -170,68 +285,148 @@ impl ExpertCache {
         self.map.contains_key(&(layer, expert))
     }
 
-    /// Fetch an expert: cached -> LRU bump + hit (promoting speculative
-    /// entries into the demand budget); missing -> evict ahead, decode,
-    /// and cache (unless it alone exceeds the budget, in which case it is
-    /// returned uncached — pure streaming).
+    /// Fetch an expert synchronously: cached -> LRU bump + hit (promoting
+    /// speculative entries into the demand budget); missing -> reserve,
+    /// decode through the pooled-arena fast path, commit (unless the
+    /// expert alone exceeds the budget, in which case it is returned
+    /// uncached — pure streaming). The reserve/commit split is also
+    /// available directly ([`ExpertCache::begin_get`]) for callers that
+    /// want the decode to happen outside the cache lock.
     pub fn get(&mut self, layer: usize, expert: usize) -> Result<Arc<ExpertWeights>> {
+        match self.begin_get(layer, expert)? {
+            DemandFetch::Hit(w) => Ok(w),
+            DemandFetch::Miss(res) => {
+                let t0 = Instant::now();
+                match self.decode_expert(layer, expert) {
+                    Ok(w) => Ok(self.commit_demand(res, Arc::new(w), t0.elapsed())),
+                    Err(e) => {
+                        self.cancel_demand(res);
+                        Err(e)
+                    }
+                }
+            }
+        }
+    }
+
+    /// First half of a demand fetch: a hit returns the resident expert
+    /// (bumping LRU, promoting a speculative entry); a miss evicts ahead
+    /// using the index's known size, charges the bytes to an in-flight
+    /// demand reservation, and returns it — the caller decodes *without
+    /// the cache lock* and must follow up with exactly one
+    /// [`ExpertCache::commit_demand`] or [`ExpertCache::cancel_demand`].
+    /// Because the reservation is charged before any decode allocation
+    /// exists, demand-resident + demand-in-flight + speculative bytes
+    /// stay bounded by `budget + prefetch_budget` at every instant
+    /// (oversized and pinned-crowded experts overshoot honestly, exactly
+    /// as before, and the peak metric reports it).
+    pub fn begin_get(&mut self, layer: usize, expert: usize) -> Result<DemandFetch> {
         let key = (layer, expert);
         self.clock += 1;
         if let Some(slot) = self.map.get_mut(&key) {
             slot.last_used = self.clock;
             let w = slot.w.clone();
             let promote = slot.speculative;
-            self.metrics.expert_hit();
+            self.metrics.expert_hit(self.residency == ExpertResidency::Packed);
             if promote {
                 // a prefetch landed before the demand — no decode stall
                 self.metrics.prefetch_hit();
                 self.promote(key);
             }
-            return Ok(w);
+            return Ok(DemandFetch::Hit(w));
         }
         // size known from the expert index — make room before decoding so
-        // cached + in-flight bytes never exceed the budget (when a single
-        // expert fits it at all)
-        let need = self.reader.expert_entry(layer, expert)?.decoded_f32_bytes;
+        // resident + in-flight bytes never exceed the budget (when a
+        // single expert fits it at all)
+        let need = self.need_bytes(layer, expert)?;
         self.evict_until_fits(need, None);
-        let t0 = Instant::now();
-        let w = Arc::new(self.decode_expert(layer, expert)?);
-        self.metrics.record_expert_miss(t0.elapsed(), need);
-        self.metrics
-            .observe_expert_transient(self.resident_bytes + self.speculative_bytes + need);
+        self.demand_inflight_bytes += need;
+        self.metrics.observe_expert_transient(
+            self.resident_bytes + self.demand_inflight_bytes + self.speculative_bytes,
+        );
+        Ok(DemandFetch::Miss(DemandReservation { key, bytes: need }))
+    }
+
+    /// Land a demand decode on its reservation, returning the canonical
+    /// `Arc` for the expert: normally the one passed in (admitted into
+    /// the budget when it fits even alongside other in-flight
+    /// reservations); if another path landed the same expert while this
+    /// decode ran outside the lock, the already-resident one (a racing
+    /// prefetch gets promoted). `decode_time` is charged to the demand
+    /// stall metric.
+    pub fn commit_demand(
+        &mut self,
+        res: DemandReservation,
+        w: Arc<ExpertWeights>,
+        decode_time: Duration,
+    ) -> Arc<ExpertWeights> {
+        let DemandReservation { key, bytes: need } = res;
+        self.demand_inflight_bytes -= need;
         debug_assert_eq!(w.bytes(), need, "expert index size disagrees with decode");
-        if self.resident_bytes + need <= self.budget_bytes {
+        self.metrics.record_expert_miss(
+            decode_time,
+            need,
+            self.residency == ExpertResidency::Packed,
+        );
+        self.clock += 1;
+        if self.map.contains_key(&key) {
+            let (existing, promote) = {
+                let slot = self.map.get_mut(&key).expect("checked above");
+                slot.last_used = self.clock;
+                (slot.w.clone(), slot.speculative)
+            };
+            if promote {
+                self.promote(key);
+            }
+            self.publish_residency();
+            return existing;
+        }
+        if self.resident_bytes + self.demand_inflight_bytes + need <= self.budget_bytes {
             self.map
                 .insert(key, Slot { w: w.clone(), last_used: self.clock, speculative: false });
             self.resident_bytes += need;
-            self.metrics.set_expert_resident(self.resident_bytes);
         }
-        Ok(w)
+        self.publish_residency();
+        w
+    }
+
+    /// Release a demand reservation without landing anything (the decode
+    /// failed).
+    pub fn cancel_demand(&mut self, res: DemandReservation) {
+        self.demand_inflight_bytes -= res.bytes;
     }
 
     /// Move a just-demanded speculative entry from the prefetch slice
     /// into the demand budget, evicting demand LRU entries ahead exactly
     /// like a miss admission. If the demand budget cannot hold it even
-    /// after eviction (pinned bytes crowding it), the entry is dropped —
-    /// the caller already holds the `Arc`, so this degrades to the same
-    /// pure-streaming semantics an oversized miss has.
+    /// after eviction (pinned bytes or in-flight reservations crowding
+    /// it), the entry is dropped — the caller already holds the `Arc`,
+    /// so this degrades to the same pure-streaming semantics an
+    /// oversized miss has.
     fn promote(&mut self, key: (usize, usize)) {
         let need = self.map[&key].w.bytes();
         self.speculative_bytes -= need;
         self.evict_until_fits(need, Some(key));
-        if self.resident_bytes + need <= self.budget_bytes {
+        if self.resident_bytes + self.demand_inflight_bytes + need <= self.budget_bytes {
             self.map.get_mut(&key).expect("promoted entry vanished").speculative = false;
             self.resident_bytes += need;
         } else {
             self.map.remove(&key);
         }
-        self.metrics.set_expert_resident(self.resident_bytes);
+        self.publish_residency();
         self.metrics.set_expert_speculative(self.speculative_bytes);
     }
 
+    /// Push the residency gauges (bytes + entry count) to the shared
+    /// metrics — paired with every mutation of `map`/`resident_bytes`.
+    fn publish_residency(&self) {
+        self.metrics.set_expert_resident(self.resident_bytes);
+        self.metrics.set_expert_resident_count(self.map.len());
+    }
+
     /// Size-aware admission gate for a speculative decode, called
-    /// **before** the decode happens: reserve `decoded_f32_bytes` of the
-    /// prefetch slice (`prefetch_budget_bytes`) for `(layer, expert)`.
+    /// **before** the decode happens: reserve the expert's resident size
+    /// (mode-aware, from the expert index) out of the prefetch slice
+    /// (`prefetch_budget_bytes`) for `(layer, expert)`.
     /// LRU *speculative* entries may be dropped to make room (an unused
     /// prefetch displacing an older unused prefetch); demand-resident
     /// experts are never evicted for a prefetch, and an expert that
@@ -255,7 +450,7 @@ impl ExpertCache {
         if self.map.contains_key(&key) {
             return None; // already resident (demand or an earlier prefetch)
         }
-        let need = self.reader.expert_entry(layer, expert).ok()?.decoded_f32_bytes;
+        let need = self.need_bytes(layer, expert).ok()?;
         if need > prefetch_budget_bytes {
             return None; // could never fit: reject before evicting anything
         }
@@ -276,8 +471,9 @@ impl ExpertCache {
         }
         self.speculative_bytes += need;
         self.metrics.set_expert_speculative(self.speculative_bytes);
-        self.metrics
-            .observe_expert_transient(self.resident_bytes + self.speculative_bytes);
+        self.metrics.observe_expert_transient(
+            self.resident_bytes + self.demand_inflight_bytes + self.speculative_bytes,
+        );
         Some(need)
     }
 
@@ -298,6 +494,7 @@ impl ExpertCache {
         self.clock += 1;
         self.map.insert(key, Slot { w, last_used: self.clock, speculative: true });
         self.metrics.record_prefetch_insert();
+        self.publish_residency();
         true
     }
 
@@ -336,10 +533,27 @@ impl ExpertCache {
             } else {
                 self.resident_bytes -= slot.w.bytes();
             }
-            if let Ok(mut owned) = Arc::try_unwrap(slot.w) {
-                self.pool.push(std::mem::take(&mut owned.w1));
-                self.pool.push(std::mem::take(&mut owned.w3));
-                self.pool.push(std::mem::take(&mut owned.w2));
+            if let Ok(owned) = Arc::try_unwrap(slot.w) {
+                match owned.body {
+                    ExpertBody::Decoded { w1, w3, w2 } => {
+                        for v in [w1, w3, w2] {
+                            if self.pool.len() < ARENA_POOL_CAP {
+                                self.pool.push(v);
+                            }
+                        }
+                    }
+                    ExpertBody::Packed(p) => {
+                        // only the code arenas recycle; the col LUT is
+                        // rebuilt fresh per admission, so pooling it
+                        // would hoard f32 buffers nothing ever reuses
+                        let PackedExpert { w1, w3, w2 } = *p;
+                        for m in [w1, w3, w2] {
+                            if self.pool_u8.len() < ARENA_POOL_CAP {
+                                self.pool_u8.push(m.codes);
+                            }
+                        }
+                    }
+                }
             }
         }
     }
@@ -367,10 +581,11 @@ impl ExpertCache {
     /// Evict least-recently-used *demand* entries (skipping pinned and
     /// speculative ones — speculative bytes are not charged to this
     /// budget, so evicting them could never help) until `need` more bytes
-    /// fit in the budget, or nothing evictable remains. `protect` shields
-    /// a key mid-promotion from being chosen as its own victim.
+    /// fit in the budget alongside the in-flight demand reservations, or
+    /// nothing evictable remains. `protect` shields a key mid-promotion
+    /// from being chosen as its own victim.
     fn evict_until_fits(&mut self, need: usize, protect: Option<(usize, usize)>) {
-        while self.resident_bytes + need > self.budget_bytes {
+        while self.resident_bytes + self.demand_inflight_bytes + need > self.budget_bytes {
             let victim = self
                 .map
                 .iter()
@@ -383,14 +598,22 @@ impl ExpertCache {
             self.drop_slot(key);
             self.metrics.record_expert_eviction();
         }
-        self.metrics.set_expert_resident(self.resident_bytes);
+        self.publish_residency();
     }
 
-    /// Decode one expert into pooled arenas, fanning the three matrix
-    /// decodes out over scoped threads when configured. Produces exactly
-    /// the bytes [`ExpertWeights::load`] would (same fused kernel), which
-    /// the bit-exactness tests rely on.
+    /// Decode one expert into pooled arenas in this cache's residency
+    /// mode, fanning the three matrix decodes out over scoped threads
+    /// when configured. Produces exactly the bytes
+    /// [`ExpertWeights::load`] / [`ExpertWeights::load_packed`] would
+    /// (same kernels), which the bit-exactness tests rely on.
     fn decode_expert(&mut self, layer: usize, expert: usize) -> Result<ExpertWeights> {
+        match self.residency {
+            ExpertResidency::Decoded => self.decode_expert_decoded(layer, expert),
+            ExpertResidency::Packed => self.decode_expert_packed(layer, expert),
+        }
+    }
+
+    fn decode_expert_decoded(&mut self, layer: usize, expert: usize) -> Result<ExpertWeights> {
         let names = [
             expert_record_name(layer, expert, EXPERT_MATRIX_NAMES[0]),
             expert_record_name(layer, expert, EXPERT_MATRIX_NAMES[1]),
@@ -435,9 +658,52 @@ impl ExpertCache {
         }
         let r1 = self.reader.record(&names[0])?;
         let (d_model, d_expert) = (r1.shape[0], r1.shape[1]);
-        let w = ExpertWeights { layer, expert, d_model, d_expert, w1, w3, w2 };
+        let w = ExpertWeights::decoded(layer, expert, d_model, d_expert, w1, w3, w2);
         w.validate()?;
         Ok(w)
+    }
+
+    /// The packed-residency miss path: decompress the three payloads into
+    /// pooled u8 arenas, **leaving the codes bit-packed** — no unpack, no
+    /// dequantize, no f32 weight allocation. The per-column dequant LUTs
+    /// (when profitable) are the only f32 built, once per admission.
+    fn decode_expert_packed(&mut self, layer: usize, expert: usize) -> Result<ExpertWeights> {
+        let names = [
+            expert_record_name(layer, expert, EXPERT_MATRIX_NAMES[0]),
+            expert_record_name(layer, expert, EXPERT_MATRIX_NAMES[1]),
+            expert_record_name(layer, expert, EXPERT_MATRIX_NAMES[2]),
+        ];
+        let mut bufs: [Vec<u8>; 3] = [
+            self.pool_u8.pop().unwrap_or_default(),
+            self.pool_u8.pop().unwrap_or_default(),
+            self.pool_u8.pop().unwrap_or_default(),
+        ];
+        {
+            let reader = &*self.reader;
+            let jobs: Vec<(&String, &mut Vec<u8>)> = names.iter().zip(bufs.iter_mut()).collect();
+            if self.n_threads > 1 {
+                let results: Vec<Result<()>> = std::thread::scope(|scope| {
+                    let handles: Vec<_> = jobs
+                        .into_iter()
+                        .map(|(name, out)| {
+                            scope.spawn(move || reader.load_packed_into(name, out))
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("expert decode worker panicked"))
+                        .collect()
+                });
+                for r in results {
+                    r?;
+                }
+            } else {
+                for (name, out) in jobs {
+                    reader.load_packed_into(name, out)?;
+                }
+            }
+        }
+        ExpertWeights::assemble_packed(&self.reader, layer, expert, bufs)
     }
 }
 
@@ -527,15 +793,162 @@ mod tests {
             for e in 0..3 {
                 let a = serial.get(layer, e).unwrap();
                 let b = parallel.get(layer, e).unwrap();
-                assert_eq!(a.w1, b.w1, "layer {layer} expert {e}");
-                assert_eq!(a.w3, b.w3, "layer {layer} expert {e}");
-                assert_eq!(a.w2, b.w2, "layer {layer} expert {e}");
+                assert_eq!(a.w1(), b.w1(), "layer {layer} expert {e}");
+                assert_eq!(a.w3(), b.w3(), "layer {layer} expert {e}");
+                assert_eq!(a.w2(), b.w2(), "layer {layer} expert {e}");
                 // and both match the fresh-buffer reference decode
                 let r = ExpertWeights::load(&reader, layer, e).unwrap();
-                assert_eq!(a.w1, r.w1);
-                assert_eq!(a.w2, r.w2);
+                assert_eq!(a.w1(), r.w1());
+                assert_eq!(a.w2(), r.w2());
             }
         }
+    }
+
+    #[test]
+    fn packed_parallel_and_serial_decode_identical() {
+        let (_cfg, _dir, reader) = demo_reader(256); // multi-chunk payloads
+        let m1 = Arc::new(PipelineMetrics::default());
+        let m2 = Arc::new(PipelineMetrics::default());
+        let mut serial = ExpertCache::new(reader.clone(), m1, usize::MAX, 1)
+            .with_residency(ExpertResidency::Packed);
+        let mut parallel = ExpertCache::new(reader.clone(), m2, usize::MAX, 4)
+            .with_residency(ExpertResidency::Packed);
+        let mut rng = crate::util::Rng::seed_from_u64(3);
+        for layer in 0..2 {
+            for e in 0..3 {
+                let a = serial.get(layer, e).unwrap();
+                let b = parallel.get(layer, e).unwrap();
+                assert!(a.is_packed() && b.is_packed());
+                // fresh-buffer packed reference + the decoded reference:
+                // all four must agree bit for bit on the ffn output
+                let r = ExpertWeights::load_packed(&reader, layer, e).unwrap();
+                let dec = ExpertWeights::load(&reader, layer, e).unwrap();
+                let x = rng.normal_vec(a.d_model, 1.0);
+                let want = dec.ffn(&x);
+                assert_eq!(a.ffn(&x), want, "layer {layer} expert {e}");
+                assert_eq!(b.ffn(&x), want, "layer {layer} expert {e}");
+                assert_eq!(r.ffn(&x), want, "layer {layer} expert {e}");
+                assert_eq!(a.bytes(), r.bytes(), "pooled and fresh sizes differ");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_residency_multiplies_cache_capacity() {
+        // SAME byte budget, both modes: the packed cache must retain
+        // strictly more experts and hit strictly more often on a
+        // replayed round-robin of 6 experts
+        let (_cfg, _dir, reader) = demo_reader(512);
+        let one_decoded = expert_bytes(&reader);
+        let one_packed = reader.expert_entry(0, 0).unwrap().packed_resident_bytes;
+        assert!(
+            one_packed * 2 < one_decoded,
+            "8-bit per-col demo expert should pack to well under half its f32 size"
+        );
+        let budget = 2 * one_decoded;
+        let mut lens = Vec::new();
+        let mut hits = Vec::new();
+        for residency in [ExpertResidency::Decoded, ExpertResidency::Packed] {
+            let metrics = Arc::new(PipelineMetrics::default());
+            let mut cache = ExpertCache::new(reader.clone(), metrics.clone(), budget, 1)
+                .with_residency(residency);
+            for round in 0..4 {
+                for e in 0..6 {
+                    let w = cache.get(0, e).unwrap();
+                    assert_eq!(
+                        w.is_packed(),
+                        residency == ExpertResidency::Packed,
+                        "round {round}: wrong body for {residency:?}"
+                    );
+                }
+            }
+            assert!(
+                metrics.expert_peak_resident_bytes() <= budget,
+                "{residency:?}: peak {} over budget {budget}",
+                metrics.expert_peak_resident_bytes()
+            );
+            assert_eq!(metrics.expert_resident_count(), cache.len());
+            lens.push(cache.len());
+            hits.push(metrics.expert_hits_count());
+            // per-mode split: packed lookups tallied as packed
+            if residency == ExpertResidency::Packed {
+                assert_eq!(metrics.expert_packed_hits_count(), metrics.expert_hits_count());
+                assert_eq!(metrics.expert_packed_misses_count(), metrics.expert_misses_count());
+            } else {
+                assert_eq!(metrics.expert_packed_hits_count(), 0);
+            }
+        }
+        assert!(
+            lens[1] > lens[0],
+            "packed cache held {} experts, decoded {} — packing must multiply capacity",
+            lens[1],
+            lens[0]
+        );
+        assert!(hits[1] > hits[0], "packed hits {} not above decoded {}", hits[1], hits[0]);
+    }
+
+    #[test]
+    fn demand_reservation_reserve_decode_commit() {
+        let (_cfg, _dir, reader) = demo_reader(512);
+        let metrics = Arc::new(PipelineMetrics::default());
+        let one = expert_bytes(&reader);
+        let mut cache = ExpertCache::new(reader.clone(), metrics.clone(), 2 * one, 1);
+        // miss -> a charged reservation
+        let DemandFetch::Miss(res) = cache.begin_get(0, 0).unwrap() else {
+            panic!("cold cache cannot hit");
+        };
+        assert_eq!(res.bytes(), one);
+        assert_eq!(res.key(), (0, 0));
+        assert_eq!(cache.demand_inflight_bytes(), one);
+        // a second reservation while the first is in flight must leave
+        // room for it: both fit a 2-expert budget with no eviction
+        let DemandFetch::Miss(res1) = cache.begin_get(0, 1).unwrap() else {
+            panic!("distinct expert cannot hit");
+        };
+        assert_eq!(cache.demand_inflight_bytes(), 2 * one);
+        // decode happens outside any lock; commit lands both
+        let w0 = Arc::new(ExpertWeights::load(&reader, 0, 0).unwrap());
+        let w1 = Arc::new(ExpertWeights::load(&reader, 0, 1).unwrap());
+        let got0 = cache.commit_demand(res, w0.clone(), std::time::Duration::from_micros(5));
+        assert!(Arc::ptr_eq(&got0, &w0));
+        let _ = cache.commit_demand(res1, w1, std::time::Duration::from_micros(5));
+        assert_eq!(cache.demand_inflight_bytes(), 0);
+        assert_eq!(cache.resident_bytes(), 2 * one);
+        assert_eq!(metrics.expert_misses_count(), 2);
+        assert!(metrics.expert_peak_resident_bytes() <= 2 * one, "reservations overshot");
+        let DemandFetch::Hit(_) = cache.begin_get(0, 0).unwrap() else {
+            panic!("committed expert must hit");
+        };
+        // the demand race: two reservations for the same cold key (the
+        // second caller started before the first committed); the loser's
+        // commit must hand back the winner's Arc and release its bytes
+        let DemandFetch::Miss(ra) = cache.begin_get(1, 1).unwrap() else {
+            panic!("cold key cannot hit");
+        };
+        let DemandFetch::Miss(rb) = cache.begin_get(1, 1).unwrap() else {
+            panic!("duplicate in-flight demand still reserves");
+        };
+        let wa = Arc::new(ExpertWeights::load(&reader, 1, 1).unwrap());
+        let wb = Arc::new(ExpertWeights::load(&reader, 1, 1).unwrap());
+        let first = cache.commit_demand(ra, wa.clone(), std::time::Duration::from_micros(5));
+        assert!(Arc::ptr_eq(&first, &wa));
+        let second = cache.commit_demand(rb, wb.clone(), std::time::Duration::from_micros(5));
+        assert!(Arc::ptr_eq(&second, &wa), "race loser must get the resident expert");
+        assert!(!Arc::ptr_eq(&second, &wb));
+        assert_eq!(cache.demand_inflight_bytes(), 0);
+        // the duplicate reservation evicted LRU entries to stay in
+        // budget, so only the raced expert is resident — charged once
+        assert!(cache.contains(1, 1));
+        assert_eq!(cache.resident_bytes(), one, "raced expert must be charged exactly once");
+        // throughout: reservations + residents never overshot the budget
+        assert!(metrics.expert_peak_resident_bytes() <= 2 * one);
+        // cancel releases without landing
+        let DemandFetch::Miss(res4) = cache.begin_get(1, 0).unwrap() else {
+            panic!("cold key cannot hit");
+        };
+        cache.cancel_demand(res4);
+        assert_eq!(cache.demand_inflight_bytes(), 0);
+        assert!(!cache.contains(1, 0));
     }
 
     #[test]

@@ -29,7 +29,13 @@ pub struct PipelineMetrics {
     // -- expert cache (MoE serving) -----------------------------------------
     expert_hits: AtomicU64,
     expert_misses: AtomicU64,
+    /// Of the hits/misses above, how many were served by a *packed*
+    /// (quantized-domain) cache — the per-residency-mode split.
+    expert_hits_packed: AtomicU64,
+    expert_misses_packed: AtomicU64,
     expert_evictions: AtomicU64,
+    /// Experts currently held by the cache (demand + speculative slots).
+    expert_resident_count: AtomicUsize,
     /// Wall time spent decoding experts on cache misses.
     expert_decode_ns: AtomicU64,
     expert_decoded_bytes: AtomicU64,
@@ -156,15 +162,23 @@ impl PipelineMetrics {
 
     // -- expert cache -------------------------------------------------------
 
-    /// A router pick found its expert decoded in the cache (no decode).
-    pub fn expert_hit(&self) {
+    /// A router pick found its expert resident in the cache (no decode).
+    /// `packed` records which residency mode served it.
+    pub fn expert_hit(&self, packed: bool) {
         self.expert_hits.fetch_add(1, Ordering::Relaxed);
+        if packed {
+            self.expert_hits_packed.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// A router pick missed: `d` is the decode wall time, `bytes` the
-    /// decoded f32 size of the expert.
-    pub fn record_expert_miss(&self, d: Duration, bytes: usize) {
+    /// resident size of the expert in its mode (f32 arenas when decoded,
+    /// code streams + params when packed).
+    pub fn record_expert_miss(&self, d: Duration, bytes: usize, packed: bool) {
         self.expert_misses.fetch_add(1, Ordering::Relaxed);
+        if packed {
+            self.expert_misses_packed.fetch_add(1, Ordering::Relaxed);
+        }
         self.expert_decode_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
         self.expert_decoded_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
     }
@@ -186,12 +200,38 @@ impl PipelineMetrics {
         self.expert_peak_resident_bytes.fetch_max(bytes, Ordering::Relaxed);
     }
 
+    /// Experts held by the cache right now (demand + speculative).
+    pub fn set_expert_resident_count(&self, n: usize) {
+        self.expert_resident_count.store(n, Ordering::Relaxed);
+    }
+
+    pub fn expert_resident_count(&self) -> usize {
+        self.expert_resident_count.load(Ordering::Relaxed)
+    }
+
     pub fn expert_hits_count(&self) -> u64 {
         self.expert_hits.load(Ordering::Relaxed)
     }
 
     pub fn expert_misses_count(&self) -> u64 {
         self.expert_misses.load(Ordering::Relaxed)
+    }
+
+    /// Hits served by a packed-resident cache (per-mode split; the
+    /// decoded share is `expert_hits_count() - expert_packed_hits_count()`).
+    pub fn expert_packed_hits_count(&self) -> u64 {
+        self.expert_hits_packed.load(Ordering::Relaxed)
+    }
+
+    pub fn expert_packed_misses_count(&self) -> u64 {
+        self.expert_misses_packed.load(Ordering::Relaxed)
+    }
+
+    /// Bytes materialized by expert-cache misses so far (resident-mode
+    /// sized: f32 when decoded, packed streams when packed) — the
+    /// "bytes/token decoded" numerator of the residency table.
+    pub fn expert_decoded_bytes(&self) -> u64 {
+        self.expert_decoded_bytes.load(Ordering::Relaxed)
     }
 
     pub fn expert_evictions_count(&self) -> u64 {
@@ -357,14 +397,19 @@ impl PipelineMetrics {
         let (h, m) = (self.expert_hits_count(), self.expert_misses_count());
         if h + m > 0 {
             s.push_str(&format!(
-                "; experts: {:.0}% hit ({h}/{}), resident {:.2} MB (peak {:.2} MB), {:.3} ms/miss, {} evictions",
+                "; experts: {:.0}% hit ({h}/{}), {} resident ({:.2} MB, peak {:.2} MB), {:.3} ms/miss, {} evictions",
                 self.expert_hit_rate() * 100.0,
                 h + m,
+                self.expert_resident_count(),
                 self.expert_resident_bytes() as f64 / 1e6,
                 self.expert_peak_resident_bytes() as f64 / 1e6,
                 self.expert_miss_mean_ms(),
                 self.expert_evictions_count(),
             ));
+            let (hp, mp) = (self.expert_packed_hits_count(), self.expert_packed_misses_count());
+            if hp + mp > 0 {
+                s.push_str(&format!(" [packed-resident: {} of {} lookups]", hp + mp, h + m));
+            }
         }
         if self.sched_plans_count() > 0 {
             s.push_str(&format!(
@@ -421,14 +466,18 @@ mod tests {
     fn expert_accounting() {
         let m = PipelineMetrics::default();
         assert_eq!(m.expert_hit_rate(), 0.0, "no lookups yet");
-        m.record_expert_miss(Duration::from_millis(2), 1000);
+        m.record_expert_miss(Duration::from_millis(2), 1000, false);
         m.observe_expert_transient(1000);
         m.set_expert_resident(1000);
-        m.expert_hit();
-        m.expert_hit();
-        m.expert_hit();
+        m.set_expert_resident_count(1);
+        m.expert_hit(false);
+        m.expert_hit(false);
+        m.expert_hit(false);
         assert_eq!(m.expert_hits_count(), 3);
         assert_eq!(m.expert_misses_count(), 1);
+        assert_eq!(m.expert_resident_count(), 1);
+        assert_eq!(m.expert_packed_hits_count(), 0, "decoded lookups must not count as packed");
+        assert_eq!(m.expert_decoded_bytes(), 1000);
         assert!((m.expert_hit_rate() - 0.75).abs() < 1e-12);
         assert!(m.expert_miss_mean_ms() >= 2.0);
         m.record_expert_eviction();
@@ -438,6 +487,14 @@ mod tests {
         assert_eq!(m.expert_evictions_count(), 1);
         // expert section shows up in the human summary once active
         assert!(m.summary().contains("experts:"));
+        assert!(!m.summary().contains("packed-resident"), "no packed lookups yet");
+        // the per-mode split: packed lookups tally both counters
+        m.expert_hit(true);
+        m.record_expert_miss(Duration::from_millis(1), 500, true);
+        assert_eq!(m.expert_hits_count(), 4);
+        assert_eq!(m.expert_packed_hits_count(), 1);
+        assert_eq!(m.expert_packed_misses_count(), 1);
+        assert!(m.summary().contains("packed-resident"));
     }
 
     #[test]
@@ -469,7 +526,7 @@ mod tests {
         m.set_expert_speculative(4096);
         assert_eq!(m.expert_speculative_bytes(), 4096);
         // stall is the demand-miss decode time, not the hidden decode time
-        m.record_expert_miss(Duration::from_millis(5), 2000);
+        m.record_expert_miss(Duration::from_millis(5), 2000, false);
         assert!(m.expert_stall_secs() >= 0.005);
         assert!(m.expert_stall_secs() < 0.008, "prefetch time leaked into stall");
         let s = m.summary();

@@ -43,7 +43,7 @@ use crate::tensor::Tensor;
 use crate::xla;
 
 pub use decode::{DecodeScratch, DecodedLayer, LayerDecoder};
-pub use expert_cache::ExpertCache;
+pub use expert_cache::{DemandFetch, DemandReservation, ExpertCache};
 pub use metrics::PipelineMetrics;
 pub use scheduler::{ExpertScheduler, SchedOptions};
 
@@ -98,6 +98,10 @@ pub struct Engine {
     /// Decoded-expert LRU budget ([`ServeOptions::expert_budget_bytes`])
     /// applied by [`Engine::expert_cache`] for MoE containers.
     pub expert_budget_bytes: usize,
+    /// What a resident expert is — decoded f32 or packed codes
+    /// ([`ServeOptions::expert_residency`]), applied by
+    /// [`Engine::expert_cache`].
+    pub expert_residency: crate::config::ExpertResidency,
     /// Expert-scheduler knobs (prefetch slice / workers / prior decay),
     /// resolved from [`ServeOptions`] and applied by
     /// [`Engine::expert_scheduler`].
@@ -204,6 +208,7 @@ impl Engine {
             residency,
             prefetch_depth: opts.prefetch_depth,
             expert_budget_bytes: opts.expert_budget_bytes,
+            expert_residency: opts.expert_residency,
             sched_opts: SchedOptions::from_serve(opts),
             metrics,
             decoder,
@@ -242,6 +247,7 @@ impl Engine {
             residency: Residency::AlwaysResident,
             prefetch_depth: 0,
             expert_budget_bytes: 0,
+            expert_residency: crate::config::ExpertResidency::Decoded,
             sched_opts: SchedOptions { prefetch: false, ..SchedOptions::default() },
             metrics: Arc::new(PipelineMetrics::default()),
             decoder: None,
@@ -325,7 +331,8 @@ impl Engine {
             self.metrics.clone(),
             budget_bytes,
             n_threads.max(1),
-        ))
+        )
+        .with_residency(self.expert_residency))
     }
 
     /// Build the full expert-scheduling subsystem over this engine's

@@ -17,10 +17,10 @@
 //!    popularity. The slice is bounded by `prefetch_budget_bytes`,
 //!    charged by reservation *before* the background decode, and
 //!    admission is size-aware, so prefetch can never evict what the
-//!    current step needs. Known limit: a demand *miss* decodes inside
-//!    the cache lock, so background commits wait for it — the overlap
-//!    hides decode behind the execute phase; reserving demand decodes
-//!    outside the lock is a ROADMAP follow-up.
+//!    current step needs. Demand misses use the same
+//!    reserve → decode-outside-lock → commit shape
+//!    ([`ExpertCache::begin_get`]), so a slow demand decode no longer
+//!    serializes prefetch commits against the cache lock.
 //! 3. **Scheduling counters** — dedup factor, prefetch hit/waste, and
 //!    the decode stall the forward step actually paid, all through the
 //!    shared [`PipelineMetrics`].
@@ -33,12 +33,14 @@ pub mod prefetch;
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::{MoeSpec, ServeOptions};
+use crate::config::{ExpertResidency, MoeSpec, ServeOptions};
 use crate::format::TqmReader;
 use crate::model::moe::{moe_layer_forward_batched, ExpertWeights, Router};
+use crate::pipeline::expert_cache::DemandFetch;
 use crate::pipeline::{ExpertCache, PipelineMetrics};
 
 pub use plan::LayerPlan;
@@ -91,9 +93,13 @@ impl SchedOptions {
 pub struct ExpertScheduler {
     cache: Arc<Mutex<ExpertCache>>,
     /// Container index — candidate selection caps a step's prefetch set
-    /// to what the slice can hold, using the known decoded sizes.
+    /// to what the slice can hold, using the known resident sizes.
     reader: Arc<TqmReader>,
     metrics: Arc<PipelineMetrics>,
+    /// The cache's residency mode, captured at construction — demand
+    /// decodes (run outside the cache lock) and prefetch workers must
+    /// produce the same body the cache charges for.
+    residency: ExpertResidency,
     /// Popularity prior, persisted across steps (and batches) — the
     /// workload-skew half of the prefetch score.
     prior: Mutex<EwmaPrior>,
@@ -113,6 +119,7 @@ impl ExpertScheduler {
         n_experts: usize,
         opts: SchedOptions,
     ) -> Self {
+        let residency = cache.residency();
         let cache = Arc::new(Mutex::new(cache));
         let pool = (opts.prefetch && opts.prefetch_budget_bytes > 0).then(|| {
             PrefetchPool::new(
@@ -121,12 +128,14 @@ impl ExpertScheduler {
                 metrics.clone(),
                 opts.prefetch_budget_bytes,
                 opts.prefetch_workers,
+                residency,
             )
         });
         Self {
             cache,
             reader,
             metrics,
+            residency,
             prior: Mutex::new(EwmaPrior::new(n_layers, n_experts, opts.ewma_decay)),
             pool,
             opts,
@@ -143,9 +152,40 @@ impl ExpertScheduler {
     }
 
     /// Demand-fetch one expert through the cache (single-sequence paths
-    /// that still want the scheduler's cache + prefetch machinery).
+    /// that still want the scheduler's cache + prefetch machinery). A
+    /// miss reserves under the lock, decodes **without** it — so
+    /// prefetch workers keep committing while the demand decode runs —
+    /// and commits the result (demand-side reservations).
     pub fn get(&self, layer: usize, expert: usize) -> Result<Arc<ExpertWeights>> {
-        self.cache.lock().unwrap().get(layer, expert)
+        let fetch = self.cache.lock().unwrap().begin_get(layer, expert)?;
+        match fetch {
+            DemandFetch::Hit(w) => Ok(w),
+            DemandFetch::Miss(res) => {
+                let t0 = Instant::now();
+                // the decode runs with no cache lock held, so a panic in
+                // it would otherwise drop the reservation uncancelled and
+                // shrink the effective budget forever — catch, release,
+                // re-raise
+                let decoded = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    ExpertWeights::load_with(&self.reader, layer, expert, self.residency)
+                }));
+                match decoded {
+                    Ok(Ok(w)) => Ok(self.cache.lock().unwrap().commit_demand(
+                        res,
+                        Arc::new(w),
+                        t0.elapsed(),
+                    )),
+                    Ok(Err(e)) => {
+                        self.cache.lock().unwrap().cancel_demand(res);
+                        Err(e)
+                    }
+                    Err(panic) => {
+                        self.cache.lock().unwrap().cancel_demand(res);
+                        std::panic::resume_unwind(panic)
+                    }
+                }
+            }
+        }
     }
 
     /// Decode (if needed) and exempt an expert from eviction.
@@ -195,11 +235,13 @@ impl ExpertScheduler {
             // next layer's prefetch also promotes this layer's
             // speculative entries out of the slice, so the new
             // reservations below can only ever displace stale prefetches,
-            // never the ones this step is about to consume.
+            // never the ones this step is about to consume. Each miss
+            // decodes outside the cache lock (demand-side reservations),
+            // so in-flight prefetch commits interleave with it.
             let mut fetched: HashMap<usize, Arc<ExpertWeights>> =
                 HashMap::with_capacity(plan.n_unique());
             for &e in &plan.unique {
-                let w = self.cache.lock().unwrap().get(l, e)?;
+                let w = self.get(l, e)?;
                 fetched.insert(e, w);
             }
             if let Some(pool) = &self.pool {
@@ -291,7 +333,10 @@ impl ExpertScheduler {
         let mut kept = Vec::with_capacity(idx.len());
         for e in idx {
             let need = match self.reader.expert_entry(layer, e) {
-                Ok(entry) => entry.decoded_f32_bytes,
+                Ok(entry) => match self.residency {
+                    ExpertResidency::Decoded => entry.decoded_f32_bytes,
+                    ExpertResidency::Packed => entry.packed_resident_bytes,
+                },
                 Err(_) => continue,
             };
             if bytes + need > self.opts.prefetch_budget_bytes {
@@ -311,7 +356,7 @@ mod tests {
     use crate::config::QuantizeOptions;
     use crate::model::moe::{
         clustered_trace, load_routers, moe_demo_config, moe_stack_forward,
-        quantize_moe_checkpoint, synth_moe_checkpoint,
+        quantize_moe_checkpoint, synth_moe_checkpoint, ExpertWeights,
     };
     use crate::util::TempDir;
 
@@ -365,6 +410,48 @@ mod tests {
             let want = moe_stack_forward(&routers, &spec, x, |l, e| sched.get(l, e)).unwrap();
             assert_eq!(got, &want, "scheduled forward diverged");
         }
+    }
+
+    #[test]
+    fn packed_residency_scheduled_forward_bit_exact() {
+        // the whole scheduled stack — dedup plan, prefetch workers,
+        // demand reservations — on a *packed* cache must equal the
+        // decoded per-sequence reference bit for bit
+        let (cfg, _dir, reader) = demo(44);
+        let spec = cfg.moe.clone().unwrap();
+        let routers = load_routers(&reader, cfg.n_layers).unwrap();
+        let opts = SchedOptions {
+            sync_prefetch: true,
+            prefetch_budget_bytes: 1 << 20,
+            ..SchedOptions::default()
+        };
+        let metrics = Arc::new(PipelineMetrics::default());
+        let cache = ExpertCache::new(reader.clone(), metrics.clone(), usize::MAX, 1)
+            .with_residency(crate::config::ExpertResidency::Packed);
+        let sched = ExpertScheduler::new(
+            reader.clone(),
+            metrics.clone(),
+            cache,
+            cfg.n_layers,
+            spec.n_experts,
+            opts,
+        );
+        let xs = clustered_trace(cfg.d_model, 3, 1, 4, 13);
+        let batched = sched.forward_batch(&routers, &spec, &xs).unwrap();
+        sched.quiesce();
+        for (x, got) in xs.iter().zip(&batched) {
+            let want = moe_stack_forward(&routers, &spec, x, |l, e| {
+                Ok(Arc::new(ExpertWeights::load(&reader, l, e).unwrap()))
+            })
+            .unwrap();
+            assert_eq!(got, &want, "packed scheduled forward diverged");
+        }
+        // and every lookup really went through the packed mode
+        assert_eq!(
+            metrics.expert_packed_misses_count(),
+            metrics.expert_misses_count(),
+            "packed cache recorded decoded-mode misses"
+        );
     }
 
     #[test]

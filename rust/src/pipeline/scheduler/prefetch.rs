@@ -21,6 +21,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use crate::config::ExpertResidency;
 use crate::format::TqmReader;
 use crate::model::moe::ExpertWeights;
 use crate::pipeline::{ExpertCache, PipelineMetrics};
@@ -84,6 +85,7 @@ impl PrefetchPool {
         metrics: Arc<PipelineMetrics>,
         budget_bytes: usize,
         n_workers: usize,
+        residency: ExpertResidency,
     ) -> Self {
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -104,7 +106,7 @@ impl PrefetchPool {
                         // recv, never while decoding
                         let job = rx.lock().unwrap().recv();
                         let Ok((layer, expert)) = job else { return };
-                        run_job(&cache, &reader, &metrics, budget_bytes, layer, expert);
+                        run_job(&cache, &reader, &metrics, budget_bytes, residency, layer, expert);
                         pending.lock().unwrap().remove(&(layer, expert));
                         let (count, cv) = &*inflight;
                         *count.lock().unwrap() -= 1;
@@ -166,12 +168,14 @@ impl Drop for PrefetchPool {
 /// unknown, and could-never-fit experts before any decode allocation
 /// exists — the reservation is what keeps in-flight prefetch bytes
 /// inside the `budget + prefetch_budget` bound), then decode with fresh
-/// buffers and commit onto the reservation.
+/// buffers **in the cache's residency mode** and commit onto the
+/// reservation.
 fn run_job(
     cache: &Mutex<ExpertCache>,
     reader: &Arc<TqmReader>,
     metrics: &PipelineMetrics,
     budget_bytes: usize,
+    residency: ExpertResidency,
     layer: usize,
     expert: usize,
 ) {
@@ -181,7 +185,7 @@ fn run_job(
         return;
     };
     let t0 = Instant::now();
-    match ExpertWeights::load(reader, layer, expert) {
+    match ExpertWeights::load_with(reader, layer, expert, residency) {
         Ok(w) => {
             metrics.record_prefetch_decode(t0.elapsed(), w.bytes());
             let admitted =

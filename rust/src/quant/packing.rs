@@ -9,7 +9,7 @@
 //! straddle byte boundaries (6-bit codes necessarily do; 1/2/4/8-bit
 //! widths happen to divide 8 so theirs never straddle).
 //!
-//! Two read paths exist on purpose:
+//! Three read paths exist on purpose:
 //!
 //! * [`unpack`]/[`unpack_into`] — codes back to one-byte-per-code, the
 //!   form the stage HLOs consume;
@@ -18,7 +18,18 @@
 //!   old unpack-then-dequantize double pass for host-side consumers. The
 //!   arithmetic is bit-identical to `QuantizedTensor::dequantize`
 //!   (`(code - zero) * scale` in f32), which a property test enforces for
-//!   every width.
+//!   every width;
+//! * [`qgemv`] (and its per-channel variants) — quantized-domain GEMV:
+//!   `out = x · W` computed **directly against the packed bit-stream**,
+//!   never materializing the f32 weight arena at all. Per scale-group the
+//!   kernel builds a `2^bits` dequant LUT (`lut[c] = (c - zero) * scale`,
+//!   the exact expression the fused dequant uses), so the inner loop is a
+//!   table-lookup FMA. Value *and accumulation order* are bit-identical
+//!   to `unpack_dequant_into` followed by the decoded-path matmul
+//!   (row-major `[rows, cols]`, rows accumulated in ascending order,
+//!   zero entries of `x` skipped) — the property tests assert exact f32
+//!   equality, which is what lets the expert cache serve packed-resident
+//!   experts interchangeably with decoded ones.
 
 /// Pack `codes` (values < 2^bits) into a little-endian bit stream.
 pub fn pack(codes: &[u8], bits: u32) -> Vec<u8> {
@@ -151,6 +162,200 @@ pub fn unpack_dequant_rows_into(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Quantized-domain GEMV (qGEMV)
+// ---------------------------------------------------------------------------
+//
+// All three kernels compute `out = x · W` for a row-major `[rows, cols]`
+// weight matrix whose elements live in the little-endian bit-packed code
+// stream, with `rows == x.len()` and `out.len() == cols`. They reproduce
+// the decoded matmul exactly: `out` is zeroed, rows are walked in
+// ascending order, a row whose `x[i] == 0.0` is skipped entirely (the
+// decoded path's `continue`), and each contribution is
+// `x[i] * ((code - zero) * scale)` — the dequantized weight computed
+// first, then scaled by the activation, so every intermediate f32 equals
+// the decoded path's bit for bit.
+
+/// Shared assertion set for the qGEMV kernels.
+#[inline(always)]
+fn qgemv_checks(packed: &[u8], bits: u32, cols: usize, x: &[f32], out: &[f32]) {
+    assert!((1..=8).contains(&bits));
+    assert_eq!(out.len(), cols, "qgemv output dim mismatch");
+    assert!(
+        packed.len() * 8 >= x.len() * cols * bits as usize,
+        "packed stream too short for [{}, {cols}] at {bits} bits",
+        x.len()
+    );
+}
+
+/// Quantized-domain GEMV, per-tensor parameters: one `2^bits` dequant
+/// LUT serves the whole matrix.
+pub fn qgemv(
+    packed: &[u8],
+    bits: u32,
+    cols: usize,
+    scale: f32,
+    zero: f32,
+    x: &[f32],
+    out: &mut [f32],
+) {
+    qgemv_checks(packed, bits, cols, x, out);
+    let mask = width_mask(bits);
+    let levels = 1usize << bits;
+    let mut lut = [0.0f32; 256];
+    for (c, v) in lut.iter_mut().take(levels).enumerate() {
+        *v = (c as f32 - zero) * scale;
+    }
+    out.fill(0.0);
+    let row_bits = cols * bits as usize;
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let mut bitpos = i * row_bits;
+        for o in out.iter_mut() {
+            let c = code_at(packed, bitpos, bits, mask);
+            *o += xi * lut[c as usize];
+            bitpos += bits as usize;
+        }
+    }
+}
+
+/// Quantized-domain GEMV with per-row (axis 0) parameters: element
+/// (r, c) uses `scale[r]`/`zero[r]`; the row's LUT is rebuilt per row
+/// (`2^bits` entries, amortized over `cols` lookups).
+pub fn qgemv_rows(
+    packed: &[u8],
+    bits: u32,
+    cols: usize,
+    scale: &[f32],
+    zero: &[f32],
+    x: &[f32],
+    out: &mut [f32],
+) {
+    qgemv_checks(packed, bits, cols, x, out);
+    assert_eq!(scale.len(), x.len());
+    assert_eq!(zero.len(), x.len());
+    let mask = width_mask(bits);
+    let levels = 1usize << bits;
+    let mut lut = [0.0f32; 256];
+    out.fill(0.0);
+    let row_bits = cols * bits as usize;
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let (s, z) = (scale[i], zero[i]);
+        for (c, v) in lut.iter_mut().take(levels).enumerate() {
+            *v = (c as f32 - z) * s;
+        }
+        let mut bitpos = i * row_bits;
+        for o in out.iter_mut() {
+            let c = code_at(packed, bitpos, bits, mask);
+            *o += xi * lut[c as usize];
+            bitpos += bits as usize;
+        }
+    }
+}
+
+/// Quantized-domain GEMV with per-out-channel (axis 1) parameters:
+/// element (r, c) uses `scale[c]`/`zero[c]` — the matmul-weight layout.
+/// The dequant is computed inline (`scale`/`zero` are indexed by the
+/// inner loop, so there is no single LUT to share); see
+/// [`qgemv_cols_lut`] for the precomputed-LUT form.
+pub fn qgemv_cols(
+    packed: &[u8],
+    bits: u32,
+    cols: usize,
+    scale: &[f32],
+    zero: &[f32],
+    x: &[f32],
+    out: &mut [f32],
+) {
+    qgemv_checks(packed, bits, cols, x, out);
+    assert_eq!(scale.len(), cols);
+    assert_eq!(zero.len(), cols);
+    let mask = width_mask(bits);
+    out.fill(0.0);
+    let row_bits = cols * bits as usize;
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let mut bitpos = i * row_bits;
+        for ((o, &s), &z) in out.iter_mut().zip(scale).zip(zero) {
+            let c = code_at(packed, bitpos, bits, mask);
+            *o += xi * ((c as f32 - z) * s);
+            bitpos += bits as usize;
+        }
+    }
+}
+
+/// [`qgemv_cols`] against a precomputed per-column LUT
+/// (`lut[c * 2^bits + code]`, from [`build_col_lut`]) — the form the
+/// packed-resident expert cache uses, where the LUT is built once when
+/// the expert lands and reused every token.
+pub fn qgemv_cols_lut(
+    packed: &[u8],
+    bits: u32,
+    cols: usize,
+    lut: &[f32],
+    x: &[f32],
+    out: &mut [f32],
+) {
+    qgemv_checks(packed, bits, cols, x, out);
+    let levels = 1usize << bits;
+    assert_eq!(lut.len(), cols * levels, "column LUT size mismatch");
+    let mask = width_mask(bits);
+    out.fill(0.0);
+    let row_bits = cols * bits as usize;
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let mut bitpos = i * row_bits;
+        for (o, l) in out.iter_mut().zip(lut.chunks_exact(levels)) {
+            let c = code_at(packed, bitpos, bits, mask);
+            *o += xi * l[c as usize];
+            bitpos += bits as usize;
+        }
+    }
+}
+
+/// Per-column dequant LUT for axis-1 granularity: entry
+/// `[c * 2^bits + code] = (code - zero[c]) * scale[c]` — the exact
+/// expression every other dequant path uses, so LUT and inline kernels
+/// are interchangeable bit for bit.
+pub fn build_col_lut(bits: u32, scale: &[f32], zero: &[f32]) -> Vec<f32> {
+    assert!((1..=8).contains(&bits));
+    assert_eq!(scale.len(), zero.len());
+    let levels = 1usize << bits;
+    let mut lut = vec![0.0f32; scale.len() * levels];
+    for (j, chunk) in lut.chunks_mut(levels).enumerate() {
+        let (s, z) = (scale[j], zero[j]);
+        for (c, v) in chunk.iter_mut().enumerate() {
+            *v = (c as f32 - z) * s;
+        }
+    }
+    lut
+}
+
+/// Bytes a packed-resident matrix spends on its per-column LUT: the full
+/// `cols * 2^bits` table when that is no larger than the packed code
+/// stream itself (always true for real-sized matrices), zero otherwise
+/// (tiny matrices fall back to the inline [`qgemv_cols`] kernel rather
+/// than let the LUT dominate the footprint). Deterministic from index
+/// metadata alone, so the expert cache can size a packed expert before
+/// decoding it.
+pub fn col_lut_bytes(bits: u32, cols: usize, packed_len: usize) -> usize {
+    let lut = 4 * cols * (1usize << bits);
+    if lut <= packed_len {
+        lut
+    } else {
+        0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -249,6 +454,117 @@ mod tests {
             let reference_r = two_step(&packed, bits, n, |i| (rs[i / cols], rz[i / cols]));
             assert_eq!(fused_r, reference_r, "rows bits={bits}");
         }
+    }
+
+    /// Decoded-path reference the qGEMV kernels must match bit-exactly:
+    /// unpack + dequantize to an f32 arena, then the expert FFN's matmul
+    /// shape (rows ascending, zero activations skipped, `xi * w`).
+    fn ref_gemv(
+        packed: &[u8],
+        bits: u32,
+        rows: usize,
+        cols: usize,
+        sz: impl Fn(usize) -> (f32, f32),
+        x: &[f32],
+    ) -> Vec<f32> {
+        let w = two_step(packed, bits, rows * cols, sz);
+        let mut out = vec![0.0f32; cols];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &w[i * cols..(i + 1) * cols];
+            for (o, &wij) in out.iter_mut().zip(row) {
+                *o += xi * wij;
+            }
+        }
+        out
+    }
+
+    /// An activation vector with sign changes and forced exact zeros (the
+    /// decoded path's skip branch must be replicated, not approximated).
+    fn test_x(rng: &mut crate::util::Rng, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| if i % 5 == 3 { 0.0 } else { rng.normal_f32() })
+            .collect()
+    }
+
+    #[test]
+    fn qgemv_matches_unpack_then_matmul_all_widths() {
+        // property test: widths 1..=8 (6-bit codes straddle bytes) and
+        // ragged shapes, per-tensor granularity — exact f32 equality
+        let mut rng = crate::util::Rng::seed_from_u64(7);
+        for bits in 1..=8u32 {
+            for (rows, cols) in [(1usize, 1usize), (3, 5), (7, 13), (16, 24), (33, 7)] {
+                let n = rows * cols;
+                let codes: Vec<u8> =
+                    (0..n).map(|_| rng.gen_range(0, (1u16 << bits) as u64) as u8).collect();
+                let packed = pack(&codes, bits);
+                let x = test_x(&mut rng, rows);
+                let (scale, zero) = (0.031f32, 3.0f32);
+                let mut got = vec![1.0f32; cols]; // kernels must zero `out`
+                qgemv(&packed, bits, cols, scale, zero, &x, &mut got);
+                let want = ref_gemv(&packed, bits, rows, cols, |_| (scale, zero), &x);
+                assert_eq!(got, want, "bits={bits} rows={rows} cols={cols}");
+            }
+        }
+    }
+
+    #[test]
+    fn qgemv_per_channel_matches_unpack_then_matmul() {
+        let mut rng = crate::util::Rng::seed_from_u64(8);
+        for bits in 1..=8u32 {
+            for (rows, cols) in [(5usize, 3usize), (24, 20), (13, 31)] {
+                let n = rows * cols;
+                let codes: Vec<u8> =
+                    (0..n).map(|_| rng.gen_range(0, (1u16 << bits) as u64) as u8).collect();
+                let packed = pack(&codes, bits);
+                let x = test_x(&mut rng, rows);
+
+                // per-row (axis 0) parameters
+                let rs: Vec<f32> = (0..rows).map(|r| 0.002 + r as f32 * 0.013).collect();
+                let rz: Vec<f32> = (0..rows).map(|r| (r % 4) as f32).collect();
+                let mut got = vec![0.0f32; cols];
+                qgemv_rows(&packed, bits, cols, &rs, &rz, &x, &mut got);
+                let want = ref_gemv(&packed, bits, rows, cols, |i| (rs[i / cols], rz[i / cols]), &x);
+                assert_eq!(got, want, "rows bits={bits} {rows}x{cols}");
+
+                // per-col (axis 1) parameters: inline and LUT kernels
+                let cs: Vec<f32> = (0..cols).map(|c| 0.004 + c as f32 * 0.009).collect();
+                let cz: Vec<f32> = (0..cols).map(|c| (c % 6) as f32).collect();
+                let mut inline = vec![0.0f32; cols];
+                qgemv_cols(&packed, bits, cols, &cs, &cz, &x, &mut inline);
+                let want_c =
+                    ref_gemv(&packed, bits, rows, cols, |i| (cs[i % cols], cz[i % cols]), &x);
+                assert_eq!(inline, want_c, "cols bits={bits} {rows}x{cols}");
+                let lut = build_col_lut(bits, &cs, &cz);
+                let mut via_lut = vec![0.0f32; cols];
+                qgemv_cols_lut(&packed, bits, cols, &lut, &x, &mut via_lut);
+                assert_eq!(via_lut, want_c, "cols-lut bits={bits} {rows}x{cols}");
+            }
+        }
+    }
+
+    #[test]
+    fn qgemv_all_zero_activations_yield_zero() {
+        let codes = vec![1u8; 6 * 4];
+        let packed = pack(&codes, 6);
+        let x = vec![0.0f32; 6];
+        let mut out = vec![9.0f32; 4];
+        qgemv(&packed, 6, 4, 0.5, 1.0, &x, &mut out);
+        assert_eq!(out, vec![0.0f32; 4], "output must be zeroed even when every row skips");
+    }
+
+    #[test]
+    fn col_lut_bytes_rule() {
+        // stored only when the LUT is no larger than the packed codes:
+        // 4096x64 @ 4-bit -> codes 131072 B, lut 64*16*4 = 4096 B: stored
+        assert_eq!(col_lut_bytes(4, 64, 131072), 4096);
+        // tiny matrix: lut 64*16*4 = 4096 B > 96 B of codes: skipped
+        assert_eq!(col_lut_bytes(4, 64, 96), 0);
+        // boundary: equal sizes are stored
+        assert_eq!(col_lut_bytes(2, 8, 128), 128);
+        assert_eq!(col_lut_bytes(2, 8, 127), 0);
     }
 
     #[test]

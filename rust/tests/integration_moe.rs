@@ -9,7 +9,7 @@
 use std::sync::Arc;
 
 use tiny_qmoe::compress::CodecId;
-use tiny_qmoe::config::QuantizeOptions;
+use tiny_qmoe::config::{ExpertResidency, QuantizeOptions};
 use tiny_qmoe::format::TqmReader;
 use tiny_qmoe::model::moe::{
     clustered_trace, load_routers, moe_demo_config, moe_stack_forward, quantize_moe_checkpoint,
@@ -112,6 +112,69 @@ fn streaming_only_budget_still_bit_exact() {
     }
     assert_eq!(metrics.expert_hits_count(), 0);
     assert_eq!(cache.resident_bytes(), 0);
+}
+
+#[test]
+fn packed_residency_bit_exact_and_denser_at_equal_budget() {
+    // the packed-execution acceptance criterion: a packed-resident cache
+    // forwards the SAME trace bit-exact against both the fully-resident
+    // decoded reference and a decoded cache at the same budget — while
+    // retaining strictly more experts and hitting strictly more often
+    let (cfg, _dir, reader) = build_container(300, true);
+    let spec = cfg.moe.clone().unwrap();
+    let routers = load_routers(&reader, cfg.n_layers).unwrap();
+    let resident: Vec<Vec<Arc<ExpertWeights>>> = (0..cfg.n_layers)
+        .map(|l| {
+            (0..spec.n_experts)
+                .map(|e| Arc::new(ExpertWeights::load(&reader, l, e).unwrap()))
+                .collect()
+        })
+        .collect();
+
+    // a budget of 3 decoded experts: far below the per-cluster working
+    // set, so the decoded mode thrashes while the packed one (several
+    // times smaller per expert) keeps most of the model warm
+    let entry = reader.expert_entry(0, 0).unwrap();
+    let budget = 3 * entry.decoded_f32_bytes;
+    assert!(entry.packed_resident_bytes < entry.decoded_f32_bytes / 2);
+    let trace = clustered_trace(cfg.d_model, 4, 6, 60, 9);
+
+    let run = |residency: ExpertResidency| {
+        let metrics = Arc::new(PipelineMetrics::default());
+        let mut cache = ExpertCache::new(reader.clone(), metrics.clone(), budget, 2)
+            .with_residency(residency);
+        let outs: Vec<Vec<f32>> = trace
+            .iter()
+            .map(|x| moe_stack_forward(&routers, &spec, x, |l, e| cache.get(l, e)).unwrap())
+            .collect();
+        (outs, cache.len(), metrics)
+    };
+    let (dec_out, dec_len, dec_m) = run(ExpertResidency::Decoded);
+    let (pkd_out, pkd_len, pkd_m) = run(ExpertResidency::Packed);
+
+    // bit-exact across all three residency shapes
+    for ((x, d), p) in trace.iter().zip(&dec_out).zip(&pkd_out) {
+        let want =
+            moe_stack_forward(&routers, &spec, x, |l, e| Ok(resident[l][e].clone())).unwrap();
+        assert_eq!(d, &want, "decoded cached forward diverged");
+        assert_eq!(p, &want, "packed cached forward diverged");
+    }
+
+    // packed residency at the same byte budget holds more and hits more
+    assert!(pkd_len > dec_len, "packed held {pkd_len} experts, decoded {dec_len}");
+    assert!(
+        pkd_m.expert_hit_rate() > dec_m.expert_hit_rate(),
+        "packed hit rate {:.3} not above decoded {:.3}",
+        pkd_m.expert_hit_rate(),
+        dec_m.expert_hit_rate()
+    );
+    assert!(pkd_m.expert_misses_count() < dec_m.expert_misses_count());
+    // budget held at every instant in both modes (incl. in-flight)
+    assert!(dec_m.expert_peak_resident_bytes() <= budget);
+    assert!(pkd_m.expert_peak_resident_bytes() <= budget);
+    // the per-mode metric split labels the packed run
+    assert_eq!(pkd_m.expert_packed_misses_count(), pkd_m.expert_misses_count());
+    assert_eq!(dec_m.expert_packed_misses_count(), 0);
 }
 
 #[test]
