@@ -13,6 +13,23 @@
 //!
 //! Run: `cargo bench --bench qgemv` (host-side, no artifacts needed).
 //! `TQM_QGEMV_REPS` overrides the per-thread repetition count.
+//!
+//! For native-ISA numbers run
+//! `RUSTFLAGS="-C target-cpu=native" cargo bench --bench qgemv`:
+//! the blocked/batched kernels decode each packed run into a stack
+//! block once and then run tight f32 FMA loops, which only vectorize
+//! fully when the compiler may assume the host's SIMD width.
+//!
+//! Three tables:
+//!   1. packed qGEMV vs decoded GEMV (bits x threads) — the original
+//!      capacity-vs-speed tradeoff;
+//!   2. blocked (exact) and relaxed qGEMV vs the scalar kernel
+//!      (widths 1-8, single thread) — blocked is bit-exact by
+//!      construction, relaxed is tolerance-checked only;
+//!   3. batched qGEMM vs B independent qGEMVs (widths 1-8 x batch
+//!      1/2/4/8 x 1/2/4/8 threads) — one packed-stream traversal
+//!      amortized over the whole token group. Reps scale down with
+//!      batch so every cell touches the same total weight bytes.
 
 use tiny_qmoe::quant::packing;
 use tiny_qmoe::util::bench::Table;
@@ -78,6 +95,88 @@ fn throughput(fixtures: &[Fixture], reps: usize, packed: bool, bits: u32) -> f64
     (ROWS * COLS * 4 * reps * fixtures.len()) as f64 / 1e6 / secs
 }
 
+/// Single-thread throughput of one qGEMV kernel variant, decoded-equivalent
+/// MB/s. `kind`: 0 = scalar `qgemv`, 1 = `qgemv_blocked`, 2 = blocked with
+/// relaxed accumulation.
+fn variant_throughput(f: &Fixture, reps: usize, bits: u32, kind: u8) -> f64 {
+    let (scale, zero) = (0.0127f32, (1u32 << (bits - 1)) as f32);
+    let mut out = vec![0.0f32; COLS];
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        match kind {
+            0 => packing::qgemv(&f.packed, bits, COLS, scale, zero, &f.x, &mut out),
+            1 => packing::qgemv_blocked(
+                &f.packed,
+                bits,
+                COLS,
+                scale,
+                zero,
+                &f.x,
+                &mut out,
+                packing::Accumulation::Exact,
+            ),
+            _ => packing::qgemv_blocked(
+                &f.packed,
+                bits,
+                COLS,
+                scale,
+                zero,
+                &f.x,
+                &mut out,
+                packing::Accumulation::Relaxed,
+            ),
+        }
+        std::hint::black_box(&mut out);
+    }
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    (ROWS * COLS * 4 * reps) as f64 / 1e6 / secs
+}
+
+/// One worker per fixture; each rep forwards `b` tokens through one
+/// expert matrix — either as ONE batched qGEMM (single traversal of the
+/// packed stream) or as `b` independent scalar qGEMVs (B traversals).
+fn batch_throughput(
+    fixtures: &[Fixture],
+    xbs: &[Vec<f32>],
+    reps: usize,
+    bits: u32,
+    b: usize,
+    batched: bool,
+) -> f64 {
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for (f, xb) in fixtures.iter().zip(xbs) {
+            scope.spawn(move || {
+                let (scale, zero) = (0.0127f32, (1u32 << (bits - 1)) as f32);
+                let mut out = vec![0.0f32; b * COLS];
+                for _ in 0..reps {
+                    if batched {
+                        packing::qgemm(
+                            &f.packed,
+                            bits,
+                            COLS,
+                            scale,
+                            zero,
+                            xb,
+                            b,
+                            &mut out,
+                            packing::Accumulation::Exact,
+                        );
+                    } else {
+                        for (xs, os) in xb.chunks(ROWS).zip(out.chunks_mut(COLS)) {
+                            packing::qgemv(&f.packed, bits, COLS, scale, zero, xs, os);
+                        }
+                    }
+                    std::hint::black_box(&mut out);
+                }
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    // decoded-equivalent weight bytes touched per token forwarded
+    (ROWS * COLS * 4 * reps * b * fixtures.len()) as f64 / 1e6 / secs
+}
+
 fn main() {
     let reps: usize = std::env::var("TQM_QGEMV_REPS")
         .ok()
@@ -121,4 +220,123 @@ fn main() {
         }
     }
     t.print();
+
+    // ---- table 2: blocked / relaxed qGEMV (widths 1-8, one thread) ----
+    let mut t2 = Table::new(
+        &format!(
+            "blocked qGEMV — scalar vs blocked(exact) vs blocked(relaxed) \
+             ({ROWS}x{COLS}, {reps} reps, decoded-equivalent MB/s)"
+        ),
+        &["bits", "scalar MB/s", "blocked MB/s", "relaxed MB/s", "blocked x", "relaxed x"],
+    );
+    for bits in 1u32..=8 {
+        let f = fixture(bits, 200 + bits as u64);
+        let (scale, zero) = (0.0127f32, (1u32 << (bits - 1)) as f32);
+        // correctness guards: blocked-exact must match the scalar kernel
+        // bit for bit; relaxed only has to land within tolerance
+        {
+            let mut a = vec![0.0f32; COLS];
+            let mut b = vec![0.0f32; COLS];
+            let mut r = vec![0.0f32; COLS];
+            packing::qgemv(&f.packed, bits, COLS, scale, zero, &f.x, &mut a);
+            packing::qgemv_blocked(
+                &f.packed,
+                bits,
+                COLS,
+                scale,
+                zero,
+                &f.x,
+                &mut b,
+                packing::Accumulation::Exact,
+            );
+            assert_eq!(a, b, "blocked qgemv diverged from scalar at {bits} bits");
+            packing::qgemv_blocked(
+                &f.packed,
+                bits,
+                COLS,
+                scale,
+                zero,
+                &f.x,
+                &mut r,
+                packing::Accumulation::Relaxed,
+            );
+            for (e, g) in a.iter().zip(&r) {
+                assert!(
+                    (e - g).abs() <= 1e-3 * (1.0 + e.abs()),
+                    "relaxed qgemv out of tolerance at {bits} bits: {e} vs {g}"
+                );
+            }
+        }
+        let _ = variant_throughput(&f, reps.div_ceil(8).max(1), bits, 1); // warm-up
+        let scalar = variant_throughput(&f, reps, bits, 0);
+        let blocked = variant_throughput(&f, reps, bits, 1);
+        let relaxed = variant_throughput(&f, reps, bits, 2);
+        t2.row(vec![
+            format!("{bits}"),
+            format!("{scalar:.0}"),
+            format!("{blocked:.0}"),
+            format!("{relaxed:.0}"),
+            format!("{:.2}x", blocked / scalar.max(1e-9)),
+            format!("{:.2}x", relaxed / scalar.max(1e-9)),
+        ]);
+    }
+    t2.print();
+
+    // ---- table 3: batched qGEMM sweep (widths 1-8 x batch x threads) ----
+    // one row per (bits, batch); one column per thread count, showing the
+    // qGEMM throughput and its speedup over B independent qGEMVs on the
+    // same workers
+    let mut t3 = Table::new(
+        &format!(
+            "batched qGEMM — one traversal per token group vs B x qGEMV \
+             ({ROWS}x{COLS}, per-cell reps scaled to constant weight-bytes)"
+        ),
+        &["bits", "batch", "1 thr", "2 thr", "4 thr", "8 thr"],
+    );
+    for bits in 1u32..=8 {
+        for b in [1usize, 2, 4, 8] {
+            let breps = (reps / b).max(1);
+            let mut cells = Vec::new();
+            for threads in [1usize, 2, 4, 8] {
+                let fixtures: Vec<Fixture> =
+                    (0..threads).map(|i| fixture(bits, 300 + i as u64)).collect();
+                let xbs: Vec<Vec<f32>> = (0..threads)
+                    .map(|i| {
+                        let mut rng = Rng::seed_from_u64(400 + i as u64);
+                        (0..b * ROWS).map(|_| rng.normal_f32()).collect()
+                    })
+                    .collect();
+                // correctness guard: one qgemm == b stacked qgemvs, exactly
+                {
+                    let (f, xb) = (&fixtures[0], &xbs[0]);
+                    let (scale, zero) = (0.0127f32, (1u32 << (bits - 1)) as f32);
+                    let mut got = vec![0.0f32; b * COLS];
+                    let mut want = vec![0.0f32; b * COLS];
+                    packing::qgemm(
+                        &f.packed,
+                        bits,
+                        COLS,
+                        scale,
+                        zero,
+                        xb,
+                        b,
+                        &mut got,
+                        packing::Accumulation::Exact,
+                    );
+                    for (xs, os) in xb.chunks(ROWS).zip(want.chunks_mut(COLS)) {
+                        packing::qgemv(&f.packed, bits, COLS, scale, zero, xs, os);
+                    }
+                    assert_eq!(got, want, "qgemm diverged from stacked qgemv at {bits} bits");
+                }
+                let _ = batch_throughput(&fixtures, &xbs, breps.div_ceil(8).max(1), bits, b, true);
+                let scalar = batch_throughput(&fixtures, &xbs, breps, bits, b, false);
+                let gemm = batch_throughput(&fixtures, &xbs, breps, bits, b, true);
+                cells.push(format!("{gemm:.0} ({:.2}x)", gemm / scalar.max(1e-9)));
+            }
+            let mut row = vec![format!("{bits}"), format!("{b}")];
+            row.extend(cells);
+            t3.row(row);
+        }
+    }
+    t3.print();
 }

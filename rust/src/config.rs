@@ -288,6 +288,13 @@ pub struct ServeOptions {
     /// Decay of the scheduler's EWMA expert-popularity prior (closer to
     /// 1.0 = longer memory of which experts a workload keeps routing to).
     pub prefetch_ewma_decay: f64,
+    /// Execute each (layer, expert)'s deduped token group as ONE batched
+    /// qGEMM call (one traversal of the expert's packed streams per
+    /// step) instead of one qGEMV per routed token. Exact accumulation
+    /// mode — outputs are bit-identical to the scalar path either way;
+    /// the knob exists for apples-to-apples measurement and as an
+    /// escape hatch. Irrelevant for dense models.
+    pub batched_qgemm: bool,
 }
 
 impl Default for ServeOptions {
@@ -304,6 +311,7 @@ impl Default for ServeOptions {
             prefetch_budget_bytes: 16 << 20,
             prefetch_workers: 1,
             prefetch_ewma_decay: 0.8,
+            batched_qgemm: true,
         }
     }
 }

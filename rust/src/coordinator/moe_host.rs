@@ -162,6 +162,20 @@ fn serve_trace_batch(
         .into_iter()
         .map(|env| ActiveTrace { env, outputs: Vec::new(), cursor: 0, started: now })
         .collect();
+    // retire zero-length traces up front: they are already complete, but
+    // they never enter `live`, so the retire loop below would drop their
+    // response channel without ever answering (the client's recv() then
+    // fails with "channel closed" instead of an empty Ok)
+    for a in &active {
+        if a.env.req.trace.is_empty() {
+            let queue_s = (a.started - a.env.enqueued).as_secs_f64().max(0.0);
+            let _ = a.env.resp.send(Ok(MoeTraceResponse {
+                outputs: Vec::new(),
+                queue_s,
+                forward_s: a.started.elapsed().as_secs_f64(),
+            }));
+        }
+    }
     loop {
         let live: Vec<usize> = (0..active.len())
             .filter(|&i| active[i].cursor < active[i].env.req.trace.len())
@@ -297,6 +311,200 @@ mod tests {
         .unwrap();
         let resp = host.generate(MoeTraceRequest { trace: Vec::new() }).unwrap();
         assert!(resp.outputs.is_empty());
+        host.shutdown();
+    }
+
+    #[test]
+    fn empty_trace_in_a_mixed_batch_still_gets_a_response() {
+        // regression: an empty trace never enters the step loop's `live`
+        // set, so before the up-front retire it was dropped unanswered —
+        // its client saw "response channel closed" instead of Ok
+        let (cfg, _dir, reader) = demo();
+        let spec = cfg.moe.clone().unwrap();
+        let routers = load_routers(&reader, cfg.n_layers).unwrap();
+        let host = MoeHost::start(MoeHostSpec {
+            reader: reader.clone(),
+            n_layers: cfg.n_layers,
+            moe: spec.clone(),
+            // long max_wait so both requests land in ONE batch
+            serve: ServeOptions { max_batch: 2, max_wait_ms: 2000, ..Default::default() },
+            sched: Some(SchedOptions {
+                sync_prefetch: true,
+                ..SchedOptions::from_serve(&ServeOptions::default())
+            }),
+        })
+        .unwrap();
+        let trace = clustered_trace(cfg.d_model, 2, 3, 4, 23);
+        let rx_empty = host.submit(MoeTraceRequest { trace: Vec::new() }).unwrap();
+        let rx_full = host.submit(MoeTraceRequest { trace: trace.clone() }).unwrap();
+
+        let resp_empty = rx_empty.recv().unwrap().unwrap();
+        assert!(resp_empty.outputs.is_empty());
+        assert!(resp_empty.queue_s >= 0.0 && resp_empty.forward_s >= 0.0);
+
+        let resident: Vec<Vec<Arc<ExpertWeights>>> = (0..cfg.n_layers)
+            .map(|l| {
+                (0..spec.n_experts)
+                    .map(|e| Arc::new(ExpertWeights::load(&reader, l, e).unwrap()))
+                    .collect()
+            })
+            .collect();
+        let want: Vec<Vec<f32>> = trace
+            .iter()
+            .map(|x| {
+                moe_stack_forward(&routers, &spec, x, |l, e| Ok(resident[l][e].clone()))
+                    .unwrap()
+            })
+            .collect();
+        let resp_full = rx_full.recv().unwrap().unwrap();
+        assert_eq!(resp_full.outputs, want, "empty batchmate corrupted the full trace");
+        host.shutdown();
+    }
+
+    #[test]
+    fn mixed_length_traces_retire_early_with_correct_outputs() {
+        let (cfg, _dir, reader) = demo();
+        let spec = cfg.moe.clone().unwrap();
+        let routers = load_routers(&reader, cfg.n_layers).unwrap();
+        let host = MoeHost::start(MoeHostSpec {
+            reader: reader.clone(),
+            n_layers: cfg.n_layers,
+            moe: spec.clone(),
+            serve: ServeOptions { max_batch: 2, max_wait_ms: 2000, ..Default::default() },
+            sched: Some(SchedOptions {
+                sync_prefetch: true,
+                ..SchedOptions::from_serve(&ServeOptions::default())
+            }),
+        })
+        .unwrap();
+        let base = clustered_trace(cfg.d_model, 2, 3, 6, 29);
+        let short: Vec<Vec<f32>> = base[..2].to_vec();
+        let long: Vec<Vec<f32>> = base.clone();
+        let rx_short = host.submit(MoeTraceRequest { trace: short.clone() }).unwrap();
+        let rx_long = host.submit(MoeTraceRequest { trace: long.clone() }).unwrap();
+
+        let resident: Vec<Vec<Arc<ExpertWeights>>> = (0..cfg.n_layers)
+            .map(|l| {
+                (0..spec.n_experts)
+                    .map(|e| Arc::new(ExpertWeights::load(&reader, l, e).unwrap()))
+                    .collect()
+            })
+            .collect();
+        let reference = |trace: &[Vec<f32>]| -> Vec<Vec<f32>> {
+            trace
+                .iter()
+                .map(|x| {
+                    moe_stack_forward(&routers, &spec, x, |l, e| Ok(resident[l][e].clone()))
+                        .unwrap()
+                })
+                .collect()
+        };
+
+        let resp_short = rx_short.recv().unwrap().unwrap();
+        let resp_long = rx_long.recv().unwrap().unwrap();
+        assert_eq!(resp_short.outputs.len(), 2);
+        assert_eq!(resp_long.outputs.len(), base.len());
+        assert_eq!(resp_short.outputs, reference(&short), "short trace diverged");
+        assert_eq!(resp_long.outputs, reference(&long), "long trace diverged");
+        // the short trace retired at its own final step, not the batch's:
+        // its response was sent strictly before the long trace finished
+        assert!(
+            resp_short.forward_s <= resp_long.forward_s,
+            "short trace waited for the long one ({} > {})",
+            resp_short.forward_s,
+            resp_long.forward_s
+        );
+        assert!(resp_short.queue_s >= 0.0 && resp_long.queue_s >= 0.0);
+        host.shutdown();
+    }
+
+    #[test]
+    fn mid_batch_forward_error_reaches_every_still_live_trace() {
+        use crate::format::{TqmMeta, TqmWriter};
+        use crate::quant::{uniform, Bits, Granularity};
+        use crate::tensor::Tensor;
+
+        // a 1-layer container whose spec claims 8 experts but whose
+        // records only hold experts 0..=6 — routing to expert 7 makes
+        // forward_batch fail mid-trace, deterministically
+        let mut cfg = moe_demo_config();
+        cfg.n_layers = 1;
+        let spec = cfg.moe.clone().unwrap();
+        let ckpt = synth_moe_checkpoint(&cfg, 7).unwrap();
+        // crafted router (shape [d_model, n_experts], row-major): a
+        // one-hot e0 input routes to experts {0, 1}; a one-hot e1 input
+        // routes to the missing {7, 6}
+        let mut wr = vec![0.0f32; cfg.d_model * spec.n_experts];
+        wr[0] = 10.0;
+        wr[1] = 9.0;
+        wr[spec.n_experts + 6] = 9.0;
+        wr[spec.n_experts + 7] = 10.0;
+        let router = Tensor::new(vec![cfg.d_model, spec.n_experts], wr).unwrap();
+        let meta = TqmMeta {
+            model_name: cfg.name.clone(),
+            codec: CodecId::FreqSeqPacked,
+            bits: Bits::B8,
+            per_channel: false,
+            quantizer: "naive".into(),
+            source_checkpoint: "unit".into(),
+        };
+        let mut w = TqmWriter::new(meta).with_chunk_len(512);
+        w.add_router(0, &router);
+        for e in 0..spec.n_experts - 1 {
+            for mat in ["w1", "w3", "w2"] {
+                let t = ckpt.f32(&crate::format::expert_record_name(0, e, mat)).unwrap();
+                w.add_expert_quantized(
+                    0,
+                    e,
+                    mat,
+                    &uniform::quantize(t, Bits::B8, Granularity::PerTensor).unwrap(),
+                );
+            }
+        }
+        let dir = TempDir::new().unwrap();
+        let p = dir.join("moe-missing-expert.tqm");
+        w.write(&p).unwrap();
+        let reader = Arc::new(TqmReader::open(&p).unwrap());
+
+        let host = MoeHost::start(MoeHostSpec {
+            reader,
+            n_layers: 1,
+            moe: spec.clone(),
+            serve: ServeOptions { max_batch: 3, max_wait_ms: 2000, ..Default::default() },
+            sched: Some(SchedOptions { prefetch: false, ..SchedOptions::default() }),
+        })
+        .unwrap();
+
+        let mut x_a = vec![0.0f32; cfg.d_model];
+        x_a[0] = 1.0; // routes to resident experts {0, 1}
+        let mut x_b = vec![0.0f32; cfg.d_model];
+        x_b[1] = 1.0; // routes to {7, 6} — expert 7 has no record
+
+        // long hits the missing expert at step 2 (0-based); short retires
+        // Ok after step 0; other is still live when the failure lands
+        let long = vec![x_a.clone(), x_a.clone(), x_b, x_a.clone()];
+        let short = vec![x_a.clone()];
+        let other = vec![x_a.clone(), x_a.clone(), x_a.clone(), x_a];
+        let rx_long = host.submit(MoeTraceRequest { trace: long }).unwrap();
+        let rx_short = host.submit(MoeTraceRequest { trace: short }).unwrap();
+        let rx_other = host.submit(MoeTraceRequest { trace: other }).unwrap();
+
+        // the short trace finished before the poisoned step and must
+        // still succeed
+        let resp_short = rx_short.recv().unwrap().unwrap();
+        assert_eq!(resp_short.outputs.len(), 1);
+
+        // both still-live traces get the error — neither hangs, neither
+        // sees a half-finished Ok
+        let err_long = rx_long.recv().unwrap();
+        let err_other = rx_other.recv().unwrap();
+        for (who, r) in [("long", err_long), ("other", err_other)] {
+            let e = r.expect_err("still-live trace got Ok past a failed forward");
+            assert!(
+                e.to_string().contains("moe forward failed"),
+                "{who} got an unexpected error: {e}"
+            );
+        }
         host.shutdown();
     }
 }

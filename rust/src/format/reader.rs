@@ -230,21 +230,19 @@ impl TqmReader {
                 e.records.push(i);
                 let numel = crate::tensor::numel(&r.shape);
                 e.decoded_f32_bytes += numel * 4;
-                // packed residency: code stream + params (+ the stored
-                // per-column LUT, whose size rule is deterministic from
-                // this metadata — must mirror PackedMatrix::new)
+                // packed residency: the one shared size rule with
+                // PackedMatrix::new (`packing::packed_resident_bytes`),
+                // so the bytes the index promises here are exactly the
+                // bytes a packed decode allocates
                 e.packed_resident_bytes += match r.kind {
-                    TensorKind::QuantU8 => {
-                        let lut = match r.granularity {
-                            Granularity::PerChannel { axis: 1 } => packing::col_lut_bytes(
-                                r.bits.storage_bits(),
-                                r.shape[1],
-                                r.raw_len,
-                            ),
-                            _ => 0,
-                        };
-                        r.raw_len + 4 * (r.scale.len() + r.zero.len()) + lut
-                    }
+                    TensorKind::QuantU8 => packing::packed_resident_bytes(
+                        r.bits.storage_bits(),
+                        r.granularity,
+                        r.shape[1],
+                        r.raw_len,
+                        r.scale.len(),
+                        r.zero.len(),
+                    ),
                     TensorKind::F32Raw => numel * 4,
                 };
                 e.stored_bytes += r.stored_bytes();

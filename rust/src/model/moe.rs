@@ -149,13 +149,13 @@ impl PackedMatrix {
         scale: Vec<f32>,
         zero: Vec<f32>,
     ) -> Self {
-        let col_lut = match granularity {
-            Granularity::PerChannel { axis: 1 }
-                if packing::col_lut_bytes(bits, cols, codes.len()) > 0 =>
-            {
-                packing::build_col_lut(bits, &scale, &zero)
-            }
-            _ => Vec::new(),
+        // one shared profitability rule with the TqmReader index and the
+        // cache's size-before-decode admission — see
+        // `packing::col_lut_stored_bytes`'s drift test
+        let col_lut = if packing::col_lut_stored_bytes(bits, granularity, cols, codes.len()) > 0 {
+            packing::build_col_lut(bits, &scale, &zero)
+        } else {
+            Vec::new()
         };
         Self { rows, cols, bits, granularity, codes, scale, zero, col_lut }
     }
@@ -222,6 +222,61 @@ impl PackedMatrix {
                 &self.col_lut,
                 x,
                 out,
+            ),
+            Granularity::PerChannel { axis } => panic!("bad channel axis {axis}"),
+        }
+    }
+
+    /// Batched `Y = X · W` straight from the packed codes: `x` is
+    /// row-major `[b, rows]`, `out` row-major `[b, cols]`, and the
+    /// packed stream is traversed ONCE for the whole batch. In
+    /// [`packing::Accumulation::Exact`] mode each token's output is
+    /// bit-exact against [`PackedMatrix::gemv_into`] on that token.
+    pub fn gemm_into(&self, x: &[f32], b: usize, out: &mut [f32], mode: packing::Accumulation) {
+        assert_eq!(x.len(), b * self.rows, "packed gemm input dim mismatch");
+        match self.granularity {
+            Granularity::PerTensor => packing::qgemm(
+                &self.codes,
+                self.bits,
+                self.cols,
+                self.scale[0],
+                self.zero[0],
+                x,
+                b,
+                out,
+                mode,
+            ),
+            Granularity::PerChannel { axis: 0 } => packing::qgemm_rows(
+                &self.codes,
+                self.bits,
+                self.cols,
+                &self.scale,
+                &self.zero,
+                x,
+                b,
+                out,
+                mode,
+            ),
+            Granularity::PerChannel { axis: 1 } if self.col_lut.is_empty() => packing::qgemm_cols(
+                &self.codes,
+                self.bits,
+                self.cols,
+                &self.scale,
+                &self.zero,
+                x,
+                b,
+                out,
+                mode,
+            ),
+            Granularity::PerChannel { axis: 1 } => packing::qgemm_cols_lut(
+                &self.codes,
+                self.bits,
+                self.cols,
+                &self.col_lut,
+                x,
+                b,
+                out,
+                mode,
             ),
             Granularity::PerChannel { axis } => panic!("bad channel axis {axis}"),
         }
@@ -507,6 +562,44 @@ impl ExpertWeights {
             }
         }
     }
+
+    /// SwiGLU expert FFN for a whole routed token group. For a packed
+    /// body each of w1/w3/w2 is traversed ONCE for all `xs.len()` tokens
+    /// (the batched qGEMM), instead of once per token — this is the
+    /// scheduler's single-traversal win. Exact accumulation mode: every
+    /// token's output is bit-exact against [`ExpertWeights::ffn`] on
+    /// that token. A decoded body has no packed stream to amortize and
+    /// simply runs the per-token FFN.
+    pub fn ffn_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let (d, de) = (self.d_model, self.d_expert);
+        let b = xs.len();
+        if b == 0 {
+            return Vec::new();
+        }
+        match &self.body {
+            ExpertBody::Decoded { .. } => xs.iter().map(|x| self.ffn(x)).collect(),
+            ExpertBody::Packed(p) => {
+                let mut xf = Vec::with_capacity(b * d);
+                for x in xs {
+                    assert_eq!(x.len(), d, "expert input dim mismatch");
+                    xf.extend_from_slice(x);
+                }
+                let mut h1 = vec![0.0f32; b * de];
+                let mut h3 = vec![0.0f32; b * de];
+                p.w1.gemm_into(&xf, b, &mut h1, packing::Accumulation::Exact);
+                p.w3.gemm_into(&xf, b, &mut h3, packing::Accumulation::Exact);
+                // identical gate expression to `ffn`, elementwise across
+                // the flat [b, de] buffers
+                let mut g = vec![0.0f32; b * de];
+                for ((gj, &a), &h) in g.iter_mut().zip(&h1).zip(&h3) {
+                    *gj = a / (1.0 + (-a).exp()) * h;
+                }
+                let mut yf = vec![0.0f32; b * d];
+                p.w2.gemm_into(&g, b, &mut yf, packing::Accumulation::Exact);
+                yf.chunks(d).map(|c| c.to_vec()).collect()
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -571,6 +664,70 @@ where
         .zip(picks)
         .map(|(x, p)| moe_token_from_picks(x, p, &mut expert))
         .collect()
+}
+
+/// Execution shape of one grouped layer forward — what the scheduler's
+/// batched-vs-scalar metrics are fed from.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GroupedExec {
+    /// Batched (expert, token-group) calls made — one traversal of each
+    /// of the expert's three packed streams per call.
+    pub groups: u64,
+    /// Routed tokens served across those calls (Σ group sizes).
+    pub tokens: u64,
+}
+
+/// Batched MoE sublayer forward that hands each expert its WHOLE routed
+/// token group in one [`ExpertWeights::ffn_batch`] call — one packed-
+/// stream traversal per (layer, expert) per step — then assembles every
+/// sequence's output by accumulating `gate * y` in its original router
+/// pick order. Because `ffn_batch` is bit-exact per token and the
+/// assembly replays exactly the accumulation [`moe_token_from_picks`]
+/// performs, the result is bit-exact against
+/// [`moe_layer_forward_batched`]; experts are consulted in sorted order.
+pub fn moe_layer_forward_grouped<F>(
+    xs: &[Vec<f32>],
+    picks: &[Vec<(usize, f32)>],
+    mut expert: F,
+) -> Result<(Vec<Vec<f32>>, GroupedExec)>
+where
+    F: FnMut(usize) -> Result<std::sync::Arc<ExpertWeights>>,
+{
+    anyhow::ensure!(xs.len() == picks.len(), "batch/picks length mismatch");
+    // token groups per expert, sorted expert order (deterministic and
+    // batch-order independent, like LayerPlan::unique)
+    let mut groups: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+    for (t, p) in picks.iter().enumerate() {
+        for &(e, _) in p {
+            let toks = groups.entry(e).or_default();
+            if toks.last() != Some(&t) {
+                toks.push(t);
+            }
+        }
+    }
+    let mut stats = GroupedExec::default();
+    let mut results: std::collections::BTreeMap<usize, Vec<Vec<f32>>> = Default::default();
+    for (&e, toks) in &groups {
+        let w = expert(e)?;
+        let gathered: Vec<Vec<f32>> = toks.iter().map(|&t| xs[t].clone()).collect();
+        let ys = w.ffn_batch(&gathered);
+        stats.groups += 1;
+        stats.tokens += toks.len() as u64;
+        results.insert(e, ys);
+    }
+    let mut out = Vec::with_capacity(xs.len());
+    for (t, (x, p)) in xs.iter().zip(picks).enumerate() {
+        let mut acc = vec![0.0f32; x.len()];
+        for &(e, gate) in p {
+            let toks = &groups[&e];
+            let idx = toks.iter().position(|&tt| tt == t).expect("token in its expert's group");
+            for (o, &v) in acc.iter_mut().zip(&results[&e][idx]) {
+                *o += gate * v;
+            }
+        }
+        out.push(acc);
+    }
+    Ok((out, stats))
 }
 
 /// Forward one token vector through a stack of MoE sublayers with
@@ -920,5 +1077,136 @@ mod tests {
         assert_eq!(trace[0], trace[3]); // same run
         assert_ne!(trace[0], trace[4]); // next cluster
         assert_eq!(trace[0], trace[12]); // cluster cycle repeats
+    }
+
+    #[test]
+    fn ffn_batch_bit_exact_vs_per_token_ffn() {
+        // one traversal for the whole group must not change a single bit
+        // vs running ffn per token, for packed AND decoded bodies, with
+        // exact zeros in some tokens (the skip branch)
+        use crate::quant::Bits;
+        for bits in [Bits::Ternary, Bits::B4, Bits::B6, Bits::B8] {
+            for per_channel in [false, true] {
+                let cfg = moe_demo_config();
+                let ckpt = synth_moe_checkpoint(&cfg, 77).unwrap();
+                let opts = QuantizeOptions { bits, per_channel, ..Default::default() };
+                let w =
+                    quantize_moe_checkpoint(&cfg, &ckpt, &opts, CodecId::FreqSeqPacked, "unit")
+                        .unwrap();
+                let dir = TempDir::new().unwrap();
+                let p = dir.join("moe.tqm");
+                w.write(&p).unwrap();
+                let reader = TqmReader::open(&p).unwrap();
+                for residency in [ExpertResidency::Decoded, ExpertResidency::Packed] {
+                    let e = ExpertWeights::load_with(&reader, 0, 4, residency).unwrap();
+                    let mut rng = crate::util::Rng::seed_from_u64(31);
+                    for b in [1usize, 2, 5, 8] {
+                        let xs: Vec<Vec<f32>> = (0..b)
+                            .map(|t| {
+                                let mut x = rng.normal_vec(cfg.d_model, 1.0);
+                                if t % 2 == 1 {
+                                    for v in x.iter_mut().step_by(3) {
+                                        *v = 0.0;
+                                    }
+                                }
+                                x
+                            })
+                            .collect();
+                        let ys = e.ffn_batch(&xs);
+                        assert_eq!(ys.len(), b);
+                        for (x, y) in xs.iter().zip(&ys) {
+                            assert_eq!(
+                                y,
+                                &e.ffn(x),
+                                "{bits:?} per_channel={per_channel} {residency:?} b={b}"
+                            );
+                        }
+                    }
+                    assert!(e.ffn_batch(&[]).is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_layer_forward_bit_exact_and_one_call_per_expert() {
+        let (cfg, _dir, reader) = demo_container();
+        let spec = cfg.moe.as_ref().unwrap();
+        let router = Router::load(&reader, 0).unwrap();
+        for residency in [ExpertResidency::Decoded, ExpertResidency::Packed] {
+            let all: Vec<Arc<ExpertWeights>> = (0..spec.n_experts)
+                .map(|e| Arc::new(ExpertWeights::load_with(&reader, 0, e, residency).unwrap()))
+                .collect();
+            let mut rng = crate::util::Rng::seed_from_u64(41);
+            // shared tokens so expert groups have size > 1
+            let base = rng.normal_vec(cfg.d_model, 1.0);
+            let mut xs: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(cfg.d_model, 1.0)).collect();
+            xs.push(base.clone());
+            xs.push(base);
+            let picks: Vec<Vec<(usize, f32)>> =
+                xs.iter().map(|x| router.top_k(x, spec.top_k)).collect();
+            let want =
+                moe_layer_forward_batched(&xs, &picks, |e| Ok(all[e].clone())).unwrap();
+            let mut calls = 0u64;
+            let (got, stats) = moe_layer_forward_grouped(&xs, &picks, |e| {
+                calls += 1;
+                Ok(all[e].clone())
+            })
+            .unwrap();
+            assert_eq!(got, want, "{residency:?}: grouped forward diverged");
+            let mut unique: Vec<usize> = picks.iter().flatten().map(|p| p.0).collect();
+            unique.sort_unstable();
+            unique.dedup();
+            assert_eq!(stats.groups, unique.len() as u64, "one ffn_batch call per expert");
+            assert_eq!(calls, unique.len() as u64, "one fetch per expert");
+            assert_eq!(stats.tokens, picks.iter().map(|p| p.len() as u64).sum::<u64>());
+        }
+        // empty batch
+        let (got, stats) = moe_layer_forward_grouped(&[], &[], |_| unreachable!()).unwrap();
+        assert!(got.is_empty());
+        assert_eq!(stats, GroupedExec::default());
+    }
+
+    #[test]
+    fn packed_matrix_resident_bytes_matches_shared_rule() {
+        // drift test (widths 1..=8 x all granularities): what a built
+        // PackedMatrix actually holds equals the shared index-side
+        // formula the cache sizes experts with
+        for bits in 1..=8u32 {
+            for (rows, cols) in [(4usize, 6usize), (64, 96)] {
+                let n = rows * cols;
+                let codes = packing::pack(&vec![0u8; n], bits);
+                for g in [
+                    Granularity::PerTensor,
+                    Granularity::PerChannel { axis: 0 },
+                    Granularity::PerChannel { axis: 1 },
+                ] {
+                    let (ns, nz) = match g {
+                        Granularity::PerTensor => (1usize, 1usize),
+                        Granularity::PerChannel { axis: 0 } => (rows, rows),
+                        _ => (cols, cols),
+                    };
+                    let m = PackedMatrix::new(
+                        rows,
+                        cols,
+                        bits,
+                        g,
+                        codes.clone(),
+                        vec![0.01; ns],
+                        vec![0.0; nz],
+                    );
+                    assert_eq!(
+                        m.resident_bytes(),
+                        packing::packed_resident_bytes(bits, g, cols, codes.len(), ns, nz),
+                        "bits={bits} {rows}x{cols} {g:?}"
+                    );
+                    assert_eq!(
+                        !m.col_lut.is_empty(),
+                        packing::col_lut_stored_bytes(bits, g, cols, codes.len()) > 0,
+                        "LUT presence must follow the shared rule"
+                    );
+                }
+            }
+        }
     }
 }

@@ -329,7 +329,7 @@ impl ExpertCache {
             self.metrics.expert_hit(self.residency == ExpertResidency::Packed);
             if promote {
                 // a prefetch landed before the demand — no decode stall
-                self.metrics.prefetch_hit();
+                // (promote() records the prefetch hit)
                 self.promote(key);
             }
             return Ok(DemandFetch::Hit(w));
@@ -403,6 +403,12 @@ impl ExpertCache {
     /// so this degrades to the same pure-streaming semantics an
     /// oversized miss has.
     fn promote(&mut self, key: (usize, usize)) {
+        // every promotion is a demand consuming a speculative entry —
+        // recording the hit HERE (not at the begin_get call site) makes
+        // the commit_demand race path (prefetch landed while the demand
+        // decode ran outside the lock) count too, which is what lets
+        // `issued == hits + wasted` reconcile exactly
+        self.metrics.prefetch_hit();
         let need = self.map[&key].w.bytes();
         self.speculative_bytes -= need;
         self.evict_until_fits(need, Some(key));

@@ -55,6 +55,14 @@ pub struct PipelineMetrics {
     sched_planned_fetches: AtomicU64,
     /// Scheduler layer-plans built (one per layer per forward step).
     sched_plans: AtomicU64,
+    /// Batched (layer, expert, token-group) qGEMM calls executed — one
+    /// traversal of the expert's packed streams each. With batching on,
+    /// equals `sched_planned_fetches`.
+    exec_batched_groups: AtomicU64,
+    /// Routed tokens served by those batched calls.
+    exec_batched_tokens: AtomicU64,
+    /// Routed picks executed as per-token qGEMV calls (batching off).
+    exec_scalar_picks: AtomicU64,
     /// Prefetch jobs handed to the worker pool.
     prefetch_issued: AtomicU64,
     /// Speculative decodes admitted into the cache's prefetch slice.
@@ -305,6 +313,31 @@ impl PipelineMetrics {
         self.sched_routed_picks() as f64 / planned as f64
     }
 
+    /// One grouped layer executed with batched qGEMM: `groups` (expert,
+    /// token-group) calls serving `tokens` routed picks — one packed-
+    /// stream traversal per group instead of one per pick.
+    pub fn record_exec_batched(&self, groups: u64, tokens: u64) {
+        self.exec_batched_groups.fetch_add(groups, Ordering::Relaxed);
+        self.exec_batched_tokens.fetch_add(tokens, Ordering::Relaxed);
+    }
+
+    /// Routed picks executed on the per-token (scalar qGEMV) path.
+    pub fn record_exec_scalar(&self, picks: u64) {
+        self.exec_scalar_picks.fetch_add(picks, Ordering::Relaxed);
+    }
+
+    pub fn exec_batched_groups_count(&self) -> u64 {
+        self.exec_batched_groups.load(Ordering::Relaxed)
+    }
+
+    pub fn exec_batched_tokens_count(&self) -> u64 {
+        self.exec_batched_tokens.load(Ordering::Relaxed)
+    }
+
+    pub fn exec_scalar_picks_count(&self) -> u64 {
+        self.exec_scalar_picks.load(Ordering::Relaxed)
+    }
+
     pub fn prefetch_issue(&self) {
         self.prefetch_issued.fetch_add(1, Ordering::Relaxed);
     }
@@ -420,6 +453,13 @@ impl PipelineMetrics {
                 self.expert_stall_secs() * 1e3,
             ));
         }
+        let (bg, sp) = (self.exec_batched_groups_count(), self.exec_scalar_picks_count());
+        if bg + sp > 0 {
+            s.push_str(&format!(
+                "; moe exec: {bg} batched groups ({} tokens), {sp} scalar picks",
+                self.exec_batched_tokens_count(),
+            ));
+        }
         if self.prefetch_issued_count() > 0 {
             s.push_str(&format!(
                 "; prefetch: {} issued, {} hits, {} wasted, {:.1} ms hidden",
@@ -532,6 +572,22 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("sched:"));
         assert!(s.contains("prefetch:"));
+    }
+
+    #[test]
+    fn batched_exec_accounting() {
+        let m = PipelineMetrics::default();
+        assert_eq!(m.exec_batched_groups_count(), 0);
+        assert!(!m.summary().contains("moe exec:"), "inactive section must stay silent");
+        // one step: 3 expert groups serving 8 routed tokens batched,
+        // then a scalar step of 8 picks
+        m.record_exec_batched(3, 8);
+        m.record_exec_scalar(8);
+        assert_eq!(m.exec_batched_groups_count(), 3);
+        assert_eq!(m.exec_batched_tokens_count(), 8);
+        assert_eq!(m.exec_scalar_picks_count(), 8);
+        let s = m.summary();
+        assert!(s.contains("moe exec: 3 batched groups (8 tokens), 8 scalar picks"), "{s}");
     }
 
     #[test]

@@ -39,7 +39,9 @@ use anyhow::Result;
 
 use crate::config::{ExpertResidency, MoeSpec, ServeOptions};
 use crate::format::TqmReader;
-use crate::model::moe::{moe_layer_forward_batched, ExpertWeights, Router};
+use crate::model::moe::{
+    moe_layer_forward_batched, moe_layer_forward_grouped, ExpertWeights, Router,
+};
 use crate::pipeline::expert_cache::DemandFetch;
 use crate::pipeline::{ExpertCache, PipelineMetrics};
 
@@ -68,6 +70,13 @@ pub struct SchedOptions {
     /// `prefetch_workers == 1` — with more workers the commit order,
     /// and thus the slice's LRU stamps, still race.
     pub sync_prefetch: bool,
+    /// Execute each (layer, expert)'s deduped token group as one batched
+    /// qGEMM call ([`crate::model::moe::moe_layer_forward_grouped`]) —
+    /// one traversal of the expert's packed streams per step — instead
+    /// of one qGEMV per routed pick. Exact accumulation: outputs are
+    /// bit-identical either way; the per-step batched-vs-scalar metrics
+    /// are what differ.
+    pub batched_qgemm: bool,
 }
 
 impl Default for SchedOptions {
@@ -84,6 +93,7 @@ impl SchedOptions {
             prefetch_workers: o.prefetch_workers,
             ewma_decay: o.prefetch_ewma_decay,
             sync_prefetch: false,
+            batched_qgemm: o.batched_qgemm,
         }
     }
 }
@@ -272,12 +282,22 @@ impl ExpertScheduler {
                     );
                 }
             }
-            let ys = moe_layer_forward_batched(&xs, &plan.picks, |e| {
+            let fetch = |e: usize| {
                 fetched
                     .get(&e)
                     .cloned()
                     .ok_or_else(|| anyhow::anyhow!("expert {e} missing from plan"))
-            })?;
+            };
+            let ys = if self.opts.batched_qgemm {
+                // one ffn_batch (three qGEMM traversals) per unique
+                // expert for its whole deduped token group
+                let (ys, stats) = moe_layer_forward_grouped(&xs, &plan.picks, fetch)?;
+                self.metrics.record_exec_batched(stats.groups, stats.tokens);
+                ys
+            } else {
+                self.metrics.record_exec_scalar(plan.routed_picks() as u64);
+                moe_layer_forward_batched(&xs, &plan.picks, fetch)?
+            };
             for (x, y) in xs.iter_mut().zip(ys) {
                 for (xi, yi) in x.iter_mut().zip(y) {
                     *xi += yi;
@@ -475,6 +495,33 @@ mod tests {
         // decode count == planned fetches, not routed picks
         assert_eq!(m.expert_misses_count(), m.sched_planned_fetches());
         assert!((m.sched_dedup_factor() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batched_qgemm_knob_is_bit_exact_and_records_exec_metrics() {
+        let (cfg, _dir, reader) = demo(46);
+        let spec = cfg.moe.clone().unwrap();
+        let routers = load_routers(&reader, cfg.n_layers).unwrap();
+        let xs = clustered_trace(cfg.d_model, 2, 2, 4, 23);
+        let mut outs = Vec::new();
+        for batched in [false, true] {
+            let opts = SchedOptions {
+                prefetch: false,
+                batched_qgemm: batched,
+                ..SchedOptions::default()
+            };
+            let (sched, m) = scheduler(&reader, &cfg, usize::MAX, opts);
+            outs.push(sched.forward_batch(&routers, &spec, &xs).unwrap());
+            if batched {
+                assert_eq!(m.exec_batched_groups_count(), m.sched_planned_fetches());
+                assert_eq!(m.exec_batched_tokens_count(), m.sched_routed_picks());
+                assert_eq!(m.exec_scalar_picks_count(), 0);
+            } else {
+                assert_eq!(m.exec_scalar_picks_count(), m.sched_routed_picks());
+                assert_eq!(m.exec_batched_groups_count(), 0);
+            }
+        }
+        assert_eq!(outs[0], outs[1], "batched qGEMM changed the outputs");
     }
 
     #[test]

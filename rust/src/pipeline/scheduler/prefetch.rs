@@ -127,18 +127,23 @@ impl PrefetchPool {
         }
         let (count, cv) = &*self.inflight;
         *count.lock().unwrap() += 1;
-        self.metrics.prefetch_issue();
         let sent = self
             .tx
             .as_ref()
             .map(|tx| tx.send((layer, expert)).is_ok())
             .unwrap_or(false);
-        if !sent {
-            // pool shutting down: roll the accounting back
+        if sent {
+            // only a job a worker will actually see counts as issued —
+            // this is what keeps the reconciliation invariant
+            // `issued == hits + wasted` exact (a shutdown-refused send
+            // was formerly counted both issued AND rejected)
+            self.metrics.prefetch_issue();
+        } else {
+            // pool shutting down: roll the accounting back; the job
+            // never existed as far as the counters are concerned
             self.pending.lock().unwrap().remove(&(layer, expert));
             *count.lock().unwrap() -= 1;
             cv.notify_all();
-            self.metrics.record_prefetch_rejected();
         }
     }
 
@@ -187,10 +192,15 @@ fn run_job(
     let t0 = Instant::now();
     match ExpertWeights::load_with(reader, layer, expert, residency) {
         Ok(w) => {
-            metrics.record_prefetch_decode(t0.elapsed(), w.bytes());
+            let (elapsed, bytes) = (t0.elapsed(), w.bytes());
             let admitted =
                 cache.lock().unwrap().commit_speculative(layer, expert, Arc::new(w));
-            if !admitted {
+            if admitted {
+                // only decode work that landed counts as hidden — a
+                // commit that lost the race to the demand path is pure
+                // waste, not waste AND hidden progress
+                metrics.record_prefetch_decode(elapsed, bytes);
+            } else {
                 // demand decoded it while we were in flight
                 metrics.record_prefetch_rejected();
             }
@@ -205,6 +215,105 @@ fn run_job(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::CodecId;
+    use crate::config::QuantizeOptions;
+    use crate::model::moe::{moe_demo_config, quantize_moe_checkpoint, synth_moe_checkpoint};
+    use crate::pipeline::expert_cache::DemandFetch;
+    use crate::util::TempDir;
+
+    /// A demand fetch through the cache's reserve/commit protocol (the
+    /// scheduler's `get`, without needing a scheduler).
+    fn demand_get(cache: &Mutex<ExpertCache>, reader: &Arc<TqmReader>, l: usize, e: usize) {
+        let fetch = cache.lock().unwrap().begin_get(l, e).unwrap();
+        if let DemandFetch::Miss(res) = fetch {
+            match ExpertWeights::load_with(reader, l, e, ExpertResidency::Decoded) {
+                Ok(w) => {
+                    cache.lock().unwrap().commit_demand(
+                        res,
+                        Arc::new(w),
+                        std::time::Duration::ZERO,
+                    );
+                }
+                Err(_) => cache.lock().unwrap().cancel_demand(res),
+            }
+        }
+    }
+
+    #[test]
+    fn prefetch_counters_reconcile_issued_equals_hits_plus_waste() {
+        // Every issued job must terminate as exactly ONE of: hit
+        // (demanded, incl. the commit_demand race-promotion), rejected
+        // (admission refusal / lost race / failed decode), or evicted
+        // unused. Storm the pool with demand fetches racing the workers,
+        // then drain every still-speculative entry with a demand sweep
+        // and check the books balance exactly.
+        let cfg = moe_demo_config();
+        let ckpt = synth_moe_checkpoint(&cfg, 91).unwrap();
+        let qopts = QuantizeOptions { per_channel: true, ..Default::default() };
+        let w = quantize_moe_checkpoint(&cfg, &ckpt, &qopts, CodecId::FreqSeqPacked, "unit")
+            .unwrap()
+            .with_chunk_len(512);
+        let dir = TempDir::new().unwrap();
+        let p = dir.join("moe.tqm");
+        w.write(&p).unwrap();
+        let reader = Arc::new(TqmReader::open(&p).unwrap());
+        let spec = cfg.moe.as_ref().unwrap();
+        let one = reader.expert_entry(0, 0).unwrap().decoded_f32_bytes;
+        let metrics = Arc::new(PipelineMetrics::default());
+        let cache = Arc::new(Mutex::new(ExpertCache::new(
+            reader.clone(),
+            metrics.clone(),
+            3 * one,
+            1,
+        )));
+        // slice holds only 2 experts -> admission rejections and
+        // unused-eviction churn are guaranteed
+        let slice = 2 * one;
+        {
+            let pool = PrefetchPool::new(
+                cache.clone(),
+                reader.clone(),
+                metrics.clone(),
+                slice,
+                2,
+                ExpertResidency::Decoded,
+            );
+            for round in 0..3usize {
+                for l in 0..cfg.n_layers {
+                    for e in 0..spec.n_experts {
+                        pool.enqueue(l, e);
+                    }
+                }
+                // demand fetches racing the in-flight workers: some
+                // prefetch commits lose (rejected), some land first and
+                // get promoted through the commit_demand race branch
+                for e in 0..spec.n_experts {
+                    demand_get(&cache, &reader, round % cfg.n_layers, e);
+                }
+                pool.quiesce();
+            }
+            pool.quiesce();
+            // drain: demand every key so each still-speculative entry
+            // terminates as a hit (promotion)
+            for l in 0..cfg.n_layers {
+                for e in 0..spec.n_experts {
+                    demand_get(&cache, &reader, l, e);
+                }
+            }
+        }
+        assert!(metrics.prefetch_issued_count() > 0, "storm issued nothing");
+        assert_eq!(
+            metrics.prefetch_issued_count(),
+            metrics.prefetch_hits_count() + metrics.prefetch_wasted_count(),
+            "issued ({}) != hits ({}) + waste ({} = rejected + evicted-unused)",
+            metrics.prefetch_issued_count(),
+            metrics.prefetch_hits_count(),
+            metrics.prefetch_wasted_count(),
+        );
+        // nothing is left speculative after the drain, so the books are
+        // final, not merely balanced-so-far
+        assert_eq!(cache.lock().unwrap().speculative_bytes(), 0);
+    }
 
     #[test]
     fn ewma_prior_tracks_pick_frequency() {

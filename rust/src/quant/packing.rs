@@ -356,6 +356,340 @@ pub fn col_lut_bytes(bits: u32, cols: usize, packed_len: usize) -> usize {
     }
 }
 
+/// The one LUT-profitability rule: bytes a packed matrix of the given
+/// granularity spends on a precomputed dequant LUT. Only per-out-channel
+/// (axis 1) matrices ever store one — per-tensor and per-row kernels
+/// build their `2^bits` table on the stack — and then only when
+/// [`col_lut_bytes`] says it pays for itself. Every consumer of the rule
+/// (`PackedMatrix::new`, the `TqmReader` index's `packed_resident_bytes`,
+/// and the cache's size-before-decode admission) MUST call this so the
+/// bytes the index promises are the bytes the decode allocates.
+pub fn col_lut_stored_bytes(
+    bits: u32,
+    granularity: crate::quant::Granularity,
+    cols: usize,
+    packed_len: usize,
+) -> usize {
+    match granularity {
+        crate::quant::Granularity::PerChannel { axis: 1 } => col_lut_bytes(bits, cols, packed_len),
+        _ => 0,
+    }
+}
+
+/// Resident footprint of a packed matrix: packed codes + f32 affine
+/// parameters + the (possibly absent) per-column LUT per
+/// [`col_lut_stored_bytes`]. Computable from index metadata alone, and
+/// asserted (drift test) to equal what a constructed `PackedMatrix`
+/// actually holds.
+pub fn packed_resident_bytes(
+    bits: u32,
+    granularity: crate::quant::Granularity,
+    cols: usize,
+    packed_len: usize,
+    n_scale: usize,
+    n_zero: usize,
+) -> usize {
+    packed_len + 4 * (n_scale + n_zero) + col_lut_stored_bytes(bits, granularity, cols, packed_len)
+}
+
+// ---------------------------------------------------------------------------
+// Blocked / batched quantized-domain kernels (qGEMM)
+// ---------------------------------------------------------------------------
+//
+// The scalar qGEMV kernels above walk the packed stream once per token;
+// a batch of B tokens routed to the same expert re-decodes the same
+// codes B times. The kernels below decode each run of codes ONCE into a
+// small stack buffer and apply it to every token of the batch, so one
+// traversal of the packed stream serves the whole routed token group.
+// With B == 1 they are the "blocked" qGEMV variants: same single
+// traversal, but the decode and the FMA run in separate tight loops over
+// a cache-line-sized buffer instead of interleaving per code.
+//
+// Accumulation contract: in [`Accumulation::Exact`] mode every output
+// element sees exactly the contributions, values, and order the scalar
+// kernels produce (rows ascending, zero activations skipped, dequantized
+// weight first) — bit-exact, property-tested with f32 equality. In
+// [`Accumulation::Relaxed`] mode rows are consumed in pairs and each
+// pair's two contributions are summed before touching the accumulator
+// (`out += x0*w0 + x1*w1`), which changes the association order; the
+// results are tolerance-tested against the exact kernel, not bit-exact,
+// in exchange for an extra independent FMA lane.
+
+/// Codes decoded per run: 64 f32 = 256 B of decoded weights — a few
+/// cache lines, comfortably inside L1 alongside the output rows.
+pub const QGEMM_BLOCK: usize = 64;
+
+/// Accumulation mode of the blocked/batched kernels. `Exact` (the
+/// default) reproduces the scalar kernels bit for bit; `Relaxed` trades
+/// bit-exactness for paired accumulator lanes and is only
+/// tolerance-tested.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Accumulation {
+    #[default]
+    Exact,
+    Relaxed,
+}
+
+/// Shared assertion set for the batched kernels. `x` is row-major
+/// `[b, rows]` activations, `out` row-major `[b, cols]`.
+#[inline(always)]
+fn qgemm_checks(packed: &[u8], bits: u32, cols: usize, x: &[f32], b: usize, out: &[f32]) {
+    assert!((1..=8).contains(&bits));
+    assert!(b > 0, "qgemm batch must be non-empty");
+    assert!(x.len() % b == 0, "qgemm activation batch not divisible: {} % {b}", x.len());
+    assert_eq!(out.len(), b * cols, "qgemm output dim mismatch");
+    let rows = x.len() / b;
+    assert!(
+        packed.len() * 8 >= rows * cols * bits as usize,
+        "packed stream too short for [{rows}, {cols}] at {bits} bits"
+    );
+}
+
+/// The one blocked/batched traversal, shared by every granularity:
+/// `decode(i, j0, buf)` fills `buf` with the dequantized weights of row
+/// `i`, columns `j0 .. j0 + buf.len()`. Rows whose activation is zero
+/// for EVERY token are skipped without decoding (the batched analogue of
+/// the scalar kernels' skip branch).
+fn qgemm_core<F>(
+    rows: usize,
+    cols: usize,
+    x: &[f32],
+    b: usize,
+    out: &mut [f32],
+    mode: Accumulation,
+    mut decode: F,
+) where
+    F: FnMut(usize, usize, &mut [f32]),
+{
+    out.fill(0.0);
+    let mut buf0 = [0.0f32; QGEMM_BLOCK];
+    let mut buf1 = [0.0f32; QGEMM_BLOCK];
+    // exact-mode body, also the relaxed path's odd-tail row
+    macro_rules! single_row {
+        ($i:expr) => {{
+            let i = $i;
+            if (0..b).any(|t| x[t * rows + i] != 0.0) {
+                let mut j = 0usize;
+                while j < cols {
+                    let blk = QGEMM_BLOCK.min(cols - j);
+                    decode(i, j, &mut buf0[..blk]);
+                    for t in 0..b {
+                        let xi = x[t * rows + i];
+                        if xi == 0.0 {
+                            continue;
+                        }
+                        let o = &mut out[t * cols + j..t * cols + j + blk];
+                        for (ov, &v) in o.iter_mut().zip(&buf0[..blk]) {
+                            *ov += xi * v;
+                        }
+                    }
+                    j += blk;
+                }
+            }
+        }};
+    }
+    match mode {
+        Accumulation::Exact => {
+            for i in 0..rows {
+                single_row!(i);
+            }
+        }
+        Accumulation::Relaxed => {
+            let mut i = 0usize;
+            while i + 1 < rows {
+                if (0..b).any(|t| x[t * rows + i] != 0.0 || x[t * rows + i + 1] != 0.0) {
+                    let mut j = 0usize;
+                    while j < cols {
+                        let blk = QGEMM_BLOCK.min(cols - j);
+                        decode(i, j, &mut buf0[..blk]);
+                        decode(i + 1, j, &mut buf1[..blk]);
+                        for t in 0..b {
+                            let (x0, x1) = (x[t * rows + i], x[t * rows + i + 1]);
+                            if x0 == 0.0 && x1 == 0.0 {
+                                continue;
+                            }
+                            let o = &mut out[t * cols + j..t * cols + j + blk];
+                            for (k, ov) in o.iter_mut().enumerate() {
+                                // paired lanes: one rounding point fewer
+                                // than two sequential adds — this is the
+                                // relaxation
+                                *ov += x0 * buf0[k] + x1 * buf1[k];
+                            }
+                        }
+                        j += blk;
+                    }
+                }
+                i += 2;
+            }
+            if i < rows {
+                single_row!(i);
+            }
+        }
+    }
+}
+
+/// Batched quantized-domain GEMM, per-tensor parameters: `Y = X · W` for
+/// row-major `x: [b, rows]` activations against the packed `[rows, cols]`
+/// codes, one traversal of the packed stream for the whole batch.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm(
+    packed: &[u8],
+    bits: u32,
+    cols: usize,
+    scale: f32,
+    zero: f32,
+    x: &[f32],
+    b: usize,
+    out: &mut [f32],
+    mode: Accumulation,
+) {
+    qgemm_checks(packed, bits, cols, x, b, out);
+    let mask = width_mask(bits);
+    let levels = 1usize << bits;
+    let mut lut = [0.0f32; 256];
+    for (c, v) in lut.iter_mut().take(levels).enumerate() {
+        *v = (c as f32 - zero) * scale;
+    }
+    let rows = x.len() / b;
+    let row_bits = cols * bits as usize;
+    qgemm_core(rows, cols, x, b, out, mode, |i, j0, buf| {
+        let mut bitpos = i * row_bits + j0 * bits as usize;
+        for v in buf.iter_mut() {
+            *v = lut[code_at(packed, bitpos, bits, mask) as usize];
+            bitpos += bits as usize;
+        }
+    });
+}
+
+/// Batched GEMM with per-row (axis 0) parameters; the row's LUT is
+/// rebuilt once per row and amortized over `b * cols` FMAs.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_rows(
+    packed: &[u8],
+    bits: u32,
+    cols: usize,
+    scale: &[f32],
+    zero: &[f32],
+    x: &[f32],
+    b: usize,
+    out: &mut [f32],
+    mode: Accumulation,
+) {
+    qgemm_checks(packed, bits, cols, x, b, out);
+    let rows = x.len() / b;
+    assert_eq!(scale.len(), rows);
+    assert_eq!(zero.len(), rows);
+    let mask = width_mask(bits);
+    let levels = 1usize << bits;
+    let mut lut = [0.0f32; 256];
+    let mut lut_row = usize::MAX;
+    let row_bits = cols * bits as usize;
+    qgemm_core(rows, cols, x, b, out, mode, |i, j0, buf| {
+        if lut_row != i {
+            let (s, z) = (scale[i], zero[i]);
+            for (c, v) in lut.iter_mut().take(levels).enumerate() {
+                *v = (c as f32 - z) * s;
+            }
+            lut_row = i;
+        }
+        let mut bitpos = i * row_bits + j0 * bits as usize;
+        for v in buf.iter_mut() {
+            *v = lut[code_at(packed, bitpos, bits, mask) as usize];
+            bitpos += bits as usize;
+        }
+    });
+}
+
+/// Batched GEMM with per-out-channel (axis 1) parameters, inline dequant
+/// (the no-stored-LUT form — see [`qgemm_cols_lut`]).
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_cols(
+    packed: &[u8],
+    bits: u32,
+    cols: usize,
+    scale: &[f32],
+    zero: &[f32],
+    x: &[f32],
+    b: usize,
+    out: &mut [f32],
+    mode: Accumulation,
+) {
+    qgemm_checks(packed, bits, cols, x, b, out);
+    assert_eq!(scale.len(), cols);
+    assert_eq!(zero.len(), cols);
+    let mask = width_mask(bits);
+    let rows = x.len() / b;
+    let row_bits = cols * bits as usize;
+    qgemm_core(rows, cols, x, b, out, mode, |i, j0, buf| {
+        let mut bitpos = i * row_bits + j0 * bits as usize;
+        for (k, v) in buf.iter_mut().enumerate() {
+            let c = code_at(packed, bitpos, bits, mask);
+            *v = (c as f32 - zero[j0 + k]) * scale[j0 + k];
+            bitpos += bits as usize;
+        }
+    });
+}
+
+/// [`qgemm_cols`] against the precomputed per-column LUT from
+/// [`build_col_lut`] — the packed-resident expert cache's form.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_cols_lut(
+    packed: &[u8],
+    bits: u32,
+    cols: usize,
+    lut: &[f32],
+    x: &[f32],
+    b: usize,
+    out: &mut [f32],
+    mode: Accumulation,
+) {
+    qgemm_checks(packed, bits, cols, x, b, out);
+    let levels = 1usize << bits;
+    assert_eq!(lut.len(), cols * levels, "column LUT size mismatch");
+    let mask = width_mask(bits);
+    let rows = x.len() / b;
+    let row_bits = cols * bits as usize;
+    qgemm_core(rows, cols, x, b, out, mode, |i, j0, buf| {
+        let mut bitpos = i * row_bits + j0 * bits as usize;
+        for (k, v) in buf.iter_mut().enumerate() {
+            let c = code_at(packed, bitpos, bits, mask);
+            *v = lut[(j0 + k) * levels + c as usize];
+            bitpos += bits as usize;
+        }
+    });
+}
+
+/// Blocked single-token qGEMV, per-tensor parameters: [`qgemm`] at
+/// batch 1 — decode a [`QGEMM_BLOCK`]-sized run once, then a tight FMA
+/// loop over it. Bit-exact vs [`qgemv`] in `Exact` mode.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemv_blocked(
+    packed: &[u8],
+    bits: u32,
+    cols: usize,
+    scale: f32,
+    zero: f32,
+    x: &[f32],
+    out: &mut [f32],
+    mode: Accumulation,
+) {
+    qgemm(packed, bits, cols, scale, zero, x, 1, out, mode);
+}
+
+/// Blocked single-token qGEMV against a precomputed per-column LUT:
+/// [`qgemm_cols_lut`] at batch 1.
+pub fn qgemv_cols_lut_blocked(
+    packed: &[u8],
+    bits: u32,
+    cols: usize,
+    lut: &[f32],
+    x: &[f32],
+    out: &mut [f32],
+    mode: Accumulation,
+) {
+    qgemm_cols_lut(packed, bits, cols, lut, x, 1, out, mode);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -565,6 +899,156 @@ mod tests {
         // boundary: equal sizes are stored
         assert_eq!(col_lut_bytes(2, 8, 128), 128);
         assert_eq!(col_lut_bytes(2, 8, 127), 0);
+    }
+
+    #[test]
+    fn qgemm_bit_exact_vs_per_token_qgemv_all_widths_granularities_batches() {
+        // THE batched-kernel property test: for widths 1..=8, ragged
+        // shapes (incl. cols beyond one QGEMM_BLOCK), every granularity
+        // kernel, and batch sizes 1..=8, Exact-mode qgemm equals running
+        // the scalar qgemv once per token — f32 equality, not
+        // approximate. Batch 1 doubles as the blocked-qGEMV proof.
+        let mut rng = crate::util::Rng::seed_from_u64(11);
+        for bits in 1..=8u32 {
+            for (rows, cols) in [(1usize, 1usize), (3, 5), (7, 13), (16, 24), (33, 7), (9, 150)] {
+                let n = rows * cols;
+                let codes: Vec<u8> =
+                    (0..n).map(|_| rng.gen_range(0, (1u16 << bits) as u64) as u8).collect();
+                let packed = pack(&codes, bits);
+                let (scale, zero) = (0.027f32, 2.0f32);
+                let rs: Vec<f32> = (0..rows).map(|r| 0.002 + r as f32 * 0.013).collect();
+                let rz: Vec<f32> = (0..rows).map(|r| (r % 4) as f32).collect();
+                let cs: Vec<f32> = (0..cols).map(|c| 0.004 + c as f32 * 0.009).collect();
+                let cz: Vec<f32> = (0..cols).map(|c| (c % 6) as f32).collect();
+                let lut = build_col_lut(bits, &cs, &cz);
+                for b in 1..=8usize {
+                    let xs: Vec<Vec<f32>> = (0..b).map(|_| test_x(&mut rng, rows)).collect();
+                    let xf: Vec<f32> = xs.iter().flatten().copied().collect();
+                    let mut want = vec![0.0f32; b * cols];
+                    let mut got = vec![1.0f32; b * cols]; // kernels must zero
+
+                    for (t, x) in xs.iter().enumerate() {
+                        qgemv(&packed, bits, cols, scale, zero, x, &mut want[t * cols..(t + 1) * cols]);
+                    }
+                    qgemm(&packed, bits, cols, scale, zero, &xf, b, &mut got, Accumulation::Exact);
+                    assert_eq!(got, want, "per-tensor bits={bits} {rows}x{cols} b={b}");
+
+                    for (t, x) in xs.iter().enumerate() {
+                        qgemv_rows(&packed, bits, cols, &rs, &rz, x, &mut want[t * cols..(t + 1) * cols]);
+                    }
+                    qgemm_rows(&packed, bits, cols, &rs, &rz, &xf, b, &mut got, Accumulation::Exact);
+                    assert_eq!(got, want, "per-row bits={bits} {rows}x{cols} b={b}");
+
+                    for (t, x) in xs.iter().enumerate() {
+                        qgemv_cols(&packed, bits, cols, &cs, &cz, x, &mut want[t * cols..(t + 1) * cols]);
+                    }
+                    qgemm_cols(&packed, bits, cols, &cs, &cz, &xf, b, &mut got, Accumulation::Exact);
+                    assert_eq!(got, want, "per-col bits={bits} {rows}x{cols} b={b}");
+
+                    for (t, x) in xs.iter().enumerate() {
+                        qgemv_cols_lut(&packed, bits, cols, &lut, x, &mut want[t * cols..(t + 1) * cols]);
+                    }
+                    qgemm_cols_lut(&packed, bits, cols, &lut, &xf, b, &mut got, Accumulation::Exact);
+                    assert_eq!(got, want, "per-col-lut bits={bits} {rows}x{cols} b={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_qgemv_wrappers_bit_exact_across_block_boundaries() {
+        // cols straddling QGEMM_BLOCK: one short block, exactly one
+        // block, one-past, and multi-block shapes
+        let mut rng = crate::util::Rng::seed_from_u64(12);
+        for bits in [1u32, 3, 6, 8] {
+            for cols in [QGEMM_BLOCK - 1, QGEMM_BLOCK, QGEMM_BLOCK + 1, 3 * QGEMM_BLOCK + 7] {
+                let rows = 17usize;
+                let codes: Vec<u8> = (0..rows * cols)
+                    .map(|_| rng.gen_range(0, (1u16 << bits) as u64) as u8)
+                    .collect();
+                let packed = pack(&codes, bits);
+                let x = test_x(&mut rng, rows);
+                let (scale, zero) = (0.021f32, 1.0f32);
+                let mut want = vec![0.0f32; cols];
+                qgemv(&packed, bits, cols, scale, zero, &x, &mut want);
+                let mut got = vec![5.0f32; cols];
+                qgemv_blocked(&packed, bits, cols, scale, zero, &x, &mut got, Accumulation::Exact);
+                assert_eq!(got, want, "blocked bits={bits} cols={cols}");
+
+                let cs: Vec<f32> = (0..cols).map(|c| 0.003 + c as f32 * 0.001).collect();
+                let cz: Vec<f32> = (0..cols).map(|c| (c % 3) as f32).collect();
+                let lut = build_col_lut(bits, &cs, &cz);
+                qgemv_cols_lut(&packed, bits, cols, &lut, &x, &mut want);
+                qgemv_cols_lut_blocked(&packed, bits, cols, &lut, &x, &mut got, Accumulation::Exact);
+                assert_eq!(got, want, "blocked-lut bits={bits} cols={cols}");
+            }
+        }
+    }
+
+    #[test]
+    fn relaxed_accumulation_is_close_but_only_tolerance_tested() {
+        // Relaxed mode pairs rows into two accumulator lanes — a
+        // different association order, so the contract is closeness (and
+        // only closeness) to the exact kernel.
+        let mut rng = crate::util::Rng::seed_from_u64(13);
+        for bits in 1..=8u32 {
+            for (rows, cols) in [(1usize, 9usize), (2, 70), (47, 129), (64, 64)] {
+                let n = rows * cols;
+                let codes: Vec<u8> =
+                    (0..n).map(|_| rng.gen_range(0, (1u16 << bits) as u64) as u8).collect();
+                let packed = pack(&codes, bits);
+                let (scale, zero) = (0.0137f32, (1u32 << (bits - 1)) as f32);
+                for b in [1usize, 3, 8] {
+                    let xf: Vec<f32> = (0..b).flat_map(|_| test_x(&mut rng, rows)).collect();
+                    let mut exact = vec![0.0f32; b * cols];
+                    let mut relaxed = vec![0.0f32; b * cols];
+                    qgemm(&packed, bits, cols, scale, zero, &xf, b, &mut exact, Accumulation::Exact);
+                    qgemm(&packed, bits, cols, scale, zero, &xf, b, &mut relaxed, Accumulation::Relaxed);
+                    for (k, (&e, &r)) in exact.iter().zip(&relaxed).enumerate() {
+                        let tol = 1e-3f32 * (1.0 + e.abs());
+                        assert!(
+                            (e - r).abs() <= tol,
+                            "bits={bits} {rows}x{cols} b={b} elem {k}: exact {e} relaxed {r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lut_profitability_rule_is_shared_across_widths_and_granularities() {
+        // drift test, widths 1..=8 x all granularities: only axis-1
+        // stores a LUT, and exactly when col_lut_bytes says it pays;
+        // resident bytes = codes + params + that LUT, byte for byte
+        use crate::quant::Granularity;
+        for bits in 1..=8u32 {
+            for cols in [4usize, 64, 512] {
+                for packed_len in [16usize, 4096, 1 << 20] {
+                    let lut = col_lut_bytes(bits, cols, packed_len);
+                    for g in [
+                        Granularity::PerTensor,
+                        Granularity::PerChannel { axis: 0 },
+                        Granularity::PerChannel { axis: 1 },
+                    ] {
+                        let stored = col_lut_stored_bytes(bits, g, cols, packed_len);
+                        match g {
+                            Granularity::PerChannel { axis: 1 } => assert_eq!(stored, lut),
+                            _ => assert_eq!(stored, 0, "only axis-1 ever stores a LUT"),
+                        }
+                        let (ns, nz) = match g {
+                            Granularity::PerTensor => (1, 1),
+                            _ => (cols, cols),
+                        };
+                        assert_eq!(
+                            packed_resident_bytes(bits, g, cols, packed_len, ns, nz),
+                            packed_len + 4 * (ns + nz) + stored,
+                            "bits={bits} cols={cols} packed={packed_len} {g:?}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -783,16 +783,24 @@ pub fn sched_table(tokens: usize, batch: usize) -> Result<Vec<SchedRow>> {
         });
     }
 
-    // 2 + 3) scheduled: dedup only, then dedup + prefetch
-    let run_sched = |label: &str, prefetch: bool| -> Result<SchedRow> {
+    // 2..4) scheduled: dedup only, dedup + prefetch, then dedup +
+    // prefetch + batched qGEMM (packed-resident experts, one kernel
+    // call per (layer, expert) token group)
+    let run_sched = |label: &str,
+                     prefetch: bool,
+                     batched: bool,
+                     residency: crate::config::ExpertResidency|
+     -> Result<SchedRow> {
         let metrics = Arc::new(PipelineMetrics::default());
-        let cache = ExpertCache::new(reader.clone(), metrics.clone(), budget, 1);
+        let cache =
+            ExpertCache::new(reader.clone(), metrics.clone(), budget, 1).with_residency(residency);
         let sopts = SchedOptions {
             prefetch,
             prefetch_budget_bytes: if prefetch { prefetch_slice } else { 0 },
             prefetch_workers: 1,
             ewma_decay: 0.8,
             sync_prefetch: true,
+            batched_qgemm: batched,
         };
         let sched = ExpertScheduler::new(
             reader.clone(),
@@ -820,14 +828,21 @@ pub fn sched_table(tokens: usize, batch: usize) -> Result<Vec<SchedRow>> {
             prefetch_wasted: prefetch.then(|| metrics.prefetch_wasted_count()),
         })
     };
-    rows.push(run_sched("scheduled (batch dedup)", false)?);
-    rows.push(run_sched("scheduled (dedup + prefetch)", true)?);
+    use crate::config::ExpertResidency as Res;
+    rows.push(run_sched("scheduled (batch dedup)", false, false, Res::Decoded)?);
+    rows.push(run_sched("scheduled (dedup + prefetch)", true, false, Res::Decoded)?);
+    rows.push(run_sched(
+        "scheduled (dedup + prefetch + packed batched qgemm)",
+        true,
+        true,
+        Res::Packed,
+    )?);
     Ok(rows)
 }
 
 pub fn render_sched(rows: &[SchedRow]) -> Table {
     let mut t = Table::new(
-        "E10 — expert scheduler: per-sequence vs batch dedup vs dedup+prefetch (tight budget)",
+        "E10 — expert scheduler: per-sequence vs dedup vs +prefetch vs +batched qGEMM (tight budget)",
         &[
             "scenario",
             "us/token",

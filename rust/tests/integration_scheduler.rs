@@ -99,6 +99,7 @@ fn scheduled_batched_forward_bit_exact_vs_unscheduled() {
         prefetch_workers: 2,
         ewma_decay: 0.8,
         sync_prefetch: true,
+        batched_qgemm: true,
     };
     // budget sized for the batch union (3 seqs x top_k x layers), so
     // every step-held expert stays cache-charged and the strict
@@ -193,6 +194,7 @@ fn prefetch_lowers_forward_stall_on_a_repeating_trace() {
             prefetch_workers: 1,
             ewma_decay: 0.8,
             sync_prefetch: true,
+            batched_qgemm: true,
         };
         let (sched, metrics) = make_scheduler(&reader, &cfg, budget, opts);
         let mut outs = Vec::new();
@@ -253,6 +255,7 @@ fn pinned_experts_survive_a_prefetch_storm_and_pin_decodes_cold_experts() {
         prefetch_workers: 2,
         ewma_decay: 0.5,
         sync_prefetch: true,
+        batched_qgemm: true,
     };
     let (sched, metrics) = make_scheduler(&reader, &cfg, 3 * one, opts);
 
@@ -284,4 +287,99 @@ fn pinned_experts_survive_a_prefetch_storm_and_pin_decodes_cold_experts() {
     assert!(c.speculative_bytes() <= 2 * one);
     drop(c);
     sched.unpin(0, 7);
+
+    // drain every still-speculative entry with a demand sweep (each
+    // promotion records a hit), then the prefetch books must balance
+    // exactly: every issued job ended as a hit, an admission/race
+    // rejection, or an unused eviction
+    for l in 0..cfg.n_layers {
+        for e in 0..spec.n_experts {
+            sched.get(l, e).unwrap();
+        }
+    }
+    assert_eq!(
+        metrics.prefetch_issued_count(),
+        metrics.prefetch_hits_count() + metrics.prefetch_wasted_count(),
+        "prefetch counters drifted: issued {} != hits {} + waste {}",
+        metrics.prefetch_issued_count(),
+        metrics.prefetch_hits_count(),
+        metrics.prefetch_wasted_count(),
+    );
+}
+
+#[test]
+fn batched_qgemm_one_packed_traversal_per_expert_group_outputs_unchanged() {
+    // Tentpole integration: with packed-resident experts and the batched
+    // knob on, each (layer, expert) group in a step is served by ONE
+    // qGEMM call over the packed stream (exec_batched_groups ==
+    // planned fetches, exec_batched_tokens == routed picks), and the
+    // outputs match both the scalar-kernel run and the unscheduled
+    // per-sequence reference bit for bit.
+    let (cfg, _dir, reader) = build_container(305, false);
+    let spec = cfg.moe.clone().unwrap();
+    let routers = load_routers(&reader, cfg.n_layers).unwrap();
+
+    // per-sequence reference on decoded weights
+    let resident: Vec<Vec<Arc<ExpertWeights>>> = (0..cfg.n_layers)
+        .map(|l| {
+            (0..spec.n_experts)
+                .map(|e| Arc::new(ExpertWeights::load(&reader, l, e).unwrap()))
+                .collect()
+        })
+        .collect();
+
+    // batch of 5 with duplicates so groups really carry >1 token
+    let mut rng = tiny_qmoe::util::Rng::seed_from_u64(19);
+    let trace: Vec<Vec<Vec<f32>>> = (0..6)
+        .map(|_| {
+            let a = rng.normal_vec(cfg.d_model, 1.0);
+            let b = rng.normal_vec(cfg.d_model, 1.0);
+            vec![a.clone(), b.clone(), a, b.clone(), b]
+        })
+        .collect();
+
+    let run = |batched: bool| {
+        let metrics = Arc::new(PipelineMetrics::default());
+        let cache = ExpertCache::new(reader.clone(), metrics.clone(), usize::MAX, 1)
+            .with_residency(tiny_qmoe::config::ExpertResidency::Packed);
+        let sched = ExpertScheduler::new(
+            reader.clone(),
+            metrics.clone(),
+            cache,
+            cfg.n_layers,
+            spec.n_experts,
+            SchedOptions { prefetch: false, batched_qgemm: batched, ..SchedOptions::default() },
+        );
+        let mut outs = Vec::new();
+        for xs in &trace {
+            outs.push(sched.forward_batch(&routers, &spec, xs).unwrap());
+        }
+        (outs, metrics)
+    };
+
+    let (outs_scalar, m_scalar) = run(false);
+    let (outs_batched, m_batched) = run(true);
+    assert_eq!(outs_scalar, outs_batched, "batched qGEMM changed the forward values");
+    for (xs, outs) in trace.iter().zip(&outs_batched) {
+        for (x, got) in xs.iter().zip(outs) {
+            let want =
+                moe_stack_forward(&routers, &spec, x, |l, e| Ok(resident[l][e].clone())).unwrap();
+            assert_eq!(got, &want, "batched packed forward diverged from decoded reference");
+        }
+    }
+
+    // scalar run: every routed pick went through a per-token kernel call
+    assert_eq!(m_scalar.exec_scalar_picks_count(), m_scalar.sched_routed_picks());
+    assert_eq!(m_scalar.exec_batched_groups_count(), 0);
+    assert_eq!(m_scalar.exec_batched_tokens_count(), 0);
+
+    // batched run: one qGEMM traversal per planned (layer, expert) group,
+    // covering every routed pick
+    assert!(m_batched.exec_batched_groups_count() > 0);
+    assert_eq!(m_batched.exec_batched_groups_count(), m_batched.sched_planned_fetches());
+    assert_eq!(m_batched.exec_batched_tokens_count(), m_batched.sched_routed_picks());
+    assert_eq!(m_batched.exec_scalar_picks_count(), 0);
+    // duplicates in the batch mean groups < tokens: the single traversal
+    // genuinely amortised across tokens
+    assert!(m_batched.exec_batched_groups_count() < m_batched.exec_batched_tokens_count());
 }
