@@ -295,6 +295,24 @@ pub struct ServeOptions {
     /// the knob exists for apples-to-apples measurement and as an
     /// escape hatch. Irrelevant for dense models.
     pub batched_qgemm: bool,
+    /// Retries after a failed expert fetch/decode (transient IO faults)
+    /// before the failure counts against the expert. 0 = fail fast.
+    pub retry_budget: u32,
+    /// Base backoff between expert-fetch retries; doubles per attempt
+    /// (bounded exponential backoff).
+    pub retry_backoff_ms: u64,
+    /// Consecutive decode/CRC failures before an expert is quarantined
+    /// (dropped from routing, gates renormalized over survivors).
+    /// 0 disables quarantine — every failure is terminal for its request.
+    pub quarantine_after: u32,
+    /// Re-probe a quarantined expert every N serving steps (recovery
+    /// path for transiently-bad media). 0 = never re-probe.
+    pub quarantine_probe_every: u64,
+    /// Per-request deadline in milliseconds, measured from submission:
+    /// a request still unfinished past its deadline is answered with a
+    /// structured `MoeError::Timeout` instead of more decode work.
+    /// 0 disables deadlines.
+    pub deadline_ms: u64,
 }
 
 impl Default for ServeOptions {
@@ -312,6 +330,11 @@ impl Default for ServeOptions {
             prefetch_workers: 1,
             prefetch_ewma_decay: 0.8,
             batched_qgemm: true,
+            retry_budget: 2,
+            retry_backoff_ms: 1,
+            quarantine_after: 3,
+            quarantine_probe_every: 64,
+            deadline_ms: 0,
         }
     }
 }

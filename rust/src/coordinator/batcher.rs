@@ -22,19 +22,42 @@ impl Default for BatchPolicy {
 /// Block for the first item, then drain until full or deadline. Returns an
 /// empty vec when the channel has disconnected and is drained.
 pub fn collect_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Vec<T> {
+    collect_batch_by(rx, policy, |_| None)
+}
+
+/// [`collect_batch`] with per-item request deadlines: `deadline_of` maps
+/// an item to its (optional) hard deadline, and the drain window shrinks
+/// to the earliest one — a request that has only `t < max_wait` left
+/// must not spend all of `t` queueing for batch-mates. Items are still
+/// returned even when already past their deadline; expiry is answered
+/// upstream (the host sends a structured Timeout), the batcher only
+/// promises not to sit on them.
+pub fn collect_batch_by<T>(
+    rx: &Receiver<T>,
+    policy: BatchPolicy,
+    deadline_of: impl Fn(&T) -> Option<Instant>,
+) -> Vec<T> {
     let mut batch = Vec::with_capacity(policy.max_batch);
     match rx.recv() {
         Ok(item) => batch.push(item),
         Err(_) => return batch,
     }
-    let deadline = Instant::now() + policy.max_wait;
+    let mut deadline = Instant::now() + policy.max_wait;
+    if let Some(d) = deadline_of(&batch[0]) {
+        deadline = deadline.min(d);
+    }
     while batch.len() < policy.max_batch {
         let now = Instant::now();
         if now >= deadline {
             break;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(item) => batch.push(item),
+            Ok(item) => {
+                if let Some(d) = deadline_of(&item) {
+                    deadline = deadline.min(d);
+                }
+                batch.push(item);
+            }
             Err(RecvTimeoutError::Timeout) => break,
             Err(RecvTimeoutError::Disconnected) => break,
         }
@@ -158,6 +181,41 @@ mod tests {
         }
         producer.join().unwrap();
         assert_eq!(seen, total, "items lost under flood");
+    }
+
+    #[test]
+    fn item_deadline_shrinks_the_drain_window() {
+        // the queued item carries a deadline much closer than max_wait:
+        // the batcher must dispatch at (about) the item deadline instead
+        // of holding the full window
+        let (tx, rx) = mpsc::channel();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(500) };
+        let soon = Instant::now() + Duration::from_millis(20);
+        tx.send((1u32, Some(soon))).unwrap();
+        let t0 = Instant::now();
+        let b = collect_batch_by(&rx, policy, |&(_, d)| d);
+        assert_eq!(b.len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_millis(400),
+            "item deadline ignored ({:?})",
+            t0.elapsed()
+        );
+        drop(tx);
+    }
+
+    #[test]
+    fn expired_items_are_returned_not_dropped() {
+        // already-past deadlines cut the drain short but the item itself
+        // still comes back — expiry is the host's call, not the batcher's
+        let (tx, rx) = mpsc::channel();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(200) };
+        let past = Instant::now() - Duration::from_millis(5);
+        tx.send((7u32, Some(past))).unwrap();
+        let t0 = Instant::now();
+        let b = collect_batch_by(&rx, policy, |&(_, d)| d);
+        assert_eq!(b.len(), 1, "expired item swallowed by the batcher");
+        assert!(t0.elapsed() < Duration::from_millis(100));
+        drop(tx);
     }
 
     #[test]

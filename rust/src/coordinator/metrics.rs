@@ -4,6 +4,8 @@
 
 use std::sync::Mutex;
 
+use crate::util::lock_recover;
+
 #[derive(Default)]
 pub struct ServeMetrics {
     inner: Mutex<Inner>,
@@ -33,7 +35,9 @@ fn stats(xs: &[f64]) -> LatencyStats {
         return LatencyStats::default();
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN sample (it would take a bug upstream, but latency
+    // math divides) must not panic the metrics thread mid-serve
+    v.sort_by(|a, b| a.total_cmp(b));
     LatencyStats {
         mean: v.iter().sum::<f64>() / v.len() as f64,
         p50: v[v.len() / 2],
@@ -56,7 +60,7 @@ pub struct ServeSnapshot {
 
 impl ServeMetrics {
     pub fn record_batch(&self, size: usize) {
-        let mut i = self.inner.lock().unwrap();
+        let mut i = lock_recover(&self.inner);
         i.batches += 1;
         i.batch_sizes.push(size);
     }
@@ -68,7 +72,7 @@ impl ServeMetrics {
         decode_s: f64,
         tokens_out: usize,
     ) {
-        let mut i = self.inner.lock().unwrap();
+        let mut i = lock_recover(&self.inner);
         i.requests += 1;
         i.tokens_out += tokens_out as u64;
         i.queue_s.push(queue_s);
@@ -78,7 +82,7 @@ impl ServeMetrics {
     }
 
     pub fn snapshot(&self) -> ServeSnapshot {
-        let i = self.inner.lock().unwrap();
+        let i = lock_recover(&self.inner);
         let decode_total: f64 = i.decode_s.iter().sum();
         ServeSnapshot {
             requests: i.requests,

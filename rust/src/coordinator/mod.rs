@@ -29,9 +29,13 @@ use crate::model::WeightSource;
 use crate::pipeline::{Engine, PipelineMetrics, Session};
 use crate::runtime::Runtime;
 
-pub use batcher::{collect_batch, BatchPolicy};
+pub use batcher::{collect_batch, collect_batch_by, BatchPolicy};
 pub use metrics::{ServeMetrics, ServeSnapshot};
 pub use moe_host::{MoeHost, MoeHostSpec, MoeTraceRequest, MoeTraceResponse};
+// the structured error vocabulary MoeHost answers with (Timeout /
+// Quarantined / Aborted) — re-exported so serving clients need not know
+// it lives in `faults`
+pub use crate::faults::MoeError;
 
 /// What a client submits.
 pub struct GenRequest {

@@ -19,10 +19,19 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::config::{MoeSpec, ServeOptions};
-use crate::coordinator::batcher::{collect_batch, BatchPolicy};
+use crate::coordinator::batcher::{collect_batch_by, BatchPolicy};
+use crate::faults::MoeError;
 use crate::format::TqmReader;
 use crate::model::moe::{load_routers, Router};
 use crate::pipeline::{ExpertCache, ExpertScheduler, PipelineMetrics, SchedOptions};
+
+/// How long past a request's deadline [`MoeHost::generate`] keeps waiting
+/// before declaring the serving thread wedged. The serving loop answers
+/// expired requests with a structured Timeout at the next step boundary;
+/// a response further overdue than this means no step boundary is being
+/// reached (a stuck decode, a deadlocked worker) and blocking longer
+/// would just hang the client.
+const WATCHDOG_GRACE: Duration = Duration::from_millis(500);
 
 /// What a client submits: a trace of token vectors (one per decode step)
 /// to forward through the MoE stack.
@@ -41,6 +50,10 @@ pub struct MoeTraceResponse {
 struct Envelope {
     req: MoeTraceRequest,
     enqueued: Instant,
+    /// Hard completion deadline (from `ServeOptions::deadline_ms`); past
+    /// it the request is answered with [`MoeError::Timeout`] instead of
+    /// stepping further.
+    deadline: Option<Instant>,
     resp: mpsc::Sender<Result<MoeTraceResponse>>,
 }
 
@@ -61,6 +74,9 @@ pub struct MoeHost {
     /// Shared scheduler/cache metrics (dedup factor, prefetch hit/waste,
     /// expert stall) — live while the thread serves.
     pub metrics: Arc<PipelineMetrics>,
+    /// Per-request completion budget (`ServeOptions::deadline_ms`; None
+    /// when 0 = unbounded).
+    deadline: Option<Duration>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -74,6 +90,11 @@ impl MoeHost {
         );
         let routers = load_routers(&spec.reader, spec.n_layers)?;
         let metrics = Arc::new(PipelineMetrics::default());
+        // a chaos harness wants its injection tallies next to the
+        // retry/quarantine counters they cause
+        if let Some(plan) = spec.reader.fault_plan() {
+            plan.bind_metrics(metrics.clone());
+        }
         let cache = ExpertCache::from_options(spec.reader.clone(), metrics.clone(), &spec.serve);
         let sched_opts = spec
             .sched
@@ -92,29 +113,69 @@ impl MoeHost {
             max_wait: Duration::from_millis(spec.serve.max_wait_ms),
         };
         let moe = spec.moe.clone();
+        let deadline =
+            (spec.serve.deadline_ms > 0).then(|| Duration::from_millis(spec.serve.deadline_ms));
         let (tx, rx) = mpsc::channel::<Envelope>();
         let join = std::thread::Builder::new()
             .name("serve-moe-host".into())
             .spawn(move || serve_loop(rx, policy, sched, routers, moe))?;
-        Ok(Self { tx, metrics, join: Some(join) })
+        Ok(Self { tx, metrics, deadline, join: Some(join) })
     }
 
-    /// Submit a trace; returns a receiver for the response.
+    /// Submit a trace; returns a receiver for the response. The request's
+    /// deadline clock (when `ServeOptions::deadline_ms` is set) starts
+    /// now — queueing time counts against it.
     pub fn submit(
         &self,
         req: MoeTraceRequest,
     ) -> Result<mpsc::Receiver<Result<MoeTraceResponse>>> {
+        let deadline = self.deadline.map(|d| Instant::now() + d);
+        self.submit_at(req, deadline)
+    }
+
+    fn submit_at(
+        &self,
+        req: MoeTraceRequest,
+        deadline: Option<Instant>,
+    ) -> Result<mpsc::Receiver<Result<MoeTraceResponse>>> {
         let (resp_tx, resp_rx) = mpsc::channel();
         self.tx
-            .send(Envelope { req, enqueued: Instant::now(), resp: resp_tx })
+            .send(Envelope { req, enqueued: Instant::now(), deadline, resp: resp_tx })
             .map_err(|_| anyhow::anyhow!("MoE serving thread is gone"))?;
         Ok(resp_rx)
     }
 
-    /// Submit and block for the response.
+    /// Submit and block for the response, with a liveness watchdog: if
+    /// the serving thread exits without answering, or a deadlined request
+    /// is overdue past [`WATCHDOG_GRACE`] (the serving loop is wedged —
+    /// no step boundary is being reached), this returns a structured
+    /// [`MoeError::Aborted`] instead of hanging forever.
     pub fn generate(&self, req: MoeTraceRequest) -> Result<MoeTraceResponse> {
-        let rx = self.submit(req)?;
-        rx.recv().map_err(|_| anyhow::anyhow!("response channel closed"))?
+        let deadline = self.deadline.map(|d| Instant::now() + d);
+        let rx = self.submit_at(req, deadline)?;
+        loop {
+            match rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(r) => return r,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("response channel closed")
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if self.join.as_ref().map(|j| j.is_finished()).unwrap_or(true) {
+                        return Err(anyhow::Error::new(MoeError::Aborted(
+                            "MoE serving thread exited without answering".into(),
+                        )));
+                    }
+                    if let Some(d) = deadline {
+                        if Instant::now() > d + WATCHDOG_GRACE {
+                            return Err(anyhow::Error::new(MoeError::Aborted(
+                                "response overdue past deadline + grace (serving loop wedged)"
+                                    .into(),
+                            )));
+                        }
+                    }
+                }
+            }
+        }
     }
 
     /// Stop the serving thread (drains the queue first).
@@ -143,7 +204,10 @@ fn serve_loop(
     moe: MoeSpec,
 ) {
     loop {
-        let batch = collect_batch(&rx, policy);
+        // the drain window shrinks to the earliest request deadline in
+        // the forming batch — a request with little budget left must not
+        // spend it queueing for batch-mates
+        let batch = collect_batch_by(&rx, policy, |env: &Envelope| env.deadline);
         if batch.is_empty() {
             return; // disconnected and drained
         }
@@ -177,6 +241,24 @@ fn serve_trace_batch(
         }
     }
     loop {
+        // deadline retirement: a trace past its deadline gets a
+        // structured Timeout at this step boundary instead of consuming
+        // more forward steps (partial outputs are dropped — a timed-out
+        // request has no well-defined result)
+        let now = Instant::now();
+        for a in active.iter_mut() {
+            if a.cursor >= a.env.req.trace.len() {
+                continue;
+            }
+            if let Some(d) = a.env.deadline {
+                if now >= d {
+                    sched.metrics().record_deadline_timeout();
+                    let _ = a.env.resp.send(Err(anyhow::Error::new(MoeError::Timeout)));
+                    a.cursor = a.env.req.trace.len(); // retire
+                    a.outputs.clear();
+                }
+            }
+        }
         let live: Vec<usize> = (0..active.len())
             .filter(|&i| active[i].cursor < active[i].env.req.trace.len())
             .collect();
@@ -197,8 +279,15 @@ fn serve_trace_batch(
             }
             Err(e) => {
                 let msg = format!("moe forward failed: {e}");
+                let typed = e.downcast_ref::<MoeError>().cloned();
                 for &i in &live {
-                    let _ = active[i].env.resp.send(Err(anyhow::anyhow!("{msg}")));
+                    // keep the typed error downcastable per trace (the
+                    // context preserves the human-readable message)
+                    let err = match &typed {
+                        Some(me) => anyhow::Error::new(me.clone()).context(msg.clone()),
+                        None => anyhow::anyhow!("{msg}"),
+                    };
+                    let _ = active[i].env.resp.send(Err(err));
                     active[i].cursor = active[i].env.req.trace.len(); // retire
                     active[i].outputs.clear();
                 }
@@ -416,6 +505,97 @@ mod tests {
         );
         assert!(resp_short.queue_s >= 0.0 && resp_long.queue_s >= 0.0);
         host.shutdown();
+    }
+
+    #[test]
+    fn deadline_exceeded_is_answered_with_structured_timeout() {
+        let (cfg, _dir, reader) = demo();
+        let host = MoeHost::start(MoeHostSpec {
+            reader,
+            n_layers: cfg.n_layers,
+            moe: cfg.moe.clone().unwrap(),
+            // deadline far below max_wait: the batcher dispatches at the
+            // deadline and the serve loop's first boundary check retires
+            // the request with Timeout — deterministic, no racing
+            serve: ServeOptions {
+                max_batch: 4,
+                max_wait_ms: 2000,
+                deadline_ms: 10,
+                ..Default::default()
+            },
+            sched: None,
+        })
+        .unwrap();
+        let trace = clustered_trace(cfg.d_model, 2, 3, 4, 37);
+        let err = host
+            .generate(MoeTraceRequest { trace })
+            .expect_err("expired request returned Ok");
+        match err.downcast_ref::<MoeError>() {
+            Some(MoeError::Timeout) => {}
+            other => panic!("expected structured Timeout, got {other:?} ({err})"),
+        }
+        assert_eq!(host.metrics.deadline_timeouts_count(), 1);
+        host.shutdown();
+    }
+
+    #[test]
+    fn watchdog_aborts_instead_of_hanging_on_a_wedged_step() {
+        // a record source that sleeps 200 ms per expert payload access:
+        // one forward step takes >1 s, far past deadline + grace, and no
+        // step boundary is reached meanwhile — generate()'s watchdog
+        // must abort the wait instead of blocking on the wedged thread
+        struct SlowSource;
+        impl crate::faults::RecordSource for SlowSource {
+            fn fetch<'a>(
+                &self,
+                name: &str,
+                payload: &'a [u8],
+            ) -> Result<std::borrow::Cow<'a, [u8]>> {
+                if name.contains(".experts.") {
+                    std::thread::sleep(Duration::from_millis(200));
+                }
+                Ok(std::borrow::Cow::Borrowed(payload))
+            }
+        }
+        let (cfg, dir, _reader) = demo();
+        let reader = Arc::new(
+            TqmReader::open(dir.join("moe.tqm"))
+                .unwrap()
+                .with_record_source(Arc::new(SlowSource)),
+        );
+        let host = MoeHost::start(MoeHostSpec {
+            reader,
+            n_layers: cfg.n_layers,
+            moe: cfg.moe.clone().unwrap(),
+            // deadline generous enough that the step *starts* (dispatch
+            // happens at max_wait, well inside it), then wedges
+            serve: ServeOptions {
+                max_batch: 1,
+                max_wait_ms: 1,
+                deadline_ms: 150,
+                ..Default::default()
+            },
+            sched: Some(SchedOptions {
+                prefetch: false,
+                ..SchedOptions::from_serve(&ServeOptions::default())
+            }),
+        })
+        .unwrap();
+        let trace = clustered_trace(cfg.d_model, 2, 1, 1, 41);
+        let t0 = Instant::now();
+        let err = host
+            .generate(MoeTraceRequest { trace })
+            .expect_err("wedged step returned Ok before its sleeps could finish");
+        match err.downcast_ref::<MoeError>() {
+            Some(MoeError::Aborted(_)) => {}
+            other => panic!("expected structured Aborted, got {other:?} ({err})"),
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "watchdog took {:?}",
+            t0.elapsed()
+        );
+        host.shutdown(); // joins: the wedged step finishes its sleeps
     }
 
     #[test]

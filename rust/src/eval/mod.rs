@@ -55,7 +55,7 @@ pub fn run_eval(
             correct += 1;
         }
     }
-    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lats.sort_by(|a, b| a.total_cmp(b));
     Ok(EvalReport {
         family: es.family.clone(),
         variant: variant.to_string(),

@@ -1,0 +1,600 @@
+//! Deterministic fault injection + quarantine state for the serving stack.
+//!
+//! The paper's deployment target is a phone: flaky flash, torn writes,
+//! background IO stalls, no network fallback. This module makes those
+//! conditions *reproducible* so the rest of the stack can be tested
+//! against them instead of around them:
+//!
+//! * [`RecordSource`] — the seam. `TqmReader` routes every quantized
+//!   payload access through a `RecordSource` before CRC checking; the
+//!   default [`Passthrough`] borrows the mapped bytes untouched (zero
+//!   cost, bit-exact with the pre-fault-injection reader).
+//! * [`FaultPlan`] — a seeded `RecordSource` that injects transient read
+//!   failures, bit-flip corruption, truncations and slow-IO delays (drawn
+//!   from a scaled [`crate::netlat::NetworkModel`]). Every decision is a
+//!   pure function of `(seed, record name, per-record access index)`, so
+//!   a fault scenario replays exactly from one u64 even when accesses
+//!   race across scheduler + prefetch threads.
+//! * [`Quarantine`] — poisoned-expert bookkeeping: an expert whose record
+//!   keeps failing CRC/decode is taken out of routing after N failures,
+//!   periodically re-probed, and restored on a successful decode. The
+//!   scheduler renormalizes gating over the surviving picks, so degraded
+//!   output is still deterministic.
+
+use std::borrow::Cow;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::netlat::NetworkModel;
+use crate::pipeline::PipelineMetrics;
+use crate::util::{lock_recover, Rng};
+
+/// Structured serving errors: what a client gets back instead of a
+/// dropped channel or an opaque string when the degraded-serving
+/// machinery gives up on a request. Delivered through `anyhow`, so
+/// callers classify with `err.downcast_ref::<MoeError>()`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MoeError {
+    /// The request ran past its per-request deadline budget.
+    Timeout,
+    /// Every routed expert at `layer` was quarantined or unavailable —
+    /// there was nothing left to renormalize gating over.
+    Quarantined { layer: usize },
+    /// The serving thread died or the host shut down mid-request.
+    Aborted(String),
+}
+
+impl std::fmt::Display for MoeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MoeError::Timeout => write!(f, "request deadline exceeded"),
+            MoeError::Quarantined { layer } => {
+                write!(f, "all routed experts unavailable at layer {layer} (quarantined)")
+            }
+            MoeError::Aborted(reason) => write!(f, "request aborted: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for MoeError {}
+
+/// Where a record's payload bytes come from. The reader owns the mapped
+/// container bytes; a source may pass them through, fail the access, or
+/// hand back a mutated copy (the CRC check runs *after* the source, so
+/// injected corruption is detected exactly like real corruption).
+pub trait RecordSource: Send + Sync {
+    fn fetch<'a>(&self, name: &str, payload: &'a [u8]) -> Result<Cow<'a, [u8]>>;
+}
+
+/// The default source: the container bytes, untouched.
+#[derive(Debug, Default)]
+pub struct Passthrough;
+
+impl RecordSource for Passthrough {
+    fn fetch<'a>(&self, _name: &str, payload: &'a [u8]) -> Result<Cow<'a, [u8]>> {
+        Ok(Cow::Borrowed(payload))
+    }
+}
+
+/// Knobs for one fault scenario. All probabilities are per payload
+/// access; independent rolls, applied in a fixed precedence
+/// (delay → permanent poison → transient failure → bit-flip → truncate)
+/// so one access injects at most one error.
+#[derive(Clone, Debug)]
+pub struct FaultConfig {
+    /// Root seed — the whole scenario replays from this one value.
+    pub seed: u64,
+    /// P(transient read failure) — an `Err` that succeeds on retry.
+    pub transient_p: f64,
+    /// P(bit-flip corruption) — flips one bit, so the CRC check trips.
+    pub corrupt_p: f64,
+    /// P(truncation) — the source returns a strict prefix of the payload.
+    pub truncate_p: f64,
+    /// P(slow-IO delay) — sleeps for a scaled `slow_model` sample.
+    pub slow_p: f64,
+    /// Latency shape for slow-IO spikes; sampled seconds are divided by
+    /// 1000 (a WAN round-trip model reused at local-flash scale) and
+    /// capped at `max_delay`.
+    pub slow_model: NetworkModel,
+    /// Hard cap on any injected delay.
+    pub max_delay: Duration,
+    /// Record names that fail CRC on *every* access (permanently
+    /// poisoned media) until the record is re-written — the quarantine
+    /// path's worst case.
+    pub poisoned: Vec<String>,
+    /// Only inject on expert records (names containing `.experts.`), so
+    /// eager router loads at host start are never hit. Default true.
+    pub experts_only: bool,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            transient_p: 0.0,
+            corrupt_p: 0.0,
+            truncate_p: 0.0,
+            slow_p: 0.0,
+            slow_model: NetworkModel::fast_fiber(),
+            max_delay: Duration::from_millis(2),
+            poisoned: Vec::new(),
+            experts_only: true,
+        }
+    }
+}
+
+/// FNV-1a over the record name: mixes the name into the per-access seed
+/// so distinct records draw independent fault streams.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A seeded, thread-safe fault injector implementing [`RecordSource`].
+///
+/// Determinism contract: the decision for the k-th access to record R is
+/// `f(seed, R, k)` — independent of thread interleaving, wall clock, or
+/// which other records were touched in between. (The *assignment* of k
+/// to a racing thread is first-come, but each access still lands
+/// somewhere in the same per-record decision stream, so aggregate
+/// behavior — how many faults each record sees over n accesses — is
+/// seed-reproducible.)
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    /// Per-record access counters (k in the determinism contract).
+    accesses: Mutex<HashMap<String, u64>>,
+    transient_injected: AtomicU64,
+    corrupt_injected: AtomicU64,
+    truncate_injected: AtomicU64,
+    delays_injected: AtomicU64,
+    metrics: Mutex<Option<Arc<PipelineMetrics>>>,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig) -> Self {
+        Self {
+            cfg,
+            accesses: Mutex::new(HashMap::new()),
+            transient_injected: AtomicU64::new(0),
+            corrupt_injected: AtomicU64::new(0),
+            truncate_injected: AtomicU64::new(0),
+            delays_injected: AtomicU64::new(0),
+            metrics: Mutex::new(None),
+        }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Mirror injected-fault counts into the serving metrics (bound by
+    /// `MoeHost::start` so `tqm` summaries show the fault pressure).
+    pub fn bind_metrics(&self, m: Arc<PipelineMetrics>) {
+        *lock_recover(&self.metrics) = Some(m);
+    }
+
+    pub fn transient_injected(&self) -> u64 {
+        self.transient_injected.load(Ordering::Relaxed)
+    }
+
+    pub fn corrupt_injected(&self) -> u64 {
+        self.corrupt_injected.load(Ordering::Relaxed)
+    }
+
+    pub fn truncate_injected(&self) -> u64 {
+        self.truncate_injected.load(Ordering::Relaxed)
+    }
+
+    pub fn delays_injected(&self) -> u64 {
+        self.delays_injected.load(Ordering::Relaxed)
+    }
+
+    fn with_metrics(&self, f: impl FnOnce(&PipelineMetrics)) {
+        if let Some(m) = lock_recover(&self.metrics).as_ref() {
+            f(m);
+        }
+    }
+
+    /// Next access index for `name` (0-based, first-come under races).
+    fn access_index(&self, name: &str) -> u64 {
+        let mut map = lock_recover(&self.accesses);
+        let slot = map.entry(name.to_string()).or_insert(0);
+        let idx = *slot;
+        *slot += 1;
+        idx
+    }
+}
+
+impl RecordSource for FaultPlan {
+    fn fetch<'a>(&self, name: &str, payload: &'a [u8]) -> Result<Cow<'a, [u8]>> {
+        if self.cfg.experts_only && !name.contains(".experts.") {
+            return Ok(Cow::Borrowed(payload));
+        }
+        let idx = self.access_index(name);
+        let mut rng = Rng::seed_from_u64(self.cfg.seed ^ fnv1a(name) ^ idx.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        // Slow-IO spike: independent of the error rolls (a slow read can
+        // also fail), applied first so delays hit every outcome class.
+        if self.cfg.slow_p > 0.0 && rng.gen_bool(self.cfg.slow_p) {
+            let secs = (self.cfg.slow_model.sample(&mut rng) / 1000.0)
+                .min(self.cfg.max_delay.as_secs_f64())
+                .max(0.0);
+            self.delays_injected.fetch_add(1, Ordering::Relaxed);
+            self.with_metrics(|m| m.record_fault_delay());
+            std::thread::sleep(Duration::from_secs_f64(secs));
+        }
+        // Permanent poison: every access corrupts, so retries exhaust and
+        // the expert lands in quarantine.
+        if self.cfg.poisoned.iter().any(|p| p == name) {
+            self.corrupt_injected.fetch_add(1, Ordering::Relaxed);
+            self.with_metrics(|m| m.record_fault_corrupt());
+            return Ok(Cow::Owned(flip_bit(payload, &mut rng)));
+        }
+        if self.cfg.transient_p > 0.0 && rng.gen_bool(self.cfg.transient_p) {
+            self.transient_injected.fetch_add(1, Ordering::Relaxed);
+            self.with_metrics(|m| m.record_fault_transient());
+            bail!("injected transient read failure on {name:?} (access {idx})");
+        }
+        if self.cfg.corrupt_p > 0.0 && rng.gen_bool(self.cfg.corrupt_p) {
+            self.corrupt_injected.fetch_add(1, Ordering::Relaxed);
+            self.with_metrics(|m| m.record_fault_corrupt());
+            return Ok(Cow::Owned(flip_bit(payload, &mut rng)));
+        }
+        if self.cfg.truncate_p > 0.0 && rng.gen_bool(self.cfg.truncate_p) && !payload.is_empty() {
+            self.truncate_injected.fetch_add(1, Ordering::Relaxed);
+            self.with_metrics(|m| m.record_fault_corrupt());
+            let keep = rng.gen_range_usize(0, payload.len());
+            return Ok(Cow::Owned(payload[..keep].to_vec()));
+        }
+        Ok(Cow::Borrowed(payload))
+    }
+}
+
+fn flip_bit(payload: &[u8], rng: &mut Rng) -> Vec<u8> {
+    let mut out = payload.to_vec();
+    if !out.is_empty() {
+        let byte = rng.gen_range_usize(0, out.len());
+        let bit = rng.gen_range_usize(0, 8) as u8;
+        out[byte] ^= 1 << bit;
+    }
+    out
+}
+
+/// Outcome of a quarantine lookup for one `(layer, expert)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuarantineCheck {
+    /// Not quarantined — route and fetch normally.
+    Clear,
+    /// Quarantined — drop from routing, renormalize surviving gates.
+    Quarantined,
+    /// Quarantined but due for a recovery probe — attempt the fetch; a
+    /// success restores the expert, a failure re-arms the quarantine.
+    Probe,
+}
+
+#[derive(Default)]
+struct QuarantineState {
+    /// Consecutive decode/CRC failures per expert (cleared on success).
+    failures: HashMap<(usize, usize), u32>,
+    /// Quarantined experts → step of quarantine entry / last probe.
+    quarantined: HashMap<(usize, usize), u64>,
+    /// Serving-step clock (ticked once per scheduled forward step).
+    step: u64,
+}
+
+/// Poisoned-expert quarantine: failure counting, routing exclusion, and
+/// periodic re-probe. Thread-safe; shared by the scheduler's demand path
+/// and prefetch candidate selection.
+pub struct Quarantine {
+    /// Failures before an expert is quarantined. 0 disables quarantine
+    /// entirely (every check is `Clear`).
+    max_failures: u32,
+    /// Re-probe a quarantined expert every this many steps (0 = never).
+    probe_every: u64,
+    state: Mutex<QuarantineState>,
+}
+
+impl Quarantine {
+    pub fn new(max_failures: u32, probe_every: u64) -> Self {
+        Self { max_failures, probe_every, state: Mutex::new(QuarantineState::default()) }
+    }
+
+    /// Whether quarantine bookkeeping is enabled at all.
+    pub fn is_active(&self) -> bool {
+        self.max_failures > 0
+    }
+
+    /// Advance the serving-step clock (drives the re-probe schedule).
+    pub fn tick_step(&self) {
+        lock_recover(&self.state).step += 1;
+    }
+
+    pub fn check(&self, layer: usize, expert: usize) -> QuarantineCheck {
+        if !self.is_active() {
+            return QuarantineCheck::Clear;
+        }
+        let mut st = lock_recover(&self.state);
+        let step = st.step;
+        match st.quarantined.get_mut(&(layer, expert)) {
+            None => QuarantineCheck::Clear,
+            Some(since) => {
+                if self.probe_every > 0 && step.saturating_sub(*since) >= self.probe_every {
+                    // reset the probe clock so a failed probe waits a full
+                    // interval before the next attempt
+                    *since = step;
+                    QuarantineCheck::Probe
+                } else {
+                    QuarantineCheck::Quarantined
+                }
+            }
+        }
+    }
+
+    /// Passive view: currently quarantined, probe-due or not. Unlike
+    /// [`Quarantine::check`] this never resets the probe clock — use it
+    /// for filtering (prefetch candidates) so a speculative path cannot
+    /// consume the demand path's recovery probe.
+    pub fn is_quarantined(&self, layer: usize, expert: usize) -> bool {
+        self.is_active() && lock_recover(&self.state).quarantined.contains_key(&(layer, expert))
+    }
+
+    /// Record a decode/CRC failure. Returns true when this failure is the
+    /// one that quarantines the expert (for metrics).
+    pub fn record_failure(&self, layer: usize, expert: usize) -> bool {
+        if !self.is_active() {
+            return false;
+        }
+        let mut st = lock_recover(&self.state);
+        let step = st.step;
+        let n = st.failures.entry((layer, expert)).or_insert(0);
+        *n += 1;
+        if *n >= self.max_failures {
+            // (re-)enter quarantine; reset the probe clock either way
+            return st.quarantined.insert((layer, expert), step).is_none();
+        }
+        false
+    }
+
+    /// Record a successful decode. Returns true when this cleared an
+    /// active quarantine (a recovery, for metrics).
+    pub fn record_success(&self, layer: usize, expert: usize) -> bool {
+        if !self.is_active() {
+            return false;
+        }
+        let mut st = lock_recover(&self.state);
+        st.failures.remove(&(layer, expert));
+        st.quarantined.remove(&(layer, expert)).is_some()
+    }
+
+    pub fn quarantined_count(&self) -> usize {
+        lock_recover(&self.state).quarantined.len()
+    }
+
+    /// Quarantined `(layer, expert)` pairs, sorted (for reports/tests).
+    pub fn quarantined_experts(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<_> = lock_recover(&self.state).quarantined.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(plan: &FaultPlan, name: &str, payload: &[u8]) -> String {
+        match plan.fetch(name, payload) {
+            Err(_) => "err".into(),
+            Ok(Cow::Borrowed(_)) => "pass".into(),
+            Ok(Cow::Owned(v)) if v.len() < payload.len() => "trunc".into(),
+            Ok(Cow::Owned(_)) => "corrupt".into(),
+        }
+    }
+
+    fn chaotic(seed: u64) -> FaultPlan {
+        FaultPlan::new(FaultConfig {
+            seed,
+            transient_p: 0.3,
+            corrupt_p: 0.2,
+            truncate_p: 0.1,
+            ..FaultConfig::default()
+        })
+    }
+
+    #[test]
+    fn passthrough_borrows_unchanged() {
+        let p = Passthrough;
+        let data = vec![1u8, 2, 3];
+        match p.fetch("layers.0.experts.0.w1", &data).unwrap() {
+            Cow::Borrowed(b) => assert_eq!(b, &data[..]),
+            Cow::Owned(_) => panic!("passthrough must borrow"),
+        }
+    }
+
+    #[test]
+    fn zero_rates_are_passthrough() {
+        let plan = FaultPlan::new(FaultConfig { seed: 9, ..FaultConfig::default() });
+        let data = vec![7u8; 64];
+        for _ in 0..50 {
+            assert_eq!(outcome(&plan, "layers.0.experts.3.w2", &data), "pass");
+        }
+        assert_eq!(plan.transient_injected(), 0);
+        assert_eq!(plan.corrupt_injected(), 0);
+    }
+
+    #[test]
+    fn same_seed_same_fault_sequence() {
+        let data = vec![0xABu8; 256];
+        let a = chaotic(42);
+        let b = chaotic(42);
+        let names = ["layers.0.experts.0.w1", "layers.1.experts.5.w3", "layers.0.experts.0.w1"];
+        for _ in 0..40 {
+            for n in &names {
+                assert_eq!(outcome(&a, n, &data), outcome(&b, n, &data));
+            }
+        }
+        assert_eq!(a.transient_injected(), b.transient_injected());
+        assert_eq!(a.corrupt_injected(), b.corrupt_injected());
+        assert_eq!(a.truncate_injected(), b.truncate_injected());
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let data = vec![0x55u8; 256];
+        let a = chaotic(1);
+        let b = chaotic(2);
+        let mut diverged = false;
+        for _ in 0..60 {
+            if outcome(&a, "layers.0.experts.1.w1", &data)
+                != outcome(&b, "layers.0.experts.1.w1", &data)
+            {
+                diverged = true;
+            }
+        }
+        assert!(diverged, "two seeds produced identical 60-access fault streams");
+    }
+
+    #[test]
+    fn experts_only_shields_router_records() {
+        let plan = FaultPlan::new(FaultConfig {
+            seed: 7,
+            transient_p: 1.0,
+            ..FaultConfig::default()
+        });
+        let data = vec![1u8; 16];
+        // router record: never faulted
+        assert_eq!(outcome(&plan, "layers.0.router", &data), "pass");
+        // expert record: always faulted at p=1
+        assert_eq!(outcome(&plan, "layers.0.experts.0.w1", &data), "err");
+        // experts_only=false faults everything
+        let all = FaultPlan::new(FaultConfig {
+            seed: 7,
+            transient_p: 1.0,
+            experts_only: false,
+            ..FaultConfig::default()
+        });
+        assert_eq!(outcome(&all, "layers.0.router", &data), "err");
+    }
+
+    #[test]
+    fn poisoned_record_corrupts_every_access() {
+        let name = "layers.0.experts.2.w1";
+        let plan = FaultPlan::new(FaultConfig {
+            seed: 3,
+            poisoned: vec![name.into()],
+            ..FaultConfig::default()
+        });
+        let data = vec![0u8; 32];
+        for _ in 0..10 {
+            let got = plan.fetch(name, &data).unwrap();
+            assert_ne!(got.as_ref(), &data[..], "poisoned access must mutate the payload");
+        }
+        assert_eq!(plan.corrupt_injected(), 10);
+        // sibling records untouched
+        assert_eq!(outcome(&plan, "layers.0.experts.3.w1", &data), "pass");
+    }
+
+    #[test]
+    fn corruption_flips_exactly_one_bit() {
+        let plan = FaultPlan::new(FaultConfig {
+            seed: 5,
+            corrupt_p: 1.0,
+            ..FaultConfig::default()
+        });
+        let data = vec![0u8; 128];
+        let got = plan.fetch("layers.0.experts.0.w1", &data).unwrap();
+        let flipped: u32 = got.iter().map(|b| b.count_ones()).sum();
+        assert_eq!(flipped, 1, "exactly one bit must differ");
+        assert_eq!(got.len(), data.len());
+    }
+
+    #[test]
+    fn truncation_returns_strict_prefix() {
+        let plan = FaultPlan::new(FaultConfig {
+            seed: 11,
+            truncate_p: 1.0,
+            ..FaultConfig::default()
+        });
+        let data: Vec<u8> = (0..200u8).collect();
+        let got = plan.fetch("layers.0.experts.0.w1", &data).unwrap();
+        assert!(got.len() < data.len());
+        assert_eq!(got.as_ref(), &data[..got.len()]);
+    }
+
+    #[test]
+    fn quarantine_after_n_failures_then_probe_then_recover() {
+        let q = Quarantine::new(3, 4);
+        assert_eq!(q.check(0, 1), QuarantineCheck::Clear);
+        assert!(!q.record_failure(0, 1));
+        assert!(!q.record_failure(0, 1));
+        assert_eq!(q.check(0, 1), QuarantineCheck::Clear, "below threshold");
+        assert!(q.record_failure(0, 1), "third failure quarantines");
+        assert_eq!(q.check(0, 1), QuarantineCheck::Quarantined);
+        assert_eq!(q.quarantined_count(), 1);
+        // not due for probe yet
+        for _ in 0..3 {
+            q.tick_step();
+            assert_eq!(q.check(0, 1), QuarantineCheck::Quarantined);
+        }
+        q.tick_step();
+        assert_eq!(q.check(0, 1), QuarantineCheck::Probe, "probe after probe_every steps");
+        // the probe reset the clock: immediately after, still quarantined
+        assert_eq!(q.check(0, 1), QuarantineCheck::Quarantined);
+        // successful probe recovers the expert
+        for _ in 0..4 {
+            q.tick_step();
+        }
+        assert_eq!(q.check(0, 1), QuarantineCheck::Probe);
+        assert!(q.record_success(0, 1), "success during probe is a recovery");
+        assert_eq!(q.check(0, 1), QuarantineCheck::Clear);
+        assert_eq!(q.quarantined_count(), 0);
+        // failure counter was cleared too: one new failure does not re-quarantine
+        assert!(!q.record_failure(0, 1));
+        assert_eq!(q.check(0, 1), QuarantineCheck::Clear);
+    }
+
+    #[test]
+    fn success_resets_failure_streak() {
+        let q = Quarantine::new(3, 0);
+        assert!(!q.record_failure(2, 7));
+        assert!(!q.record_failure(2, 7));
+        assert!(!q.record_success(2, 7), "success below quarantine is not a recovery");
+        assert!(!q.record_failure(2, 7));
+        assert!(!q.record_failure(2, 7));
+        assert_eq!(q.check(2, 7), QuarantineCheck::Clear, "streak restarted after success");
+        assert!(q.record_failure(2, 7));
+        assert_eq!(q.check(2, 7), QuarantineCheck::Quarantined);
+        // probe_every = 0: never probed
+        for _ in 0..100 {
+            q.tick_step();
+        }
+        assert_eq!(q.check(2, 7), QuarantineCheck::Quarantined);
+    }
+
+    #[test]
+    fn inactive_quarantine_is_always_clear() {
+        let q = Quarantine::new(0, 8);
+        assert!(!q.is_active());
+        for _ in 0..5 {
+            assert!(!q.record_failure(0, 0));
+        }
+        assert_eq!(q.check(0, 0), QuarantineCheck::Clear);
+        assert_eq!(q.quarantined_count(), 0);
+    }
+
+    #[test]
+    fn quarantined_experts_sorted() {
+        let q = Quarantine::new(1, 0);
+        q.record_failure(1, 3);
+        q.record_failure(0, 5);
+        q.record_failure(1, 0);
+        assert_eq!(q.quarantined_experts(), vec![(0, 5), (1, 0), (1, 3)]);
+    }
+}

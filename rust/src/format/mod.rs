@@ -25,6 +25,8 @@
 //!   u64   raw_len  (uncompressed code/byte count)
 //!   u64   payload_len
 //!   u32   crc32 of payload
+//!   u32   n_chunk_crcs | u32*n per-chunk crc32s   (v3+ only; 0 for
+//!         flat/f32 payloads)
 //!   bytes payload
 //! ```
 //!
@@ -32,12 +34,16 @@
 //! targets phones, where that is not hypothetical.
 //!
 //! **Container versions.** v1 stores each quantized payload as one flat
-//! codec stream. v2 (current) wraps quantized payloads in the
+//! codec stream. v2 wraps quantized payloads in the
 //! [`crate::compress::stream::Chunked`] framing, so a reader can
 //! decompress a tensor chunk-by-chunk — bounding decode memory and,
 //! crucially, letting the serving pipeline fan a layer's decode out
-//! across cores (chunks are independent streams). f32 payloads (norm
-//! vectors) stay raw in both versions. The reader accepts both.
+//! across cores (chunks are independent streams). v3 (current) adds a
+//! per-chunk crc32 list to each chunked record's header, so a
+//! whole-payload CRC mismatch can be localized to the first bad chunk
+//! (the error names the record *and* the chunk — a fault-diagnosis
+//! primitive for flaky-storage deployments). f32 payloads (norm vectors)
+//! stay raw in every version. The reader accepts all three.
 
 pub mod reader;
 pub mod writer;
@@ -58,7 +64,7 @@ pub const MAGIC: &[u8; 4] = b"TQM1";
 /// Independent of [`crate::FORMAT_VERSION`] (the AOT-manifest / stage
 /// contract version): bumping how payload bytes are framed must not
 /// invalidate lowered HLO artifacts, and vice versa.
-pub const CONTAINER_VERSION: u32 = 2;
+pub const CONTAINER_VERSION: u32 = 3;
 
 /// Oldest container version the reader still understands.
 pub const MIN_CONTAINER_VERSION: u32 = 1;
@@ -143,6 +149,10 @@ pub struct TensorRecord {
     pub payload_offset: usize,
     pub payload_len: usize,
     pub crc32: u32,
+    /// Per-chunk crc32s of the chunk-framed payload (v3+ containers,
+    /// chunked quantized records only — empty otherwise). Lets the reader
+    /// localize a whole-payload CRC mismatch to the first bad chunk.
+    pub chunk_crcs: Vec<u32>,
 }
 
 impl TensorRecord {

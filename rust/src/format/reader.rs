@@ -4,6 +4,7 @@
 //! what fits), the index is parsed once, and `load_*` decompresses a
 //! single tensor on demand into a caller-supplied buffer.
 
+use std::borrow::Cow;
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
@@ -16,6 +17,7 @@ use super::{
 };
 use crate::compress::stream::parse_chunk_index;
 use crate::compress::{codec, Codec, CodecId};
+use crate::faults::{FaultPlan, Passthrough, RecordSource};
 use crate::quant::{packing, Bits, Granularity, QuantizedTensor};
 use crate::tensor::{Tensor, U8Tensor};
 
@@ -23,7 +25,7 @@ pub struct TqmReader {
     pub meta: TqmMeta,
     pub codec_id: CodecId,
     /// Container version this file was written with (1 = flat payloads,
-    /// 2 = chunk-framed quantized payloads).
+    /// 2 = chunk-framed quantized payloads, 3 = + per-chunk CRCs).
     pub container_version: u32,
     data: Vec<u8>,
     dict_range: (usize, usize),
@@ -42,6 +44,14 @@ pub struct TqmReader {
     /// builds a 64k-entry hash map; doing it per tensor per layer pass
     /// dominated streaming decompression time).
     prepared_freq: Option<crate::compress::freqseq::Table>,
+    /// Payload source seam (fault injection, remote tiers): every
+    /// quantized/expert payload access on the `load_*` paths routes
+    /// through this before CRC checking. [`Passthrough`] by default —
+    /// zero-cost, bit-exact with the sourceless reader.
+    source: Arc<dyn RecordSource>,
+    /// Typed handle kept when the source is a [`FaultPlan`], so the host
+    /// can bind metrics / read injection stats without downcasting.
+    faults: Option<Arc<FaultPlan>>,
 }
 
 struct Cursor<'a> {
@@ -188,6 +198,16 @@ impl TqmReader {
             }
             let payload_len = c.u64()? as usize;
             let crc32 = c.u32()?;
+            // v3 records carry per-chunk crc32s for localization; no
+            // with_capacity on the declared count — a torn header could
+            // claim billions, and push + bounds-checked take fail fast
+            let mut chunk_crcs = Vec::new();
+            if version >= 3 {
+                let n_chunk_crcs = c.u32()? as usize;
+                for _ in 0..n_chunk_crcs {
+                    chunk_crcs.push(c.u32()?);
+                }
+            }
             let payload_offset = c.pos;
             c.take(payload_len)?;
             records.push(TensorRecord {
@@ -202,6 +222,7 @@ impl TqmReader {
                 payload_offset,
                 payload_len,
                 crc32,
+                chunk_crcs,
             });
         }
         let prepared_freq = match codec_id {
@@ -267,7 +288,31 @@ impl TqmReader {
             codec: codec(codec_id),
             prepared_freq,
             data,
+            source: Arc::new(Passthrough),
+            faults: None,
         })
+    }
+
+    /// Route every quantized payload access through `source` (fault
+    /// injection, remote tiers). The CRC check runs on what the source
+    /// returns, so injected corruption is caught like real corruption.
+    pub fn with_record_source(mut self, source: Arc<dyn RecordSource>) -> Self {
+        self.source = source;
+        self.faults = None;
+        self
+    }
+
+    /// Install a seeded [`FaultPlan`] as the record source, keeping the
+    /// typed handle so callers can bind metrics / read injection stats.
+    pub fn with_fault_plan(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.faults = Some(plan.clone());
+        self.source = plan;
+        self
+    }
+
+    /// The installed fault plan, if any.
+    pub fn fault_plan(&self) -> Option<&Arc<FaultPlan>> {
+        self.faults.as_ref()
     }
 
     pub fn records(&self) -> &[TensorRecord] {
@@ -327,18 +372,45 @@ impl TqmReader {
         &self.data
     }
 
-    /// CRC-checked payload bytes of a record.
+    /// CRC-checked payload bytes of a record, straight from the container
+    /// (bypasses the record source — the dense-layer streaming path,
+    /// which has no retry/quarantine story, reads here).
     pub fn payload_bytes(&self, r: &TensorRecord) -> Result<&[u8]> {
         let p = &self.data[r.payload_offset..r.payload_offset + r.payload_len];
-        let crc = crc32fast::hash(p);
-        if crc != r.crc32 {
-            bail!("tqm: crc mismatch on {:?} ({:08x} != {:08x})", r.name, crc, r.crc32);
-        }
+        self.check_crc(r, p)?;
         Ok(p)
     }
 
-    fn payload(&self, r: &TensorRecord) -> Result<&[u8]> {
-        self.payload_bytes(r)
+    /// CRC check with v3 chunk localization: a whole-payload mismatch is
+    /// attributed to the first chunk whose stored per-chunk crc32 fails
+    /// (or whose compressed slice is out of range — truncation), so the
+    /// error names both the record and the chunk.
+    fn check_crc(&self, r: &TensorRecord, p: &[u8]) -> Result<()> {
+        let crc = crc32fast::hash(p);
+        if crc == r.crc32 {
+            return Ok(());
+        }
+        match locate_bad_chunk(r, p) {
+            Some(chunk) => bail!(
+                "tqm: crc mismatch on {:?} ({:08x} != {:08x}), first bad chunk {chunk} of {}",
+                r.name,
+                crc,
+                r.crc32,
+                r.chunk_crcs.len()
+            ),
+            None => bail!("tqm: crc mismatch on {:?} ({:08x} != {:08x})", r.name, crc, r.crc32),
+        }
+    }
+
+    /// Payload bytes routed through the record source (the expert/router
+    /// load path — where fault injection and retry/quarantine apply),
+    /// then CRC-checked. Borrowed when the source passes through, owned
+    /// when it substitutes bytes.
+    fn payload<'a>(&'a self, r: &TensorRecord) -> Result<Cow<'a, [u8]>> {
+        let raw = &self.data[r.payload_offset..r.payload_offset + r.payload_len];
+        let fetched = self.source.fetch(&r.name, raw)?;
+        self.check_crc(r, &fetched)?;
+        Ok(fetched)
     }
 
     /// Decode one flat codec stream (a whole v1 payload, or a single v2
@@ -410,7 +482,7 @@ impl TqmReader {
             bail!("tqm: {name:?} is not quantized");
         }
         let payload = self.payload(r)?;
-        self.decode_payload_into(r, payload, scratch)?;
+        self.decode_payload_into(r, &payload, scratch)?;
         // sub-8-bit codes were bit-packed before coding; expand back to
         // one-code-per-byte (what the stage HLOs take)
         if r.bits.storage_bits() < 8 {
@@ -449,7 +521,7 @@ impl TqmReader {
             bail!("tqm: {name:?} is not quantized");
         }
         let payload = self.payload(r)?;
-        self.decode_payload_into(r, payload, packed_scratch)?;
+        self.decode_payload_into(r, &payload, packed_scratch)?;
         let n = crate::tensor::numel(&r.shape);
         out.resize(n, 0.0);
         let bits = r.bits.storage_bits();
@@ -498,7 +570,7 @@ impl TqmReader {
             bail!("tqm: {name:?} is not quantized");
         }
         let payload = self.payload(r)?;
-        self.decode_payload_into(r, payload, out)?;
+        self.decode_payload_into(r, &payload, out)?;
         anyhow::ensure!(
             out.len() == r.raw_len,
             "tqm: {name:?} packed decode produced {} bytes, expected {}",
@@ -535,6 +607,34 @@ impl TqmReader {
     pub fn unpacked_bytes(&self) -> usize {
         self.records.iter().map(|r| r.raw_len + 4 * (r.scale.len() + r.zero.len())).sum()
     }
+}
+
+/// Find the first chunk a failed whole-payload CRC can be pinned on:
+/// a chunk whose compressed slice is out of range (truncation) or whose
+/// stored per-chunk crc32 mismatches. `None` when the record carries no
+/// chunk CRCs (v1/v2, f32) or when no single chunk is implicated (e.g.
+/// corruption confined to the chunk index itself is blamed on chunk 0).
+fn locate_bad_chunk(r: &TensorRecord, payload: &[u8]) -> Option<usize> {
+    if r.chunk_crcs.is_empty() {
+        return None;
+    }
+    let idx = match parse_chunk_index(payload) {
+        Ok(idx) => idx,
+        // the index region itself is mangled — earliest attributable chunk
+        Err(_) => return Some(0),
+    };
+    if idx.entries.len() != r.chunk_crcs.len() {
+        return Some(0);
+    }
+    let body = idx.body(payload);
+    for (i, &(off, _)) in idx.entries.iter().enumerate() {
+        let end = idx.chunk_end(i, body.len());
+        match body.get(off..end) {
+            Some(slice) if crc32fast::hash(slice) == r.chunk_crcs[i] => {}
+            _ => return Some(i),
+        }
+    }
+    None
 }
 
 /// Shareable handle used by the pipeline's prefetch thread.
@@ -704,7 +804,7 @@ mod tests {
         let r1 = TqmReader::open(&p1).unwrap();
         let r2 = TqmReader::open(&p2).unwrap();
         assert_eq!(r1.container_version, 1);
-        assert_eq!(r2.container_version, 2);
+        assert_eq!(r2.container_version, crate::format::CONTAINER_VERSION);
         let a = r1.load_quantized("w").unwrap();
         let b = r2.load_quantized("w").unwrap();
         assert_eq!(a.codes, b.codes);
@@ -849,6 +949,107 @@ mod tests {
             }
         }
         assert!(r.load_quantized(&crate::format::expert_record_name(0, 1, "w3")).is_err());
+    }
+
+    #[test]
+    fn chunk_crcs_localize_corruption() {
+        // v3: a payload bit-flip is pinned on the chunk it landed in —
+        // the error names the record and the chunk index, never panics
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("m.tqm");
+        let q = sample_quantized(64, 32, 17);
+        let mut w = TqmWriter::new(meta(CodecId::Huffman)).with_chunk_len(100);
+        w.add_quantized("w", &q);
+        w.write(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let clean = TqmReader::from_bytes(bytes.clone()).unwrap();
+        let rec = clean.record("w").unwrap().clone();
+        assert!(rec.chunk_crcs.len() > 1, "fixture must be multi-chunk");
+        // verify the stored chunk CRCs actually cover the payload
+        let payload = clean.payload_bytes(&rec).unwrap();
+        let idx = parse_chunk_index(payload).unwrap();
+        assert_eq!(idx.entries.len(), rec.chunk_crcs.len());
+        let body = idx.body(payload);
+        for (i, &(off, _)) in idx.entries.iter().enumerate() {
+            let slice = &body[off..idx.chunk_end(i, body.len())];
+            assert_eq!(crc32fast::hash(slice), rec.chunk_crcs[i], "chunk {i}");
+        }
+        // flip one byte in the middle of chunk 1's compressed slice
+        let victim_chunk = 1usize;
+        let (off, _) = idx.entries[victim_chunk];
+        let end = idx.chunk_end(victim_chunk, body.len());
+        let body_start = payload.len() - body.len();
+        let flip_at = rec.payload_offset + body_start + (off + end) / 2;
+        drop(clean);
+        let mut bad = bytes;
+        bad[flip_at] ^= 0x40;
+        let r = TqmReader::from_bytes(bad).unwrap();
+        let err = r.load_quantized("w").unwrap_err().to_string();
+        assert!(err.contains("crc mismatch"), "{err}");
+        assert!(err.contains("\"w\""), "error must name the record: {err}");
+        assert!(
+            err.contains(&format!("first bad chunk {victim_chunk} of")),
+            "error must name the chunk: {err}"
+        );
+    }
+
+    #[test]
+    fn truncated_fetch_blames_a_chunk_not_a_panic() {
+        // localization under truncation: checked slicing flags the first
+        // chunk whose compressed bytes run past the truncated payload
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("m.tqm");
+        let q = sample_quantized(64, 32, 19);
+        let mut w = TqmWriter::new(meta(CodecId::Lzw)).with_chunk_len(128);
+        w.add_quantized("layers.0.experts.0.w1", &q);
+        w.write(&p).unwrap();
+        let plan = Arc::new(crate::faults::FaultPlan::new(crate::faults::FaultConfig {
+            seed: 4,
+            truncate_p: 1.0,
+            ..crate::faults::FaultConfig::default()
+        }));
+        let r = TqmReader::open(&p).unwrap().with_fault_plan(plan);
+        let err = r.load_quantized("layers.0.experts.0.w1").unwrap_err().to_string();
+        assert!(err.contains("crc mismatch"), "{err}");
+    }
+
+    #[test]
+    fn fault_plan_seam_injects_then_clears() {
+        // transient injection surfaces as a load error; the next access
+        // (per-record access index advanced) can succeed and is bit-exact
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("m.tqm");
+        let q = sample_quantized(32, 16, 23);
+        let mut w = TqmWriter::new(meta(CodecId::Huffman)).with_chunk_len(64);
+        w.add_expert_quantized(0, 0, "w1", &q);
+        w.write(&p).unwrap();
+        let name = crate::format::expert_record_name(0, 0, "w1");
+        // find a seed whose first access faults and a later one passes
+        let mut hit = false;
+        for seed in 0..64u64 {
+            let plan = Arc::new(crate::faults::FaultPlan::new(crate::faults::FaultConfig {
+                seed,
+                transient_p: 0.5,
+                ..crate::faults::FaultConfig::default()
+            }));
+            let r = TqmReader::open(&p).unwrap().with_fault_plan(plan.clone());
+            let first = r.load_quantized(&name);
+            if first.is_err() {
+                assert!(
+                    first.unwrap_err().to_string().contains("injected transient"),
+                    "seed {seed}"
+                );
+                // retries eventually pass and decode bit-exact
+                let ok = (0..20).find_map(|_| r.load_quantized(&name).ok());
+                let got = ok.expect("transient fault never cleared in 20 retries");
+                assert_eq!(got.codes, q.codes);
+                assert!(plan.transient_injected() >= 1);
+                assert!(r.fault_plan().is_some());
+                hit = true;
+                break;
+            }
+        }
+        assert!(hit, "no seed produced a first-access transient at p=0.5");
     }
 
     #[test]

@@ -7,7 +7,7 @@ use anyhow::Result;
 
 use super::{bits_to_u8, gran_to_u8, TensorKind, TqmMeta, CONTAINER_VERSION, MAGIC};
 use crate::compress::codec;
-use crate::compress::stream::{Chunked, DEFAULT_CHUNK};
+use crate::compress::stream::{parse_chunk_index, Chunked, DEFAULT_CHUNK};
 use crate::quant::QuantizedTensor;
 use crate::tensor::Tensor;
 
@@ -190,6 +190,29 @@ impl TqmWriter {
             out.extend_from_slice(&(raw_for_codec.len() as u64).to_le_bytes());
             out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
             out.extend_from_slice(&crc32fast::hash(&payload).to_le_bytes());
+            if version >= 3 {
+                // per-chunk crc32s (v3): hash each compressed chunk slice
+                // of the just-built chunked payload so a reader can point
+                // a whole-payload CRC failure at the first bad chunk
+                let chunk_crcs: Vec<u32> = match t.kind {
+                    TensorKind::QuantU8 => {
+                        let idx = parse_chunk_index(&payload)?;
+                        let body = idx.body(&payload);
+                        idx.entries
+                            .iter()
+                            .enumerate()
+                            .map(|(i, &(off, _))| {
+                                crc32fast::hash(&body[off..idx.chunk_end(i, body.len())])
+                            })
+                            .collect()
+                    }
+                    TensorKind::F32Raw => Vec::new(),
+                };
+                out.extend_from_slice(&(chunk_crcs.len() as u32).to_le_bytes());
+                for crc in &chunk_crcs {
+                    out.extend_from_slice(&crc.to_le_bytes());
+                }
+            }
             out.extend_from_slice(&payload);
         }
 

@@ -24,6 +24,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod faults;
 pub mod format;
 pub mod gen;
 pub mod model;

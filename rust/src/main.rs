@@ -12,10 +12,14 @@
 //!   tqm serve-demo --model e2e [--requests 16] [--batch 4]
 //!                 [--threads 0] [--prefetch-depth 1]
 //!                 [--expert-residency decoded|packed]
-//!   tqm tables    --table 1|2|3|4|bits|codec|network|residency|moe|sched|zipf|all
-//!                 [--tokens 512]   (residency/moe/sched/zipf: trace length)
-//!                 [--batch 4]      (sched: concurrent sequences)
+//!   tqm tables    --table 1|2|3|4|bits|codec|network|residency|moe|sched|zipf|faults|all
+//!                 [--tokens 512]   (residency/moe/sched/zipf/faults: trace length)
+//!                 [--batch 4]      (sched/faults: concurrent sequences)
 //!                 [--alpha 1.1]    (zipf: popularity skew)
+//!
+//! `--table faults` replays a seeded chaos matrix (fault rate x retry
+//! budget) through the scheduler: completion rate, p99 added latency,
+//! retries and quarantine counts per cell.
 //!
 //! `--table residency` prints the host-side expert residency table
 //! (decoded vs packed expert cache at equal byte budget) followed by the
@@ -385,6 +389,13 @@ fn cmd_tables(args: &Args) -> Result<()> {
             let rows = tables::zipf_table(alpha, args.get_usize("tokens", 2000)?)?;
             tables::render_zipf(&rows, alpha).print();
         }
+        "faults" => {
+            let rows = tables::faults_table(
+                args.get_usize("tokens", 64)?,
+                args.get_usize("batch", 4)?,
+            )?;
+            tables::render_faults(&rows).print();
+        }
         "all" => {
             t1()?;
             eval_t("mmlu", "paper Table 2")?;
@@ -405,6 +416,8 @@ fn cmd_tables(args: &Args) -> Result<()> {
             tables::render_sched(&rows).print();
             let rows = tables::zipf_table(1.1, 2000)?;
             tables::render_zipf(&rows, 1.1).print();
+            let rows = tables::faults_table(64, 4)?;
+            tables::render_faults(&rows).print();
         }
         other => bail!("unknown table {other:?}"),
     }

@@ -49,7 +49,9 @@ impl NetworkModel {
     pub fn summarize(&self, n: usize, seed: u64) -> LatencySummary {
         let mut rng = Rng::seed_from_u64(seed);
         let mut xs: Vec<f64> = (0..n).map(|_| self.sample(&mut rng)).collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a degenerate model (sigma/tail NaNs) must produce a
+        // garbage summary, not a panic mid-table
+        xs.sort_by(|a, b| a.total_cmp(b));
         LatencySummary {
             mean_s: xs.iter().sum::<f64>() / n as f64,
             p50_s: xs[n / 2],

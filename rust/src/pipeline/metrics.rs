@@ -79,6 +79,33 @@ pub struct PipelineMetrics {
     prefetch_decoded_bytes: AtomicU64,
     /// Speculative (prefetched, not yet demanded) bytes currently cached.
     expert_speculative_bytes: AtomicUsize,
+    // -- fault handling (retry / quarantine / degradation) -------------------
+    /// Expert fetch attempts re-issued after a decode-class failure
+    /// (demand path and prefetch workers share the counter).
+    fetch_retries: AtomicU64,
+    /// Retried fetches that eventually succeeded — transient faults the
+    /// retry budget absorbed without any visible degradation.
+    retry_successes: AtomicU64,
+    /// Experts newly placed in quarantine (failure streak hit the limit).
+    quarantined: AtomicU64,
+    /// Quarantined experts restored after a successful re-probe decode.
+    quarantine_recoveries: AtomicU64,
+    /// Recovery probes granted to quarantined experts.
+    quarantine_probes: AtomicU64,
+    /// Experts dropped from a forward step after exhausting retries.
+    expert_drops: AtomicU64,
+    /// Routed (sequence, expert) picks stripped by degradation — the
+    /// gates of each affected sequence were renormalized over survivors.
+    degraded_picks: AtomicU64,
+    /// Panics contained inside prefetch workers (worker kept alive).
+    prefetch_worker_panics: AtomicU64,
+    /// Requests answered with a structured Timeout instead of an answer.
+    deadline_timeouts: AtomicU64,
+    /// Injected faults, by class (only a bound [`crate::faults::FaultPlan`]
+    /// feeds these — all zero in production).
+    faults_transient: AtomicU64,
+    faults_corrupt: AtomicU64,
+    faults_delay: AtomicU64,
 }
 
 impl PipelineMetrics {
@@ -406,6 +433,110 @@ impl PipelineMetrics {
         self.prefetch_decoded_bytes.load(Ordering::Relaxed)
     }
 
+    // -- fault handling -----------------------------------------------------
+
+    pub fn record_fetch_retry(&self) {
+        self.fetch_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_retry_success(&self) {
+        self.retry_successes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_quarantined(&self) {
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_quarantine_recovery(&self) {
+        self.quarantine_recoveries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_quarantine_probe(&self) {
+        self.quarantine_probes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_expert_drop(&self) {
+        self.expert_drops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_degraded_picks(&self, n: u64) {
+        self.degraded_picks.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn record_prefetch_worker_panic(&self) {
+        self.prefetch_worker_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_deadline_timeout(&self) {
+        self.deadline_timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_fault_transient(&self) {
+        self.faults_transient.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_fault_corrupt(&self) {
+        self.faults_corrupt.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_fault_delay(&self) {
+        self.faults_delay.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn fetch_retries_count(&self) -> u64 {
+        self.fetch_retries.load(Ordering::Relaxed)
+    }
+
+    pub fn retry_successes_count(&self) -> u64 {
+        self.retry_successes.load(Ordering::Relaxed)
+    }
+
+    pub fn quarantined_count(&self) -> u64 {
+        self.quarantined.load(Ordering::Relaxed)
+    }
+
+    pub fn quarantine_recoveries_count(&self) -> u64 {
+        self.quarantine_recoveries.load(Ordering::Relaxed)
+    }
+
+    pub fn quarantine_probes_count(&self) -> u64 {
+        self.quarantine_probes.load(Ordering::Relaxed)
+    }
+
+    pub fn expert_drops_count(&self) -> u64 {
+        self.expert_drops.load(Ordering::Relaxed)
+    }
+
+    pub fn degraded_picks_count(&self) -> u64 {
+        self.degraded_picks.load(Ordering::Relaxed)
+    }
+
+    pub fn prefetch_worker_panics_count(&self) -> u64 {
+        self.prefetch_worker_panics.load(Ordering::Relaxed)
+    }
+
+    pub fn deadline_timeouts_count(&self) -> u64 {
+        self.deadline_timeouts.load(Ordering::Relaxed)
+    }
+
+    pub fn faults_injected_count(&self) -> u64 {
+        self.faults_transient.load(Ordering::Relaxed)
+            + self.faults_corrupt.load(Ordering::Relaxed)
+            + self.faults_delay.load(Ordering::Relaxed)
+    }
+
+    pub fn faults_transient_count(&self) -> u64 {
+        self.faults_transient.load(Ordering::Relaxed)
+    }
+
+    pub fn faults_corrupt_count(&self) -> u64 {
+        self.faults_corrupt.load(Ordering::Relaxed)
+    }
+
+    pub fn faults_delay_count(&self) -> u64 {
+        self.faults_delay.load(Ordering::Relaxed)
+    }
+
     pub fn decompress_mb_s(&self) -> f64 {
         let secs = self.decompress_secs();
         if secs == 0.0 {
@@ -467,6 +598,30 @@ impl PipelineMetrics {
                 self.prefetch_hits_count(),
                 self.prefetch_wasted_count(),
                 self.prefetch_hidden_secs() * 1e3,
+            ));
+        }
+        if self.fetch_retries_count() > 0
+            || self.expert_drops_count() > 0
+            || self.deadline_timeouts_count() > 0
+            || self.prefetch_worker_panics_count() > 0
+        {
+            s.push_str(&format!(
+                "; faults: {} retries ({} recovered), {} drops, {} quarantined ({} recovered), {} timeouts, {} worker panics",
+                self.fetch_retries_count(),
+                self.retry_successes_count(),
+                self.expert_drops_count(),
+                self.quarantined_count(),
+                self.quarantine_recoveries_count(),
+                self.deadline_timeouts_count(),
+                self.prefetch_worker_panics_count(),
+            ));
+        }
+        if self.faults_injected_count() > 0 {
+            s.push_str(&format!(
+                "; injected: {} transient, {} corrupt, {} delays",
+                self.faults_transient_count(),
+                self.faults_corrupt_count(),
+                self.faults_delay_count(),
             ));
         }
         s
@@ -588,6 +743,39 @@ mod tests {
         assert_eq!(m.exec_scalar_picks_count(), 8);
         let s = m.summary();
         assert!(s.contains("moe exec: 3 batched groups (8 tokens), 8 scalar picks"), "{s}");
+    }
+
+    #[test]
+    fn fault_accounting() {
+        let m = PipelineMetrics::default();
+        assert!(!m.summary().contains("faults:"), "inactive section must stay silent");
+        assert!(!m.summary().contains("injected:"));
+        m.record_fetch_retry();
+        m.record_fetch_retry();
+        m.record_retry_success();
+        m.record_quarantined();
+        m.record_quarantine_probe();
+        m.record_quarantine_recovery();
+        m.record_expert_drop();
+        m.record_degraded_picks(3);
+        m.record_prefetch_worker_panic();
+        m.record_deadline_timeout();
+        assert_eq!(m.fetch_retries_count(), 2);
+        assert_eq!(m.retry_successes_count(), 1);
+        assert_eq!(m.quarantined_count(), 1);
+        assert_eq!(m.quarantine_probes_count(), 1);
+        assert_eq!(m.quarantine_recoveries_count(), 1);
+        assert_eq!(m.expert_drops_count(), 1);
+        assert_eq!(m.degraded_picks_count(), 3);
+        assert_eq!(m.prefetch_worker_panics_count(), 1);
+        assert_eq!(m.deadline_timeouts_count(), 1);
+        assert!(m.summary().contains("faults:"), "{}", m.summary());
+        // injection tallies are separate from handling tallies
+        m.record_fault_transient();
+        m.record_fault_corrupt();
+        m.record_fault_delay();
+        assert_eq!(m.faults_injected_count(), 3);
+        assert!(m.summary().contains("injected: 1 transient, 1 corrupt, 1 delays"));
     }
 
     #[test]

@@ -40,6 +40,7 @@ use crate::model::{LayerWeights, ResidentWeights, WeightSource};
 use crate::quant::QuantizedTensor;
 use crate::runtime::{literal, Runtime};
 use crate::tensor::Tensor;
+use crate::util::lock_recover;
 use crate::xla;
 
 pub use decode::{DecodeScratch, DecodedLayer, LayerDecoder};
@@ -378,7 +379,7 @@ impl Engine {
             return Ok(Arc::new(rw.layers[i].clone()));
         }
         if let Residency::Lru(_) = self.residency {
-            if let Some(w) = self.lru.lock().unwrap().get(i) {
+            if let Some(w) = lock_recover(&self.lru).get(i) {
                 self.metrics.lru_hit();
                 return Ok(w);
             }
@@ -388,8 +389,8 @@ impl Engine {
         let w = Arc::new(LayerWeights::load(reader, i)?);
         self.metrics.record_decompress(t0.elapsed(), w.expanded_bytes());
         if let Residency::Lru(_) = self.residency {
-            let evicted = self.lru.lock().unwrap().put(i, w.clone());
-            let resident = self.lru.lock().unwrap().resident_bytes();
+            let evicted = lock_recover(&self.lru).put(i, w.clone());
+            let resident = lock_recover(&self.lru).resident_bytes();
             self.metrics.update_lru_resident(resident, evicted);
         }
         Ok(w)
@@ -422,9 +423,9 @@ impl Engine {
         }
 
         let decoder = self.decoder.as_ref().expect("stream requires a decoder");
-        let mut scratch = self.decode_scratch.lock().unwrap();
+        let mut scratch = lock_recover(&self.decode_scratch);
         if self.prefetch_depth == 0 {
-            let mut buf = self.decode_pool.lock().unwrap().pop().unwrap_or_default();
+            let mut buf = lock_recover(&self.decode_pool).pop().unwrap_or_default();
             for i in 0..n {
                 let t0 = std::time::Instant::now();
                 let stats = decoder.decode_into(i, &mut buf, &mut scratch)?;
@@ -434,7 +435,7 @@ impl Engine {
                 let lits = decoder.to_literals(&mut buf)?;
                 f(i, &lits)?;
             }
-            self.decode_pool.lock().unwrap().push(buf);
+            lock_recover(&self.decode_pool).push(buf);
             return Ok(());
         }
 
@@ -450,7 +451,7 @@ impl Engine {
             let (full_tx, full_rx) = mpsc::sync_channel::<Result<DecodedLayer>>(depth);
             let (free_tx, free_rx) = mpsc::channel::<DecodedLayer>();
             {
-                let mut pool = self.decode_pool.lock().unwrap();
+                let mut pool = lock_recover(&self.decode_pool);
                 for _ in 0..=depth {
                     let _ = free_tx.send(pool.pop().unwrap_or_default());
                 }
@@ -501,7 +502,7 @@ impl Engine {
             let free_rx = worker
                 .join()
                 .map_err(|_| anyhow::anyhow!("prefetch worker panicked"))?;
-            let mut pool = self.decode_pool.lock().unwrap();
+            let mut pool = lock_recover(&self.decode_pool);
             while let Ok(buf) = free_rx.try_recv() {
                 pool.push(buf);
             }

@@ -33,17 +33,19 @@ pub mod prefetch;
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::config::{ExpertResidency, MoeSpec, ServeOptions};
+use crate::faults::{MoeError, Quarantine, QuarantineCheck};
 use crate::format::TqmReader;
 use crate::model::moe::{
     moe_layer_forward_batched, moe_layer_forward_grouped, ExpertWeights, Router,
 };
 use crate::pipeline::expert_cache::DemandFetch;
 use crate::pipeline::{ExpertCache, PipelineMetrics};
+use crate::util::lock_recover;
 
 pub use plan::LayerPlan;
 pub use prefetch::{EwmaPrior, PrefetchPool};
@@ -77,6 +79,17 @@ pub struct SchedOptions {
     /// bit-identical either way; the per-step batched-vs-scalar metrics
     /// are what differ.
     pub batched_qgemm: bool,
+    /// Retries after a failed expert fetch/decode before the failure is
+    /// surfaced (and counted against the expert). 0 = fail fast.
+    pub retry_budget: u32,
+    /// Base backoff between retries, doubling per attempt (bounded).
+    pub retry_backoff_ms: u64,
+    /// Consecutive decode/CRC failures before an expert is quarantined
+    /// (dropped from routing with gates renormalized over survivors).
+    /// 0 disables quarantine.
+    pub quarantine_after: u32,
+    /// Re-probe a quarantined expert every N forward steps (0 = never).
+    pub quarantine_probe_every: u64,
 }
 
 impl Default for SchedOptions {
@@ -94,6 +107,30 @@ impl SchedOptions {
             ewma_decay: o.prefetch_ewma_decay,
             sync_prefetch: false,
             batched_qgemm: o.batched_qgemm,
+            retry_budget: o.retry_budget,
+            retry_backoff_ms: o.retry_backoff_ms,
+            quarantine_after: o.quarantine_after,
+            quarantine_probe_every: o.quarantine_probe_every,
+        }
+    }
+}
+
+/// How an expert fetch failed — retry/quarantine policy only applies to
+/// decode-class failures; structural ones (expert not in the container)
+/// keep the old fail-fast semantics.
+enum FetchError {
+    /// The container has no such expert / the reservation itself failed.
+    /// Retrying cannot help and quarantine bookkeeping must not trigger.
+    Hard(anyhow::Error),
+    /// The payload fetch or decode failed (IO fault, CRC mismatch) after
+    /// exhausting the retry budget — quarantine bookkeeping applies.
+    Decode(anyhow::Error),
+}
+
+impl FetchError {
+    fn into_inner(self) -> anyhow::Error {
+        match self {
+            FetchError::Hard(e) | FetchError::Decode(e) => e,
         }
     }
 }
@@ -114,6 +151,9 @@ pub struct ExpertScheduler {
     /// workload-skew half of the prefetch score.
     prior: Mutex<EwmaPrior>,
     pool: Option<PrefetchPool>,
+    /// Poisoned-expert bookkeeping: failure counts, routing exclusion,
+    /// periodic recovery probes. Inactive when `quarantine_after == 0`.
+    quarantine: Arc<Quarantine>,
     opts: SchedOptions,
 }
 
@@ -139,8 +179,11 @@ impl ExpertScheduler {
                 opts.prefetch_budget_bytes,
                 opts.prefetch_workers,
                 residency,
+                opts.retry_budget,
             )
         });
+        let quarantine =
+            Arc::new(Quarantine::new(opts.quarantine_after, opts.quarantine_probe_every));
         Self {
             cache,
             reader,
@@ -148,6 +191,7 @@ impl ExpertScheduler {
             residency,
             prior: Mutex::new(EwmaPrior::new(n_layers, n_experts, opts.ewma_decay)),
             pool,
+            quarantine,
             opts,
         }
     }
@@ -161,13 +205,26 @@ impl ExpertScheduler {
         self.cache.clone()
     }
 
+    /// The scheduler's quarantine state (host reports, tests).
+    pub fn quarantine(&self) -> &Arc<Quarantine> {
+        &self.quarantine
+    }
+
     /// Demand-fetch one expert through the cache (single-sequence paths
     /// that still want the scheduler's cache + prefetch machinery). A
     /// miss reserves under the lock, decodes **without** it — so
     /// prefetch workers keep committing while the demand decode runs —
-    /// and commits the result (demand-side reservations).
+    /// and commits the result (demand-side reservations). Decode-class
+    /// failures (IO fault, CRC mismatch) are retried up to
+    /// `retry_budget` times with bounded exponential backoff.
     pub fn get(&self, layer: usize, expert: usize) -> Result<Arc<ExpertWeights>> {
-        let fetch = self.cache.lock().unwrap().begin_get(layer, expert)?;
+        self.get_classified(layer, expert).map_err(FetchError::into_inner)
+    }
+
+    /// One reservation + decode attempt, no retry.
+    fn get_once(&self, layer: usize, expert: usize) -> Result<Arc<ExpertWeights>, FetchError> {
+        let fetch =
+            lock_recover(&self.cache).begin_get(layer, expert).map_err(FetchError::Hard)?;
         match fetch {
             DemandFetch::Hit(w) => Ok(w),
             DemandFetch::Miss(res) => {
@@ -180,17 +237,17 @@ impl ExpertScheduler {
                     ExpertWeights::load_with(&self.reader, layer, expert, self.residency)
                 }));
                 match decoded {
-                    Ok(Ok(w)) => Ok(self.cache.lock().unwrap().commit_demand(
+                    Ok(Ok(w)) => Ok(lock_recover(&self.cache).commit_demand(
                         res,
                         Arc::new(w),
                         t0.elapsed(),
                     )),
                     Ok(Err(e)) => {
-                        self.cache.lock().unwrap().cancel_demand(res);
-                        Err(e)
+                        lock_recover(&self.cache).cancel_demand(res);
+                        Err(FetchError::Decode(e))
                     }
                     Err(panic) => {
-                        self.cache.lock().unwrap().cancel_demand(res);
+                        lock_recover(&self.cache).cancel_demand(res);
                         std::panic::resume_unwind(panic)
                     }
                 }
@@ -198,13 +255,48 @@ impl ExpertScheduler {
         }
     }
 
+    /// The retry loop around [`Self::get_once`], keeping the hard/decode
+    /// error classification for the batch path's degradation policy.
+    fn get_classified(
+        &self,
+        layer: usize,
+        expert: usize,
+    ) -> Result<Arc<ExpertWeights>, FetchError> {
+        let mut last: Option<FetchError> = None;
+        for attempt in 0..=self.opts.retry_budget {
+            if attempt > 0 {
+                self.metrics.record_fetch_retry();
+                let backoff =
+                    self.opts.retry_backoff_ms.saturating_mul(1u64 << (attempt - 1).min(6));
+                if backoff > 0 {
+                    std::thread::sleep(Duration::from_millis(backoff.min(64)));
+                }
+            }
+            match self.get_once(layer, expert) {
+                Ok(w) => {
+                    if attempt > 0 {
+                        self.metrics.record_retry_success();
+                    }
+                    return Ok(w);
+                }
+                // structural failure: retrying cannot materialize a
+                // missing container record — fail fast, old semantics
+                Err(e @ FetchError::Hard(_)) => return Err(e),
+                Err(e @ FetchError::Decode(_)) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| {
+            FetchError::Hard(anyhow::anyhow!("expert ({layer}, {expert}) fetch failed"))
+        }))
+    }
+
     /// Decode (if needed) and exempt an expert from eviction.
     pub fn pin(&self, layer: usize, expert: usize) -> Result<()> {
-        self.cache.lock().unwrap().pin(layer, expert)
+        lock_recover(&self.cache).pin(layer, expert)
     }
 
     pub fn unpin(&self, layer: usize, expert: usize) {
-        self.cache.lock().unwrap().unpin(layer, expert)
+        lock_recover(&self.cache).unpin(layer, expert)
     }
 
     /// Wait until every queued prefetch job has been processed.
@@ -228,12 +320,32 @@ impl ExpertScheduler {
         if xs0.is_empty() {
             return Ok(Vec::new());
         }
+        self.quarantine.tick_step();
         let mut xs: Vec<Vec<f32>> = xs0.to_vec();
         for (l, router) in routers.iter().enumerate() {
             let plan = LayerPlan::build(l, router, &xs, spec.top_k);
             self.metrics
                 .record_sched_plan(plan.routed_picks() as u64, plan.n_unique() as u64);
-            self.prior.lock().unwrap().observe(l, &plan.unique);
+            lock_recover(&self.prior).observe(l, &plan.unique);
+            // quarantine filter: drop experts currently out of rotation
+            // from every sequence's picks and renormalize the surviving
+            // gates. A probe-due expert stays in (its fetch below is the
+            // recovery attempt). Faults off / nothing quarantined — no
+            // pick changes and the step is bit-exact with the unfiltered
+            // path.
+            let mut picks = plan.picks;
+            let mut unique = plan.unique;
+            let mut excluded = Vec::new();
+            for &e in &unique {
+                match self.quarantine.check(l, e) {
+                    QuarantineCheck::Quarantined => excluded.push(e),
+                    QuarantineCheck::Probe => self.metrics.record_quarantine_probe(),
+                    QuarantineCheck::Clear => {}
+                }
+            }
+            for &e in &excluded {
+                drop_expert_from_step(&mut picks, &mut unique, e, l, &self.metrics)?;
+            }
             if self.opts.sync_prefetch {
                 // deterministic mode: the jobs kicked at layer l-1 (for
                 // this layer) must land before the fetch below
@@ -249,10 +361,30 @@ impl ExpertScheduler {
             // decodes outside the cache lock (demand-side reservations),
             // so in-flight prefetch commits interleave with it.
             let mut fetched: HashMap<usize, Arc<ExpertWeights>> =
-                HashMap::with_capacity(plan.n_unique());
-            for &e in &plan.unique {
-                let w = self.get(l, e)?;
-                fetched.insert(e, w);
+                HashMap::with_capacity(unique.len());
+            for &e in &unique.clone() {
+                match self.get_classified(l, e) {
+                    Ok(w) => {
+                        if self.quarantine.record_success(l, e) {
+                            self.metrics.record_quarantine_recovery();
+                        }
+                        fetched.insert(e, w);
+                    }
+                    // structural failure (expert not in the container):
+                    // not a media fault — fail the step like always
+                    Err(FetchError::Hard(e)) => return Err(e),
+                    // decode-class failure with the retry budget spent:
+                    // degrade — drop this expert from the step, count the
+                    // failure toward quarantine, keep serving
+                    Err(FetchError::Decode(err)) => {
+                        if self.quarantine.record_failure(l, e) {
+                            self.metrics.record_quarantined();
+                        }
+                        self.metrics.record_expert_drop();
+                        drop_expert_from_step(&mut picks, &mut unique, e, l, &self.metrics)
+                            .map_err(|gone| gone.context(err))?;
+                    }
+                }
             }
             if let Some(pool) = &self.pool {
                 // warm layer l+1 while this layer's math executes
@@ -270,7 +402,7 @@ impl ExpertScheduler {
             // for holding one layer's unique set. Fold that overhang
             // into the shared peak so it is visible, never silent.
             {
-                let cache = self.cache.lock().unwrap();
+                let cache = lock_recover(&self.cache);
                 let held_uncached: usize = fetched
                     .iter()
                     .filter(|(e, _)| !cache.contains(l, **e))
@@ -288,15 +420,16 @@ impl ExpertScheduler {
                     .cloned()
                     .ok_or_else(|| anyhow::anyhow!("expert {e} missing from plan"))
             };
+            let surviving_picks: usize = picks.iter().map(|p| p.len()).sum();
             let ys = if self.opts.batched_qgemm {
                 // one ffn_batch (three qGEMM traversals) per unique
                 // expert for its whole deduped token group
-                let (ys, stats) = moe_layer_forward_grouped(&xs, &plan.picks, fetch)?;
+                let (ys, stats) = moe_layer_forward_grouped(&xs, &picks, fetch)?;
                 self.metrics.record_exec_batched(stats.groups, stats.tokens);
                 ys
             } else {
-                self.metrics.record_exec_scalar(plan.routed_picks() as u64);
-                moe_layer_forward_batched(&xs, &plan.picks, fetch)?
+                self.metrics.record_exec_scalar(surviving_picks as u64);
+                moe_layer_forward_batched(&xs, &picks, fetch)?
             };
             for (x, y) in xs.iter_mut().zip(ys) {
                 for (xi, yi) in x.iter_mut().zip(y) {
@@ -329,7 +462,7 @@ impl ExpertScheduler {
         }
         let n = xs.len().max(1) as f64;
         {
-            let prior = self.prior.lock().unwrap();
+            let prior = lock_recover(&self.prior);
             for (e, s) in score.iter_mut().enumerate() {
                 *s = *s / n + PRIOR_WEIGHT * prior.score(layer, e);
             }
@@ -343,8 +476,13 @@ impl ExpertScheduler {
         });
         idx.truncate((top_k * xs.len() + top_k).min(ne));
         {
-            let cache = self.cache.lock().unwrap();
-            idx.retain(|&e| !cache.contains(layer, e));
+            // skip residents and quarantined experts (`is_quarantined` is
+            // the passive probe-free check — speculative filtering must
+            // not consume the demand path's periodic recovery probe)
+            let cache = lock_recover(&self.cache);
+            idx.retain(|&e| {
+                !cache.contains(layer, e) && !self.quarantine.is_quarantined(layer, e)
+            });
         }
         // cap the step's candidate set to what the slice can hold, best
         // first — otherwise a burst of same-step inserts would displace
@@ -367,6 +505,43 @@ impl ExpertScheduler {
         }
         kept
     }
+}
+
+/// Remove `expert` from a step's plan: strip its `(expert, gate)` picks
+/// from every sequence, renormalize each affected sequence's surviving
+/// gates to sum to 1, and drop it from the unique fetch set. Dropping
+/// experts one at a time composes — the final gates equal excluding the
+/// same set up front, because renormalization is division by the current
+/// survivor sum. Errors with [`MoeError::Quarantined`] when a sequence
+/// is left with no experts at all: degraded serving must never silently
+/// zero a token's update.
+fn drop_expert_from_step(
+    picks: &mut [Vec<(usize, f32)>],
+    unique: &mut Vec<usize>,
+    expert: usize,
+    layer: usize,
+    metrics: &PipelineMetrics,
+) -> Result<()> {
+    unique.retain(|&u| u != expert);
+    for seq in picks.iter_mut() {
+        let before = seq.len();
+        seq.retain(|&(e, _)| e != expert);
+        let dropped = before - seq.len();
+        if dropped == 0 {
+            continue;
+        }
+        metrics.record_degraded_picks(dropped as u64);
+        if seq.is_empty() {
+            return Err(anyhow::Error::new(MoeError::Quarantined { layer }));
+        }
+        let sum: f32 = seq.iter().map(|&(_, g)| g).sum();
+        if sum > 0.0 {
+            for (_, g) in seq.iter_mut() {
+                *g /= sum;
+            }
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -522,6 +697,136 @@ mod tests {
             }
         }
         assert_eq!(outs[0], outs[1], "batched qGEMM changed the outputs");
+    }
+
+    #[test]
+    fn transient_faults_retry_to_bit_exact_output() {
+        // a reader that fails reads transiently, plus a retry budget,
+        // must produce the exact same outputs as the clean reader —
+        // retries re-fetch the pristine payload
+        let (cfg, dir, reader) = demo(47);
+        let spec = cfg.moe.clone().unwrap();
+        let routers = load_routers(&reader, cfg.n_layers).unwrap();
+        let xs = clustered_trace(cfg.d_model, 3, 1, 4, 29);
+        let opts = SchedOptions {
+            prefetch: false,
+            retry_budget: 8,
+            retry_backoff_ms: 0,
+            ..SchedOptions::default()
+        };
+        let (clean_sched, _m) = scheduler(&reader, &cfg, usize::MAX, opts.clone());
+        let want = clean_sched.forward_batch(&routers, &spec, &xs).unwrap();
+
+        let plan = Arc::new(crate::faults::FaultPlan::new(crate::faults::FaultConfig {
+            seed: 9,
+            transient_p: 0.3,
+            ..crate::faults::FaultConfig::default()
+        }));
+        let faulty = Arc::new(
+            TqmReader::open(dir.join("moe.tqm")).unwrap().with_fault_plan(plan.clone()),
+        );
+        let (sched, m) = scheduler(&faulty, &cfg, usize::MAX, opts);
+        let got = sched.forward_batch(&routers, &spec, &xs).unwrap();
+        assert_eq!(got, want, "retried transients changed the math");
+        assert!(plan.transient_injected() > 0, "fault plan never fired");
+        assert!(m.fetch_retries_count() > 0, "no retries recorded");
+        assert!(m.retry_successes_count() > 0, "no retry ever succeeded");
+        assert_eq!(m.expert_drops_count(), 0, "transients must not drop experts");
+    }
+
+    #[test]
+    fn poisoned_expert_is_quarantined_and_serving_degrades() {
+        let (cfg, dir, reader) = demo(48);
+        let spec = cfg.moe.clone().unwrap();
+        let routers = load_routers(&reader, cfg.n_layers).unwrap();
+        let xs = clustered_trace(cfg.d_model, 8, 2, 8, 31);
+        // poison an expert this trace is *guaranteed* to route to at
+        // layer 0; every decode of it fails CRC however often retried
+        let victim = LayerPlan::build(0, &routers[0], &xs, spec.top_k).unique[0];
+        let poisoned = vec![crate::format::expert_record_name(0, victim, "w1")];
+        let plan = Arc::new(crate::faults::FaultPlan::new(crate::faults::FaultConfig {
+            seed: 4,
+            poisoned: poisoned.clone(),
+            ..crate::faults::FaultConfig::default()
+        }));
+        let faulty = Arc::new(
+            TqmReader::open(dir.join("moe.tqm")).unwrap().with_fault_plan(plan),
+        );
+        let opts = SchedOptions {
+            prefetch: false,
+            retry_budget: 1,
+            retry_backoff_ms: 0,
+            quarantine_after: 1,
+            quarantine_probe_every: 0,
+            ..SchedOptions::default()
+        };
+        let (sched, m) = scheduler(&faulty, &cfg, usize::MAX, opts.clone());
+        let out = sched.forward_batch(&routers, &spec, &xs).unwrap();
+        assert_eq!(out.len(), xs.len(), "degraded step must answer every sequence");
+        assert!(m.expert_drops_count() > 0, "poisoned expert was never dropped");
+        assert_eq!(m.quarantined_count(), 1);
+        assert_eq!(sched.quarantine().quarantined_experts(), vec![(0, victim)]);
+        // degraded serving is still deterministic: an identical scheduler
+        // over an identically-seeded fault plan reproduces the outputs
+        let plan2 = Arc::new(crate::faults::FaultPlan::new(crate::faults::FaultConfig {
+            seed: 4,
+            poisoned,
+            ..crate::faults::FaultConfig::default()
+        }));
+        let faulty2 = Arc::new(
+            TqmReader::open(dir.join("moe.tqm")).unwrap().with_fault_plan(plan2),
+        );
+        let (sched2, _m2) = scheduler(&faulty2, &cfg, usize::MAX, opts);
+        let out2 = sched2.forward_batch(&routers, &spec, &xs).unwrap();
+        assert_eq!(out, out2, "degraded serving must replay bit-exactly");
+        // next step: the quarantined expert is excluded before any fetch,
+        // so no further decode attempts (and no further drops) happen
+        let drops_before = m.expert_drops_count();
+        sched.forward_batch(&routers, &spec, &xs).unwrap();
+        assert_eq!(m.expert_drops_count(), drops_before, "quarantine did not stick");
+    }
+
+    #[test]
+    fn drop_expert_sequential_equals_one_shot_renormalization() {
+        let metrics = PipelineMetrics::default();
+        let base = vec![
+            vec![(0, 0.5f32), (1, 0.3), (2, 0.2)],
+            vec![(1, 0.6f32), (3, 0.4)],
+        ];
+        // sequential: drop 0 then 2
+        let mut seq_picks = base.clone();
+        let mut seq_unique = vec![0usize, 1, 2, 3];
+        drop_expert_from_step(&mut seq_picks, &mut seq_unique, 0, 0, &metrics).unwrap();
+        drop_expert_from_step(&mut seq_picks, &mut seq_unique, 2, 0, &metrics).unwrap();
+        // one-shot reference: keep survivors, divide by survivor sum
+        let mut one = base;
+        for s in &mut one {
+            s.retain(|&(e, _)| e != 0 && e != 2);
+            let sum: f32 = s.iter().map(|&(_, g)| g).sum();
+            for (_, g) in s.iter_mut() {
+                *g /= sum;
+            }
+        }
+        assert_eq!(seq_unique, vec![1, 3]);
+        for (a, b) in seq_picks.iter().flatten().zip(one.iter().flatten()) {
+            assert_eq!(a.0, b.0);
+            assert!((a.1 - b.1).abs() < 1e-6, "{} vs {}", a.1, b.1);
+        }
+        assert_eq!(metrics.degraded_picks_count(), 3);
+    }
+
+    #[test]
+    fn dropping_every_pick_of_a_sequence_is_a_structured_error() {
+        let metrics = PipelineMetrics::default();
+        let mut picks = vec![vec![(0usize, 0.7f32), (1, 0.3)]];
+        let mut unique = vec![0usize, 1];
+        drop_expert_from_step(&mut picks, &mut unique, 0, 5, &metrics).unwrap();
+        let err = drop_expert_from_step(&mut picks, &mut unique, 1, 5, &metrics)
+            .expect_err("empty sequence must error");
+        match err.downcast_ref::<MoeError>() {
+            Some(MoeError::Quarantined { layer }) => assert_eq!(*layer, 5),
+            other => panic!("wrong error class: {other:?}"),
+        }
     }
 
     #[test]

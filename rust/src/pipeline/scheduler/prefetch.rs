@@ -25,6 +25,7 @@ use crate::config::ExpertResidency;
 use crate::format::TqmReader;
 use crate::model::moe::ExpertWeights;
 use crate::pipeline::{ExpertCache, PipelineMetrics};
+use crate::util::{lock_recover, wait_recover};
 
 /// EWMA of the per-step pick indicator for every (layer, expert): each
 /// scheduling step every expert's score decays by `decay`, and the
@@ -86,6 +87,7 @@ impl PrefetchPool {
         budget_bytes: usize,
         n_workers: usize,
         residency: ExpertResidency,
+        retry_budget: u32,
     ) -> Self {
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -104,12 +106,32 @@ impl PrefetchPool {
                     .spawn(move || loop {
                         // take the receiver lock only for the blocking
                         // recv, never while decoding
-                        let job = rx.lock().unwrap().recv();
+                        let job = lock_recover(&rx).recv();
                         let Ok((layer, expert)) = job else { return };
-                        run_job(&cache, &reader, &metrics, budget_bytes, residency, layer, expert);
-                        pending.lock().unwrap().remove(&(layer, expert));
+                        // containment: a panic anywhere inside the job
+                        // must neither kill this worker (the pool would
+                        // silently lose capacity) nor skip the pending/
+                        // inflight bookkeeping below (quiesce() would
+                        // wait forever). The worker absorbs the panic
+                        // and keeps serving the queue.
+                        let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            run_job(
+                                &cache,
+                                &reader,
+                                &metrics,
+                                budget_bytes,
+                                residency,
+                                retry_budget,
+                                layer,
+                                expert,
+                            )
+                        }));
+                        if ran.is_err() {
+                            metrics.record_prefetch_worker_panic();
+                        }
+                        lock_recover(&pending).remove(&(layer, expert));
                         let (count, cv) = &*inflight;
-                        *count.lock().unwrap() -= 1;
+                        *lock_recover(count) -= 1;
                         cv.notify_all();
                     })
                     .expect("spawning prefetch worker")
@@ -122,11 +144,11 @@ impl PrefetchPool {
     /// the decode itself; a key already queued or executing is skipped
     /// (not an issue, not a waste — just a duplicate prediction).
     pub fn enqueue(&self, layer: usize, expert: usize) {
-        if !self.pending.lock().unwrap().insert((layer, expert)) {
+        if !lock_recover(&self.pending).insert((layer, expert)) {
             return; // already in flight
         }
         let (count, cv) = &*self.inflight;
-        *count.lock().unwrap() += 1;
+        *lock_recover(count) += 1;
         let sent = self
             .tx
             .as_ref()
@@ -141,8 +163,8 @@ impl PrefetchPool {
         } else {
             // pool shutting down: roll the accounting back; the job
             // never existed as far as the counters are concerned
-            self.pending.lock().unwrap().remove(&(layer, expert));
-            *count.lock().unwrap() -= 1;
+            lock_recover(&self.pending).remove(&(layer, expert));
+            *lock_recover(count) -= 1;
             cv.notify_all();
         }
     }
@@ -152,9 +174,9 @@ impl PrefetchPool {
     /// line between "prefetch landed" and "prefetch still in flight".
     pub fn quiesce(&self) {
         let (count, cv) = &*self.inflight;
-        let mut n = count.lock().unwrap();
+        let mut n = lock_recover(count);
         while *n > 0 {
-            n = cv.wait(n).unwrap();
+            n = wait_recover(cv, n);
         }
     }
 }
@@ -175,26 +197,55 @@ impl Drop for PrefetchPool {
 /// inside the `budget + prefetch_budget` bound), then decode with fresh
 /// buffers **in the cache's residency mode** and commit onto the
 /// reservation.
+#[allow(clippy::too_many_arguments)]
 fn run_job(
     cache: &Mutex<ExpertCache>,
     reader: &Arc<TqmReader>,
     metrics: &PipelineMetrics,
     budget_bytes: usize,
     residency: ExpertResidency,
+    retry_budget: u32,
     layer: usize,
     expert: usize,
 ) {
-    let reserved = cache.lock().unwrap().begin_speculative(layer, expert, budget_bytes);
+    let reserved = lock_recover(cache).begin_speculative(layer, expert, budget_bytes);
     let Some(need) = reserved else {
         metrics.record_prefetch_rejected();
         return;
     };
     let t0 = Instant::now();
-    match ExpertWeights::load_with(reader, layer, expert, residency) {
-        Ok(w) => {
+    // Transient decode failures get the same bounded retry as the demand
+    // path (no backoff — speculative work competes with nothing and
+    // giving up early is cheap). A *panic* in the decode is contained
+    // right here so the reservation is always released — an uncancelled
+    // reservation would shrink the effective slice budget forever.
+    let mut decoded: Option<ExpertWeights> = None;
+    for attempt in 0..=retry_budget {
+        if attempt > 0 {
+            metrics.record_fetch_retry();
+        }
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            ExpertWeights::load_with(reader, layer, expert, residency)
+        })) {
+            Ok(Ok(w)) => {
+                if attempt > 0 {
+                    metrics.record_retry_success();
+                }
+                decoded = Some(w);
+                break;
+            }
+            Ok(Err(_)) => {}
+            Err(_) => {
+                // a panic is not a media fault — don't retry it
+                metrics.record_prefetch_worker_panic();
+                break;
+            }
+        }
+    }
+    match decoded {
+        Some(w) => {
             let (elapsed, bytes) = (t0.elapsed(), w.bytes());
-            let admitted =
-                cache.lock().unwrap().commit_speculative(layer, expert, Arc::new(w));
+            let admitted = lock_recover(cache).commit_speculative(layer, expert, Arc::new(w));
             if admitted {
                 // only decode work that landed counts as hidden — a
                 // commit that lost the race to the demand path is pure
@@ -205,8 +256,8 @@ fn run_job(
                 metrics.record_prefetch_rejected();
             }
         }
-        Err(_) => {
-            cache.lock().unwrap().cancel_speculative(need);
+        None => {
+            lock_recover(cache).cancel_speculative(need);
             metrics.record_prefetch_rejected();
         }
     }
@@ -277,6 +328,7 @@ mod tests {
                 slice,
                 2,
                 ExpertResidency::Decoded,
+                0,
             );
             for round in 0..3usize {
                 for l in 0..cfg.n_layers {
@@ -312,6 +364,69 @@ mod tests {
         );
         // nothing is left speculative after the drain, so the books are
         // final, not merely balanced-so-far
+        assert_eq!(cache.lock().unwrap().speculative_bytes(), 0);
+    }
+
+    #[test]
+    fn panicking_decode_neither_hangs_quiesce_nor_leaks_reservations() {
+        // a record source that panics on expert payload access — the
+        // worker must contain it, cancel the reservation, keep the
+        // inflight/pending books straight, and stay alive for more jobs
+        struct PanicSource;
+        impl crate::faults::RecordSource for PanicSource {
+            fn fetch<'a>(
+                &self,
+                name: &str,
+                payload: &'a [u8],
+            ) -> anyhow::Result<std::borrow::Cow<'a, [u8]>> {
+                if name.contains(".experts.") {
+                    panic!("injected decode panic on {name}");
+                }
+                Ok(std::borrow::Cow::Borrowed(payload))
+            }
+        }
+        let cfg = moe_demo_config();
+        let ckpt = synth_moe_checkpoint(&cfg, 92).unwrap();
+        let qopts = QuantizeOptions { per_channel: true, ..Default::default() };
+        let w = quantize_moe_checkpoint(&cfg, &ckpt, &qopts, CodecId::FreqSeqPacked, "unit")
+            .unwrap()
+            .with_chunk_len(512);
+        let dir = TempDir::new().unwrap();
+        let p = dir.join("moe.tqm");
+        w.write(&p).unwrap();
+        let reader = Arc::new(
+            TqmReader::open(&p)
+                .unwrap()
+                .with_record_source(Arc::new(PanicSource)),
+        );
+        let metrics = Arc::new(PipelineMetrics::default());
+        let cache = Arc::new(Mutex::new(ExpertCache::new(
+            reader.clone(),
+            metrics.clone(),
+            usize::MAX,
+            1,
+        )));
+        let pool = PrefetchPool::new(
+            cache.clone(),
+            reader.clone(),
+            metrics.clone(),
+            1 << 20,
+            1, // single worker: every job must survive the panics before it
+            ExpertResidency::Decoded,
+            2,
+        );
+        for e in 0..cfg.moe.as_ref().unwrap().n_experts {
+            pool.enqueue(0, e);
+        }
+        pool.quiesce(); // the regression: this used to deadlock
+        assert!(metrics.prefetch_worker_panics_count() > 0, "panic never recorded");
+        assert_eq!(
+            metrics.prefetch_issued_count(),
+            metrics.prefetch_hits_count() + metrics.prefetch_wasted_count(),
+            "panicked jobs broke the issued == hits + waste invariant"
+        );
+        // every reservation was released — nothing is charged against
+        // the speculative slice
         assert_eq!(cache.lock().unwrap().speculative_bytes(), 0);
     }
 

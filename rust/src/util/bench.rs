@@ -39,7 +39,7 @@ pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> Measurement {
             break;
         }
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let n = samples.len();
     Measurement {
         name: name.to_string(),

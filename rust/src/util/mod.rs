@@ -6,8 +6,10 @@
 pub mod bench;
 pub mod json;
 pub mod rng;
+pub mod sync;
 pub mod tempdir;
 
 pub use json::Json;
 pub use rng::Rng;
+pub use sync::{lock_recover, wait_recover};
 pub use tempdir::TempDir;

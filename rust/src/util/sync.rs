@@ -1,0 +1,47 @@
+//! Poison-recovering lock accessors for the serving hot path.
+//!
+//! `Mutex::lock().unwrap()` turns one panicked thread into a brick: every
+//! later locker panics on the poison error, so a single bad decode takes
+//! the whole host down. For the state these locks guard (caches, counters,
+//! pending-sets), the invariants are re-checked by the code that holds the
+//! guard — recovering the inner value is strictly better than cascading
+//! the panic.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// `Condvar::wait` that recovers from poison instead of panicking.
+pub fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn recovers_after_poison() {
+        let m = Arc::new(Mutex::new(41));
+        let m2 = m.clone();
+        let _ = catch_unwind(AssertUnwindSafe(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        }));
+        assert!(m.lock().is_err(), "lock must actually be poisoned");
+        let mut g = lock_recover(&m);
+        *g += 1;
+        assert_eq!(*g, 42);
+    }
+
+    #[test]
+    fn plain_lock_still_works() {
+        let m = Mutex::new(String::from("ok"));
+        assert_eq!(&*lock_recover(&m), "ok");
+    }
+}

@@ -100,6 +100,7 @@ fn scheduled_batched_forward_bit_exact_vs_unscheduled() {
         ewma_decay: 0.8,
         sync_prefetch: true,
         batched_qgemm: true,
+        ..SchedOptions::default()
     };
     // budget sized for the batch union (3 seqs x top_k x layers), so
     // every step-held expert stays cache-charged and the strict
@@ -195,6 +196,7 @@ fn prefetch_lowers_forward_stall_on_a_repeating_trace() {
             ewma_decay: 0.8,
             sync_prefetch: true,
             batched_qgemm: true,
+            ..SchedOptions::default()
         };
         let (sched, metrics) = make_scheduler(&reader, &cfg, budget, opts);
         let mut outs = Vec::new();
@@ -256,6 +258,7 @@ fn pinned_experts_survive_a_prefetch_storm_and_pin_decodes_cold_experts() {
         ewma_decay: 0.5,
         sync_prefetch: true,
         batched_qgemm: true,
+        ..SchedOptions::default()
     };
     let (sched, metrics) = make_scheduler(&reader, &cfg, 3 * one, opts);
 

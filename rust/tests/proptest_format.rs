@@ -1,7 +1,9 @@
 //! Container-level property tests (hand-rolled driver — no proptest crate
-//! offline): random tensors through the v2 writer must come back
-//! bit-exact for every granularity/bit-width/codec mix; legacy v1 files
-//! must keep opening; truncated files must be rejected, never panic.
+//! offline): random tensors through the writer must come back bit-exact
+//! for every granularity/bit-width/codec mix; legacy v1 files must keep
+//! opening; truncated files must be rejected, never panic; and (v3) a
+//! bit flipped inside any chunk must fail the load with an error naming
+//! the record and the chunk it landed in.
 
 use tiny_qmoe::compress::{self, CodecId};
 use tiny_qmoe::format::{TqmMeta, TqmReader, TqmWriter};
@@ -93,6 +95,79 @@ fn prop_v2_roundtrip_bit_exact_all_granularities() {
         }
         for (name, norm) in &norms {
             assert_eq!(&r.load_f32(name).unwrap(), norm, "case {case} {name}");
+        }
+    }
+}
+
+#[test]
+fn prop_chunk_bit_flips_named_by_record_and_chunk_never_a_panic() {
+    // v3 per-chunk CRCs: for random containers, flipping a random bit
+    // inside a random chunk's compressed bytes must make the load fail
+    // with an error naming the record AND pinning that exact chunk —
+    // never a panic, never silently-decoded garbage
+    use tiny_qmoe::compress::stream::parse_chunk_index;
+    let mut rng = Rng::seed_from_u64(0xB17_F11);
+    let codecs = compress::all_codec_ids();
+    for case in 0..40 {
+        let codec = codecs[case % codecs.len()];
+        let bits = random_bits(&mut rng);
+        let chunk_len = rng.gen_range_usize(32, 512);
+        let n_tensors = rng.gen_range_usize(1, 4);
+        let mut w = TqmWriter::new(meta(codec, bits)).with_chunk_len(chunk_len);
+        for t in 0..n_tensors {
+            let tensor = random_tensor(&mut rng);
+            let q = uniform::quantize(&tensor, bits, random_gran(&mut rng)).unwrap();
+            w.add_quantized(&format!("t{t}"), &q);
+        }
+        let dir = TempDir::new().unwrap();
+        let p = dir.join("flip.tqm");
+        w.write(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let clean = TqmReader::from_bytes(bytes.clone()).unwrap();
+        let victim_name = format!("t{}", rng.gen_range_usize(0, n_tensors));
+        let rec = clean.record(&victim_name).unwrap().clone();
+        let n_chunks = rec.chunk_crcs.len();
+        assert!(n_chunks > 0, "case {case}: chunked v3 record must carry chunk CRCs");
+        // map a chunk to its compressed byte range within the payload
+        let payload = clean.payload_bytes(&rec).unwrap();
+        let idx = parse_chunk_index(payload).unwrap();
+        assert_eq!(idx.entries.len(), n_chunks, "case {case}");
+        let body = idx.body(payload);
+        let body_start = payload.len() - body.len();
+        let victim_chunk = rng.gen_range_usize(0, n_chunks);
+        let (off, _) = idx.entries[victim_chunk];
+        let end = idx.chunk_end(victim_chunk, body.len());
+        if end <= off {
+            continue; // degenerate empty chunk: nothing to flip
+        }
+        let flip_at = rec.payload_offset + body_start + off + rng.gen_range_usize(0, end - off);
+        let bit = rng.gen_range_usize(0, 8) as u8;
+        drop(clean);
+        let mut bad = bytes;
+        bad[flip_at] ^= 1 << bit;
+        // container still parses (the flip is inside a payload), but the
+        // record load must fail with a localized, named error
+        let r = TqmReader::from_bytes(bad).unwrap();
+        let err = r
+            .load_quantized(&victim_name)
+            .expect_err(&format!("case {case}: flipped bit decoded cleanly"))
+            .to_string();
+        assert!(err.contains("crc mismatch"), "case {case}: {err}");
+        assert!(
+            err.contains(&format!("{victim_name:?}")),
+            "case {case}: error must name the record: {err}"
+        );
+        assert!(
+            err.contains(&format!("first bad chunk {victim_chunk} of {n_chunks}")),
+            "case {case}: error must pin chunk {victim_chunk}: {err}"
+        );
+        // untouched sibling records still load
+        for t in 0..n_tensors {
+            let name = format!("t{t}");
+            if name != victim_name {
+                r.load_quantized(&name)
+                    .unwrap_or_else(|e| panic!("case {case}: sibling {name} failed: {e}"));
+            }
         }
     }
 }
