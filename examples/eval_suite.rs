@@ -9,10 +9,10 @@ use anyhow::Result;
 use tiny_qmoe::tables::{self, Variant};
 
 fn main() -> Result<()> {
-    let limit: usize = std::env::args()
-        .nth(1)
-        .and_then(|v| v.parse().ok())
-        .unwrap_or_else(tables::eval_limit);
+    let limit: usize = match std::env::args().nth(1) {
+        Some(v) => v.parse()?,
+        None => tables::eval_limit()?,
+    };
     let model = "e2e";
     let codec = tables::default_codec();
     println!("evaluating {model} with {limit} questions/family (codec {codec:?})");

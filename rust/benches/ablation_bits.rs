@@ -5,7 +5,7 @@
 use tiny_qmoe::tables;
 
 fn main() -> anyhow::Result<()> {
-    let rows = tables::ablation_bits("e2e", true, tables::eval_limit())?;
+    let rows = tables::ablation_bits("e2e", true, tables::eval_limit()?)?;
     tables::render_bits(&rows).print();
     // monotonicity: more bits, less error (within each quantizer)
     let naive: Vec<&tiny_qmoe::tables::BitsRow> =

@@ -7,46 +7,55 @@
 //!    decode out over (acceptance: ≥2x at 4 threads on multicore);
 //! 3. the fused unpack+dequantize kernel vs the two-pass
 //!    unpack-then-dequantize it replaced, at 2/4/6/8 bits.
+//!
+//! Knobs: `TQM_DECOMP_MB` (stream size, default 8 MiB) and
+//! `TQM_BENCH_BUDGET_S` (per-cell time budget, default 1.0 s) shrink the
+//! run for CI smoke; `TQM_BENCH_DIR` additionally records the run as
+//! `BENCH_decompress.json` for `tqm bench-report`.
+use tiny_qmoe::barometer::{self, BenchRecord, BenchSet};
 use tiny_qmoe::compress::stream::Chunked;
 use tiny_qmoe::compress::{self, stats};
 use tiny_qmoe::quant::packing;
 use tiny_qmoe::util::bench::{bench, Table};
-use tiny_qmoe::util::Rng;
+use tiny_qmoe::util::{env_parse, Rng};
 
 fn gaussian_stream(n: usize) -> Vec<u8> {
     let mut rng = Rng::seed_from_u64(5);
     (0..n).map(|_| (128.0 + 22.0 * rng.normal_f32()).clamp(0.0, 255.0) as u8).collect()
 }
 
-fn flat_table(data: &[u8]) -> anyhow::Result<()> {
+fn flat_table(data: &[u8], budget_s: f64, set: &mut BenchSet) -> anyhow::Result<()> {
     let mut t = Table::new(
-        "decompression throughput (8 MiB gaussian-code stream)",
+        "decompression throughput (gaussian-code stream)",
         &["codec", "ratio", "decompress MB/s", "compress MB/s"],
     );
+    let mb = data.len() as f64 / 1e6;
     for id in compress::all_codec_ids() {
         let c = compress::codec(id);
         let r = stats::measure(c.as_ref(), data, None)?;
         let dict = c.train(&[data]);
         let payload = c.compress(&dict, data)?;
         let mut out = Vec::new();
-        let m = bench(c.name(), 1.0, || {
+        let m = bench(&format!("flat/{}/decompress", c.name()), budget_s, || {
             c.decompress(&dict, &payload, data.len(), &mut out).unwrap();
         });
-        let mc = bench(c.name(), 1.0, || {
+        let mc = bench(&format!("flat/{}/compress", c.name()), budget_s, || {
             let _ = c.compress(&dict, data).unwrap();
         });
+        set.push(BenchRecord::from_measurement(&m).with_throughput(mb / m.mean_s, "MB/s"));
+        set.push(BenchRecord::from_measurement(&mc).with_throughput(mb / mc.mean_s, "MB/s"));
         t.row(vec![
             c.name().into(),
             format!("{:.3}x", r.ratio_with_dict()),
-            format!("{:.0}", data.len() as f64 / 1e6 / m.mean_s),
-            format!("{:.0}", data.len() as f64 / 1e6 / mc.mean_s),
+            format!("{:.0}", mb / m.mean_s),
+            format!("{:.0}", mb / mc.mean_s),
         ]);
     }
     t.print();
     Ok(())
 }
 
-fn parallel_table(data: &[u8]) -> anyhow::Result<()> {
+fn parallel_table(data: &[u8], budget_s: f64, set: &mut BenchSet) -> anyhow::Result<()> {
     let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
     let mut t = Table::new(
         &format!(
@@ -54,6 +63,7 @@ fn parallel_table(data: &[u8]) -> anyhow::Result<()> {
         ),
         &["codec", "1 thread", "2 threads", "4 threads", "8 threads", "4T speedup"],
     );
+    let mb = data.len() as f64 / 1e6;
     for id in compress::all_codec_ids() {
         let c = compress::codec(id);
         let ch = Chunked::new(c.as_ref());
@@ -61,11 +71,12 @@ fn parallel_table(data: &[u8]) -> anyhow::Result<()> {
         let payload = ch.compress(&dict, data)?;
         let mut mbps = Vec::new();
         for threads in [1usize, 2, 4, 8] {
-            let m = bench(c.name(), 1.0, || {
+            let m = bench(&format!("parallel/{}/t{threads}", c.name()), budget_s, || {
                 let out = ch.decompress_parallel(&dict, &payload, data.len(), threads).unwrap();
                 assert_eq!(out.len(), data.len());
             });
-            mbps.push(data.len() as f64 / 1e6 / m.mean_s);
+            set.push(BenchRecord::from_measurement(&m).with_throughput(mb / m.mean_s, "MB/s"));
+            mbps.push(mb / m.mean_s);
         }
         t.row(vec![
             c.name().into(),
@@ -80,7 +91,7 @@ fn parallel_table(data: &[u8]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn fused_table(data: &[u8]) -> anyhow::Result<()> {
+fn fused_table(data: &[u8], budget_s: f64, set: &mut BenchSet) -> anyhow::Result<()> {
     let mut t = Table::new(
         "fused unpack+dequant vs two-pass (Melem/s, per-tensor params)",
         &["bits", "two-pass", "fused", "speedup"],
@@ -92,19 +103,22 @@ fn fused_table(data: &[u8]) -> anyhow::Result<()> {
         let packed = packing::pack(&codes, bits);
         let (scale, zero) = (0.0123f32, 3.0f32);
         let mut f32_out = vec![0.0f32; n];
-        let two = bench("two-pass", 1.0, || {
+        let two = bench(&format!("fused/b{bits}/two-pass"), budget_s, || {
             let unpacked = packing::unpack(&packed, bits, n);
             for (o, &c) in f32_out.iter_mut().zip(&unpacked) {
                 *o = (c as f32 - zero) * scale;
             }
         });
-        let fused = bench("fused", 1.0, || {
+        let fused = bench(&format!("fused/b{bits}/fused"), budget_s, || {
             packing::unpack_dequant_into(&packed, bits, scale, zero, &mut f32_out);
         });
+        let melems = |m: &tiny_qmoe::util::bench::Measurement| n as f64 / 1e6 / m.mean_s;
+        set.push(BenchRecord::from_measurement(&two).with_throughput(melems(&two), "Melem/s"));
+        set.push(BenchRecord::from_measurement(&fused).with_throughput(melems(&fused), "Melem/s"));
         t.row(vec![
             format!("{bits}"),
-            format!("{:.0}", n as f64 / 1e6 / two.mean_s),
-            format!("{:.0}", n as f64 / 1e6 / fused.mean_s),
+            format!("{:.0}", melems(&two)),
+            format!("{:.0}", melems(&fused)),
             format!("{:.2}x", two.mean_s / fused.mean_s),
         ]);
     }
@@ -113,9 +127,13 @@ fn fused_table(data: &[u8]) -> anyhow::Result<()> {
 }
 
 fn main() -> anyhow::Result<()> {
-    let data = gaussian_stream(8 << 20);
-    flat_table(&data)?;
-    parallel_table(&data)?;
-    fused_table(&data)?;
+    let mb: usize = env_parse("TQM_DECOMP_MB", 8)?;
+    let budget_s: f64 = env_parse("TQM_BENCH_BUDGET_S", 1.0)?;
+    let data = gaussian_stream(mb.max(1) << 20);
+    let mut set = BenchSet::new("decompress");
+    flat_table(&data, budget_s, &mut set)?;
+    parallel_table(&data, budget_s, &mut set)?;
+    fused_table(&data, budget_s, &mut set)?;
+    barometer::emit(&set)?;
     Ok(())
 }

@@ -1,0 +1,90 @@
+//! End-to-end MoE serving-loop bench: real requests through
+//! [`tiny_qmoe::coordinator::MoeHost`] (mpsc queue -> batcher -> expert
+//! scheduler -> fused qGEMV), the path every envelope and chaos number
+//! in the repo ultimately flows through. Cells: expert residency
+//! (decoded vs packed cache) x concurrent batch (1 vs 4); the timed unit
+//! is "submit the whole batch, wait for every response".
+//!
+//! Run: `cargo bench --bench moe_serving` (host-side synthetic MoE
+//! container, no artifacts needed). `TQM_SERVE_TOKENS` sets the trace
+//! length per request (default 32), `TQM_BENCH_BUDGET_S` the per-cell
+//! time budget (default 0.5 s); `TQM_BENCH_DIR` additionally records the
+//! run as `BENCH_serving.json` for `tqm bench-report`.
+
+use std::sync::Arc;
+
+use tiny_qmoe::barometer::{self, BenchRecord, BenchSet};
+use tiny_qmoe::compress::CodecId;
+use tiny_qmoe::config::{ExpertResidency, QuantizeOptions, ServeOptions};
+use tiny_qmoe::coordinator::{MoeHost, MoeHostSpec, MoeTraceRequest};
+use tiny_qmoe::model::moe;
+use tiny_qmoe::util::bench::{bench, fmt_secs, Table};
+use tiny_qmoe::util::env_parse;
+
+fn main() -> anyhow::Result<()> {
+    let tokens: usize = env_parse::<usize>("TQM_SERVE_TOKENS", 32)?.max(1);
+    let budget_s: f64 = env_parse("TQM_BENCH_BUDGET_S", 0.5)?;
+
+    let cfg = moe::moe_demo_config();
+    let spec = cfg.moe.clone().expect("demo config is MoE");
+    let ckpt = moe::synth_moe_checkpoint(&cfg, 77)?;
+    let qopts = QuantizeOptions { per_channel: true, ..Default::default() };
+    let w = moe::quantize_moe_checkpoint(&cfg, &ckpt, &qopts, CodecId::FreqSeqPacked, "synthetic")?;
+    let dir = tiny_qmoe::util::TempDir::new()?;
+    let path = dir.join("moe.tqm");
+    w.write(&path)?;
+
+    let base = moe::clustered_trace(cfg.d_model, 4, 8, tokens, 5);
+    // phase-shift per concurrent request so batch cells exercise routing
+    // diversity, not four copies of one trace
+    let trace_for = |r: usize| -> Vec<Vec<f32>> {
+        (0..tokens).map(|t| base[(t + 3 * r) % base.len()].clone()).collect()
+    };
+
+    let mut set = BenchSet::new("serving");
+    let mut t = Table::new(
+        &format!("MoE serving loop — MoeHost end to end ({tokens} steps/request)"),
+        &["residency", "batch", "mean/batch", "p99/batch", "tok/s"],
+    );
+    for residency in [ExpertResidency::Decoded, ExpertResidency::Packed] {
+        for batch in [1usize, 4] {
+            let reader = Arc::new(tiny_qmoe::format::TqmReader::open(&path)?);
+            let serve = ServeOptions {
+                expert_residency: residency,
+                max_batch: batch,
+                max_wait_ms: 1,
+                n_threads: 2,
+                ..Default::default()
+            };
+            let host = MoeHost::start(MoeHostSpec {
+                reader,
+                n_layers: cfg.n_layers,
+                moe: spec.clone(),
+                serve,
+                sched: None,
+            })?;
+            let name = format!("serve/{}/batch{batch}", residency.label());
+            let m = bench(&name, budget_s, || {
+                let rxs: Vec<_> = (0..batch)
+                    .map(|r| host.submit(MoeTraceRequest { trace: trace_for(r) }).unwrap())
+                    .collect();
+                for rx in rxs {
+                    rx.recv().unwrap().unwrap();
+                }
+            });
+            host.shutdown();
+            let tok_s = (tokens * batch) as f64 / m.mean_s.max(1e-9);
+            set.push(BenchRecord::from_measurement(&m).with_throughput(tok_s, "tok/s"));
+            t.row(vec![
+                residency.label().to_string(),
+                format!("{batch}"),
+                fmt_secs(m.mean_s),
+                fmt_secs(m.p99_s),
+                format!("{tok_s:.0}"),
+            ]);
+        }
+    }
+    t.print();
+    barometer::emit(&set)?;
+    Ok(())
+}

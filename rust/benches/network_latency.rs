@@ -4,6 +4,6 @@
 use tiny_qmoe::tables;
 
 fn main() -> anyhow::Result<()> {
-    tables::network_table("e2e", tables::default_codec(), tables::eval_limit())?.print();
+    tables::network_table("e2e", tables::default_codec(), tables::eval_limit()?)?.print();
     Ok(())
 }

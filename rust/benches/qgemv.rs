@@ -12,7 +12,9 @@
 //! capacity multiplier packed residency buys at that width.
 //!
 //! Run: `cargo bench --bench qgemv` (host-side, no artifacts needed).
-//! `TQM_QGEMV_REPS` overrides the per-thread repetition count.
+//! `TQM_QGEMV_REPS` overrides the per-thread repetition count;
+//! `TQM_BENCH_DIR` additionally records the run as `BENCH_qgemv.json`
+//! for `tqm bench-report`.
 //!
 //! For native-ISA numbers run
 //! `RUSTFLAGS="-C target-cpu=native" cargo bench --bench qgemv`:
@@ -31,9 +33,10 @@
 //!      amortized over the whole token group. Reps scale down with
 //!      batch so every cell touches the same total weight bytes.
 
+use tiny_qmoe::barometer::{self, BenchRecord, BenchSet};
 use tiny_qmoe::quant::packing;
 use tiny_qmoe::util::bench::Table;
-use tiny_qmoe::util::Rng;
+use tiny_qmoe::util::{env_parse, Rng};
 
 const ROWS: usize = 512;
 const COLS: usize = 512;
@@ -177,11 +180,18 @@ fn batch_throughput(
     (ROWS * COLS * 4 * reps * b * fixtures.len()) as f64 / 1e6 / secs
 }
 
-fn main() {
-    let reps: usize = std::env::var("TQM_QGEMV_REPS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(64);
+/// Record one aggregate-timed cell in the barometer set: the throughput
+/// functions report decoded-equivalent MB/s over `total_mb` of weight
+/// bytes, so the elapsed seconds are recoverable exactly.
+fn rec(set: &mut BenchSet, name: &str, iters: usize, mbps: f64, total_mb: f64) {
+    let secs = total_mb / mbps.max(1e-9);
+    set.push(BenchRecord::single(name, iters, secs).with_throughput(mbps, "MB/s"));
+}
+
+fn main() -> anyhow::Result<()> {
+    let reps: usize = env_parse("TQM_QGEMV_REPS", 64)?;
+    let mut set = BenchSet::new("qgemv");
+    let cell_mb = (ROWS * COLS * 4) as f64 / 1e6;
     let mut t = Table::new(
         &format!(
             "qGEMV — packed vs decoded GEMV throughput ({ROWS}x{COLS}, per-tensor params, \
@@ -207,6 +217,9 @@ fn main() {
             let _ = throughput(&fixtures, reps.div_ceil(8).max(1), true, bits);
             let dec = throughput(&fixtures, reps, false, bits);
             let pkd = throughput(&fixtures, reps, true, bits);
+            let total_mb = cell_mb * (reps * threads) as f64;
+            rec(&mut set, &format!("gemv/b{bits}/t{threads}/decoded"), reps, dec, total_mb);
+            rec(&mut set, &format!("gemv/b{bits}/t{threads}/packed"), reps, pkd, total_mb);
             let resident_packed = fixtures[0].packed.len() + 8; // + scale/zero
             let resident_decoded = ROWS * COLS * 4;
             t.row(vec![
@@ -271,6 +284,10 @@ fn main() {
         let scalar = variant_throughput(&f, reps, bits, 0);
         let blocked = variant_throughput(&f, reps, bits, 1);
         let relaxed = variant_throughput(&f, reps, bits, 2);
+        let total_mb = cell_mb * reps as f64;
+        rec(&mut set, &format!("blocked/b{bits}/scalar"), reps, scalar, total_mb);
+        rec(&mut set, &format!("blocked/b{bits}/blocked"), reps, blocked, total_mb);
+        rec(&mut set, &format!("blocked/b{bits}/relaxed"), reps, relaxed, total_mb);
         t2.row(vec![
             format!("{bits}"),
             format!("{scalar:.0}"),
@@ -331,6 +348,14 @@ fn main() {
                 let _ = batch_throughput(&fixtures, &xbs, breps.div_ceil(8).max(1), bits, b, true);
                 let scalar = batch_throughput(&fixtures, &xbs, breps, bits, b, false);
                 let gemm = batch_throughput(&fixtures, &xbs, breps, bits, b, true);
+                let total_mb = cell_mb * (breps * b * threads) as f64;
+                rec(
+                    &mut set,
+                    &format!("gemm/b{bits}/batch{b}/t{threads}"),
+                    breps,
+                    gemm,
+                    total_mb,
+                );
                 cells.push(format!("{gemm:.0} ({:.2}x)", gemm / scalar.max(1e-9)));
             }
             let mut row = vec![format!("{bits}"), format!("{b}")];
@@ -339,4 +364,6 @@ fn main() {
         }
     }
     t3.print();
+    barometer::emit(&set)?;
+    Ok(())
 }

@@ -4,7 +4,7 @@
 use tiny_qmoe::tables::{self, Variant};
 
 fn main() -> anyhow::Result<()> {
-    let limit = tables::eval_limit();
+    let limit = tables::eval_limit()?;
     let reps = tables::eval_table("e2e", "arc-easy", &Variant::ALL, tables::default_codec(), limit)?;
     tables::render_eval_table("arc-easy (paper Table 4) — e2e", &reps).print();
     // shape assertions from the paper: lossless compression => identical

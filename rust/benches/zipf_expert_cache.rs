@@ -6,18 +6,30 @@
 //! hot experts dominate, the regime QMoE-style traffic reports).
 //!
 //! Run: `cargo bench --bench zipf_expert_cache` (host-side, no
-//! artifacts needed). `TQM_ZIPF_TOKENS` overrides the trace length.
+//! artifacts needed). `TQM_ZIPF_TOKENS` overrides the trace length;
+//! `TQM_BENCH_DIR` additionally records the sweep as `BENCH_zipf.json`
+//! for `tqm bench-report` (per-token stall as the timed quantity,
+//! hit-rate as the throughput column).
 
+use tiny_qmoe::barometer::{self, BenchRecord, BenchSet};
 use tiny_qmoe::tables;
+use tiny_qmoe::util::env_parse;
 
 fn main() -> anyhow::Result<()> {
-    let tokens = std::env::var("TQM_ZIPF_TOKENS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(4000usize);
+    let tokens: usize = env_parse("TQM_ZIPF_TOKENS", 4000)?;
+    let mut set = BenchSet::new("zipf");
     for alpha in [0.8f64, 1.3] {
         let rows = tables::zipf_table(alpha, tokens)?;
         tables::render_zipf(&rows, alpha).print();
+        for r in &rows {
+            let name = format!("zipf/a{alpha}/e{}", r.budget_experts);
+            let stall_s = r.stall_ms / 1e3;
+            set.push(
+                BenchRecord::single(&name, tokens, stall_s)
+                    .with_throughput(r.hit_rate * 100.0, "%hit"),
+            );
+        }
     }
+    barometer::emit(&set)?;
     Ok(())
 }

@@ -1,0 +1,29 @@
+//! Perf barometer (rebar-style, after BurntSushi/rebar's methodology):
+//! every bench binary serializes its measurements to a machine-readable
+//! `BENCH_<area>.json` — name, iteration count, mean/p50/p95/p99,
+//! throughput, plus an environment fingerprint (cores, build profile,
+//! every `TQM_*` knob in effect) — and `tqm bench-report` diffs two
+//! recorded sets into a regression / improvement / neutral table with a
+//! configurable noise threshold.
+//!
+//! The point is trajectory, not absolute truth: any single number from a
+//! laptop is noise, but the same bench recorded per PR on the same box
+//! turns "should be faster" into a measured row. The env fingerprint is
+//! what makes two sets comparable — a diff across different core counts
+//! or knob settings is flagged rather than trusted.
+//!
+//! Recording is opt-in via `TQM_BENCH_DIR`: benches print their tables as
+//! always, and additionally write `BENCH_<area>.json` into that directory
+//! when it is set.
+
+mod report;
+mod schema;
+
+pub use report::{render_diff, diff_sets, DiffClass, DiffOptions, DiffRow};
+pub use schema::{emit, load_dir, BenchRecord, BenchSet, EnvFingerprint};
+
+/// Env var naming the directory benches write `BENCH_<area>.json` into.
+pub const BENCH_DIR_VAR: &str = "TQM_BENCH_DIR";
+
+/// Env var overriding the diff noise threshold (fraction, default 0.10).
+pub const BENCH_NOISE_VAR: &str = "TQM_BENCH_NOISE";

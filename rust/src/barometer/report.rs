@@ -1,0 +1,241 @@
+//! Baseline diffing for `tqm bench-report`: pair up two recorded
+//! `BENCH_*.json` sets by (area, bench name) and classify every cell as
+//! regression / improvement / neutral against a noise threshold, plus
+//! new / missing for cells only one side has. Classification is on
+//! `mean_s` (lower is better); the rendered table carries p50/p99 so a
+//! tail-only shift is still visible even when the mean calls it neutral.
+
+use crate::util::bench::{fmt_secs, Table};
+
+use super::schema::{BenchRecord, BenchSet};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiffClass {
+    /// Slower than baseline beyond the noise threshold.
+    Regression,
+    /// Faster than baseline beyond the noise threshold.
+    Improvement,
+    /// Within the noise threshold either way.
+    Neutral,
+    /// Present now, absent from the baseline (first run / new bench).
+    New,
+    /// Present in the baseline, absent now (renamed or deleted bench).
+    Missing,
+}
+
+impl DiffClass {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DiffClass::Regression => "REGRESSION",
+            DiffClass::Improvement => "improvement",
+            DiffClass::Neutral => "neutral",
+            DiffClass::New => "new",
+            DiffClass::Missing => "missing",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct DiffOptions {
+    /// Fractional mean_s change below which a cell is neutral (0.10 =
+    /// ±10%). Single-box wall-clock numbers are noisy; anything tighter
+    /// than ~5% flags phantom regressions on shared CI runners.
+    pub noise_frac: f64,
+    /// Absolute floor: ignore changes smaller than this many seconds
+    /// regardless of ratio (a 2 µs bench doubling is still noise).
+    pub min_delta_s: f64,
+}
+
+impl Default for DiffOptions {
+    fn default() -> Self {
+        Self { noise_frac: 0.10, min_delta_s: 1e-6 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    pub area: String,
+    pub name: String,
+    pub baseline: Option<BenchRecord>,
+    pub current: Option<BenchRecord>,
+    /// Fractional mean_s change, current vs baseline (+0.25 = 25% slower).
+    pub delta_frac: Option<f64>,
+    pub class: DiffClass,
+}
+
+fn classify(base: &BenchRecord, cur: &BenchRecord, opts: &DiffOptions) -> (Option<f64>, DiffClass) {
+    let b = base.mean_s;
+    let c = cur.mean_s;
+    if b <= 0.0 || !b.is_finite() || !c.is_finite() {
+        return (None, DiffClass::Neutral);
+    }
+    let frac = (c - b) / b;
+    let class = if (c - b).abs() < opts.min_delta_s || frac.abs() <= opts.noise_frac {
+        DiffClass::Neutral
+    } else if frac > 0.0 {
+        DiffClass::Regression
+    } else {
+        DiffClass::Improvement
+    };
+    (Some(frac), class)
+}
+
+/// Diff two recorded sets. Every (area, name) appearing on either side
+/// produces exactly one row; an empty baseline yields all-`New` (the
+/// first-run case). Rows are sorted worst-first: regressions, then
+/// missing, then new, improvements, neutral.
+pub fn diff_sets(baseline: &[BenchSet], current: &[BenchSet], opts: &DiffOptions) -> Vec<DiffRow> {
+    use std::collections::BTreeMap;
+    let mut keys: BTreeMap<(String, String), (Option<BenchRecord>, Option<BenchRecord>)> =
+        BTreeMap::new();
+    for set in baseline {
+        for r in &set.records {
+            keys.entry((set.area.clone(), r.name.clone())).or_default().0 = Some(r.clone());
+        }
+    }
+    for set in current {
+        for r in &set.records {
+            keys.entry((set.area.clone(), r.name.clone())).or_default().1 = Some(r.clone());
+        }
+    }
+    let mut rows: Vec<DiffRow> = keys
+        .into_iter()
+        .map(|((area, name), (base, cur))| {
+            let (delta_frac, class) = match (&base, &cur) {
+                (Some(b), Some(c)) => classify(b, c, opts),
+                (None, Some(_)) => (None, DiffClass::New),
+                (Some(_), None) => (None, DiffClass::Missing),
+                (None, None) => unreachable!("key without either side"),
+            };
+            DiffRow { area, name, baseline: base, current: cur, delta_frac, class }
+        })
+        .collect();
+    let rank = |c: DiffClass| match c {
+        DiffClass::Regression => 0,
+        DiffClass::Missing => 1,
+        DiffClass::New => 2,
+        DiffClass::Improvement => 3,
+        DiffClass::Neutral => 4,
+    };
+    rows.sort_by(|a, b| {
+        rank(a.class)
+            .cmp(&rank(b.class))
+            .then_with(|| {
+                // within regressions/improvements, biggest change first
+                let da = a.delta_frac.map(|d| d.abs()).unwrap_or(0.0);
+                let db = b.delta_frac.map(|d| d.abs()).unwrap_or(0.0);
+                db.total_cmp(&da)
+            })
+            .then_with(|| {
+                (a.area.as_str(), a.name.as_str()).cmp(&(b.area.as_str(), b.name.as_str()))
+            })
+    });
+    rows
+}
+
+/// Render a diff as the repo's standard aligned table.
+pub fn render_diff(rows: &[DiffRow], opts: &DiffOptions) -> Table {
+    let title = format!(
+        "bench-report (noise ±{:.0}%, {} benchmarks)",
+        opts.noise_frac * 100.0,
+        rows.len()
+    );
+    let headers = ["area", "bench", "base mean", "cur mean", "delta", "p99 cur", "class"];
+    let mut t = Table::new(&title, &headers);
+    let fmt_opt = |r: &Option<BenchRecord>, f: fn(&BenchRecord) -> f64| -> String {
+        match r {
+            Some(rec) => fmt_secs(f(rec)),
+            None => "-".to_string(),
+        }
+    };
+    for row in rows {
+        let delta = match row.delta_frac {
+            Some(d) => format!("{:+.1}%", d * 100.0),
+            None => "-".to_string(),
+        };
+        t.row(vec![
+            row.area.clone(),
+            row.name.clone(),
+            fmt_opt(&row.baseline, |r| r.mean_s),
+            fmt_opt(&row.current, |r| r.mean_s),
+            delta,
+            fmt_opt(&row.current, |r| r.p99_s),
+            row.class.label().to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(name: &str, mean_s: f64) -> BenchRecord {
+        BenchRecord::single(name, 10, mean_s * 10.0)
+    }
+
+    fn set(area: &str, recs: Vec<BenchRecord>) -> BenchSet {
+        let mut s = BenchSet::new(area);
+        for r in recs {
+            s.push(r);
+        }
+        s
+    }
+
+    #[test]
+    fn classifies_regression_improvement_neutral() {
+        let base = [set("a", vec![rec("slow", 1.0), rec("fast", 1.0), rec("same", 1.0)])];
+        let cur = [set("a", vec![rec("slow", 1.5), rec("fast", 0.5), rec("same", 1.02)])];
+        let rows = diff_sets(&base, &cur, &DiffOptions::default());
+        let by_name = |n: &str| rows.iter().find(|r| r.name == n).unwrap().class;
+        assert_eq!(by_name("slow"), DiffClass::Regression);
+        assert_eq!(by_name("fast"), DiffClass::Improvement);
+        assert_eq!(by_name("same"), DiffClass::Neutral);
+        // worst first
+        assert_eq!(rows[0].class, DiffClass::Regression);
+    }
+
+    #[test]
+    fn noise_threshold_is_configurable() {
+        let base = [set("a", vec![rec("x", 1.0)])];
+        let cur = [set("a", vec![rec("x", 1.15)])];
+        let loose = DiffOptions { noise_frac: 0.20, ..Default::default() };
+        let tight = DiffOptions { noise_frac: 0.05, ..Default::default() };
+        assert_eq!(diff_sets(&base, &cur, &loose)[0].class, DiffClass::Neutral);
+        assert_eq!(diff_sets(&base, &cur, &tight)[0].class, DiffClass::Regression);
+    }
+
+    #[test]
+    fn absolute_floor_mutes_microsecond_flapping() {
+        let base = [set("a", vec![rec("tiny", 2e-7)])];
+        let cur = [set("a", vec![rec("tiny", 6e-7)])]; // 3x, but < 1 µs
+        assert_eq!(diff_sets(&base, &cur, &DiffOptions::default())[0].class, DiffClass::Neutral);
+    }
+
+    #[test]
+    fn empty_baseline_yields_all_new() {
+        let cur = [set("a", vec![rec("x", 1.0), rec("y", 2.0)])];
+        let rows = diff_sets(&[], &cur, &DiffOptions::default());
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.class == DiffClass::New));
+    }
+
+    #[test]
+    fn missing_and_cross_area_keys_do_not_collide() {
+        let base = [set("a", vec![rec("x", 1.0)]), set("b", vec![rec("x", 1.0)])];
+        let cur = [set("a", vec![rec("x", 1.0)])];
+        let rows = diff_sets(&base, &cur, &DiffOptions::default());
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().any(|r| r.area == "b" && r.class == DiffClass::Missing));
+        assert!(rows.iter().any(|r| r.area == "a" && r.class == DiffClass::Neutral));
+    }
+
+    #[test]
+    fn render_has_one_line_per_row() {
+        let cur = [set("a", vec![rec("x", 1.0)])];
+        let rows = diff_sets(&[], &cur, &DiffOptions::default());
+        let s = render_diff(&rows, &DiffOptions::default()).render();
+        assert!(s.contains("new"));
+        assert!(s.contains("x"));
+    }
+}

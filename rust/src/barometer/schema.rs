@@ -1,0 +1,268 @@
+//! On-disk schema for `BENCH_<area>.json`: a [`BenchSet`] is one bench
+//! binary's run — an area name, an environment fingerprint, and one
+//! [`BenchRecord`] per measured cell. Serialization goes through
+//! `util::Json` (the repo is offline; no serde), and the golden tests in
+//! `tests/integration_barometer.rs` pin the round trip field-exact so a
+//! schema drift breaks loudly instead of skewing every future diff.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::bench::Measurement;
+use crate::util::Json;
+
+/// Schema version stamped into every file; bump on incompatible change.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// What the numbers were measured on: enough context to decide whether
+/// two recorded sets are comparable at all.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EnvFingerprint {
+    /// Logical cores visible to the process.
+    pub cores: usize,
+    /// "release" or "debug" — debug numbers must never be diffed against
+    /// release baselines.
+    pub profile: String,
+    /// Every `TQM_*` env var set at record time (the knob settings),
+    /// sorted by name.
+    pub knobs: BTreeMap<String, String>,
+}
+
+impl EnvFingerprint {
+    pub fn capture() -> Self {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let profile = if cfg!(debug_assertions) { "debug" } else { "release" };
+        let knobs = std::env::vars().filter(|(k, _)| k.starts_with("TQM_")).collect();
+        Self { cores, profile: profile.to_string(), knobs }
+    }
+
+    fn to_json(&self) -> Json {
+        let knobs =
+            self.knobs.iter().map(|(k, v)| (k.clone(), Json::str(v.clone()))).collect();
+        Json::obj(vec![
+            ("cores", Json::num(self.cores as f64)),
+            ("profile", Json::str(self.profile.clone())),
+            ("knobs", Json::Obj(knobs)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let mut knobs = BTreeMap::new();
+        match j.get("knobs")? {
+            Json::Obj(map) => {
+                for (k, v) in map {
+                    knobs.insert(k.clone(), v.as_str()?.to_string());
+                }
+            }
+            other => bail!("env.knobs: expected object, got {}", other.to_string()),
+        }
+        Ok(Self {
+            cores: j.get("cores")?.as_usize()?,
+            profile: j.get("profile")?.as_str()?.to_string(),
+            knobs,
+        })
+    }
+}
+
+/// One measured benchmark cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    /// Cell name, unique within the area (e.g. "decompress/freqseq/t4").
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+    /// Optional derived rate in `throughput_units` (e.g. 850.0 "MB/s").
+    pub throughput: Option<f64>,
+    pub throughput_units: Option<String>,
+}
+
+impl BenchRecord {
+    pub fn from_measurement(m: &Measurement) -> Self {
+        Self {
+            name: m.name.clone(),
+            iters: m.iters,
+            mean_s: m.mean_s,
+            p50_s: m.p50_s,
+            p95_s: m.p95_s,
+            p99_s: m.p99_s,
+            min_s: m.min_s,
+            throughput: None,
+            throughput_units: None,
+        }
+    }
+
+    pub fn with_throughput(mut self, value: f64, units: &str) -> Self {
+        self.throughput = Some(value);
+        self.throughput_units = Some(units.to_string());
+        self
+    }
+
+    /// Record for a bench that only measured one aggregate duration
+    /// (`total_s` over `iters` calls) — all quantiles collapse to the
+    /// per-iteration mean. Honest for throughput-style loops that don't
+    /// keep per-call samples.
+    pub fn single(name: &str, iters: usize, total_s: f64) -> Self {
+        let per = total_s / iters.max(1) as f64;
+        Self {
+            name: name.to_string(),
+            iters,
+            mean_s: per,
+            p50_s: per,
+            p95_s: per,
+            p99_s: per,
+            min_s: per,
+            throughput: None,
+            throughput_units: None,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_s", Json::num(self.mean_s)),
+            ("p50_s", Json::num(self.p50_s)),
+            ("p95_s", Json::num(self.p95_s)),
+            ("p99_s", Json::num(self.p99_s)),
+            ("min_s", Json::num(self.min_s)),
+        ];
+        if let (Some(v), Some(u)) = (self.throughput, &self.throughput_units) {
+            pairs.push(("throughput", Json::num(v)));
+            pairs.push(("throughput_units", Json::str(u.clone())));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let throughput = match j.opt("throughput") {
+            Some(v) => Some(v.as_f64()?),
+            None => None,
+        };
+        let throughput_units = match j.opt("throughput_units") {
+            Some(v) => Some(v.as_str()?.to_string()),
+            None => None,
+        };
+        Ok(Self {
+            name: j.get("name")?.as_str()?.to_string(),
+            iters: j.get("iters")?.as_usize()?,
+            mean_s: j.get("mean_s")?.as_f64()?,
+            p50_s: j.get("p50_s")?.as_f64()?,
+            p95_s: j.get("p95_s")?.as_f64()?,
+            p99_s: j.get("p99_s")?.as_f64()?,
+            min_s: j.get("min_s")?.as_f64()?,
+            throughput,
+            throughput_units,
+        })
+    }
+}
+
+/// One bench binary's recorded run: `BENCH_<area>.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchSet {
+    pub area: String,
+    pub env: EnvFingerprint,
+    pub records: Vec<BenchRecord>,
+}
+
+impl BenchSet {
+    pub fn new(area: &str) -> Self {
+        Self { area: area.to_string(), env: EnvFingerprint::capture(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: BenchRecord) {
+        self.records.push(r);
+    }
+
+    pub fn push_measurement(&mut self, m: &Measurement) {
+        self.records.push(BenchRecord::from_measurement(m));
+    }
+
+    pub fn file_name(&self) -> String {
+        format!("BENCH_{}.json", self.area)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::num(SCHEMA_VERSION as f64)),
+            ("area", Json::str(self.area.clone())),
+            ("env", self.env.to_json()),
+            ("benchmarks", Json::Arr(self.records.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let ver = j.get("schema_version")?.as_u32()?;
+        if ver != SCHEMA_VERSION {
+            bail!("unsupported bench schema version {ver} (this build reads {SCHEMA_VERSION})");
+        }
+        let records = j
+            .get("benchmarks")?
+            .as_arr()?
+            .iter()
+            .map(BenchRecord::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            area: j.get("area")?.as_str()?.to_string(),
+            env: EnvFingerprint::from_json(j.get("env")?)?,
+            records,
+        })
+    }
+
+    /// Write `BENCH_<area>.json` into `dir`, creating it if needed.
+    pub fn write_to(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating bench dir {}", dir.display()))?;
+        let path = dir.join(self.file_name());
+        std::fs::write(&path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&j).with_context(|| format!("decoding {}", path.display()))
+    }
+}
+
+/// Load every `BENCH_*.json` in `dir`, sorted by area. A missing
+/// directory is an empty set (the first-run / no-baseline case); a
+/// malformed file is a hard error — silently skipping a corrupt record
+/// would turn a real regression into "missing, probably fine".
+pub fn load_dir(dir: &Path) -> Result<Vec<BenchSet>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(out),
+    };
+    for entry in entries {
+        let path = entry?.path();
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name.starts_with("BENCH_") && name.ends_with(".json") {
+            out.push(BenchSet::load(&path)?);
+        }
+    }
+    out.sort_by(|a, b| a.area.cmp(&b.area));
+    Ok(out)
+}
+
+/// Write `set` into `$TQM_BENCH_DIR` if the knob is set; returns the
+/// path written, or `None` when recording is off. Bench binaries call
+/// this unconditionally after printing their human tables.
+pub fn emit(set: &BenchSet) -> Result<Option<PathBuf>> {
+    match crate::util::env_parse_opt::<PathBuf>(super::BENCH_DIR_VAR)? {
+        Some(dir) => {
+            let path = set.write_to(&dir)?;
+            eprintln!("[barometer] wrote {}", path.display());
+            Ok(Some(path))
+        }
+        None => Ok(None),
+    }
+}

@@ -352,8 +352,11 @@ impl ServeOptions {
 
 /// Where build artifacts live; resolves the repo-root default.
 pub fn default_artifacts_root() -> PathBuf {
-    if let Ok(p) = std::env::var("TQM_ARTIFACTS") {
-        return PathBuf::from(p);
+    // PathBuf parsing is infallible, so this can only be Some/None
+    if let Some(p) =
+        crate::util::env_parse_opt::<PathBuf>("TQM_ARTIFACTS").expect("PathBuf parse is infallible")
+    {
+        return p;
     }
     // walk up from cwd looking for artifacts/
     let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));

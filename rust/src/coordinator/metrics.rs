@@ -4,7 +4,7 @@
 
 use std::sync::Mutex;
 
-use crate::util::lock_recover;
+use crate::util::{lock_recover, stats as ord_stats};
 
 #[derive(Default)]
 pub struct ServeMetrics {
@@ -28,21 +28,16 @@ pub struct LatencyStats {
     pub mean: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
 }
 
 fn stats(xs: &[f64]) -> LatencyStats {
-    if xs.is_empty() {
-        return LatencyStats::default();
-    }
+    // util::stats sorts with total_cmp: a NaN sample (it would take a bug
+    // upstream, but latency math divides) must not panic the metrics
+    // thread mid-serve
     let mut v = xs.to_vec();
-    // total_cmp: a NaN sample (it would take a bug upstream, but latency
-    // math divides) must not panic the metrics thread mid-serve
-    v.sort_by(|a, b| a.total_cmp(b));
-    LatencyStats {
-        mean: v.iter().sum::<f64>() / v.len() as f64,
-        p50: v[v.len() / 2],
-        p95: v[(v.len() * 95 / 100).min(v.len() - 1)],
-    }
+    let s = ord_stats::summarize(&mut v);
+    LatencyStats { mean: s.mean, p50: s.p50, p95: s.p95, p99: s.p99 }
 }
 
 #[derive(Clone, Debug)]

@@ -55,14 +55,14 @@ pub fn run_eval(
             correct += 1;
         }
     }
-    lats.sort_by(|a, b| a.total_cmp(b));
+    crate::util::stats::sort_samples(&mut lats);
     Ok(EvalReport {
         family: es.family.clone(),
         variant: variant.to_string(),
         n_questions: n,
         n_correct: correct,
         mean_latency_s: lats.iter().sum::<f64>() / n.max(1) as f64,
-        p95_latency_s: lats.get(n * 95 / 100).copied().unwrap_or(0.0),
+        p95_latency_s: crate::util::stats::percentile(&lats, 95),
         total_s: t_start.elapsed().as_secs_f64(),
     })
 }

@@ -52,7 +52,8 @@ pub fn load(path: impl AsRef<Path>) -> Result<Vec<EvalReport>> {
 
 /// Directory for report artifacts if the user asked for them.
 pub fn report_dir() -> Option<PathBuf> {
-    std::env::var("TQM_REPORT_DIR").ok().map(PathBuf::from)
+    // PathBuf parsing is infallible, so this can only be Some/None
+    crate::util::env_parse_opt("TQM_REPORT_DIR").expect("PathBuf parse is infallible")
 }
 
 #[cfg(test)]

@@ -19,6 +19,7 @@
 //! Entry points: the `tqm` binary (`rust/src/main.rs`), the examples in
 //! `examples/`, and the benches in `rust/benches/` (one per paper table).
 
+pub mod barometer;
 pub mod compress;
 pub mod config;
 pub mod coordinator;

@@ -12,14 +12,23 @@
 //!   tqm serve-demo --model e2e [--requests 16] [--batch 4]
 //!                 [--threads 0] [--prefetch-depth 1]
 //!                 [--expert-residency decoded|packed]
-//!   tqm tables    --table 1|2|3|4|bits|codec|network|residency|moe|sched|zipf|faults|all
-//!                 [--tokens 512]   (residency/moe/sched/zipf/faults: trace length)
+//!   tqm tables    --table 1|2|3|4|bits|codec|network|residency|moe|sched|zipf|faults|envelope|all
+//!                 [--tokens 512]   (residency/moe/sched/zipf/faults/envelope: trace length)
 //!                 [--batch 4]      (sched/faults: concurrent sequences)
 //!                 [--alpha 1.1]    (zipf: popularity skew)
+//!                 [--requests 8]   (envelope: concurrent traces per cell)
+//!   tqm bench-report --current DIR [--baseline DIR] [--noise 0.10]
+//!                 (diff two recorded BENCH_*.json sets; no --baseline =
+//!                  first run, everything reports as "new")
 //!
 //! `--table faults` replays a seeded chaos matrix (fault rate x retry
 //! budget) through the scheduler: completion rate, p99 added latency,
 //! retries and quarantine counts per cell.
+//!
+//! `--table envelope` runs the full MoE serving loop once per simulated
+//! device cell — 4/6/8 GB-class byte budgets x 1–8 cores x
+//! offline/flaky network — and prints per-step latency percentiles,
+//! throughput and cache behaviour for each.
 //!
 //! `--table residency` prints the host-side expert residency table
 //! (decoded vs packed expert cache at equal byte budget) followed by the
@@ -108,6 +117,7 @@ fn run() -> Result<()> {
         "generate" => cmd_generate(&args),
         "serve-demo" => cmd_serve_demo(&args),
         "tables" => cmd_tables(&args),
+        "bench-report" => cmd_bench_report(&args),
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
             Ok(())
@@ -117,7 +127,7 @@ fn run() -> Result<()> {
 }
 
 const HELP: &str = "tqm — Tiny-QMoE reproduction CLI
-  quantize | inspect | eval | generate | serve-demo | tables
+  quantize | inspect | eval | generate | serve-demo | tables | bench-report
   (see rust/src/main.rs header for flags)";
 
 fn cmd_quantize(args: &Args) -> Result<()> {
@@ -321,7 +331,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
 
 fn cmd_tables(args: &Args) -> Result<()> {
     let which = args.get("table", "all");
-    let limit = args.get_usize("limit", tables::eval_limit())?;
+    let limit = args.get_usize("limit", tables::eval_limit()?)?;
     let model = args.get("model", "e2e");
     let codec = if args.has("paper-codec") {
         tables::paper_codec()
@@ -396,6 +406,13 @@ fn cmd_tables(args: &Args) -> Result<()> {
             )?;
             tables::render_faults(&rows).print();
         }
+        "envelope" => {
+            let rows = tables::envelope_table(
+                args.get_usize("tokens", 24)?,
+                args.get_usize("requests", 8)?,
+            )?;
+            tables::render_envelope(&rows).print();
+        }
         "all" => {
             t1()?;
             eval_t("mmlu", "paper Table 2")?;
@@ -418,8 +435,63 @@ fn cmd_tables(args: &Args) -> Result<()> {
             tables::render_zipf(&rows, 1.1).print();
             let rows = tables::faults_table(64, 4)?;
             tables::render_faults(&rows).print();
+            let rows = tables::envelope_table(24, 4)?;
+            tables::render_envelope(&rows).print();
         }
         other => bail!("unknown table {other:?}"),
     }
+    Ok(())
+}
+
+fn cmd_bench_report(args: &Args) -> Result<()> {
+    use tiny_qmoe::barometer;
+
+    let current_dir = args.get("current", "");
+    anyhow::ensure!(
+        !current_dir.is_empty(),
+        "--current <dir> required (a directory of BENCH_*.json files)"
+    );
+    let noise = match args.flags.get("noise") {
+        Some(v) => v.parse::<f64>().with_context(|| format!("bad --noise {v:?}"))?,
+        None => tiny_qmoe::util::env_parse(barometer::BENCH_NOISE_VAR, 0.10)?,
+    };
+    let opts = tiny_qmoe::barometer::DiffOptions { noise_frac: noise, ..Default::default() };
+    let current = barometer::load_dir(std::path::Path::new(&current_dir))?;
+    anyhow::ensure!(!current.is_empty(), "no BENCH_*.json files found in {current_dir:?}");
+    let baseline_dir = args.get("baseline", "");
+    let baseline = if baseline_dir.is_empty() {
+        Vec::new()
+    } else {
+        barometer::load_dir(std::path::Path::new(&baseline_dir))?
+    };
+    if baseline.is_empty() {
+        println!("(no baseline set — first run, every benchmark reports as \"new\")");
+    }
+    // a diff across different machines/knobs is a trap, not a regression:
+    // flag fingerprint mismatches up front
+    for cur in &current {
+        if let Some(base) = baseline.iter().find(|b| b.area == cur.area) {
+            if base.env != cur.env {
+                eprintln!(
+                    "warning: area {:?} recorded under a different environment \
+                     (baseline: {} cores/{}, current: {} cores/{}) — treat the diff \
+                     with suspicion",
+                    cur.area, base.env.cores, base.env.profile, cur.env.cores, cur.env.profile
+                );
+            }
+        }
+    }
+    let rows = barometer::diff_sets(&baseline, &current, &opts);
+    barometer::render_diff(&rows, &opts).print();
+    use tiny_qmoe::barometer::DiffClass;
+    let count = |c: DiffClass| rows.iter().filter(|r| r.class == c).count();
+    println!(
+        "\n{} regression(s), {} improvement(s), {} neutral, {} new, {} missing",
+        count(DiffClass::Regression),
+        count(DiffClass::Improvement),
+        count(DiffClass::Neutral),
+        count(DiffClass::New),
+        count(DiffClass::Missing),
+    );
     Ok(())
 }

@@ -5,7 +5,7 @@
 //! (lognormal body + tail spikes, the standard shape for WAN latency)
 //! against the measured local per-question / per-token latencies (E7).
 
-use crate::util::Rng;
+use crate::util::{stats, Rng};
 
 /// Round-trip model for a hosted-LLM request.
 #[derive(Clone, Debug)]
@@ -49,15 +49,10 @@ impl NetworkModel {
     pub fn summarize(&self, n: usize, seed: u64) -> LatencySummary {
         let mut rng = Rng::seed_from_u64(seed);
         let mut xs: Vec<f64> = (0..n).map(|_| self.sample(&mut rng)).collect();
-        // total_cmp: a degenerate model (sigma/tail NaNs) must produce a
-        // garbage summary, not a panic mid-table
-        xs.sort_by(|a, b| a.total_cmp(b));
-        LatencySummary {
-            mean_s: xs.iter().sum::<f64>() / n as f64,
-            p50_s: xs[n / 2],
-            p95_s: xs[n * 95 / 100],
-            p99_s: xs[(n * 99 / 100).min(n - 1)],
-        }
+        // util::stats sorts with total_cmp: a degenerate model (sigma/tail
+        // NaNs) must produce a garbage summary, not a panic mid-table
+        let s = stats::summarize(&mut xs);
+        LatencySummary { mean_s: s.mean, p50_s: s.p50, p95_s: s.p95, p99_s: s.p99 }
     }
 }
 

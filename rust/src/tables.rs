@@ -23,9 +23,11 @@ use crate::util::bench::{fmt_bytes, fmt_secs, Table};
 use crate::util::Rng;
 
 /// Eval question budget: the paper uses 200; benches can lower it through
-/// TQM_EVAL_LIMIT to keep `cargo bench` wall-clock sane.
-pub fn eval_limit() -> usize {
-    std::env::var("TQM_EVAL_LIMIT").ok().and_then(|v| v.parse().ok()).unwrap_or(60)
+/// TQM_EVAL_LIMIT to keep `cargo bench` wall-clock sane. A malformed
+/// value is a hard error (see `util::env_parse`) — a typo must not
+/// silently run the sweep at the default.
+pub fn eval_limit() -> Result<usize> {
+    crate::util::env_parse("TQM_EVAL_LIMIT", 60)
 }
 
 /// Quantize+compress a model checkpoint into `artifacts/<m>/tqm/<tag>.tqm`
@@ -1235,8 +1237,8 @@ pub fn faults_table(tokens: usize, batch: usize) -> Result<Vec<FaultsRow>> {
             }
         }
         sched.quiesce();
-        lat_ms.sort_by(|a, b| a.total_cmp(b));
-        let p99 = lat_ms[(lat_ms.len() * 99 / 100).min(lat_ms.len() - 1)];
+        crate::util::stats::sort_samples(&mut lat_ms);
+        let p99 = crate::util::stats::percentile(&lat_ms, 99);
         Ok((
             FaultsRow {
                 fault_p,
@@ -1296,6 +1298,251 @@ pub fn render_faults(rows: &[FaultsRow]) -> Table {
             format!("{}", r.quarantined),
             format!("{}", r.degraded_picks),
             format!("{}", r.injected),
+        ]);
+    }
+    t
+}
+
+// ===========================================================================
+// E14 — device-envelope matrix: the full serving loop inside simulated
+// iPhone-class constraints (memory budget x cores x network condition)
+// ===========================================================================
+
+/// One simulated device class. The paper's regime is 4–8 GB phones that
+/// cannot hold the expanded model; the synthetic demo checkpoint is tiny,
+/// so each envelope is applied *proportionally*: `frac` is the share of a
+/// nominal 16 GB full-residency footprint the device affords, and the
+/// cell's byte budget is that share of the demo model's total decoded
+/// expert bytes (split 4:1 between expert cache and prefetch slice).
+/// Relative pressure — how much of the working set fits — is what the
+/// matrix measures; absolute bytes would just measure the toy model.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceEnvelope {
+    pub name: &'static str,
+    /// Nominal device RAM this envelope stands in for.
+    pub device_gb: f64,
+    /// Fraction of the full-residency footprint the device affords.
+    pub frac: f64,
+}
+
+/// The paper's device ladder: 4/6/8 GB against a 16 GB full-residency
+/// baseline -> 25% / 37.5% / 50% of the expert working set resident.
+pub const DEVICE_ENVELOPES: [DeviceEnvelope; 3] = [
+    DeviceEnvelope { name: "phone-4GB", device_gb: 4.0, frac: 0.25 },
+    DeviceEnvelope { name: "phone-6GB", device_gb: 6.0, frac: 0.375 },
+    DeviceEnvelope { name: "phone-8GB", device_gb: 8.0, frac: 0.50 },
+];
+
+/// Network condition a cell runs under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetCondition {
+    /// Airplane mode — the paper's headline regime: serving is fully
+    /// local, the network is simply not on the request path.
+    Offline,
+    /// Unreliable backhaul: expert fetches occasionally stall (the E13
+    /// slow-IO fault reusing [`crate::netlat::NetworkModel::mobile_lte`]
+    /// at local-flash scale) or fail transiently and get retried.
+    Flaky,
+}
+
+impl NetCondition {
+    pub fn label(&self) -> &'static str {
+        match self {
+            NetCondition::Offline => "offline",
+            NetCondition::Flaky => "flaky",
+        }
+    }
+}
+
+/// One (envelope x cores x network) cell, measured from a real serving
+/// loop run through [`crate::coordinator::MoeHost`].
+pub struct EnvelopeRow {
+    pub envelope: &'static str,
+    pub device_gb: f64,
+    pub expert_budget_bytes: usize,
+    pub prefetch_budget_bytes: usize,
+    pub cores: usize,
+    pub net: &'static str,
+    pub requests: usize,
+    pub completed: usize,
+    /// Per-step end-to-end latency (queue + forward, ms) percentiles
+    /// over completed requests.
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub tokens_per_s: f64,
+    pub hit_rate: f64,
+    pub stall_ms: f64,
+}
+
+/// Default matrix: every device envelope x {1,2,4,8} cores x
+/// {offline, flaky}, `requests` concurrent traces of `tokens` steps each.
+pub fn envelope_table(tokens: usize, requests: usize) -> Result<Vec<EnvelopeRow>> {
+    envelope_matrix(
+        &DEVICE_ENVELOPES,
+        &[1, 2, 4, 8],
+        &[NetCondition::Offline, NetCondition::Flaky],
+        tokens,
+        requests,
+    )
+}
+
+/// Run the serving loop once per (envelope, cores, net) cell: a fresh
+/// [`crate::coordinator::MoeHost`] bound to the scaled byte budget and
+/// thread count, `requests` traces submitted concurrently (so batching
+/// and the expert cache see real contention), latency read from the
+/// per-request responses and cache behaviour from the host metrics.
+pub fn envelope_matrix(
+    envelopes: &[DeviceEnvelope],
+    cores: &[usize],
+    nets: &[NetCondition],
+    tokens: usize,
+    requests: usize,
+) -> Result<Vec<EnvelopeRow>> {
+    use crate::coordinator::{MoeHost, MoeHostSpec, MoeTraceRequest};
+    use crate::faults::{FaultConfig, FaultPlan};
+    use crate::model::moe;
+
+    let cfg = moe::moe_demo_config();
+    let spec = cfg.moe.clone().expect("demo config is MoE");
+    let ckpt = moe::synth_moe_checkpoint(&cfg, 77)?;
+    let qopts = QuantizeOptions { per_channel: true, ..Default::default() };
+    let w = moe::quantize_moe_checkpoint(&cfg, &ckpt, &qopts, CodecId::FreqSeqPacked, "synthetic")?;
+    let dir = crate::util::TempDir::new()?;
+    let path = dir.join("moe.tqm");
+    w.write(&path)?;
+    let probe = Arc::new(crate::format::TqmReader::open(&path)?);
+    let one = probe.expert_entry(0, 0)?.decoded_f32_bytes;
+    let total = cfg.n_layers * spec.n_experts * one;
+    drop(probe);
+
+    let tokens = tokens.max(1);
+    let requests = requests.max(1);
+    let base = moe::clustered_trace(cfg.d_model, 4, 8, tokens, 5);
+    // per-request phase shift: concurrent traces route differently, so
+    // batching dedup and cache contention are both real
+    let trace_for = |r: usize| -> Vec<Vec<f32>> {
+        (0..tokens).map(|t| base[(t + 3 * r) % base.len()].clone()).collect()
+    };
+
+    let mut rows = Vec::new();
+    for env in envelopes {
+        let cell_budget = ((total as f64) * env.frac) as usize;
+        // 4:1 cache-to-prefetch split of the envelope's byte budget
+        let expert_budget = (cell_budget * 4 / 5).max(one);
+        let prefetch_budget = (cell_budget / 5).max(one);
+        for (ci, &n_cores) in cores.iter().enumerate() {
+            for (ni, net) in nets.iter().enumerate() {
+                let seed = 0xE14 ^ ((env.device_gb as u64) << 16) ^ ((ci as u64) << 8) ^ ni as u64;
+                let mut reader = crate::format::TqmReader::open(&path)?;
+                if *net == NetCondition::Flaky {
+                    let plan = Arc::new(FaultPlan::new(FaultConfig {
+                        seed,
+                        transient_p: 0.02,
+                        slow_p: 0.05,
+                        slow_model: crate::netlat::NetworkModel::mobile_lte(),
+                        max_delay: std::time::Duration::from_millis(3),
+                        ..FaultConfig::default()
+                    }));
+                    reader = reader.with_fault_plan(plan);
+                }
+                let serve = ServeOptions {
+                    n_threads: n_cores,
+                    expert_budget_bytes: expert_budget,
+                    expert_residency: ExpertResidency::Packed,
+                    prefetch_budget_bytes: prefetch_budget,
+                    prefetch_workers: 1,
+                    max_batch: requests.min(4),
+                    max_wait_ms: 2,
+                    ..ServeOptions::default()
+                };
+                let host = MoeHost::start(MoeHostSpec {
+                    reader: Arc::new(reader),
+                    n_layers: cfg.n_layers,
+                    moe: spec.clone(),
+                    serve,
+                    sched: None,
+                })?;
+                let t_cell = std::time::Instant::now();
+                let rxs = (0..requests)
+                    .map(|r| host.submit(MoeTraceRequest { trace: trace_for(r) }))
+                    .collect::<Result<Vec<_>>>()?;
+                let mut step_s = Vec::with_capacity(requests);
+                let mut completed = 0usize;
+                let mut tokens_done = 0usize;
+                for rx in rxs {
+                    match rx.recv() {
+                        Ok(Ok(resp)) => {
+                            completed += 1;
+                            tokens_done += resp.outputs.len();
+                            let per =
+                                (resp.queue_s + resp.forward_s) / resp.outputs.len().max(1) as f64;
+                            step_s.push(per);
+                        }
+                        // flaky cells may degrade a request to a
+                        // structured error; the cell still reports
+                        Ok(Err(_)) | Err(_) => {}
+                    }
+                }
+                let wall = t_cell.elapsed().as_secs_f64();
+                let hit_rate = host.metrics.expert_hit_rate();
+                let stall_ms = host.metrics.expert_stall_secs() * 1e3;
+                host.shutdown();
+                let s = crate::util::stats::summarize(&mut step_s);
+                rows.push(EnvelopeRow {
+                    envelope: env.name,
+                    device_gb: env.device_gb,
+                    expert_budget_bytes: expert_budget,
+                    prefetch_budget_bytes: prefetch_budget,
+                    cores: n_cores,
+                    net: net.label(),
+                    requests,
+                    completed,
+                    p50_ms: s.p50 * 1e3,
+                    p95_ms: s.p95 * 1e3,
+                    p99_ms: s.p99 * 1e3,
+                    tokens_per_s: if wall > 0.0 { tokens_done as f64 / wall } else { 0.0 },
+                    hit_rate,
+                    stall_ms,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+pub fn render_envelope(rows: &[EnvelopeRow]) -> Table {
+    let mut t = Table::new(
+        "E14 — device-envelope matrix: serving loop under memory budget x cores x network",
+        &[
+            "envelope",
+            "budget",
+            "prefetch",
+            "cores",
+            "net",
+            "complete",
+            "p50 ms",
+            "p95 ms",
+            "p99 ms",
+            "tok/s",
+            "hit rate",
+            "stall ms",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.envelope.to_string(),
+            fmt_bytes(r.expert_budget_bytes),
+            fmt_bytes(r.prefetch_budget_bytes),
+            format!("{}", r.cores),
+            r.net.to_string(),
+            format!("{}/{}", r.completed, r.requests),
+            format!("{:.3}", r.p50_ms),
+            format!("{:.3}", r.p95_ms),
+            format!("{:.3}", r.p99_ms),
+            format!("{:.1}", r.tokens_per_s),
+            format!("{:.1}%", r.hit_rate * 100.0),
+            format!("{:.2}", r.stall_ms),
         ]);
     }
     t

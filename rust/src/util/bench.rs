@@ -4,6 +4,8 @@
 
 use std::time::Instant;
 
+use crate::util::stats;
+
 /// Result of one measured benchmark.
 #[derive(Clone, Debug)]
 pub struct Measurement {
@@ -12,6 +14,7 @@ pub struct Measurement {
     pub mean_s: f64,
     pub p50_s: f64,
     pub p95_s: f64,
+    pub p99_s: f64,
     pub min_s: f64,
 }
 
@@ -24,11 +27,19 @@ impl Measurement {
 /// Time `f` adaptively: warm up, then run until `budget_s` of wall clock
 /// or `max_iters`, whichever first (at least 3 iterations).
 pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> Measurement {
-    // warmup
-    let w0 = Instant::now();
-    f();
-    let first = w0.elapsed().as_secs_f64();
-    let target_iters = ((budget_s / first.max(1e-9)) as usize).clamp(3, 10_000);
+    // Warm up with three calls and calibrate from their median: the first
+    // call routinely pays page-cache misses and lazy init, and sizing the
+    // whole sample count from that one outlier used to under-iterate fast
+    // benchmarks by an order of magnitude.
+    let mut warm = [0.0f64; 3];
+    for w in warm.iter_mut() {
+        let w0 = Instant::now();
+        f();
+        *w = w0.elapsed().as_secs_f64();
+    }
+    stats::sort_samples(&mut warm);
+    let per_iter = warm[1];
+    let target_iters = ((budget_s / per_iter.max(1e-9)) as usize).clamp(3, 10_000);
     let mut samples = Vec::with_capacity(target_iters);
     let start = Instant::now();
     for _ in 0..target_iters {
@@ -39,15 +50,15 @@ pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> Measurement {
             break;
         }
     }
-    samples.sort_by(|a, b| a.total_cmp(b));
-    let n = samples.len();
+    let s = stats::summarize(&mut samples);
     Measurement {
         name: name.to_string(),
-        iters: n,
-        mean_s: samples.iter().sum::<f64>() / n as f64,
-        p50_s: samples[n / 2],
-        p95_s: samples[(n * 95 / 100).min(n - 1)],
-        min_s: samples[0],
+        iters: s.n,
+        mean_s: s.mean,
+        p50_s: s.p50,
+        p95_s: s.p95,
+        p99_s: s.p99,
+        min_s: s.min,
     }
 }
 
@@ -143,6 +154,7 @@ mod tests {
         assert!(m.iters >= 3);
         assert!(m.mean_s > 0.0);
         assert!(m.p50_s <= m.p95_s);
+        assert!(m.p95_s <= m.p99_s);
         assert!(m.min_s <= m.mean_s * 1.5);
     }
 

@@ -1,0 +1,83 @@
+//! Loud environment-knob parsing. Every `TQM_*` tuning variable is read
+//! through here: an unset (or empty) variable falls back to its default,
+//! but a *malformed* value is a hard error naming the variable and the
+//! bad text. The previous `.ok().and_then(|v| v.parse().ok())` idiom
+//! silently ran a whole bench sweep at the default after a typo like
+//! `TQM_EVAL_LIMIT=6O` — the worst possible failure mode for a knob
+//! whose entire job is making runs comparable.
+
+use std::fmt::Display;
+use std::str::FromStr;
+
+use anyhow::{bail, Result};
+
+/// Read and parse `key`, falling back to `default` only when the
+/// variable is unset or empty. A present-but-unparsable value fails
+/// loudly with the variable name and the offending text.
+pub fn env_parse<T>(key: &str, default: T) -> Result<T>
+where
+    T: FromStr,
+    T::Err: Display,
+{
+    match env_parse_opt(key)? {
+        Some(v) => Ok(v),
+        None => Ok(default),
+    }
+}
+
+/// Like [`env_parse`] but with no default: `Ok(None)` when unset/empty.
+pub fn env_parse_opt<T>(key: &str) -> Result<Option<T>>
+where
+    T: FromStr,
+    T::Err: Display,
+{
+    match std::env::var(key) {
+        Err(_) => Ok(None),
+        Ok(raw) if raw.trim().is_empty() => Ok(None),
+        Ok(raw) => match raw.trim().parse::<T>() {
+            Ok(v) => Ok(Some(v)),
+            Err(e) => bail!(
+                "invalid {key}={raw:?}: {e} (unset the variable to use the default)"
+            ),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    // process env is global state; serialize the tests that touch it
+    static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn unset_yields_default() {
+        let _g = crate::util::lock_recover(&ENV_LOCK);
+        std::env::remove_var("TQM_TEST_UNSET_KNOB");
+        assert_eq!(env_parse("TQM_TEST_UNSET_KNOB", 42usize).unwrap(), 42);
+        assert_eq!(env_parse_opt::<usize>("TQM_TEST_UNSET_KNOB").unwrap(), None);
+    }
+
+    #[test]
+    fn set_value_parses_and_empty_counts_as_unset() {
+        let _g = crate::util::lock_recover(&ENV_LOCK);
+        std::env::set_var("TQM_TEST_SET_KNOB", "17");
+        assert_eq!(env_parse("TQM_TEST_SET_KNOB", 42usize).unwrap(), 17);
+        std::env::set_var("TQM_TEST_SET_KNOB", "  0.25 ");
+        assert_eq!(env_parse("TQM_TEST_SET_KNOB", 0.0f64).unwrap(), 0.25);
+        std::env::set_var("TQM_TEST_SET_KNOB", "");
+        assert_eq!(env_parse("TQM_TEST_SET_KNOB", 42usize).unwrap(), 42);
+        std::env::remove_var("TQM_TEST_SET_KNOB");
+    }
+
+    #[test]
+    fn malformed_value_fails_loudly_naming_key_and_value() {
+        let _g = crate::util::lock_recover(&ENV_LOCK);
+        std::env::set_var("TQM_TEST_BAD_KNOB", "6O");
+        let err = env_parse("TQM_TEST_BAD_KNOB", 60usize).unwrap_err().to_string();
+        assert!(err.contains("TQM_TEST_BAD_KNOB"), "{err}");
+        assert!(err.contains("6O"), "{err}");
+        std::env::remove_var("TQM_TEST_BAD_KNOB");
+    }
+}

@@ -4,11 +4,14 @@
 //! instead of serde_json / rand / tempfile / proptest / criterion.
 
 pub mod bench;
+pub mod env;
 pub mod json;
 pub mod rng;
+pub mod stats;
 pub mod sync;
 pub mod tempdir;
 
+pub use env::{env_parse, env_parse_opt};
 pub use json::Json;
 pub use rng::Rng;
 pub use sync::{lock_recover, wait_recover};

@@ -1,0 +1,125 @@
+//! Shared order-statistics helpers. Every percentile the repo reports —
+//! netlat summaries, the bench harness, serving metrics, eval reports,
+//! the fault/envelope tables — goes through [`percentile`], so the index
+//! convention (nearest-rank via floor, clamped to the last element) is
+//! defined exactly once. Before this module existed the same math was
+//! hand-rolled in four places with three different clamping behaviours.
+
+/// Nearest-rank percentile of an ascending-sorted slice.
+///
+/// Index convention: `floor(n * pct / 100)`, clamped to `n - 1`. The
+/// clamp matters at `pct = 100` (and guards any future caller passing
+/// pct > 100); for `pct < 100` the floor alone stays in bounds, which is
+/// why the old unclamped sites never actually panicked — they were just
+/// one refactor away from it.
+///
+/// An empty slice yields 0.0 rather than panicking: all callers feed
+/// measured samples, and "no samples" should render as a zero row, not
+/// take down a serving thread.
+pub fn percentile(sorted: &[f64], pct: u32) -> f64 {
+    let n = sorted.len();
+    if n == 0 {
+        return 0.0;
+    }
+    sorted[(n * pct as usize / 100).min(n - 1)]
+}
+
+/// Sort in place with `total_cmp` so NaN samples (a bug upstream, but
+/// latency math divides) produce a garbage summary instead of a panic.
+pub fn sort_samples(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+}
+
+/// One-call summary over a set of samples: sorts (total_cmp) and pulls
+/// the standard latency quantiles via [`percentile`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+pub fn summarize(xs: &mut [f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary::default();
+    }
+    sort_samples(xs);
+    let n = xs.len();
+    Summary {
+        n,
+        mean: xs.iter().sum::<f64>() / n as f64,
+        min: xs[0],
+        p50: percentile(xs, 50),
+        p95: percentile(xs, 95),
+        p99: percentile(xs, 99),
+        max: xs[n - 1],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn empty_slice_is_zero_not_panic() {
+        assert_eq!(percentile(&[], 50), 0.0);
+        assert_eq!(summarize(&mut []).n, 0);
+    }
+
+    #[test]
+    fn singleton_returns_the_element_for_every_pct() {
+        for pct in [0, 1, 50, 95, 99, 100] {
+            assert_eq!(percentile(&[7.5], pct), 7.5);
+        }
+    }
+
+    #[test]
+    fn matches_legacy_index_convention() {
+        // The pre-unification sites computed xs[n/2], xs[n*95/100] and
+        // xs[(n*99/100).min(n-1)]; the shared helper must be bit-identical
+        // on those so seeds and golden numbers carry over.
+        for n in 1..=257usize {
+            let xs: Vec<f64> = (0..n).map(|i| i as f64).collect();
+            assert_eq!(percentile(&xs, 50), xs[n / 2], "n={n}");
+            assert_eq!(percentile(&xs, 95), xs[(n * 95 / 100).min(n - 1)], "n={n}");
+            assert_eq!(percentile(&xs, 99), xs[(n * 99 / 100).min(n - 1)], "n={n}");
+        }
+    }
+
+    #[test]
+    fn property_monotone_and_clamped_n_1_to_1000() {
+        // For every sample count 1..=1000 over seeded random data:
+        // percentiles are monotone in pct, bounded by min/max, and
+        // pct=100 hits the max (the clamp working) instead of panicking.
+        let mut rng = Rng::seed_from_u64(0xBA20_0E7E);
+        for n in 1..=1000usize {
+            let mut xs: Vec<f64> = (0..n).map(|_| rng.f64() * 100.0).collect();
+            let s = summarize(&mut xs);
+            assert_eq!(s.n, n);
+            let mut prev = f64::NEG_INFINITY;
+            for pct in 0..=100u32 {
+                let v = percentile(&xs, pct);
+                assert!(v >= prev, "n={n} pct={pct}: {v} < {prev}");
+                assert!(v >= s.min && v <= s.max, "n={n} pct={pct}");
+                prev = v;
+            }
+            assert_eq!(percentile(&xs, 100), s.max, "n={n}");
+            assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.p99, "n={n}");
+            assert!(s.mean >= s.min && s.mean <= s.max, "n={n}");
+        }
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic() {
+        let mut xs = vec![1.0, f64::NAN, 0.5];
+        let s = summarize(&mut xs);
+        assert_eq!(s.n, 3);
+        // total_cmp orders NaN last; quantiles below it stay finite
+        assert!(s.p50.is_finite());
+    }
+}

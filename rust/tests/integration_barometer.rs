@@ -1,0 +1,184 @@
+//! Golden tests for the perf barometer: the `BENCH_<area>.json` schema
+//! must round-trip field-exact through serialize -> parse (the diff
+//! trajectory is only as trustworthy as the files), `bench-report`'s
+//! diff classification must be stable (regression / improvement /
+//! within-noise, plus the empty-baseline first run), and the
+//! device-envelope matrix must produce a real serving-loop row per cell.
+
+use tiny_qmoe::barometer::{
+    diff_sets, load_dir, BenchRecord, BenchSet, DiffClass, DiffOptions, EnvFingerprint,
+};
+use tiny_qmoe::tables;
+use tiny_qmoe::util::TempDir;
+
+fn awkward_record(name: &str, scale: f64) -> BenchRecord {
+    // deliberately awkward floats: non-terminating binary fractions,
+    // subnormal-adjacent tinies, integral values (serialized without a
+    // decimal point) — every one must survive the round trip bit-exact
+    BenchRecord {
+        name: name.to_string(),
+        iters: 12345,
+        mean_s: (0.1 + 0.2) * scale,
+        p50_s: 0.3 * scale,
+        p95_s: 1e-9 * scale,
+        p99_s: 3.0 * scale, // integral: serializes as "3", must parse back to 3.0
+        min_s: f64::MIN_POSITIVE,
+        throughput: Some(1234.5678 * scale),
+        throughput_units: Some("MB/s".to_string()),
+    }
+}
+
+#[test]
+fn schema_round_trips_field_exact() {
+    let mut set = BenchSet::new("golden");
+    set.push(awkward_record("a/b0/t1", 1.0));
+    set.push(awkward_record("a/b8/t4", 7.3));
+    set.push(BenchRecord::single("bare", 3, 0.9)); // no throughput fields
+    let text = set.to_json().to_string();
+    let back = BenchSet::from_json(&tiny_qmoe::util::Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back.area, set.area);
+    assert_eq!(back.env, set.env);
+    assert_eq!(back.records.len(), set.records.len());
+    for (orig, got) in set.records.iter().zip(&back.records) {
+        assert_eq!(orig.name, got.name);
+        assert_eq!(orig.iters, got.iters);
+        // bit-exact, not approximately-equal: to_bits comparison
+        for (a, b) in [
+            (orig.mean_s, got.mean_s),
+            (orig.p50_s, got.p50_s),
+            (orig.p95_s, got.p95_s),
+            (orig.p99_s, got.p99_s),
+            (orig.min_s, got.min_s),
+        ] {
+            assert_eq!(a.to_bits(), b.to_bits(), "field drifted in {}", orig.name);
+        }
+        assert_eq!(orig.throughput.map(f64::to_bits), got.throughput.map(f64::to_bits));
+        assert_eq!(orig.throughput_units, got.throughput_units);
+    }
+}
+
+#[test]
+fn schema_round_trips_through_disk_and_load_dir() {
+    let dir = TempDir::new().unwrap();
+    let mut a = BenchSet::new("alpha");
+    a.push(awkward_record("x", 1.0));
+    let mut b = BenchSet::new("beta");
+    b.push(awkward_record("y", 2.0));
+    let pa = a.write_to(dir.path()).unwrap();
+    b.write_to(dir.path()).unwrap();
+    assert!(pa.file_name().unwrap().to_str().unwrap() == "BENCH_alpha.json");
+    let sets = load_dir(dir.path()).unwrap();
+    assert_eq!(sets.len(), 2);
+    assert_eq!(sets[0], a, "load_dir returns areas sorted, field-exact");
+    assert_eq!(sets[1], b);
+}
+
+#[test]
+fn load_dir_missing_directory_is_the_empty_first_run() {
+    let dir = TempDir::new().unwrap();
+    let sets = load_dir(&dir.join("never-created")).unwrap();
+    assert!(sets.is_empty());
+}
+
+#[test]
+fn load_dir_fails_loudly_on_malformed_json() {
+    let dir = TempDir::new().unwrap();
+    std::fs::write(dir.join("BENCH_broken.json"), "{ not json").unwrap();
+    let err = load_dir(dir.path()).unwrap_err().to_string();
+    assert!(err.contains("BENCH_broken.json"), "{err}");
+}
+
+#[test]
+fn load_dir_rejects_wrong_schema_version() {
+    let dir = TempDir::new().unwrap();
+    let mut set = BenchSet::new("versioned");
+    set.push(BenchRecord::single("x", 1, 1.0));
+    let text = set.to_json().to_string().replace("\"schema_version\":1", "\"schema_version\":99");
+    assert_ne!(text, set.to_json().to_string(), "version marker not found to corrupt");
+    std::fs::write(dir.join("BENCH_versioned.json"), text).unwrap();
+    assert!(load_dir(dir.path()).is_err());
+}
+
+#[test]
+fn bench_report_classification_over_recorded_files() {
+    // the full bench-report path: record two sets to disk, load both
+    // dirs, diff — regression / improvement / within-noise each appear
+    let base_dir = TempDir::new().unwrap();
+    let cur_dir = TempDir::new().unwrap();
+    let mk = |vals: &[(&str, f64)]| {
+        let mut s = BenchSet::new("area");
+        for (n, mean) in vals {
+            s.push(BenchRecord::single(n, 10, mean * 10.0));
+        }
+        s
+    };
+    mk(&[("regressed", 1.0), ("improved", 1.0), ("steady", 1.0), ("gone", 1.0)])
+        .write_to(base_dir.path())
+        .unwrap();
+    mk(&[("regressed", 1.4), ("improved", 0.6), ("steady", 1.03), ("fresh", 1.0)])
+        .write_to(cur_dir.path())
+        .unwrap();
+    let baseline = load_dir(base_dir.path()).unwrap();
+    let current = load_dir(cur_dir.path()).unwrap();
+    let rows = diff_sets(&baseline, &current, &DiffOptions::default());
+    let class = |n: &str| rows.iter().find(|r| r.name == n).unwrap().class;
+    assert_eq!(class("regressed"), DiffClass::Regression);
+    assert_eq!(class("improved"), DiffClass::Improvement);
+    assert_eq!(class("steady"), DiffClass::Neutral);
+    assert_eq!(class("fresh"), DiffClass::New);
+    assert_eq!(class("gone"), DiffClass::Missing);
+    assert_eq!(rows.len(), 5, "every benchmark classified exactly once");
+}
+
+#[test]
+fn bench_report_empty_baseline_first_run() {
+    let cur_dir = TempDir::new().unwrap();
+    let mut s = BenchSet::new("area");
+    s.push(BenchRecord::single("only", 3, 0.3));
+    s.write_to(cur_dir.path()).unwrap();
+    let current = load_dir(cur_dir.path()).unwrap();
+    let rows = diff_sets(&[], &current, &DiffOptions::default());
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].class, DiffClass::New);
+    assert!(rows[0].baseline.is_none());
+}
+
+#[test]
+fn env_fingerprint_captures_knobs() {
+    // serialized knob map reflects the TQM_* environment at capture time
+    std::env::set_var("TQM_FINGERPRINT_PROBE", "42");
+    let env = EnvFingerprint::capture();
+    std::env::remove_var("TQM_FINGERPRINT_PROBE");
+    assert!(env.cores >= 1);
+    assert_eq!(env.knobs.get("TQM_FINGERPRINT_PROBE").map(String::as_str), Some("42"));
+}
+
+#[test]
+fn envelope_matrix_runs_a_serving_row_per_cell() {
+    // tiny matrix — one device envelope, one core count, both network
+    // conditions — but each cell is a real MoeHost serving-loop run
+    let rows = tables::envelope_matrix(
+        &tables::DEVICE_ENVELOPES[..1],
+        &[1],
+        &[tables::NetCondition::Offline, tables::NetCondition::Flaky],
+        4,
+        2,
+    )
+    .unwrap();
+    assert_eq!(rows.len(), 2, "one row per (envelope x cores x net) cell");
+    for r in &rows {
+        assert_eq!(r.envelope, "phone-4GB");
+        assert_eq!(r.cores, 1);
+        assert_eq!(r.requests, 2);
+        assert!(r.completed <= r.requests);
+        assert!(r.completed > 0, "offline/flaky cell served nothing");
+        assert!(r.expert_budget_bytes > 0 && r.prefetch_budget_bytes > 0);
+        assert!(r.p50_ms <= r.p95_ms && r.p95_ms <= r.p99_ms, "percentiles not monotone");
+        assert!(r.tokens_per_s > 0.0);
+    }
+    assert!(rows.iter().any(|r| r.net == "offline"));
+    assert!(rows.iter().any(|r| r.net == "flaky"));
+    // rendering covers every row
+    let rendered = tables::render_envelope(&rows).render();
+    assert_eq!(rendered.lines().filter(|l| l.contains("phone-4GB")).count(), 2);
+}

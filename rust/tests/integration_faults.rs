@@ -31,12 +31,14 @@ use tiny_qmoe::model::moe::{
 use tiny_qmoe::pipeline::scheduler::LayerPlan;
 use tiny_qmoe::util::TempDir;
 
+// loud knob parsing: a typo'd TQM_CHAOS_* in the CI matrix must fail the
+// job, not silently run the default scenario and report green
 fn env_u64(key: &str, default: u64) -> u64 {
-    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+    tiny_qmoe::util::env_parse(key, default).unwrap()
 }
 
 fn env_f64(key: &str, default: f64) -> f64 {
-    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+    tiny_qmoe::util::env_parse(key, default).unwrap()
 }
 
 fn build_container(seed: u64) -> (tiny_qmoe::config::ModelConfig, TempDir) {
