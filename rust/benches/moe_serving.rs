@@ -10,6 +10,11 @@
 //! length per request (default 32), `TQM_BENCH_BUDGET_S` the per-cell
 //! time budget (default 0.5 s); `TQM_BENCH_DIR` additionally records the
 //! run as `BENCH_serving.json` for `tqm bench-report`.
+//!
+//! A final cell pair re-runs the packed/batch-4 cell with the flight
+//! recorder force-enabled vs force-disabled
+//! (`serve/packed/batch4/trace-{on,off}`), so the tracing overhead is a
+//! measured barometer row instead of a promise.
 
 use std::sync::Arc;
 
@@ -24,6 +29,7 @@ use tiny_qmoe::util::env_parse;
 fn main() -> anyhow::Result<()> {
     let tokens: usize = env_parse::<usize>("TQM_SERVE_TOKENS", 32)?.max(1);
     let budget_s: f64 = env_parse("TQM_BENCH_BUDGET_S", 0.5)?;
+    tiny_qmoe::trace::init_from_env()?;
 
     let cfg = moe::moe_demo_config();
     let spec = cfg.moe.clone().expect("demo config is MoE");
@@ -84,6 +90,53 @@ fn main() -> anyhow::Result<()> {
             ]);
         }
     }
+    // tracing-overhead pair: identical packed/batch-4 cells, recorder
+    // force-enabled vs force-disabled (prior state restored after)
+    let prev = tiny_qmoe::trace::enabled();
+    for tracing_on in [false, true] {
+        tiny_qmoe::trace::set_enabled(tracing_on);
+        let batch = 4usize;
+        let reader = Arc::new(tiny_qmoe::format::TqmReader::open(&path)?);
+        let serve = ServeOptions {
+            expert_residency: ExpertResidency::Packed,
+            max_batch: batch,
+            max_wait_ms: 1,
+            n_threads: 2,
+            ..Default::default()
+        };
+        let host = MoeHost::start(MoeHostSpec {
+            reader,
+            n_layers: cfg.n_layers,
+            moe: spec.clone(),
+            serve,
+            sched: None,
+        })?;
+        let state = if tracing_on { "on" } else { "off" };
+        let name = format!("serve/packed/batch{batch}/trace-{state}");
+        let m = bench(&name, budget_s, || {
+            let rxs: Vec<_> = (0..batch)
+                .map(|r| host.submit(MoeTraceRequest { trace: trace_for(r) }).unwrap())
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap().unwrap();
+            }
+        });
+        host.shutdown();
+        // discard whatever the cell recorded so ring-buffer contents
+        // never leak into a later run's drain
+        let _ = tiny_qmoe::trace::drain();
+        let tok_s = (tokens * batch) as f64 / m.mean_s.max(1e-9);
+        set.push(BenchRecord::from_measurement(&m).with_throughput(tok_s, "tok/s"));
+        t.row(vec![
+            "packed".to_string(),
+            format!("{batch} (trace {state})"),
+            fmt_secs(m.mean_s),
+            fmt_secs(m.p99_s),
+            format!("{tok_s:.0}"),
+        ]);
+    }
+    tiny_qmoe::trace::set_enabled(prev);
+
     t.print();
     barometer::emit(&set)?;
     Ok(())

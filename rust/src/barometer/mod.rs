@@ -20,7 +20,7 @@ mod report;
 mod schema;
 
 pub use report::{render_diff, diff_sets, DiffClass, DiffOptions, DiffRow};
-pub use schema::{emit, load_dir, BenchRecord, BenchSet, EnvFingerprint};
+pub use schema::{emit, emit_named, load_dir, BenchRecord, BenchSet, EnvFingerprint};
 
 /// Env var naming the directory benches write `BENCH_<area>.json` into.
 pub const BENCH_DIR_VAR: &str = "TQM_BENCH_DIR";

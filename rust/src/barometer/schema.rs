@@ -266,3 +266,24 @@ pub fn emit(set: &BenchSet) -> Result<Option<PathBuf>> {
         None => Ok(None),
     }
 }
+
+/// Write an arbitrary pre-built JSON artifact (e.g. the
+/// `METRICS_<run>.json` counter snapshot a serving run emits at
+/// shutdown) into `$TQM_BENCH_DIR` if the knob is set. The caller owns
+/// the schema versioning inside `j`; this only owns the placement next
+/// to the `BENCH_*.json` files so one directory carries both timings and
+/// counters.
+pub fn emit_named(file_name: &str, j: &Json) -> Result<Option<PathBuf>> {
+    match crate::util::env_parse_opt::<PathBuf>(super::BENCH_DIR_VAR)? {
+        Some(dir) => {
+            std::fs::create_dir_all(&dir)
+                .with_context(|| format!("creating bench dir {}", dir.display()))?;
+            let path = dir.join(file_name);
+            std::fs::write(&path, j.to_string())
+                .with_context(|| format!("writing {}", path.display()))?;
+            eprintln!("[barometer] wrote {}", path.display());
+            Ok(Some(path))
+        }
+        None => Ok(None),
+    }
+}

@@ -12,6 +12,7 @@
 //! cost one decode, and the next layer's likely experts warm while the
 //! current one computes.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -24,6 +25,11 @@ use crate::faults::MoeError;
 use crate::format::TqmReader;
 use crate::model::moe::{load_routers, Router};
 use crate::pipeline::{ExpertCache, ExpertScheduler, PipelineMetrics, SchedOptions};
+use crate::trace::{self, Category};
+
+/// Process-wide request id sequence — every submitted trace gets one, so
+/// flight-recorder spans from different hosts never collide.
+static NEXT_REQ_ID: AtomicU64 = AtomicU64::new(0);
 
 /// How long past a request's deadline [`MoeHost::generate`] keeps waiting
 /// before declaring the serving thread wedged. The serving loop answers
@@ -49,6 +55,8 @@ pub struct MoeTraceResponse {
 
 struct Envelope {
     req: MoeTraceRequest,
+    /// Flight-recorder request id (threads queue + request spans).
+    req_id: u64,
     enqueued: Instant,
     /// Hard completion deadline (from `ServeOptions::deadline_ms`); past
     /// it the request is answered with [`MoeError::Timeout`] instead of
@@ -88,6 +96,9 @@ impl MoeHost {
             !spec.reader.expert_entries().is_empty(),
             "container has no expert records (dense model?)"
         );
+        // arm the flight recorder if TQM_TRACE_DIR is set; a malformed
+        // knob fails host startup loudly rather than silently not tracing
+        trace::init_from_env()?;
         let routers = load_routers(&spec.reader, spec.n_layers)?;
         let metrics = Arc::new(PipelineMetrics::default());
         // a chaos harness wants its injection tallies next to the
@@ -139,8 +150,9 @@ impl MoeHost {
         deadline: Option<Instant>,
     ) -> Result<mpsc::Receiver<Result<MoeTraceResponse>>> {
         let (resp_tx, resp_rx) = mpsc::channel();
+        let req_id = NEXT_REQ_ID.fetch_add(1, Ordering::Relaxed);
         self.tx
-            .send(Envelope { req, enqueued: Instant::now(), deadline, resp: resp_tx })
+            .send(Envelope { req, req_id, enqueued: Instant::now(), deadline, resp: resp_tx })
             .map_err(|_| anyhow::anyhow!("MoE serving thread is gone"))?;
         Ok(resp_rx)
     }
@@ -178,12 +190,23 @@ impl MoeHost {
         }
     }
 
-    /// Stop the serving thread (drains the queue first).
+    /// Stop the serving thread (drains the queue first), then flush the
+    /// run's observability artifacts: a `METRICS_moe_host.json` counter
+    /// snapshot into `TQM_BENCH_DIR` and any recorded trace into
+    /// `TQM_TRACE_DIR`. Both are no-ops when their knob is unset.
     pub fn shutdown(self) {
-        let MoeHost { tx, join, .. } = self;
+        let MoeHost { tx, join, metrics, .. } = self;
         drop(tx);
         if let Some(j) = join {
             let _ = j.join();
+        }
+        match crate::barometer::emit_named("METRICS_moe_host.json", &metrics.to_json()) {
+            Ok(_) => {}
+            Err(e) => eprintln!("warning: metrics snapshot not written: {e:#}"),
+        }
+        match trace::write_run("moe_host") {
+            Ok(_) => {}
+            Err(e) => eprintln!("warning: trace not written: {e:#}"),
         }
     }
 }
@@ -207,7 +230,10 @@ fn serve_loop(
         // the drain window shrinks to the earliest request deadline in
         // the forming batch — a request with little budget left must not
         // spend it queueing for batch-mates
-        let batch = collect_batch_by(&rx, policy, |env: &Envelope| env.deadline);
+        let batch = {
+            let _drain = trace::span(Category::Drain, "batch_drain");
+            collect_batch_by(&rx, policy, |env: &Envelope| env.deadline)
+        };
         if batch.is_empty() {
             return; // disconnected and drained
         }
@@ -226,6 +252,12 @@ fn serve_trace_batch(
         .into_iter()
         .map(|env| ActiveTrace { env, outputs: Vec::new(), cursor: 0, started: now })
         .collect();
+    for a in &active {
+        // the queue window closed when the batch formed; its start
+        // predates this thread seeing the envelope, so it is recorded
+        // from the measured enqueue instant rather than a live guard
+        trace::span_between(Category::Queue, "queue", a.env.req_id, a.env.enqueued, now);
+    }
     // retire zero-length traces up front: they are already complete, but
     // they never enter `live`, so the retire loop below would drop their
     // response channel without ever answering (the client's recv() then
@@ -233,6 +265,13 @@ fn serve_trace_batch(
     for a in &active {
         if a.env.req.trace.is_empty() {
             let queue_s = (a.started - a.env.enqueued).as_secs_f64().max(0.0);
+            trace::span_between(
+                Category::Request,
+                "request",
+                a.env.req_id,
+                a.started,
+                Instant::now(),
+            );
             let _ = a.env.resp.send(Ok(MoeTraceResponse {
                 outputs: Vec::new(),
                 queue_s,
@@ -253,6 +292,14 @@ fn serve_trace_batch(
             if let Some(d) = a.env.deadline {
                 if now >= d {
                     sched.metrics().record_deadline_timeout();
+                    trace::mark(Category::Fault, "deadline_timeout").req(a.env.req_id);
+                    trace::span_between(
+                        Category::Request,
+                        "request",
+                        a.env.req_id,
+                        a.started,
+                        now,
+                    );
                     let _ = a.env.resp.send(Err(anyhow::Error::new(MoeError::Timeout)));
                     a.cursor = a.env.req.trace.len(); // retire
                     a.outputs.clear();
@@ -287,6 +334,14 @@ fn serve_trace_batch(
                         Some(me) => anyhow::Error::new(me.clone()).context(msg.clone()),
                         None => anyhow::anyhow!("{msg}"),
                     };
+                    trace::mark(Category::Fault, "forward_error").req(active[i].env.req_id);
+                    trace::span_between(
+                        Category::Request,
+                        "request",
+                        active[i].env.req_id,
+                        active[i].started,
+                        Instant::now(),
+                    );
                     let _ = active[i].env.resp.send(Err(err));
                     active[i].cursor = active[i].env.req.trace.len(); // retire
                     active[i].outputs.clear();
@@ -300,6 +355,13 @@ fn serve_trace_batch(
             let a = &mut active[i];
             if a.cursor == a.env.req.trace.len() {
                 let queue_s = (a.started - a.env.enqueued).as_secs_f64().max(0.0);
+                trace::span_between(
+                    Category::Request,
+                    "request",
+                    a.env.req_id,
+                    a.started,
+                    Instant::now(),
+                );
                 let _ = a.env.resp.send(Ok(MoeTraceResponse {
                     outputs: std::mem::take(&mut a.outputs),
                     queue_s,

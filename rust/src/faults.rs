@@ -31,6 +31,7 @@ use anyhow::{bail, Result};
 
 use crate::netlat::NetworkModel;
 use crate::pipeline::PipelineMetrics;
+use crate::trace::{self, Category};
 use crate::util::{lock_recover, Rng};
 
 /// Structured serving errors: what a client gets back instead of a
@@ -228,6 +229,7 @@ impl RecordSource for FaultPlan {
                 .max(0.0);
             self.delays_injected.fetch_add(1, Ordering::Relaxed);
             self.with_metrics(|m| m.record_fault_delay());
+            let _slow = trace::span(Category::Fault, "inject_delay");
             std::thread::sleep(Duration::from_secs_f64(secs));
         }
         // Permanent poison: every access corrupts, so retries exhaust and
@@ -235,21 +237,25 @@ impl RecordSource for FaultPlan {
         if self.cfg.poisoned.iter().any(|p| p == name) {
             self.corrupt_injected.fetch_add(1, Ordering::Relaxed);
             self.with_metrics(|m| m.record_fault_corrupt());
+            trace::mark(Category::Fault, "inject_poison");
             return Ok(Cow::Owned(flip_bit(payload, &mut rng)));
         }
         if self.cfg.transient_p > 0.0 && rng.gen_bool(self.cfg.transient_p) {
             self.transient_injected.fetch_add(1, Ordering::Relaxed);
             self.with_metrics(|m| m.record_fault_transient());
+            trace::mark(Category::Fault, "inject_transient");
             bail!("injected transient read failure on {name:?} (access {idx})");
         }
         if self.cfg.corrupt_p > 0.0 && rng.gen_bool(self.cfg.corrupt_p) {
             self.corrupt_injected.fetch_add(1, Ordering::Relaxed);
             self.with_metrics(|m| m.record_fault_corrupt());
+            trace::mark(Category::Fault, "inject_corrupt");
             return Ok(Cow::Owned(flip_bit(payload, &mut rng)));
         }
         if self.cfg.truncate_p > 0.0 && rng.gen_bool(self.cfg.truncate_p) && !payload.is_empty() {
             self.truncate_injected.fetch_add(1, Ordering::Relaxed);
             self.with_metrics(|m| m.record_fault_corrupt());
+            trace::mark(Category::Fault, "inject_truncate");
             let keep = rng.gen_range_usize(0, payload.len());
             return Ok(Cow::Owned(payload[..keep].to_vec()));
         }

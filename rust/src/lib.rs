@@ -35,6 +35,7 @@ pub mod quant;
 pub mod runtime;
 pub mod tables;
 pub mod tensor;
+pub mod trace;
 pub mod util;
 pub mod xla;
 

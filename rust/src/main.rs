@@ -20,6 +20,11 @@
 //!   tqm bench-report --current DIR [--baseline DIR] [--noise 0.10]
 //!                 (diff two recorded BENCH_*.json sets; no --baseline =
 //!                  first run, everything reports as "new")
+//!   tqm trace-report --trace FILE [--baseline FILE] [--noise 0.10]
+//!                 [--max-requests 20]
+//!                 (reconstruct per-request waterfalls + critical-path
+//!                  stage attribution from a recorded TRACE_*.json;
+//!                  --baseline diffs two traces like bench-report)
 //!
 //! `--table faults` replays a seeded chaos matrix (fault rate x retry
 //! budget) through the scheduler: completion rate, p99 added latency,
@@ -110,6 +115,9 @@ fn main() {
 
 fn run() -> Result<()> {
     let args = parse_args()?;
+    // arm the flight recorder once for every subcommand — a malformed
+    // TQM_TRACE_* knob should fail the run loudly, not record nothing
+    tiny_qmoe::trace::init_from_env()?;
     match args.cmd.as_str() {
         "quantize" => cmd_quantize(&args),
         "inspect" => cmd_inspect(&args),
@@ -118,6 +126,7 @@ fn run() -> Result<()> {
         "serve-demo" => cmd_serve_demo(&args),
         "tables" => cmd_tables(&args),
         "bench-report" => cmd_bench_report(&args),
+        "trace-report" => cmd_trace_report(&args),
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
             Ok(())
@@ -127,7 +136,7 @@ fn run() -> Result<()> {
 }
 
 const HELP: &str = "tqm — Tiny-QMoE reproduction CLI
-  quantize | inspect | eval | generate | serve-demo | tables | bench-report
+  quantize | inspect | eval | generate | serve-demo | tables | bench-report | trace-report
   (see rust/src/main.rs header for flags)";
 
 fn cmd_quantize(args: &Args) -> Result<()> {
@@ -493,5 +502,31 @@ fn cmd_bench_report(args: &Args) -> Result<()> {
         count(DiffClass::New),
         count(DiffClass::Missing),
     );
+    Ok(())
+}
+
+fn cmd_trace_report(args: &Args) -> Result<()> {
+    use tiny_qmoe::trace::{chrome, report};
+
+    let trace_path = args.get("trace", "");
+    anyhow::ensure!(
+        !trace_path.is_empty(),
+        "--trace <file> required (a recorded TRACE_<run>.json)"
+    );
+    let max_requests = args.get_usize("max-requests", 20)?;
+    let loaded = chrome::load(std::path::Path::new(&trace_path))?;
+    let current = report::from_loaded(&loaded);
+    let baseline_path = args.get("baseline", "");
+    if baseline_path.is_empty() {
+        print!("{}", report::render(&current, max_requests));
+        return Ok(());
+    }
+    let noise = match args.flags.get("noise") {
+        Some(v) => v.parse::<f64>().with_context(|| format!("bad --noise {v:?}"))?,
+        None => tiny_qmoe::util::env_parse(tiny_qmoe::barometer::BENCH_NOISE_VAR, 0.10)?,
+    };
+    let base = report::from_loaded(&chrome::load(std::path::Path::new(&baseline_path))?);
+    let (rendered, _regressions) = report::diff(&base, &current, noise);
+    print!("{rendered}");
     Ok(())
 }

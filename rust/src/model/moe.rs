@@ -548,6 +548,9 @@ impl ExpertWeights {
                 // same math, quantized domain: the gate vector is built
                 // with the identical expression, and w2's qGEMV skips
                 // g[j] == 0.0 rows exactly like the decoded `continue`
+                let _k = crate::trace::span(crate::trace::Category::Kernel, "qgemv")
+                    .layer(self.layer)
+                    .expert(self.expert);
                 let mut h1 = vec![0.0f32; de];
                 let mut h3 = vec![0.0f32; de];
                 p.w1.gemv_into(x, &mut h1);
@@ -579,6 +582,9 @@ impl ExpertWeights {
         match &self.body {
             ExpertBody::Decoded { .. } => xs.iter().map(|x| self.ffn(x)).collect(),
             ExpertBody::Packed(p) => {
+                let _k = crate::trace::span(crate::trace::Category::Kernel, "qgemm")
+                    .layer(self.layer)
+                    .expert(self.expert);
                 let mut xf = Vec::with_capacity(b * d);
                 for x in xs {
                     assert_eq!(x.len(), d, "expert input dim mismatch");

@@ -90,6 +90,7 @@ use crate::config::{ExpertResidency, ServeOptions};
 use crate::format::{expert_record_name, TqmReader};
 use crate::model::moe::{ExpertBody, ExpertWeights, PackedExpert, EXPERT_MATRIX_NAMES};
 use crate::pipeline::PipelineMetrics;
+use crate::trace::{self, Category};
 
 /// Upper bound on recycled arenas held per pool. The synchronous miss
 /// path drains the pools, but the scheduler's out-of-lock demand decodes
@@ -409,6 +410,7 @@ impl ExpertCache {
         // decode ran outside the lock) count too, which is what lets
         // `issued == hits + wasted` reconcile exactly
         self.metrics.prefetch_hit();
+        trace::mark(Category::Cache, "prefetch_hit").layer(key.0).expert(key.1);
         let need = self.map[&key].w.bytes();
         self.speculative_bytes -= need;
         self.evict_until_fits(need, Some(key));
@@ -474,6 +476,7 @@ impl ExpertCache {
             };
             self.drop_slot(vk);
             self.metrics.record_prefetch_evicted_unused();
+            trace::mark(Category::Cache, "evict_speculative_unused").layer(vk.0).expert(vk.1);
         }
         self.speculative_bytes += need;
         self.metrics.set_expert_speculative(self.speculative_bytes);
@@ -603,6 +606,7 @@ impl ExpertCache {
             let Some(key) = victim else { break };
             self.drop_slot(key);
             self.metrics.record_expert_eviction();
+            trace::mark(Category::Cache, "evict").layer(key.0).expert(key.1);
         }
         self.publish_residency();
     }

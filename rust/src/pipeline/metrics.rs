@@ -9,6 +9,12 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::time::Duration;
 
+use crate::util::Json;
+
+/// Schema version stamped into `METRICS_<run>.json` snapshots; bump on
+/// incompatible change.
+pub const METRICS_SCHEMA_VERSION: u32 = 1;
+
 #[derive(Default)]
 pub struct PipelineMetrics {
     decompress_ns: AtomicU64,
@@ -55,6 +61,11 @@ pub struct PipelineMetrics {
     sched_planned_fetches: AtomicU64,
     /// Scheduler layer-plans built (one per layer per forward step).
     sched_plans: AtomicU64,
+    /// Wall time of completed `forward_batch` steps — the reconciliation
+    /// base for the time-accounting identity (stall + exec ≤ wall).
+    forward_wall_ns: AtomicU64,
+    /// Completed forward steps behind `forward_wall_ns`.
+    forward_steps: AtomicU64,
     /// Batched (layer, expert, token-group) qGEMM calls executed — one
     /// traversal of the expert's packed streams each. With batching on,
     /// equals `sched_planned_fetches`.
@@ -338,6 +349,45 @@ impl PipelineMetrics {
             return 0.0;
         }
         self.sched_routed_picks() as f64 / planned as f64
+    }
+
+    /// One completed `forward_batch` step: its wall time is the base the
+    /// time-accounting identity reconciles stall + exec against.
+    pub fn record_forward_wall(&self, d: Duration) {
+        self.forward_wall_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.forward_steps.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn forward_wall_secs(&self) -> f64 {
+        self.forward_wall_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn forward_steps_count(&self) -> u64 {
+        self.forward_steps.load(Ordering::Relaxed)
+    }
+
+    /// Where forward wall time went. On the serving thread, demand-miss
+    /// decode (`stall`) and expert execution (`exec`) are disjoint
+    /// sections of the forward loop, so `other = wall - stall - exec` is
+    /// the residual (routing, planning, bookkeeping) and can never be
+    /// meaningfully negative — the unit tests assert that identity on a
+    /// deterministic sync-prefetch run. Prefetch decode time overlaps the
+    /// wall on background workers, so it is reported alongside rather
+    /// than summed into the identity.
+    pub fn time_accounting(&self) -> String {
+        let wall = self.forward_wall_secs();
+        let stall = self.expert_stall_secs();
+        let exec = self.exec_secs();
+        let other = wall - stall - exec;
+        format!(
+            "time: forward wall {:.1} ms = stall {:.1} + exec {:.1} + other {:.1} ms (+ {:.1} ms prefetch decode hidden on workers) over {} steps",
+            wall * 1e3,
+            stall * 1e3,
+            exec * 1e3,
+            other * 1e3,
+            self.prefetch_hidden_secs() * 1e3,
+            self.forward_steps_count(),
+        )
     }
 
     /// One grouped layer executed with batched qGEMM: `groups` (expert,
@@ -624,7 +674,74 @@ impl PipelineMetrics {
                 self.faults_delay_count(),
             ));
         }
+        if self.forward_steps_count() > 0 {
+            s.push_str("; ");
+            s.push_str(&self.time_accounting());
+        }
         s
+    }
+
+    /// Snapshot every counter and gauge as a schema-versioned JSON object
+    /// — the `METRICS_<run>.json` barometer artifact. Field names match
+    /// the struct fields so the snapshot is greppable against the source.
+    pub fn to_json(&self) -> Json {
+        let n = |v: u64| Json::num(v as f64);
+        let nu = |v: usize| Json::num(v as f64);
+        Json::obj(vec![
+            ("schema_version", Json::num(METRICS_SCHEMA_VERSION as f64)),
+            ("decompress_ns", n(self.decompress_ns.load(Ordering::Relaxed))),
+            ("decompress_bytes", n(self.decompress_bytes.load(Ordering::Relaxed))),
+            ("decompress_count", n(self.decompress_count())),
+            ("decode_busy_ns", n(self.decode_busy_ns.load(Ordering::Relaxed))),
+            ("decode_threads", nu(self.decode_threads())),
+            ("exec_ns", n(self.exec_ns.load(Ordering::Relaxed))),
+            ("exec_count", n(self.exec_count.load(Ordering::Relaxed))),
+            ("lru_hits", n(self.lru_hits_count())),
+            ("constant_bytes", nu(self.constant_bytes())),
+            ("peak_transient_bytes", nu(self.transient_peak_bytes())),
+            ("lru_resident_bytes", nu(self.lru_resident_bytes.load(Ordering::Relaxed))),
+            ("expert_hits", n(self.expert_hits_count())),
+            ("expert_misses", n(self.expert_misses_count())),
+            ("expert_hits_packed", n(self.expert_packed_hits_count())),
+            ("expert_misses_packed", n(self.expert_packed_misses_count())),
+            ("expert_evictions", n(self.expert_evictions_count())),
+            ("expert_resident_count", nu(self.expert_resident_count())),
+            ("expert_decode_ns", n(self.expert_decode_ns.load(Ordering::Relaxed))),
+            ("expert_decoded_bytes", n(self.expert_decoded_bytes())),
+            ("expert_resident_bytes", nu(self.expert_resident_bytes())),
+            ("expert_peak_resident_bytes", nu(self.expert_peak_resident_bytes())),
+            ("expert_speculative_bytes", nu(self.expert_speculative_bytes())),
+            ("sched_routed_picks", n(self.sched_routed_picks())),
+            ("sched_planned_fetches", n(self.sched_planned_fetches())),
+            ("sched_plans", n(self.sched_plans_count())),
+            ("forward_wall_ns", n(self.forward_wall_ns.load(Ordering::Relaxed))),
+            ("forward_steps", n(self.forward_steps_count())),
+            ("exec_batched_groups", n(self.exec_batched_groups_count())),
+            ("exec_batched_tokens", n(self.exec_batched_tokens_count())),
+            ("exec_scalar_picks", n(self.exec_scalar_picks_count())),
+            ("prefetch_issued", n(self.prefetch_issued_count())),
+            ("prefetch_inserted", n(self.prefetch_inserted_count())),
+            ("prefetch_hits", n(self.prefetch_hits_count())),
+            ("prefetch_rejected", n(self.prefetch_rejected.load(Ordering::Relaxed))),
+            (
+                "prefetch_evicted_unused",
+                n(self.prefetch_evicted_unused.load(Ordering::Relaxed)),
+            ),
+            ("prefetch_decode_ns", n(self.prefetch_decode_ns.load(Ordering::Relaxed))),
+            ("prefetch_decoded_bytes", n(self.prefetch_decoded_bytes())),
+            ("fetch_retries", n(self.fetch_retries_count())),
+            ("retry_successes", n(self.retry_successes_count())),
+            ("quarantined", n(self.quarantined_count())),
+            ("quarantine_recoveries", n(self.quarantine_recoveries_count())),
+            ("quarantine_probes", n(self.quarantine_probes_count())),
+            ("expert_drops", n(self.expert_drops_count())),
+            ("degraded_picks", n(self.degraded_picks_count())),
+            ("prefetch_worker_panics", n(self.prefetch_worker_panics_count())),
+            ("deadline_timeouts", n(self.deadline_timeouts_count())),
+            ("faults_transient", n(self.faults_transient_count())),
+            ("faults_corrupt", n(self.faults_corrupt_count())),
+            ("faults_delay", n(self.faults_delay_count())),
+        ])
     }
 
     pub fn reset_timers(&self) {
@@ -776,6 +893,61 @@ mod tests {
         m.record_fault_delay();
         assert_eq!(m.faults_injected_count(), 3);
         assert!(m.summary().contains("injected: 1 transient, 1 corrupt, 1 delays"));
+    }
+
+    #[test]
+    fn time_accounting_line_appears_once_forward_steps_exist() {
+        let m = PipelineMetrics::default();
+        assert!(!m.summary().contains("time:"), "silent before any forward step");
+        m.record_expert_miss(Duration::from_millis(3), 1000, false); // stall
+        m.record_exec(Duration::from_millis(5)); // exec
+        m.record_forward_wall(Duration::from_millis(10)); // wall
+        let line = m.time_accounting();
+        assert!(line.contains("forward wall 10.0 ms"), "{line}");
+        assert!(line.contains("stall 3.0"), "{line}");
+        assert!(line.contains("exec 5.0"), "{line}");
+        assert!(line.contains("other 2.0"), "{line}");
+        assert!(m.summary().contains("time: forward wall"), "{}", m.summary());
+    }
+
+    #[test]
+    fn metrics_snapshot_serializes_every_counter() {
+        let m = PipelineMetrics::default();
+        m.record_expert_miss(Duration::from_millis(2), 1000, true);
+        m.expert_hit(false);
+        m.record_forward_wall(Duration::from_millis(4));
+        m.record_exec(Duration::from_millis(1));
+        m.prefetch_issue();
+        m.record_fetch_retry();
+        m.record_fault_transient();
+        let j = m.to_json();
+        let text = j.to_string();
+        let back = Json::parse(&text).expect("snapshot round-trips through text");
+        assert_eq!(
+            back.get("schema_version").unwrap().as_u32().unwrap(),
+            METRICS_SCHEMA_VERSION
+        );
+        for key in [
+            "decompress_ns",
+            "exec_ns",
+            "expert_hits",
+            "expert_misses",
+            "expert_misses_packed",
+            "expert_peak_resident_bytes",
+            "sched_routed_picks",
+            "forward_wall_ns",
+            "forward_steps",
+            "prefetch_issued",
+            "fetch_retries",
+            "quarantined",
+            "deadline_timeouts",
+            "faults_transient",
+        ] {
+            assert!(back.opt(key).is_some(), "snapshot missing {key}");
+        }
+        assert_eq!(back.get("expert_misses").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(back.get("forward_steps").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(back.get("faults_transient").unwrap().as_usize().unwrap(), 1);
     }
 
     #[test]

@@ -45,6 +45,7 @@ use crate::model::moe::{
 };
 use crate::pipeline::expert_cache::DemandFetch;
 use crate::pipeline::{ExpertCache, PipelineMetrics};
+use crate::trace::{self, Category};
 use crate::util::lock_recover;
 
 pub use plan::LayerPlan;
@@ -228,6 +229,8 @@ impl ExpertScheduler {
         match fetch {
             DemandFetch::Hit(w) => Ok(w),
             DemandFetch::Miss(res) => {
+                let _stall =
+                    trace::span(Category::Stall, "demand_decode").layer(layer).expert(expert);
                 let t0 = Instant::now();
                 // the decode runs with no cache lock held, so a panic in
                 // it would otherwise drop the reservation uncancelled and
@@ -266,9 +269,12 @@ impl ExpertScheduler {
         for attempt in 0..=self.opts.retry_budget {
             if attempt > 0 {
                 self.metrics.record_fetch_retry();
+                trace::mark(Category::Retry, "retry").layer(layer).expert(expert);
                 let backoff =
                     self.opts.retry_backoff_ms.saturating_mul(1u64 << (attempt - 1).min(6));
                 if backoff > 0 {
+                    let _backoff =
+                        trace::span(Category::Retry, "backoff").layer(layer).expert(expert);
                     std::thread::sleep(Duration::from_millis(backoff.min(64)));
                 }
             }
@@ -320,10 +326,15 @@ impl ExpertScheduler {
         if xs0.is_empty() {
             return Ok(Vec::new());
         }
+        let _step = trace::span(Category::Step, "forward_batch");
+        let t_wall = Instant::now();
         self.quarantine.tick_step();
         let mut xs: Vec<Vec<f32>> = xs0.to_vec();
         for (l, router) in routers.iter().enumerate() {
-            let plan = LayerPlan::build(l, router, &xs, spec.top_k);
+            let plan = {
+                let _plan = trace::span(Category::Plan, "layer_plan").layer(l);
+                LayerPlan::build(l, router, &xs, spec.top_k)
+            };
             self.metrics
                 .record_sched_plan(plan.routed_picks() as u64, plan.n_unique() as u64);
             lock_recover(&self.prior).observe(l, &plan.unique);
@@ -339,7 +350,10 @@ impl ExpertScheduler {
             for &e in &unique {
                 match self.quarantine.check(l, e) {
                     QuarantineCheck::Quarantined => excluded.push(e),
-                    QuarantineCheck::Probe => self.metrics.record_quarantine_probe(),
+                    QuarantineCheck::Probe => {
+                        self.metrics.record_quarantine_probe();
+                        trace::mark(Category::Fault, "quarantine_probe").layer(l).expert(e);
+                    }
                     QuarantineCheck::Clear => {}
                 }
             }
@@ -349,6 +363,7 @@ impl ExpertScheduler {
             if self.opts.sync_prefetch {
                 // deterministic mode: the jobs kicked at layer l-1 (for
                 // this layer) must land before the fetch below
+                let _wait = trace::span(Category::Stall, "sync_prefetch_wait").layer(l);
                 self.quiesce();
             }
             // the dedup: each unique expert fetched once, held for the
@@ -379,8 +394,10 @@ impl ExpertScheduler {
                     Err(FetchError::Decode(err)) => {
                         if self.quarantine.record_failure(l, e) {
                             self.metrics.record_quarantined();
+                            trace::mark(Category::Fault, "quarantined").layer(l).expert(e);
                         }
                         self.metrics.record_expert_drop();
+                        trace::mark(Category::Fault, "expert_drop").layer(l).expert(e);
                         drop_expert_from_step(&mut picks, &mut unique, e, l, &self.metrics)
                             .map_err(|gone| gone.context(err))?;
                     }
@@ -421,6 +438,8 @@ impl ExpertScheduler {
                     .ok_or_else(|| anyhow::anyhow!("expert {e} missing from plan"))
             };
             let surviving_picks: usize = picks.iter().map(|p| p.len()).sum();
+            let exec_span = trace::span(Category::Exec, "moe_exec").layer(l);
+            let t_exec = Instant::now();
             let ys = if self.opts.batched_qgemm {
                 // one ffn_batch (three qGEMM traversals) per unique
                 // expert for its whole deduped token group
@@ -436,7 +455,10 @@ impl ExpertScheduler {
                     *xi += yi;
                 }
             }
+            self.metrics.record_exec(t_exec.elapsed());
+            drop(exec_span);
         }
+        self.metrics.record_forward_wall(t_wall.elapsed());
         Ok(xs)
     }
 
@@ -827,6 +849,35 @@ mod tests {
             Some(MoeError::Quarantined { layer }) => assert_eq!(*layer, 5),
             other => panic!("wrong error class: {other:?}"),
         }
+    }
+
+    #[test]
+    fn time_accounting_identity_holds_on_a_sync_prefetch_run() {
+        // stall (demand-miss decode) and exec are disjoint sections of
+        // the serving thread's forward loop, so they can never sum past
+        // the measured wall; prefetch decode overlaps the wall on
+        // background workers and is reported alongside, never added in
+        let (cfg, _dir, reader) = demo(49);
+        let spec = cfg.moe.clone().unwrap();
+        let routers = load_routers(&reader, cfg.n_layers).unwrap();
+        let opts = SchedOptions {
+            sync_prefetch: true,
+            prefetch_budget_bytes: 1 << 20,
+            ..SchedOptions::default()
+        };
+        let (sched, m) = scheduler(&reader, &cfg, usize::MAX, opts);
+        let xs = clustered_trace(cfg.d_model, 3, 1, 4, 13);
+        sched.forward_batch(&routers, &spec, &xs).unwrap();
+        assert_eq!(m.forward_steps_count(), 1);
+        let wall = m.forward_wall_secs();
+        let (stall, exec) = (m.expert_stall_secs(), m.exec_secs());
+        assert!(wall > 0.0 && exec > 0.0, "wall {wall} exec {exec}");
+        // the three sums come from different Instant reads; allow a
+        // microsecond of clock-read skew
+        assert!(stall + exec <= wall + 1e-6, "stall {stall} + exec {exec} > wall {wall}");
+        let line = m.time_accounting();
+        assert!(line.starts_with("time: forward wall"), "{line}");
+        assert!(m.summary().contains("time: forward wall"), "summary missing accounting");
     }
 
     #[test]

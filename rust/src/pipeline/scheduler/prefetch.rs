@@ -25,6 +25,7 @@ use crate::config::ExpertResidency;
 use crate::format::TqmReader;
 use crate::model::moe::ExpertWeights;
 use crate::pipeline::{ExpertCache, PipelineMetrics};
+use crate::trace::{self, Category};
 use crate::util::{lock_recover, wait_recover};
 
 /// EWMA of the per-step pick indicator for every (layer, expert): each
@@ -160,6 +161,7 @@ impl PrefetchPool {
             // `issued == hits + wasted` exact (a shutdown-refused send
             // was formerly counted both issued AND rejected)
             self.metrics.prefetch_issue();
+            trace::mark(Category::Prefetch, "issue").layer(layer).expert(expert);
         } else {
             // pool shutting down: roll the accounting back; the job
             // never existed as far as the counters are concerned
@@ -211,8 +213,12 @@ fn run_job(
     let reserved = lock_recover(cache).begin_speculative(layer, expert, budget_bytes);
     let Some(need) = reserved else {
         metrics.record_prefetch_rejected();
+        trace::mark(Category::Prefetch, "admission_rejected").layer(layer).expert(expert);
         return;
     };
+    // the span closes on Drop whatever happens below (including an
+    // escaping panic), renamed to its outcome on the way out
+    let mut sp = trace::span(Category::Prefetch, "decode").layer(layer).expert(expert);
     let t0 = Instant::now();
     // Transient decode failures get the same bounded retry as the demand
     // path (no backoff — speculative work competes with nothing and
@@ -251,14 +257,17 @@ fn run_job(
                 // commit that lost the race to the demand path is pure
                 // waste, not waste AND hidden progress
                 metrics.record_prefetch_decode(elapsed, bytes);
+                sp.rename("decode_admitted");
             } else {
                 // demand decoded it while we were in flight
                 metrics.record_prefetch_rejected();
+                sp.rename("decode_rejected");
             }
         }
         None => {
             lock_recover(cache).cancel_speculative(need);
             metrics.record_prefetch_rejected();
+            sp.rename("decode_failed");
         }
     }
 }

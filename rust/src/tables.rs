@@ -1156,6 +1156,9 @@ pub struct FaultsRow {
     pub quarantined: u64,
     pub degraded_picks: u64,
     pub injected: u64,
+    /// Per-stage share of forward-step wall time, when the flight
+    /// recorder was armed for the run (`TQM_TRACE_DIR`); `None` otherwise.
+    pub stages: Option<String>,
 }
 
 /// The chaos scenario: one synthetic MoE checkpoint replayed through the
@@ -1237,6 +1240,7 @@ pub fn faults_table(tokens: usize, batch: usize) -> Result<Vec<FaultsRow>> {
             }
         }
         sched.quiesce();
+        let stages = crate::trace::report::compact_step_breakdown(&crate::trace::drain());
         crate::util::stats::sort_samples(&mut lat_ms);
         let p99 = crate::util::stats::percentile(&lat_ms, 99);
         Ok((
@@ -1252,6 +1256,7 @@ pub fn faults_table(tokens: usize, batch: usize) -> Result<Vec<FaultsRow>> {
                 quarantined: metrics.quarantined_count(),
                 degraded_picks: metrics.degraded_picks_count(),
                 injected: metrics.faults_injected_count(),
+                stages,
             },
             p99,
         ))
@@ -1271,23 +1276,30 @@ pub fn faults_table(tokens: usize, batch: usize) -> Result<Vec<FaultsRow>> {
 }
 
 pub fn render_faults(rows: &[FaultsRow]) -> Table {
+    // the stage column only exists when the flight recorder was armed
+    // for the run — an always-present dash column would just be noise
+    let traced = rows.iter().any(|r| r.stages.is_some());
+    let mut headers = vec![
+        "fault p",
+        "retries",
+        "complete",
+        "p99 ms",
+        "p99 added",
+        "fetch retries",
+        "recovered",
+        "quarantined",
+        "dropped picks",
+        "injected",
+    ];
+    if traced {
+        headers.push("stages");
+    }
     let mut t = Table::new(
         "E13 — chaos matrix: seeded fault injection, fault rate x retry budget (tight budget)",
-        &[
-            "fault p",
-            "retries",
-            "complete",
-            "p99 ms",
-            "p99 added",
-            "fetch retries",
-            "recovered",
-            "quarantined",
-            "dropped picks",
-            "injected",
-        ],
+        &headers,
     );
     for r in rows {
-        t.row(vec![
+        let mut row = vec![
             format!("{:.0}%", r.fault_p * 100.0),
             format!("{}", r.retry_budget),
             format!("{}/{}", r.completed, r.steps),
@@ -1298,7 +1310,11 @@ pub fn render_faults(rows: &[FaultsRow]) -> Table {
             format!("{}", r.quarantined),
             format!("{}", r.degraded_picks),
             format!("{}", r.injected),
-        ]);
+        ];
+        if traced {
+            row.push(r.stages.clone().unwrap_or_else(|| "-".into()));
+        }
+        t.row(row);
     }
     t
 }
@@ -1373,6 +1389,9 @@ pub struct EnvelopeRow {
     pub tokens_per_s: f64,
     pub hit_rate: f64,
     pub stall_ms: f64,
+    /// Per-stage share of request wall time, when the flight recorder
+    /// was armed for the run (`TQM_TRACE_DIR`); `None` otherwise.
+    pub stages: Option<String>,
 }
 
 /// Default matrix: every device envelope x {1,2,4,8} cores x
@@ -1487,6 +1506,14 @@ pub fn envelope_matrix(
                 let wall = t_cell.elapsed().as_secs_f64();
                 let hit_rate = host.metrics.expert_hit_rate();
                 let stall_ms = host.metrics.expert_stall_secs() * 1e3;
+                // drain before shutdown so the cell's own events feed its
+                // stage column (and a per-cell trace file, when armed)
+                let batch = crate::trace::drain();
+                let stages = crate::trace::report::compact_stage_breakdown(&batch);
+                let run = format!("envelope_{}_{}c_{}", env.name, n_cores, net.label());
+                if let Err(e) = crate::trace::write_batch(&batch, &run) {
+                    eprintln!("warning: trace for {run} not written: {e:#}");
+                }
                 host.shutdown();
                 let s = crate::util::stats::summarize(&mut step_s);
                 rows.push(EnvelopeRow {
@@ -1504,6 +1531,7 @@ pub fn envelope_matrix(
                     tokens_per_s: if wall > 0.0 { tokens_done as f64 / wall } else { 0.0 },
                     hit_rate,
                     stall_ms,
+                    stages,
                 });
             }
         }
@@ -1512,25 +1540,30 @@ pub fn envelope_matrix(
 }
 
 pub fn render_envelope(rows: &[EnvelopeRow]) -> Table {
+    let traced = rows.iter().any(|r| r.stages.is_some());
+    let mut headers = vec![
+        "envelope",
+        "budget",
+        "prefetch",
+        "cores",
+        "net",
+        "complete",
+        "p50 ms",
+        "p95 ms",
+        "p99 ms",
+        "tok/s",
+        "hit rate",
+        "stall ms",
+    ];
+    if traced {
+        headers.push("stages");
+    }
     let mut t = Table::new(
         "E14 — device-envelope matrix: serving loop under memory budget x cores x network",
-        &[
-            "envelope",
-            "budget",
-            "prefetch",
-            "cores",
-            "net",
-            "complete",
-            "p50 ms",
-            "p95 ms",
-            "p99 ms",
-            "tok/s",
-            "hit rate",
-            "stall ms",
-        ],
+        &headers,
     );
     for r in rows {
-        t.row(vec![
+        let mut row = vec![
             r.envelope.to_string(),
             fmt_bytes(r.expert_budget_bytes),
             fmt_bytes(r.prefetch_budget_bytes),
@@ -1543,7 +1576,11 @@ pub fn render_envelope(rows: &[EnvelopeRow]) -> Table {
             format!("{:.1}", r.tokens_per_s),
             format!("{:.1}%", r.hit_rate * 100.0),
             format!("{:.2}", r.stall_ms),
-        ]);
+        ];
+        if traced {
+            row.push(r.stages.clone().unwrap_or_else(|| "-".into()));
+        }
+        t.row(row);
     }
     t
 }

@@ -1,0 +1,183 @@
+//! Chrome trace-event JSON for [`TraceBatch`]es: the `{"traceEvents":
+//! [...]}` object format that Perfetto and `chrome://tracing` load
+//! directly. Spans are complete events (`ph: "X"`, `ts`/`dur` in
+//! microseconds), instants are `ph: "i"` with thread scope, and thread
+//! names ride along as `ph: "M"` metadata. A schema version plus the run
+//! name and dropped-event count live in `otherData`, and [`from_json`]
+//! refuses files from a different schema version instead of misreading
+//! them.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+use super::{TraceBatch, NO_IDX, NO_REQ, SCHEMA_VERSION};
+
+/// Serialize a batch to the Chrome trace-event object format.
+pub fn to_json(batch: &TraceBatch, run: &str) -> Json {
+    let mut events: Vec<Json> = Vec::with_capacity(batch.events.len() + batch.threads.len());
+    for (tid, name) in &batch.threads {
+        events.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("thread_name")),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(*tid as f64)),
+            ("args", Json::obj(vec![("name", Json::str(name.clone()))])),
+        ]));
+    }
+    for ev in &batch.events {
+        let mut args = Vec::new();
+        if ev.req != NO_REQ {
+            args.push(("req", Json::num(ev.req as f64)));
+        }
+        if ev.layer != NO_IDX {
+            args.push(("layer", Json::num(ev.layer as f64)));
+        }
+        if ev.expert != NO_IDX {
+            args.push(("expert", Json::num(ev.expert as f64)));
+        }
+        let mut pairs = vec![
+            ("ph", Json::str(if ev.instant { "i" } else { "X" })),
+            ("name", Json::str(ev.name)),
+            ("cat", Json::str(ev.cat.label())),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(ev.tid as f64)),
+            ("ts", Json::num(ev.ts_ns as f64 / 1000.0)),
+        ];
+        if ev.instant {
+            pairs.push(("s", Json::str("t")));
+        } else {
+            pairs.push(("dur", Json::num(ev.dur_ns as f64 / 1000.0)));
+        }
+        pairs.push(("args", Json::obj(args)));
+        events.push(Json::obj(pairs));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ns")),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("schema_version", Json::num(SCHEMA_VERSION as f64)),
+                ("run", Json::str(run)),
+                ("dropped_events", Json::num(batch.dropped as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// One event as read back from a trace file. Durations stay `Option` so
+/// a malformed complete event (missing `dur`) is countable as unclosed
+/// rather than silently becoming zero-length.
+#[derive(Clone, Debug)]
+pub struct LoadedEvent {
+    /// Chrome phase: "X" complete or "i" instant.
+    pub ph: String,
+    pub ts_us: f64,
+    pub dur_us: Option<f64>,
+    pub cat: String,
+    pub name: String,
+    pub tid: u64,
+    pub req: Option<u64>,
+    pub layer: Option<u32>,
+    pub expert: Option<u32>,
+}
+
+impl LoadedEvent {
+    pub fn is_instant(&self) -> bool {
+        self.ph == "i"
+    }
+}
+
+/// A parsed trace file.
+#[derive(Clone, Debug)]
+pub struct LoadedTrace {
+    pub run: String,
+    /// Events dropped by the recorder (ring wrap / contention) at record
+    /// time — reported, not reconstructable.
+    pub dropped: u64,
+    /// Complete ("X") and instant ("i") events only.
+    pub events: Vec<LoadedEvent>,
+    pub thread_names: BTreeMap<u64, String>,
+    /// Dangling spans: unmatched "B" begins plus complete events with no
+    /// duration. This recorder never emits "B"/"E" pairs, so any nonzero
+    /// count means a corrupt or foreign file.
+    pub open_spans: usize,
+}
+
+pub fn from_json(j: &Json) -> Result<LoadedTrace> {
+    let other = j.get("otherData")?;
+    let ver = other.get("schema_version")?.as_u32()?;
+    if ver != SCHEMA_VERSION {
+        bail!("unsupported trace schema version {ver} (this build reads {SCHEMA_VERSION})");
+    }
+    let run = other.get("run")?.as_str()?.to_string();
+    let dropped = other.get("dropped_events")?.as_usize()? as u64;
+    let mut events = Vec::new();
+    let mut thread_names = BTreeMap::new();
+    let mut open_begins: BTreeMap<(u64, String), i64> = BTreeMap::new();
+    let mut missing_dur = 0usize;
+    for ev in j.get("traceEvents")?.as_arr()? {
+        let ph = ev.get("ph")?.as_str()?.to_string();
+        match ph.as_str() {
+            "M" => {
+                if ev.get("name")?.as_str()? == "thread_name" {
+                    let tid = ev.get("tid")?.as_usize()? as u64;
+                    let name = ev.get("args")?.get("name")?.as_str()?.to_string();
+                    thread_names.insert(tid, name);
+                }
+            }
+            "B" | "E" => {
+                // foreign begin/end pairs: track matching so dangling
+                // begins surface in the integrity report
+                let tid = ev.get("tid")?.as_usize()? as u64;
+                let name = ev.get("name")?.as_str()?.to_string();
+                let slot = open_begins.entry((tid, name)).or_insert(0);
+                *slot += if ph == "B" { 1 } else { -1 };
+            }
+            "X" | "i" => {
+                let dur_us = match ev.opt("dur") {
+                    Some(d) => Some(d.as_f64()?),
+                    None => None,
+                };
+                if ph == "X" && dur_us.is_none() {
+                    missing_dur += 1;
+                }
+                let opt_u32 = |key: &str| -> Result<Option<u32>> {
+                    match ev.get("args")?.opt(key) {
+                        Some(v) => Ok(Some(v.as_u32()?)),
+                        None => Ok(None),
+                    }
+                };
+                events.push(LoadedEvent {
+                    ph: ph.clone(),
+                    ts_us: ev.get("ts")?.as_f64()?,
+                    dur_us,
+                    cat: ev.get("cat")?.as_str()?.to_string(),
+                    name: ev.get("name")?.as_str()?.to_string(),
+                    tid: ev.get("tid")?.as_usize()? as u64,
+                    req: match ev.get("args")?.opt("req") {
+                        Some(v) => Some(v.as_usize()? as u64),
+                        None => None,
+                    },
+                    layer: opt_u32("layer")?,
+                    expert: opt_u32("expert")?,
+                });
+            }
+            _ => {} // other phases (counters, flows) are not ours; skip
+        }
+    }
+    let unmatched: usize =
+        open_begins.values().map(|&n| n.unsigned_abs() as usize).sum();
+    Ok(LoadedTrace { run, dropped, events, thread_names, open_spans: unmatched + missing_dur })
+}
+
+pub fn load(path: &Path) -> Result<LoadedTrace> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+    from_json(&j).with_context(|| format!("decoding {}", path.display()))
+}

@@ -1,0 +1,645 @@
+//! Flight-recorder tracing: lock-light per-thread span ring buffers with
+//! a monotonic clock, drained to schema-versioned Chrome trace-event JSON
+//! (`TRACE_<run>.json`, loadable in Perfetto / `chrome://tracing`) when
+//! `TQM_TRACE_DIR` is set.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero overhead when off.** Every recording entry point starts with
+//!    one relaxed atomic load ([`enabled`]); when it is false no clock is
+//!    read, no allocation happens, and no lock is touched, so the serving
+//!    path stays bit-exact and effectively untouched.
+//! 2. **Panic-safe by construction.** Spans are recorded as *complete*
+//!    events at guard [`Drop`] time — there is no open `begin` record that
+//!    a `catch_unwind` boundary (prefetch workers, demand decode) could
+//!    strand, so a trace can never contain a dangling open span.
+//! 3. **Lock-light and bounded.** Each thread owns a bounded ring
+//!    ([`TQM_TRACE_BUF`][TRACE_BUF_VAR] events, oldest overwritten); the
+//!    hot path takes an uncontended `try_lock` on its own ring and on the
+//!    rare conflict with a concurrent [`drain`] the event is counted into
+//!    a dropped counter instead of blocking the serving thread.
+//!
+//! The recorder is process-global: [`init_from_env`] arms it from the
+//! `TQM_TRACE_*` knobs, [`drain`] collects all rings into a [`TraceBatch`]
+//! and [`write_run`] serializes one to disk via [`chrome`]. [`report`]
+//! turns either a live batch or a loaded file into per-request waterfalls
+//! with critical-path stage attribution (`tqm trace-report`).
+
+pub mod chrome;
+pub mod report;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, TryLockError};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::{env_parse, env_parse_opt, lock_recover};
+
+/// Directory to write `TRACE_<run>.json` files into; setting it enables
+/// the recorder. Parsed loudly via `util::env_parse`.
+pub const TRACE_DIR_VAR: &str = "TQM_TRACE_DIR";
+/// Per-thread ring capacity in events (default [`DEFAULT_CAPACITY`]).
+pub const TRACE_BUF_VAR: &str = "TQM_TRACE_BUF";
+/// Default per-thread ring capacity.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+/// Stamped into `otherData.schema_version`; bump on incompatible change.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Sentinel for "no request id" (not serialized).
+pub const NO_REQ: u64 = u64::MAX;
+/// Sentinel for "no layer / expert index" (not serialized).
+pub const NO_IDX: u32 = u32::MAX;
+
+/// Event category — becomes the Chrome `cat` field and the stage key the
+/// report attributes request time to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Category {
+    /// Request sat in the host queue before its batch formed.
+    Queue,
+    /// Batcher drain window (waiting for batch-mates).
+    Drain,
+    /// Whole request: batch admission to final token.
+    Request,
+    /// One `forward_batch` step across all layers.
+    Step,
+    /// Router + `LayerPlan` build (includes quarantine filtering).
+    Plan,
+    /// Serving thread blocked on expert bytes (demand decode, quiesce).
+    Stall,
+    /// Expert FFN execution for one layer.
+    Exec,
+    /// Individual qGEMV/qGEMM kernel calls (nested inside `Exec`).
+    Kernel,
+    /// Prefetch worker activity (off the critical path when hidden).
+    Prefetch,
+    /// Expert-cache events: evictions, speculative promotion.
+    Cache,
+    /// Fetch retries and backoff sleeps.
+    Retry,
+    /// Injected faults, quarantine transitions, timeouts, drops.
+    Fault,
+}
+
+impl Category {
+    pub fn label(self) -> &'static str {
+        match self {
+            Category::Queue => "queue",
+            Category::Drain => "drain",
+            Category::Request => "request",
+            Category::Step => "step",
+            Category::Plan => "plan",
+            Category::Stall => "stall",
+            Category::Exec => "exec",
+            Category::Kernel => "kernel",
+            Category::Prefetch => "prefetch",
+            Category::Cache => "cache",
+            Category::Retry => "retry",
+            Category::Fault => "fault",
+        }
+    }
+}
+
+/// One recorded event. Fixed-size and `Copy` so ring writes never
+/// allocate; names are `&'static str` by design.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// Nanoseconds since the recorder's monotonic anchor.
+    pub ts_ns: u64,
+    /// Duration in nanoseconds (0 for instants).
+    pub dur_ns: u64,
+    /// Instant marker (`ph: "i"`) rather than a complete span (`"X"`).
+    pub instant: bool,
+    pub cat: Category,
+    pub name: &'static str,
+    /// Recorder-assigned thread id (stable within a process run).
+    pub tid: u64,
+    /// Request id or [`NO_REQ`].
+    pub req: u64,
+    /// Layer index or [`NO_IDX`].
+    pub layer: u32,
+    /// Expert index or [`NO_IDX`].
+    pub expert: u32,
+}
+
+/// Bounded per-thread event ring: oldest events are overwritten once
+/// `cap` is reached and the overwrites are counted, never silently lost.
+struct Ring {
+    buf: Vec<Event>,
+    cap: usize,
+    head: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        Self { buf: Vec::new(), cap: cap.max(1), head: 0, dropped: 0 }
+    }
+
+    fn push(&mut self, ev: Event) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Remove and return the retained events oldest-first, plus the count
+    /// of events that were overwritten since the last take.
+    fn take(&mut self) -> (Vec<Event>, u64) {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        self.buf.clear();
+        self.head = 0;
+        let dropped = self.dropped;
+        self.dropped = 0;
+        (out, dropped)
+    }
+}
+
+struct ThreadRing {
+    tid: u64,
+    name: String,
+    ring: Arc<Mutex<Ring>>,
+}
+
+struct Shared {
+    /// Monotonic zero point; all timestamps are offsets from here.
+    anchor: Instant,
+    cap: AtomicUsize,
+    dir: Mutex<Option<PathBuf>>,
+    rings: Mutex<Vec<ThreadRing>>,
+    next_tid: AtomicU64,
+    /// Events lost to `try_lock` contention with a concurrent drain.
+    contended_drops: AtomicU64,
+    /// Per-run-name write sequence, so two hosts in one process can both
+    /// flush without clobbering each other's file.
+    run_seq: Mutex<BTreeMap<String, u64>>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SHARED: OnceLock<Shared> = OnceLock::new();
+
+fn shared() -> &'static Shared {
+    SHARED.get_or_init(|| Shared {
+        anchor: Instant::now(),
+        cap: AtomicUsize::new(DEFAULT_CAPACITY),
+        dir: Mutex::new(None),
+        rings: Mutex::new(Vec::new()),
+        next_tid: AtomicU64::new(1),
+        contended_drops: AtomicU64::new(0),
+        run_seq: Mutex::new(BTreeMap::new()),
+    })
+}
+
+thread_local! {
+    static LOCAL: std::cell::OnceCell<(u64, Arc<Mutex<Ring>>)> =
+        const { std::cell::OnceCell::new() };
+}
+
+fn register_thread() -> (u64, Arc<Mutex<Ring>>) {
+    let s = shared();
+    let tid = s.next_tid.fetch_add(1, Ordering::Relaxed);
+    let name = std::thread::current()
+        .name()
+        .map(|n| n.to_string())
+        .unwrap_or_else(|| format!("thread-{tid}"));
+    let ring = Arc::new(Mutex::new(Ring::new(s.cap.load(Ordering::Relaxed))));
+    lock_recover(&s.rings).push(ThreadRing { tid, name, ring: Arc::clone(&ring) });
+    (tid, ring)
+}
+
+fn record(mut ev: Event) {
+    LOCAL.with(|cell| {
+        let (tid, ring) = cell.get_or_init(register_thread);
+        ev.tid = *tid;
+        match ring.try_lock() {
+            Ok(mut g) => g.push(ev),
+            Err(TryLockError::Poisoned(p)) => p.into_inner().push(ev),
+            Err(TryLockError::WouldBlock) => {
+                shared().contended_drops.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    });
+}
+
+fn ns_of(t: Instant) -> u64 {
+    t.saturating_duration_since(shared().anchor).as_nanos() as u64
+}
+
+/// Is the recorder armed? One relaxed load — this is the entire cost of
+/// every instrumentation point when tracing is off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Force the recorder on or off (benches measuring recorder overhead and
+/// tests; normal runs arm it via [`init_from_env`]).
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = shared(); // pin the clock anchor before the first event
+    }
+    ENABLED.store(on, Ordering::Release);
+}
+
+/// Ring capacity for threads that register *after* this call; existing
+/// rings keep their size.
+pub fn set_capacity(cap: usize) {
+    shared().cap.store(cap.max(16), Ordering::Relaxed);
+}
+
+/// Arm the recorder from `TQM_TRACE_DIR` / `TQM_TRACE_BUF`. Idempotent;
+/// a no-op when the dir knob is unset or the recorder is already armed.
+pub fn init_from_env() -> Result<()> {
+    if enabled() {
+        return Ok(());
+    }
+    if let Some(dir) = env_parse_opt::<PathBuf>(TRACE_DIR_VAR)? {
+        let cap = env_parse::<usize>(TRACE_BUF_VAR, DEFAULT_CAPACITY)?;
+        let s = shared();
+        s.cap.store(cap.max(16), Ordering::Relaxed);
+        *lock_recover(&s.dir) = Some(dir);
+        ENABLED.store(true, Ordering::Release);
+    }
+    Ok(())
+}
+
+struct Pending {
+    t0: Instant,
+    cat: Category,
+    name: &'static str,
+    req: u64,
+    layer: u32,
+    expert: u32,
+}
+
+impl Pending {
+    fn start(cat: Category, name: &'static str) -> Option<Self> {
+        if !enabled() {
+            return None;
+        }
+        Some(Self { t0: Instant::now(), cat, name, req: NO_REQ, layer: NO_IDX, expert: NO_IDX })
+    }
+
+    fn event(&self, instant: bool) -> Event {
+        Event {
+            ts_ns: ns_of(self.t0),
+            dur_ns: if instant { 0 } else { self.t0.elapsed().as_nanos() as u64 },
+            instant,
+            cat: self.cat,
+            name: self.name,
+            tid: 0, // assigned in record()
+            req: self.req,
+            layer: self.layer,
+            expert: self.expert,
+        }
+    }
+}
+
+/// RAII span guard: records one complete event covering its lifetime when
+/// dropped — including during panic unwinding, so spans cannot dangle.
+/// When the recorder is off it is an empty shell and records nothing.
+pub struct Span(Option<Pending>);
+
+impl Span {
+    pub fn req(mut self, req: u64) -> Self {
+        if let Some(p) = &mut self.0 {
+            p.req = req;
+        }
+        self
+    }
+
+    pub fn layer(mut self, layer: usize) -> Self {
+        if let Some(p) = &mut self.0 {
+            p.layer = layer as u32;
+        }
+        self
+    }
+
+    pub fn expert(mut self, expert: usize) -> Self {
+        if let Some(p) = &mut self.0 {
+            p.expert = expert as u32;
+        }
+        self
+    }
+
+    /// Retitle the span before it closes (e.g. to encode its outcome:
+    /// `"decode"` → `"decode_admitted"`).
+    pub fn rename(&mut self, name: &'static str) {
+        if let Some(p) = &mut self.0 {
+            p.name = name;
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(p) = self.0.take() {
+            record(p.event(false));
+        }
+    }
+}
+
+/// Start a span; close it by dropping the guard.
+pub fn span(cat: Category, name: &'static str) -> Span {
+    Span(Pending::start(cat, name))
+}
+
+/// Instant-event builder: records a zero-duration marker when the
+/// temporary drops (i.e. at the end of the statement that built it).
+pub struct Mark(Option<Pending>);
+
+impl Mark {
+    pub fn req(mut self, req: u64) -> Self {
+        if let Some(p) = &mut self.0 {
+            p.req = req;
+        }
+        self
+    }
+
+    pub fn layer(mut self, layer: usize) -> Self {
+        if let Some(p) = &mut self.0 {
+            p.layer = layer as u32;
+        }
+        self
+    }
+
+    pub fn expert(mut self, expert: usize) -> Self {
+        if let Some(p) = &mut self.0 {
+            p.expert = expert as u32;
+        }
+        self
+    }
+}
+
+impl Drop for Mark {
+    fn drop(&mut self) {
+        if let Some(p) = self.0.take() {
+            record(p.event(true));
+        }
+    }
+}
+
+/// Record an instant marker. Used as a bare statement:
+/// `trace::mark(Category::Cache, "evict").layer(l).expert(e);`
+pub fn mark(cat: Category, name: &'static str) -> Mark {
+    Mark(Pending::start(cat, name))
+}
+
+/// Record a complete span between two already-measured instants (e.g. a
+/// request's queue window, whose start predates the span's recording).
+pub fn span_between(cat: Category, name: &'static str, req: u64, begin: Instant, end: Instant) {
+    if !enabled() {
+        return;
+    }
+    record(Event {
+        ts_ns: ns_of(begin),
+        dur_ns: end.saturating_duration_since(begin).as_nanos() as u64,
+        instant: false,
+        cat,
+        name,
+        tid: 0,
+        req,
+        layer: NO_IDX,
+        expert: NO_IDX,
+    });
+}
+
+/// Everything drained from the rings at one point in time.
+pub struct TraceBatch {
+    /// All events, sorted by timestamp (then thread id).
+    pub events: Vec<Event>,
+    /// `(tid, thread name)` for every thread that contributed events.
+    pub threads: Vec<(u64, String)>,
+    /// Events lost to ring wrap or drain contention since the last drain.
+    pub dropped: u64,
+}
+
+/// Collect and clear every thread's ring. Writers never block on a drain
+/// (they count a drop instead), so this is safe to call while serving.
+pub fn drain() -> TraceBatch {
+    let s = shared();
+    let mut dropped = s.contended_drops.swap(0, Ordering::Relaxed);
+    let mut events = Vec::new();
+    let mut threads = Vec::new();
+    {
+        let regs = lock_recover(&s.rings);
+        for tr in regs.iter() {
+            let (evs, d) = lock_recover(&tr.ring).take();
+            dropped += d;
+            if !evs.is_empty() {
+                threads.push((tr.tid, tr.name.clone()));
+            }
+            events.extend(evs);
+        }
+    }
+    events.sort_by(|a, b| a.ts_ns.cmp(&b.ts_ns).then(a.tid.cmp(&b.tid)));
+    TraceBatch { events, threads, dropped }
+}
+
+/// Write a batch as `TRACE_<run>.json` into `TQM_TRACE_DIR` (suffixed
+/// `-1`, `-2`, … when the same run name flushes more than once in one
+/// process). Returns `None` when the dir knob is unset or the batch is
+/// empty.
+pub fn write_batch(batch: &TraceBatch, run: &str) -> Result<Option<PathBuf>> {
+    let dir = lock_recover(&shared().dir).clone();
+    let Some(dir) = dir else {
+        return Ok(None);
+    };
+    if batch.events.is_empty() {
+        return Ok(None);
+    }
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("creating trace dir {}", dir.display()))?;
+    let seq = {
+        let mut seqs = lock_recover(&shared().run_seq);
+        let n = seqs.entry(run.to_string()).or_insert(0);
+        let cur = *n;
+        *n += 1;
+        cur
+    };
+    let file =
+        if seq == 0 { format!("TRACE_{run}.json") } else { format!("TRACE_{run}-{seq}.json") };
+    let path = dir.join(file);
+    std::fs::write(&path, chrome::to_json(batch, run).to_string())
+        .with_context(|| format!("writing {}", path.display()))?;
+    eprintln!(
+        "[trace] wrote {} ({} events, {} dropped)",
+        path.display(),
+        batch.events.len(),
+        batch.dropped
+    );
+    Ok(Some(path))
+}
+
+/// Drain and write in one step. A no-op (rings untouched) when the
+/// recorder is off or no trace dir is configured, so callers can invoke
+/// it unconditionally at run boundaries.
+pub fn write_run(run: &str) -> Result<Option<PathBuf>> {
+    if !enabled() {
+        return Ok(None);
+    }
+    if lock_recover(&shared().dir).is_none() {
+        return Ok(None);
+    }
+    let batch = drain();
+    write_batch(&batch, run)
+}
+
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serializes tests (and bench variants) that force-enable the global
+/// recorder: drains stale events, enables recording, and on drop restores
+/// the previous enabled state and drains again so nothing leaks into the
+/// next acquirer.
+pub struct TestGuard {
+    _lock: MutexGuard<'static, ()>,
+    prev: bool,
+}
+
+pub fn test_guard() -> TestGuard {
+    let lock = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let prev = enabled();
+    set_enabled(true);
+    let _ = drain();
+    TestGuard { _lock: lock, prev }
+}
+
+impl Drop for TestGuard {
+    fn drop(&mut self) {
+        set_enabled(self.prev);
+        let _ = drain();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn ring_wrap_drops_oldest_keeps_order_and_counts() {
+        // Property over random capacities and lengths: after n pushes into
+        // a cap-k ring, exactly the last min(n, k) events remain in push
+        // order and dropped == max(0, n - k).
+        let mut rng = Rng::seed_from_u64(0x7ACE);
+        for _ in 0..64 {
+            let cap = rng.gen_range_usize(1, 33);
+            let n = rng.gen_range_usize(0, 101);
+            let mut ring = Ring::new(cap);
+            for i in 0..n {
+                let mut ev = template_event();
+                ev.ts_ns = i as u64;
+                ring.push(ev);
+            }
+            let (evs, dropped) = ring.take();
+            assert_eq!(dropped, n.saturating_sub(cap) as u64);
+            assert_eq!(evs.len(), n.min(cap));
+            let expect_first = n.saturating_sub(cap) as u64;
+            for (k, ev) in evs.iter().enumerate() {
+                assert_eq!(ev.ts_ns, expect_first + k as u64, "cap={cap} n={n}");
+            }
+            // the ring is reusable after a take
+            let mut ev = template_event();
+            ev.ts_ns = 999;
+            ring.push(ev);
+            let (evs, dropped) = ring.take();
+            assert_eq!((evs.len(), dropped), (1, 0));
+        }
+    }
+
+    fn template_event() -> Event {
+        Event {
+            ts_ns: 0,
+            dur_ns: 1,
+            instant: false,
+            cat: Category::Exec,
+            name: "t",
+            tid: 0,
+            req: NO_REQ,
+            layer: NO_IDX,
+            expert: NO_IDX,
+        }
+    }
+
+    #[test]
+    fn spans_and_marks_record_ids_and_nonnegative_times() {
+        let _g = test_guard();
+        {
+            let _s = span(Category::Exec, "unit_exec").req(7).layer(2).expert(5);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        mark(Category::Cache, "unit_evict").layer(1).expert(3);
+        let batch = drain();
+        let s = batch
+            .events
+            .iter()
+            .find(|e| e.name == "unit_exec")
+            .expect("span recorded");
+        assert!(!s.instant);
+        assert_eq!((s.req, s.layer, s.expert), (7, 2, 5));
+        assert!(s.dur_ns >= 1_000_000, "span covered the sleep");
+        let m = batch
+            .events
+            .iter()
+            .find(|e| e.name == "unit_evict")
+            .expect("mark recorded");
+        assert!(m.instant);
+        assert_eq!(m.dur_ns, 0);
+        assert_eq!((m.layer, m.expert), (1, 3));
+        assert_eq!(s.tid, m.tid, "same thread, same ring");
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let _g = test_guard();
+        set_enabled(false);
+        {
+            let _s = span(Category::Exec, "off_span");
+        }
+        mark(Category::Cache, "off_mark");
+        span_between(
+            Category::Queue,
+            "off_between",
+            1,
+            Instant::now(),
+            Instant::now(),
+        );
+        set_enabled(true);
+        let batch = drain();
+        assert!(
+            !batch.events.iter().any(|e| e.name.starts_with("off_")),
+            "disabled recorder must not record"
+        );
+    }
+
+    #[test]
+    fn ring_wrap_through_public_api_reports_drops() {
+        let _g = test_guard();
+        set_capacity(32);
+        let handle = std::thread::Builder::new()
+            .name("trace-wrap-test".into())
+            .spawn(|| {
+                for _ in 0..100 {
+                    mark(Category::Prefetch, "wrap_mark");
+                }
+            })
+            .expect("spawn");
+        handle.join().expect("join");
+        set_capacity(DEFAULT_CAPACITY);
+        let batch = drain();
+        let kept: Vec<_> =
+            batch.events.iter().filter(|e| e.name == "wrap_mark").collect();
+        assert_eq!(kept.len(), 32, "ring keeps exactly its capacity");
+        assert!(batch.dropped >= 68, "overwrites are counted, got {}", batch.dropped);
+        for w in kept.windows(2) {
+            assert!(w[0].ts_ns <= w[1].ts_ns, "retained events stay ordered");
+        }
+    }
+}

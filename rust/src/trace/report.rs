@@ -1,0 +1,487 @@
+//! Critical-path latency attribution over a recorded trace: reconstruct
+//! each request's waterfall (queue → plan → stall → exec → retry), pin
+//! p50/p95/p99 per stage across requests, and diff two traces the way
+//! `bench-report` diffs bench sets.
+//!
+//! Attribution model: a request's wall window is its `request` span on
+//! the serving thread. Every stage span on the *same thread* contributes
+//! its overlap with that window; what no stage claims is `other`. Because
+//! the serving thread's stage spans (plan / demand-decode stall / exec /
+//! retry backoff) are disjoint sections of the forward loop, the summed
+//! stages plus `other` reconcile with the wall time *by construction* —
+//! that identity is the acceptance gate for the recorder. Kernel spans
+//! nest inside exec and prefetch work runs on other threads, so both are
+//! reported separately instead of being double-counted into the path.
+
+use std::collections::BTreeMap;
+
+use crate::util::bench::Table;
+use crate::util::stats;
+
+use super::chrome::LoadedTrace;
+use super::TraceBatch;
+
+/// Stage categories charged against the request window, in report order.
+const ATTRIBUTED: [&str; 4] = ["plan", "stall", "exec", "retry"];
+
+/// Normalized event: one shape for live batches and loaded files.
+#[derive(Clone, Debug)]
+struct Ev {
+    ts_us: f64,
+    dur_us: f64,
+    instant: bool,
+    cat: String,
+    name: String,
+    tid: u64,
+    req: Option<u64>,
+}
+
+/// One request's reconstructed timeline.
+#[derive(Clone, Debug)]
+pub struct RequestWaterfall {
+    pub req: u64,
+    /// Time in the host queue before the batch formed (outside the wall
+    /// window, reported alongside it).
+    pub queue_us: f64,
+    /// The request span: batch admission to final token.
+    pub wall_us: f64,
+    /// Stage → attributed µs; keys are the [`ATTRIBUTED`] categories.
+    pub stages: BTreeMap<String, f64>,
+    /// Wall time no stage span claimed.
+    pub other_us: f64,
+}
+
+impl RequestWaterfall {
+    pub fn stage(&self, name: &str) -> f64 {
+        self.stages.get(name).copied().unwrap_or(0.0)
+    }
+
+    /// Summed stage durations plus `other` — reconciles with `wall_us`
+    /// up to f64 rounding; asserted by the integration tests.
+    pub fn accounted_us(&self) -> f64 {
+        self.stages.values().sum::<f64>() + self.other_us
+    }
+}
+
+/// Distribution of one stage across all requests.
+#[derive(Clone, Debug)]
+pub struct StageStats {
+    pub stage: String,
+    pub total_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+/// Recorder health for the CI gate: all three must be zero for a clean
+/// run (dropped events are tolerable under ring wrap, but reported).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Integrity {
+    pub negative_durations: usize,
+    pub open_spans: usize,
+    pub dropped: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TraceReport {
+    pub run: String,
+    pub requests: Vec<RequestWaterfall>,
+    /// Per-stage distributions: queue, the attributed stages, other, wall.
+    pub stages: Vec<StageStats>,
+    /// Prefetch decode time that was admitted to cache — latency hidden
+    /// off the critical path.
+    pub hidden_prefetch_us: f64,
+    /// Kernel (qGEMV/qGEMM) time nested inside exec.
+    pub kernel_us: f64,
+    /// Instant-event counts keyed `cat/name` (evictions, retries, faults).
+    pub counts: BTreeMap<String, u64>,
+    pub integrity: Integrity,
+}
+
+pub fn from_loaded(t: &LoadedTrace) -> TraceReport {
+    let evs: Vec<Ev> = t
+        .events
+        .iter()
+        .map(|e| Ev {
+            ts_us: e.ts_us,
+            dur_us: e.dur_us.unwrap_or(0.0),
+            instant: e.is_instant(),
+            cat: e.cat.clone(),
+            name: e.name.clone(),
+            tid: e.tid,
+            req: e.req,
+        })
+        .collect();
+    build(&t.run, &evs, t.dropped, t.open_spans)
+}
+
+pub fn from_batch(b: &TraceBatch) -> TraceReport {
+    build("live", &evs_of_batch(b), b.dropped, 0)
+}
+
+fn evs_of_batch(b: &TraceBatch) -> Vec<Ev> {
+    b.events
+        .iter()
+        .map(|e| Ev {
+            ts_us: e.ts_ns as f64 / 1000.0,
+            dur_us: e.dur_ns as f64 / 1000.0,
+            instant: e.instant,
+            cat: e.cat.label().to_string(),
+            name: e.name.to_string(),
+            tid: e.tid,
+            req: if e.req == super::NO_REQ { None } else { Some(e.req) },
+        })
+        .collect()
+}
+
+fn build(run: &str, evs: &[Ev], dropped: u64, open_spans: usize) -> TraceReport {
+    let negative_durations = evs.iter().filter(|e| e.dur_us < 0.0).count();
+
+    let mut requests = Vec::new();
+    for r in evs.iter().filter(|e| !e.instant && e.cat == "request") {
+        let Some(req) = r.req else { continue };
+        let (lo, hi) = (r.ts_us, r.ts_us + r.dur_us);
+        let queue_us: f64 = evs
+            .iter()
+            .filter(|e| !e.instant && e.cat == "queue" && e.req == Some(req))
+            .map(|e| e.dur_us)
+            .sum();
+        let mut stages: BTreeMap<String, f64> =
+            ATTRIBUTED.iter().map(|s| (s.to_string(), 0.0)).collect();
+        for e in evs.iter().filter(|e| !e.instant && e.tid == r.tid) {
+            let Some(acc) = stages.get_mut(e.cat.as_str()) else { continue };
+            let overlap = (hi.min(e.ts_us + e.dur_us) - lo.max(e.ts_us)).max(0.0);
+            *acc += overlap;
+        }
+        let attributed: f64 = stages.values().sum();
+        requests.push(RequestWaterfall {
+            req,
+            queue_us,
+            wall_us: r.dur_us,
+            stages,
+            other_us: r.dur_us - attributed,
+        });
+    }
+    requests.sort_by_key(|w| w.req);
+
+    let mut stage_rows: Vec<(&str, Vec<f64>)> = Vec::new();
+    stage_rows.push(("queue", requests.iter().map(|w| w.queue_us).collect()));
+    for s in ATTRIBUTED {
+        stage_rows.push((s, requests.iter().map(|w| w.stage(s)).collect()));
+    }
+    stage_rows.push(("other", requests.iter().map(|w| w.other_us).collect()));
+    stage_rows.push(("wall", requests.iter().map(|w| w.wall_us).collect()));
+    let stages = stage_rows
+        .into_iter()
+        .map(|(name, mut xs)| {
+            let total = xs.iter().sum();
+            stats::sort_samples(&mut xs);
+            StageStats {
+                stage: name.to_string(),
+                total_us: total,
+                p50_us: stats::percentile(&xs, 50),
+                p95_us: stats::percentile(&xs, 95),
+                p99_us: stats::percentile(&xs, 99),
+            }
+        })
+        .collect();
+
+    let hidden_prefetch_us = evs
+        .iter()
+        .filter(|e| !e.instant && e.cat == "prefetch" && e.name == "decode_admitted")
+        .map(|e| e.dur_us)
+        .sum();
+    let kernel_us =
+        evs.iter().filter(|e| !e.instant && e.cat == "kernel").map(|e| e.dur_us).sum();
+    let mut counts: BTreeMap<String, u64> = BTreeMap::new();
+    for e in evs.iter().filter(|e| e.instant) {
+        *counts.entry(format!("{}/{}", e.cat, e.name)).or_insert(0) += 1;
+    }
+
+    TraceReport {
+        run: run.to_string(),
+        requests,
+        stages,
+        hidden_prefetch_us,
+        kernel_us,
+        counts,
+        integrity: Integrity { negative_durations, open_spans, dropped },
+    }
+}
+
+fn ms(us: f64) -> String {
+    format!("{:.3}", us / 1000.0)
+}
+
+/// The machine-greppable recorder-health line; CI gates on the zeros.
+pub fn integrity_line(r: &TraceReport) -> String {
+    format!(
+        "integrity: {} negative-duration event(s), {} unclosed span(s), {} dropped event(s)",
+        r.integrity.negative_durations, r.integrity.open_spans, r.integrity.dropped
+    )
+}
+
+/// Render the full human report: stage attribution table, the first
+/// `max_requests` per-request waterfalls, instant counts, and the
+/// integrity line.
+pub fn render(r: &TraceReport, max_requests: usize) -> String {
+    let mut out = String::new();
+    let mut t = Table::new(
+        &format!("trace-report: stage attribution — {} request(s), run '{}'", r.requests.len(), r.run),
+        &["stage", "total ms", "p50 ms", "p95 ms", "p99 ms"],
+    );
+    for s in &r.stages {
+        t.row(vec![
+            s.stage.clone(),
+            ms(s.total_us),
+            ms(s.p50_us),
+            ms(s.p95_us),
+            ms(s.p99_us),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    let shown = r.requests.len().min(max_requests);
+    let mut w = Table::new(
+        &format!("per-request waterfalls (showing {shown} of {})", r.requests.len()),
+        &["req", "queue ms", "plan ms", "stall ms", "exec ms", "retry ms", "other ms", "wall ms"],
+    );
+    for rq in r.requests.iter().take(max_requests) {
+        w.row(vec![
+            rq.req.to_string(),
+            ms(rq.queue_us),
+            ms(rq.stage("plan")),
+            ms(rq.stage("stall")),
+            ms(rq.stage("exec")),
+            ms(rq.stage("retry")),
+            ms(rq.other_us),
+            ms(rq.wall_us),
+        ]);
+    }
+    out.push_str(&w.render());
+
+    if !r.counts.is_empty() {
+        let mut c = Table::new("instant events", &["event", "count"]);
+        for (k, v) in &r.counts {
+            c.row(vec![k.clone(), v.to_string()]);
+        }
+        out.push_str(&c.render());
+    }
+    out.push_str(&format!(
+        "\nhidden prefetch decode: {} ms (off critical path) | kernel time: {} ms\n",
+        ms(r.hidden_prefetch_us),
+        ms(r.kernel_us)
+    ));
+    out.push_str(&integrity_line(r));
+    out.push('\n');
+    out
+}
+
+/// Compact one-cell stage breakdown for the envelope/faults tables:
+/// percentage of total request wall time per stage. `None` when the
+/// batch contains no request spans.
+pub fn compact_stage_breakdown(b: &TraceBatch) -> Option<String> {
+    let r = from_batch(b);
+    if r.requests.is_empty() {
+        return None;
+    }
+    let wall: f64 = r.requests.iter().map(|w| w.wall_us).sum();
+    if wall <= 0.0 {
+        return None;
+    }
+    let mut parts = Vec::new();
+    for s in ATTRIBUTED {
+        let total: f64 = r.requests.iter().map(|w| w.stage(s)).sum();
+        parts.push(format!("{s}:{:.0}%", 100.0 * total / wall));
+    }
+    let other: f64 = r.requests.iter().map(|w| w.other_us).sum();
+    parts.push(format!("other:{:.0}%", 100.0 * other / wall));
+    Some(parts.join(" "))
+}
+
+/// Like [`compact_stage_breakdown`] but attributed against the
+/// scheduler's `forward_batch` step spans instead of request spans — for
+/// cells (the chaos matrix) that drive the scheduler directly without a
+/// serving host in front of it. `None` when no step spans were recorded.
+pub fn compact_step_breakdown(b: &TraceBatch) -> Option<String> {
+    let evs = evs_of_batch(b);
+    let mut wall = 0.0f64;
+    let mut stages: BTreeMap<&str, f64> = ATTRIBUTED.iter().map(|s| (*s, 0.0)).collect();
+    for st in evs.iter().filter(|e| !e.instant && e.cat == "step") {
+        wall += st.dur_us;
+        let (lo, hi) = (st.ts_us, st.ts_us + st.dur_us);
+        for e in evs.iter().filter(|e| !e.instant && e.tid == st.tid) {
+            let Some(acc) = stages.get_mut(e.cat.as_str()) else { continue };
+            let overlap = (hi.min(e.ts_us + e.dur_us) - lo.max(e.ts_us)).max(0.0);
+            *acc += overlap;
+        }
+    }
+    if wall <= 0.0 {
+        return None;
+    }
+    let attributed: f64 = stages.values().sum();
+    let mut parts = Vec::new();
+    for s in ATTRIBUTED {
+        parts.push(format!("{s}:{:.0}%", 100.0 * stages[s] / wall));
+    }
+    parts.push(format!("other:{:.0}%", 100.0 * (wall - attributed).max(0.0) / wall));
+    Some(parts.join(" "))
+}
+
+/// Diff two reports by per-stage p95, `bench-report`-style: a stage is a
+/// regression when its p95 grew beyond the noise threshold (plus a 1 µs
+/// absolute floor so microsecond jitter on near-zero stages never
+/// classifies). Returns the rendered diff and the regression count.
+pub fn diff(base: &TraceReport, cur: &TraceReport, noise: f64) -> (String, usize) {
+    const FLOOR_US: f64 = 1.0;
+    let base_by: BTreeMap<&str, &StageStats> =
+        base.stages.iter().map(|s| (s.stage.as_str(), s)).collect();
+    let mut t = Table::new(
+        &format!("trace diff (p95 per stage, noise ±{:.0}%)", noise * 100.0),
+        &["stage", "base p95 ms", "cur p95 ms", "delta", "class"],
+    );
+    let (mut regressions, mut improvements, mut neutral) = (0usize, 0usize, 0usize);
+    for s in &cur.stages {
+        let Some(b) = base_by.get(s.stage.as_str()) else {
+            t.row(vec![s.stage.clone(), "-".into(), ms(s.p95_us), "-".into(), "new".into()]);
+            neutral += 1;
+            continue;
+        };
+        let delta = s.p95_us - b.p95_us;
+        let pct = if b.p95_us > 0.0 { 100.0 * delta / b.p95_us } else { 0.0 };
+        let class = if delta > b.p95_us * noise + FLOOR_US {
+            regressions += 1;
+            "REGRESSION"
+        } else if -delta > b.p95_us * noise + FLOOR_US {
+            improvements += 1;
+            "improvement"
+        } else {
+            neutral += 1;
+            "neutral"
+        };
+        t.row(vec![
+            s.stage.clone(),
+            ms(b.p95_us),
+            ms(s.p95_us),
+            format!("{pct:+.1}%"),
+            class.to_string(),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "\nrequests: base {} -> cur {}\n{} regression(s), {} improvement(s), {} neutral\n",
+        base.requests.len(),
+        cur.requests.len(),
+        regressions,
+        improvements,
+        neutral
+    ));
+    (out, regressions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{drain, mark, span, span_between, test_guard, Category};
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    /// Request id no real host run reaches; lets the tests pick their
+    /// own events out of a drain that may also contain spans recorded by
+    /// instrumented code in concurrently running tests.
+    const SYNTH_REQ: u64 = (1 << 40) + 3;
+
+    fn synth_report(scale: f64) -> TraceReport {
+        // one synthetic request with deterministic stage spans, built
+        // through the real recorder so the whole pipeline is exercised
+        let _g = test_guard();
+        let t0 = Instant::now();
+        {
+            let _plan = span(Category::Plan, "layer_plan").layer(0);
+            std::thread::sleep(Duration::from_micros((400.0 * scale) as u64));
+        }
+        {
+            let _stall = span(Category::Stall, "demand_decode").layer(0).expert(1);
+            std::thread::sleep(Duration::from_micros((800.0 * scale) as u64));
+        }
+        {
+            let _exec = span(Category::Exec, "moe_exec").layer(0);
+            std::thread::sleep(Duration::from_micros((600.0 * scale) as u64));
+        }
+        mark(Category::Fault, "quarantined").layer(0).expert(1);
+        span_between(Category::Request, "request", SYNTH_REQ, t0, Instant::now());
+        let mut batch = drain();
+        // keep only this thread's events: another test's instrumented
+        // code may record into its own ring while the recorder is armed
+        let tid = batch
+            .events
+            .iter()
+            .find(|e| e.req == SYNTH_REQ)
+            .expect("synthetic request recorded")
+            .tid;
+        batch.events.retain(|e| e.tid == tid);
+        from_batch(&batch)
+    }
+
+    #[test]
+    fn waterfall_stages_reconcile_with_wall_by_construction() {
+        let r = synth_report(1.0);
+        assert_eq!(r.requests.len(), 1);
+        let w = &r.requests[0];
+        assert_eq!(w.req, SYNTH_REQ);
+        assert!(w.stage("plan") > 0.0 && w.stage("stall") > 0.0 && w.stage("exec") > 0.0);
+        assert!((w.accounted_us() - w.wall_us).abs() < 0.01, "stages + other == wall");
+        assert!(w.other_us >= -0.01, "disjoint stages can never over-claim");
+        assert_eq!(r.counts.get("fault/quarantined"), Some(&1));
+        assert_eq!(r.integrity.negative_durations, 0);
+        assert_eq!(r.integrity.open_spans, 0);
+        let rendered = render(&r, 8);
+        assert!(rendered.contains("stage attribution"));
+        assert!(rendered.contains("0 negative-duration event(s)"));
+    }
+
+    #[test]
+    fn self_diff_is_all_neutral_and_regressions_classify() {
+        let base = synth_report(1.0);
+        let (out, regressions) = diff(&base, &base, 0.10);
+        assert_eq!(regressions, 0, "self-diff must be clean:\n{out}");
+        assert!(out.contains("0 regression(s)"));
+        let slow = synth_report(40.0);
+        let (out, regressions) = diff(&base, &slow, 0.10);
+        assert!(regressions >= 1, "40x slower stages must classify:\n{out}");
+    }
+
+    #[test]
+    fn compact_breakdown_covers_all_stages() {
+        let _g = test_guard();
+        let t0 = Instant::now();
+        {
+            let _exec = span(Category::Exec, "moe_exec");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        span_between(Category::Request, "request", 0, t0, Instant::now());
+        let batch = drain();
+        let line = compact_stage_breakdown(&batch).expect("one request recorded");
+        for key in ["plan:", "stall:", "exec:", "retry:", "other:"] {
+            assert!(line.contains(key), "missing {key} in {line}");
+        }
+        let empty = TraceBatch { events: Vec::new(), threads: Vec::new(), dropped: 0 };
+        assert!(compact_stage_breakdown(&empty).is_none());
+    }
+
+    #[test]
+    fn compact_step_breakdown_attributes_against_forward_steps() {
+        let _g = test_guard();
+        {
+            let _step = span(Category::Step, "forward_batch");
+            let _exec = span(Category::Exec, "moe_exec").layer(0);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let batch = drain();
+        let line = compact_step_breakdown(&batch).expect("one step recorded");
+        for key in ["plan:", "stall:", "exec:", "retry:", "other:"] {
+            assert!(line.contains(key), "missing {key} in {line}");
+        }
+        let empty = TraceBatch { events: Vec::new(), threads: Vec::new(), dropped: 0 };
+        assert!(compact_step_breakdown(&empty).is_none());
+    }
+}

@@ -1,0 +1,283 @@
+//! Flight-recorder acceptance tests, end to end through `MoeHost`:
+//!
+//! (a) a recorded serving run reconstructs one waterfall per request
+//!     whose summed stage durations plus `other` reconcile with the
+//!     request's wall time (the attribution identity), and the Chrome
+//!     trace-event JSON round trip preserves every event with zero
+//!     dangling spans;
+//! (b) chaos runs — injected transients, a poisoned-and-quarantined
+//!     expert, a prefetch worker killed by a panicking record source —
+//!     never leave an open span or a negative duration in the drain
+//!     (spans close on `Drop`, so unwinds cannot strand them);
+//! (c) trace files from a different schema version are refused loudly
+//!     instead of being misread.
+//!
+//! Every test holds `trace::test_guard()`: recorder state is global, so
+//! enable/drain cycles must not interleave.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use tiny_qmoe::compress::CodecId;
+use tiny_qmoe::config::{ExpertResidency, QuantizeOptions, ServeOptions};
+use tiny_qmoe::coordinator::{MoeHost, MoeHostSpec, MoeTraceRequest};
+use tiny_qmoe::faults::{FaultConfig, FaultPlan, RecordSource};
+use tiny_qmoe::format::{expert_record_name, TqmReader};
+use tiny_qmoe::model::moe::{
+    clustered_trace, load_routers, moe_demo_config, quantize_moe_checkpoint,
+    synth_moe_checkpoint,
+};
+use tiny_qmoe::pipeline::scheduler::{LayerPlan, PrefetchPool};
+use tiny_qmoe::pipeline::{ExpertCache, PipelineMetrics};
+use tiny_qmoe::trace::{self, chrome, report};
+use tiny_qmoe::util::{Json, TempDir};
+
+fn build_container(seed: u64) -> (tiny_qmoe::config::ModelConfig, TempDir) {
+    let cfg = moe_demo_config();
+    let ckpt = synth_moe_checkpoint(&cfg, seed).unwrap();
+    let opts = QuantizeOptions { per_channel: true, ..Default::default() };
+    let w = quantize_moe_checkpoint(&cfg, &ckpt, &opts, CodecId::FreqSeqPacked, "trace")
+        .unwrap()
+        .with_chunk_len(300);
+    let dir = TempDir::new().unwrap();
+    w.write(&dir.join("moe.tqm")).unwrap();
+    (cfg, dir)
+}
+
+/// Serialize -> parse -> decode; the loaded trace must carry every event
+/// (thread-name metadata rides separately) with zero dangling spans.
+fn round_trip(batch: &trace::TraceBatch, run: &str) -> chrome::LoadedTrace {
+    let text = chrome::to_json(batch, run).to_string();
+    let loaded = chrome::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(loaded.run, run);
+    assert_eq!(loaded.events.len(), batch.events.len(), "round trip lost events");
+    assert_eq!(loaded.open_spans, 0, "recorder emitted a dangling span");
+    loaded
+}
+
+#[test]
+fn serving_waterfalls_reconcile_and_chrome_round_trips() {
+    let _g = trace::test_guard();
+    let (cfg, dir) = build_container(901);
+    let spec = cfg.moe.clone().unwrap();
+    let reader = Arc::new(TqmReader::open(dir.join("moe.tqm")).unwrap());
+    let host = MoeHost::start(MoeHostSpec {
+        reader,
+        n_layers: cfg.n_layers,
+        moe: spec.clone(),
+        serve: ServeOptions {
+            max_batch: 2,
+            max_wait_ms: 2,
+            // packed residency so the qGEMV kernel spans are on the path
+            expert_residency: ExpertResidency::Packed,
+            prefetch_budget_bytes: 1 << 20,
+            prefetch_workers: 1,
+            deadline_ms: 0,
+            ..ServeOptions::default()
+        },
+        sched: None,
+    })
+    .unwrap();
+    let n = 4usize;
+    let rxs: Vec<_> = (0..n)
+        .map(|s| {
+            let trace = clustered_trace(cfg.d_model, 3, 2, 8, 700 + s as u64);
+            host.submit(MoeTraceRequest { trace }).unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(resp) => {
+                resp.unwrap_or_else(|e| panic!("request {i} failed: {e:#}"));
+            }
+            Err(_) => panic!("request {i} hung"),
+        }
+    }
+    host.shutdown();
+
+    let batch = trace::drain();
+    let r = report::from_batch(&batch);
+    assert_eq!(r.requests.len(), n, "one waterfall per served request");
+    for w in &r.requests {
+        assert!(w.wall_us > 0.0, "req {}: empty wall window", w.req);
+        assert!(w.stage("exec") > 0.0, "req {}: no exec time attributed", w.req);
+        // the acceptance identity: stages + other == wall, up to rounding
+        assert!(
+            (w.accounted_us() - w.wall_us).abs() < 0.01,
+            "req {}: accounted {} us != wall {} us",
+            w.req,
+            w.accounted_us(),
+            w.wall_us
+        );
+        assert!(
+            w.other_us >= -0.01,
+            "req {}: disjoint stage spans over-claimed the wall ({} us)",
+            w.req,
+            w.other_us
+        );
+    }
+    assert!(r.kernel_us > 0.0, "packed residency must record kernel spans");
+    assert_eq!(r.integrity.negative_durations, 0);
+    assert_eq!(r.integrity.open_spans, 0);
+    let rendered = report::render(&r, 8);
+    assert!(rendered.contains("0 negative-duration event(s)"), "{rendered}");
+    assert!(rendered.contains("0 unclosed span(s)"), "{rendered}");
+
+    // the report rebuilt from the serialized file reconciles the same
+    // way (durations survive the ns -> us conversion within tolerance)
+    let r2 = report::from_loaded(&round_trip(&batch, "it"));
+    assert_eq!(r2.requests.len(), n);
+    for w in &r2.requests {
+        assert!(
+            (w.accounted_us() - w.wall_us).abs() < 1.0,
+            "req {}: file-loaded waterfall drifted: accounted {} vs wall {}",
+            w.req,
+            w.accounted_us(),
+            w.wall_us
+        );
+    }
+}
+
+#[test]
+fn chaos_run_records_clean_integrity_and_fault_marks() {
+    let _g = trace::test_guard();
+    let (cfg, dir) = build_container(902);
+    let spec = cfg.moe.clone().unwrap();
+    let path = dir.join("moe.tqm");
+    let n = 4usize;
+    let traces: Vec<Vec<Vec<f32>>> =
+        (0..n).map(|s| clustered_trace(cfg.d_model, 3, 4, 8, 800 + s as u64)).collect();
+
+    // poison a guaranteed-routed expert (step-0 picks are a pure
+    // function of the inputs) so quarantine and retries must fire
+    let probe = Arc::new(TqmReader::open(&path).unwrap());
+    let routers = load_routers(&probe, cfg.n_layers).unwrap();
+    let xs0: Vec<Vec<f32>> = traces.iter().map(|t| t[0].clone()).collect();
+    let victim = LayerPlan::build(0, &routers[0], &xs0, spec.top_k).unique[0];
+    let one = probe.expert_entry(0, 0).unwrap().decoded_f32_bytes;
+    drop(probe);
+    let plan = Arc::new(FaultPlan::new(FaultConfig {
+        seed: 31,
+        transient_p: 0.05,
+        poisoned: vec![expert_record_name(0, victim, "w1")],
+        ..FaultConfig::default()
+    }));
+    let reader = Arc::new(TqmReader::open(&path).unwrap().with_fault_plan(plan));
+    let host = MoeHost::start(MoeHostSpec {
+        reader,
+        n_layers: cfg.n_layers,
+        moe: spec.clone(),
+        serve: ServeOptions {
+            max_batch: 2,
+            max_wait_ms: 2,
+            // tight cache: decodes recur, so faults keep getting chances
+            expert_budget_bytes: spec.top_k * cfg.n_layers * one + one / 2,
+            prefetch_budget_bytes: 1 << 20,
+            prefetch_workers: 1,
+            retry_budget: 6,
+            retry_backoff_ms: 0,
+            quarantine_after: 1,
+            quarantine_probe_every: 0,
+            deadline_ms: 0,
+            ..ServeOptions::default()
+        },
+        sched: None,
+    })
+    .unwrap();
+    let rxs: Vec<_> = traces
+        .iter()
+        .map(|t| host.submit(MoeTraceRequest { trace: t.clone() }).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        // success or structured degradation both fine — answered is the
+        // contract; a hang would also strand the trace below
+        if rx.recv_timeout(Duration::from_secs(60)).is_err() {
+            panic!("request {i} hung under fault injection");
+        }
+    }
+    host.shutdown();
+
+    let batch = trace::drain();
+    let r = report::from_batch(&batch);
+    assert_eq!(r.integrity.negative_durations, 0, "chaos produced a negative duration");
+    assert_eq!(r.integrity.open_spans, 0);
+    // the poisoned expert defeats every retry: retry and quarantine
+    // marks must have made it into the trace
+    let count = |k: &str| r.counts.get(k).copied().unwrap_or(0);
+    assert!(count("retry/retry") >= 1, "no retry mark recorded: {:?}", r.counts);
+    assert!(count("fault/quarantined") >= 1, "no quarantine mark recorded: {:?}", r.counts);
+    assert!(count("fault/inject_corrupt") >= 1, "poison was never accessed: {:?}", r.counts);
+    round_trip(&batch, "chaos");
+}
+
+#[test]
+fn prefetch_worker_panic_closes_every_span() {
+    // a record source that panics on expert payload access: the decode
+    // span must close on Drop as the unwind passes through it, so the
+    // drain holds only complete events — never a dangling open span
+    struct PanicSource;
+    impl RecordSource for PanicSource {
+        fn fetch<'a>(
+            &self,
+            name: &str,
+            payload: &'a [u8],
+        ) -> anyhow::Result<std::borrow::Cow<'a, [u8]>> {
+            if name.contains(".experts.") {
+                panic!("injected decode panic on {name}");
+            }
+            Ok(std::borrow::Cow::Borrowed(payload))
+        }
+    }
+    let _g = trace::test_guard();
+    let (cfg, dir) = build_container(903);
+    let spec = cfg.moe.clone().unwrap();
+    let reader = Arc::new(
+        TqmReader::open(dir.join("moe.tqm"))
+            .unwrap()
+            .with_record_source(Arc::new(PanicSource)),
+    );
+    let metrics = Arc::new(PipelineMetrics::default());
+    let cache =
+        Arc::new(Mutex::new(ExpertCache::new(reader.clone(), metrics.clone(), usize::MAX, 1)));
+    let pool = PrefetchPool::new(
+        cache,
+        reader,
+        metrics.clone(),
+        1 << 20,
+        1,
+        ExpertResidency::Decoded,
+        1,
+    );
+    for e in 0..spec.n_experts {
+        pool.enqueue(0, e);
+    }
+    pool.quiesce();
+    drop(pool);
+    assert!(metrics.prefetch_worker_panics_count() > 0, "fixture never panicked");
+
+    let batch = trace::drain();
+    // the panic unwound before the outcome rename, so the span survives
+    // under its raw name — present, complete, and non-negative
+    assert!(
+        batch
+            .events
+            .iter()
+            .any(|e| !e.instant && e.cat.label() == "prefetch" && e.name == "decode"),
+        "panicked decode span missing from the drain"
+    );
+    let r = report::from_batch(&batch);
+    assert_eq!(r.integrity.negative_durations, 0);
+    assert_eq!(r.integrity.open_spans, 0);
+    round_trip(&batch, "panic");
+}
+
+#[test]
+fn foreign_schema_versions_are_rejected() {
+    let text = r#"{"traceEvents":[],"displayTimeUnit":"ns","otherData":{"schema_version":999,"run":"x","dropped_events":0}}"#;
+    let err = chrome::from_json(&Json::parse(text).unwrap())
+        .expect_err("version 999 must be refused");
+    assert!(
+        err.to_string().contains("unsupported trace schema version 999"),
+        "wrong error: {err:#}"
+    );
+}
