@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
             let name = format!("serve/{}/batch{batch}", residency.label());
             let m = bench(&name, budget_s, || {
                 let rxs: Vec<_> = (0..batch)
-                    .map(|r| host.submit(MoeTraceRequest { trace: trace_for(r) }).unwrap())
+                    .map(|r| host.submit(MoeTraceRequest::new(trace_for(r))).unwrap())
                     .collect();
                 for rx in rxs {
                     rx.recv().unwrap().unwrap();
@@ -115,7 +115,7 @@ fn main() -> anyhow::Result<()> {
         let name = format!("serve/packed/batch{batch}/trace-{state}");
         let m = bench(&name, budget_s, || {
             let rxs: Vec<_> = (0..batch)
-                .map(|r| host.submit(MoeTraceRequest { trace: trace_for(r) }).unwrap())
+                .map(|r| host.submit(MoeTraceRequest::new(trace_for(r))).unwrap())
                 .collect();
             for rx in rxs {
                 rx.recv().unwrap().unwrap();

@@ -313,6 +313,43 @@ pub struct ServeOptions {
     /// structured `MoeError::Timeout` instead of more decode work.
     /// 0 disables deadlines.
     pub deadline_ms: u64,
+    /// Bounded admission queue: max requests queued or in flight at the
+    /// host at once. A submit past the bound is rejected immediately with
+    /// a structured `MoeError::Overloaded { retry_after_ms }` instead of
+    /// buffering without limit. 0 = unbounded (the pre-admission-control
+    /// behavior).
+    pub admission_queue: usize,
+    /// Per-tenant cap on requests queued or in flight at once; a tenant
+    /// at its quota is rejected with `Overloaded` even when the global
+    /// queue has room. 0 = no per-tenant quota.
+    pub tenant_quota: usize,
+    /// Weighted fair admission shares, indexed by tenant id (tenants past
+    /// the end of the vec get weight 1; an empty vec = everyone weight
+    /// 1). Under contention — queue more than half full — each tenant is
+    /// held to its weight's share of the queue, but never below one slot,
+    /// so a tenant with any quota always gets nonzero goodput.
+    pub tenant_weights: Vec<u32>,
+    /// Deadline-aware shedding: before a request's first forward step,
+    /// predict its completion time from the live per-step EWMA and answer
+    /// `MoeError::Shed` immediately when it cannot finish inside its
+    /// deadline anyway — shed-before-work, counted separately from
+    /// timeouts. Off by default (and irrelevant without `deadline_ms`):
+    /// with it off the serving path is bit-exact with the pre-overload
+    /// host.
+    pub shed_predictive: bool,
+    /// Cache-backpressure trigger: when the demand-miss stall fraction of
+    /// a step's wall time exceeds this, the admitted batch is halved
+    /// (AIMD; recovers one slot per healthy step). 0.0 disables.
+    pub shrink_stall_frac: f64,
+    /// Cache-backpressure trigger on eviction churn: evictions observed
+    /// during a single step above this count also shrink the admitted
+    /// batch. 0 disables.
+    pub shrink_evictions_per_step: u64,
+    /// Brown-out: under sustained cache backpressure, switch the expert
+    /// cache to packed residency (~`32/bits`x more experts per byte,
+    /// bit-exact outputs) instead of letting every request's p99 explode.
+    /// One-way per host run. Off by default.
+    pub brownout_packed: bool,
 }
 
 impl Default for ServeOptions {
@@ -335,7 +372,23 @@ impl Default for ServeOptions {
             quarantine_after: 3,
             quarantine_probe_every: 64,
             deadline_ms: 0,
+            admission_queue: 1024,
+            tenant_quota: 0,
+            tenant_weights: Vec::new(),
+            shed_predictive: false,
+            shrink_stall_frac: 0.0,
+            shrink_evictions_per_step: 0,
+            brownout_packed: false,
         }
+    }
+}
+
+impl ServeOptions {
+    /// Fair-admission weight of `tenant` (tenants beyond the configured
+    /// vec, and zero-configured weights, count as 1 — a weight of 0 would
+    /// silently starve a tenant, which the fairness guarantee forbids).
+    pub fn tenant_weight(&self, tenant: u32) -> u32 {
+        self.tenant_weights.get(tenant as usize).copied().unwrap_or(1).max(1)
     }
 }
 
@@ -412,6 +465,28 @@ mod tests {
         )
         .unwrap();
         assert!(MoeSpec::from_json(&zero).is_err());
+    }
+
+    #[test]
+    fn overload_knob_defaults_preserve_the_pre_admission_serving_path() {
+        let s = ServeOptions::default();
+        // bounded queue is on by default, everything that could change
+        // outputs (shedding, shrink, brownout) is off
+        assert!(s.admission_queue > 0);
+        assert_eq!(s.tenant_quota, 0);
+        assert!(!s.shed_predictive);
+        assert_eq!(s.shrink_stall_frac, 0.0);
+        assert_eq!(s.shrink_evictions_per_step, 0);
+        assert!(!s.brownout_packed);
+        // weight lookup: empty vec = everyone 1; configured weights hold;
+        // out-of-range and zero weights clamp to 1 (no silent starvation)
+        assert_eq!(s.tenant_weight(0), 1);
+        assert_eq!(s.tenant_weight(17), 1);
+        let w = ServeOptions { tenant_weights: vec![4, 0, 2], ..Default::default() };
+        assert_eq!(w.tenant_weight(0), 4);
+        assert_eq!(w.tenant_weight(1), 1, "zero weight must clamp to 1");
+        assert_eq!(w.tenant_weight(2), 2);
+        assert_eq!(w.tenant_weight(3), 1, "past-the-end tenants get weight 1");
     }
 
     #[test]

@@ -219,6 +219,86 @@ mod tests {
     }
 
     #[test]
+    fn all_queued_items_already_expired_are_drained_without_waiting() {
+        // every queued request is past its deadline: the first recv's
+        // deadline collapses the window to "already over", but each call
+        // still returns one item — nothing is swallowed, nothing waited
+        // on, and repeated calls hand every request back exactly once
+        let (tx, rx) = mpsc::channel();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(500) };
+        let past = Instant::now() - Duration::from_millis(50);
+        for i in 0..5u32 {
+            tx.send((i, Some(past))).unwrap();
+        }
+        drop(tx);
+        let t0 = Instant::now();
+        let mut seen = Vec::new();
+        loop {
+            let b = collect_batch_by(&rx, policy, |&(_, d)| d);
+            if b.is_empty() {
+                break;
+            }
+            seen.extend(b.into_iter().map(|(i, _)| i));
+        }
+        assert_eq!(seen, vec![0, 1, 2, 3, 4], "expired items lost or duplicated");
+        assert!(
+            t0.elapsed() < Duration::from_millis(400),
+            "expired queue still waited out a window ({:?})",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn zero_width_drain_window_returns_the_first_item_alone() {
+        // max_wait of zero: the drain window is empty, so the batcher
+        // must return immediately after the blocking recv — one item per
+        // call, FIFO, never a hang
+        let (tx, rx) = mpsc::channel();
+        for i in 0..3u32 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::ZERO };
+        let t0 = Instant::now();
+        assert_eq!(collect_batch(&rx, policy), vec![0]);
+        assert_eq!(collect_batch(&rx, policy), vec![1]);
+        assert_eq!(collect_batch(&rx, policy), vec![2]);
+        assert!(
+            t0.elapsed() < Duration::from_millis(200),
+            "zero-width window still waited ({:?})",
+            t0.elapsed()
+        );
+        drop(tx);
+    }
+
+    #[test]
+    fn deadline_expiring_mid_drain_cuts_the_window_short() {
+        // the first item is patient; a later arrival's deadline is about
+        // to pass mid-drain — the window must shrink to it and dispatch
+        // promptly, with both items present exactly once
+        let (tx, rx) = mpsc::channel();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(500) };
+        tx.send((1u32, None)).unwrap();
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            let urgent = Instant::now() + Duration::from_millis(15);
+            tx.send((2u32, Some(urgent))).unwrap();
+            // keep tx alive past the expected dispatch so disconnect
+            // cannot be what cuts the wait short
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let t0 = Instant::now();
+        let b = collect_batch_by(&rx, policy, |&(_, d)| d);
+        let elapsed = t0.elapsed();
+        sender.join().unwrap();
+        let ids: Vec<u32> = b.into_iter().map(|(i, _)| i).collect();
+        assert_eq!(ids, vec![1, 2], "mid-drain arrival lost");
+        assert!(
+            elapsed < Duration::from_millis(400),
+            "mid-drain deadline ignored ({elapsed:?})"
+        );
+    }
+
+    #[test]
     fn late_arrivals_within_window_join() {
         let (tx, rx) = mpsc::channel();
         let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(60) };

@@ -1,20 +1,31 @@
-//! Host-side MoE serving: the seam where the dynamic batcher hands the
-//! expert scheduler *whole batches*.
+//! Host-side MoE serving: continuous batching with overload protection.
 //!
 //! The XLA engine does not lower MoE block stages yet (ROADMAP), so the
-//! MoE forward runs host-side — but the serving topology is the same as
-//! the dense coordinator's: one dedicated thread per model, an mpsc
-//! queue in front, and [`collect_batch`] grouping concurrent requests up
-//! to the batch policy. Every forward step then routes **all** live
-//! sequences together through [`ExpertScheduler::forward_batch`], which
-//! is exactly where cross-request expert-decode dedup and router-logit
-//! prefetch pay off: two users whose tokens route to the same expert
-//! cost one decode, and the next layer's likely experts warm while the
-//! current one computes.
+//! MoE forward runs host-side — one dedicated thread per model, an mpsc
+//! queue in front. The serving loop batches **continuously**: sequences
+//! join the live set the moment they arrive and leave the moment they
+//! finish, instead of the whole batch stepping in lockstep until its
+//! longest member retires. Every step routes the live sequences together
+//! through [`ExpertScheduler::forward_batch`], which is where
+//! cross-request expert-decode dedup and router-logit prefetch pay off;
+//! per-sequence math is independent of batch composition, so joining or
+//! leaving mid-decode never changes any sequence's outputs.
+//!
+//! In front of the loop sits a bounded [`AdmissionGate`]: a full queue
+//! (or a tenant's fair share of it, under contention) answers
+//! [`MoeError::Overloaded`] immediately instead of queueing work that
+//! cannot be served. Behind it, a [`Backpressure`] controller watches
+//! the expert cache — demand-miss stall fraction and eviction churn —
+//! and shrinks the admitted step width (and optionally browns the cache
+//! out to packed residency) when the cache is thrashing, growing back
+//! additively once pressure clears. Requests that predictably cannot
+//! meet their deadline are shed **before** any forward work
+//! ([`MoeError::Shed`]), counted separately from timeouts, which are
+//! charged only after work was actually spent.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -39,10 +50,40 @@ static NEXT_REQ_ID: AtomicU64 = AtomicU64::new(0);
 /// would just hang the client.
 const WATCHDOG_GRACE: Duration = Duration::from_millis(500);
 
+/// After this many consecutive pressured steps the backpressure
+/// controller browns the expert cache out to packed residency (when
+/// `ServeOptions::brownout_packed` allows it): shrinking the step width
+/// did not clear the thrash, so trade kernel speed for cache headroom.
+const BROWNOUT_AFTER: u32 = 3;
+
+/// Additive-increase cadence: one step of batch width regained per this
+/// many consecutive healthy steps (the AI in AIMD; the halving on
+/// pressure is the MD).
+const GROW_EVERY: u32 = 4;
+
 /// What a client submits: a trace of token vectors (one per decode step)
-/// to forward through the MoE stack.
+/// to forward through the MoE stack, tagged with the tenant it bills to.
 pub struct MoeTraceRequest {
     pub trace: Vec<Vec<f32>>,
+    /// Tenant id for admission accounting. Tenants index into
+    /// `ServeOptions::tenant_weights` (ids past the end weigh 1); under
+    /// contention each tenant is held to its weighted share of the
+    /// admission queue, and `ServeOptions::tenant_quota` caps any one
+    /// tenant's in-flight requests outright.
+    pub tenant: u32,
+}
+
+impl MoeTraceRequest {
+    /// A request billed to the default tenant 0.
+    pub fn new(trace: Vec<Vec<f32>>) -> Self {
+        Self { trace, tenant: 0 }
+    }
+
+    /// Bill this request to `tenant` instead.
+    pub fn with_tenant(mut self, tenant: u32) -> Self {
+        self.tenant = tenant;
+        self
+    }
 }
 
 /// Per-request result: the stack output for every step of the trace.
@@ -76,6 +117,225 @@ pub struct MoeHostSpec {
     pub sched: Option<SchedOptions>,
 }
 
+/// In-flight bookkeeping behind the admission gate: one global count
+/// plus per-tenant counts (a request is "in flight" from admission to
+/// its answer — queued or actively decoding both count).
+struct GateState {
+    total: usize,
+    per_tenant: HashMap<u32, usize>,
+}
+
+/// Bounded admission with per-tenant fairness. `try_admit` answers
+/// structurally (`MoeError::Overloaded`) instead of queueing when the
+/// queue is full, the tenant is over its hard quota, or — once the
+/// queue is at least half full — the tenant is over its weighted fair
+/// share. Shares are computed against the sum of **all configured**
+/// tenant weights, so a configured tenant's slice of the queue stays
+/// reserved even before its first request arrives; tenants beyond the
+/// configured weights table weigh 1 and only count while present.
+struct AdmissionGate {
+    /// Queue bound (`ServeOptions::admission_queue`); 0 = unbounded.
+    max_queue: usize,
+    /// Hard per-tenant in-flight cap (`ServeOptions::tenant_quota`);
+    /// 0 = off.
+    tenant_quota: usize,
+    weights: Vec<u32>,
+    state: Mutex<GateState>,
+    /// EWMA of forward-step wall time in microseconds, fed by the serve
+    /// loop. Sizes `Overloaded::retry_after_ms` and the predictive-shed
+    /// completion estimate. 0 until the first step completes.
+    step_ewma_us: AtomicU64,
+}
+
+impl AdmissionGate {
+    fn new(serve: &ServeOptions) -> Self {
+        Self {
+            max_queue: serve.admission_queue,
+            tenant_quota: serve.tenant_quota,
+            weights: serve.tenant_weights.clone(),
+            state: Mutex::new(GateState { total: 0, per_tenant: HashMap::new() }),
+            step_ewma_us: AtomicU64::new(0),
+        }
+    }
+
+    fn weight(&self, tenant: u32) -> u32 {
+        self.weights.get(tenant as usize).copied().unwrap_or(1).max(1)
+    }
+
+    /// Admit or reject `tenant`'s next request. One lock scope so the
+    /// bound check and the increment are atomic against racing clients.
+    fn try_admit(&self, tenant: u32) -> std::result::Result<(), MoeError> {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        if self.max_queue > 0 && st.total >= self.max_queue {
+            return Err(self.overloaded(st.total));
+        }
+        let mine = st.per_tenant.get(&tenant).copied().unwrap_or(0);
+        if self.tenant_quota > 0 && mine >= self.tenant_quota {
+            return Err(self.overloaded(st.total));
+        }
+        // weighted fairness engages under contention (queue ≥ half
+        // full): uncontended, any tenant may use the whole queue
+        if self.max_queue > 0 && 2 * st.total >= self.max_queue {
+            let mut total_w: u64 =
+                self.weights.iter().map(|w| u64::from((*w).max(1))).sum();
+            for (&t, &n) in &st.per_tenant {
+                if n > 0 && t as usize >= self.weights.len() {
+                    total_w += 1;
+                }
+            }
+            if tenant as usize >= self.weights.len() && mine == 0 {
+                total_w += 1; // the candidate itself, not yet present
+            }
+            let share = (self.max_queue as u64 * u64::from(self.weight(tenant))
+                / total_w.max(1)) as usize;
+            if mine >= share.max(1) {
+                return Err(self.overloaded(st.total));
+            }
+        }
+        st.total += 1;
+        *st.per_tenant.entry(tenant).or_insert(0) += 1;
+        Ok(())
+    }
+
+    /// The structured rejection: retry-after sized to the backlog ahead
+    /// of the client times the observed step pace, clamped to [1, 1000]
+    /// ms so a cold EWMA still tells the client to back off *some*.
+    fn overloaded(&self, queued: usize) -> MoeError {
+        let ewma_us = self.step_ewma_us.load(Ordering::Relaxed);
+        let retry_after_ms = ((queued as u64 + 1) * ewma_us / 1000).clamp(1, 1000);
+        MoeError::Overloaded { retry_after_ms }
+    }
+
+    /// Settle one in-flight request (answered: completed, timed out,
+    /// shed, or aborted — every admit must be matched by exactly one
+    /// release, or the gate leaks capacity).
+    fn release(&self, tenant: u32) {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        st.total = st.total.saturating_sub(1);
+        if let Some(n) = st.per_tenant.get_mut(&tenant) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                st.per_tenant.remove(&tenant);
+            }
+        }
+    }
+
+    fn observe_step(&self, wall: Duration) {
+        let us = (wall.as_micros() as u64).max(1);
+        let old = self.step_ewma_us.load(Ordering::Relaxed);
+        let next = if old == 0 { us } else { (old * 4 + us) / 5 };
+        self.step_ewma_us.store(next, Ordering::Relaxed);
+    }
+
+    fn step_ewma(&self) -> Duration {
+        Duration::from_micros(self.step_ewma_us.load(Ordering::Relaxed))
+    }
+}
+
+/// The overload-protection knobs the serve loop consults per step,
+/// cloned out of `ServeOptions` at startup.
+#[derive(Clone)]
+struct OverloadKnobs {
+    shed_predictive: bool,
+    shrink_stall_frac: f64,
+    shrink_evictions_per_step: u64,
+    brownout_packed: bool,
+}
+
+impl OverloadKnobs {
+    fn from_serve(serve: &ServeOptions) -> Self {
+        Self {
+            shed_predictive: serve.shed_predictive,
+            shrink_stall_frac: serve.shrink_stall_frac,
+            shrink_evictions_per_step: serve.shrink_evictions_per_step,
+            brownout_packed: serve.brownout_packed,
+        }
+    }
+}
+
+/// AIMD step-width controller wired to the expert cache: per-step
+/// deltas of demand-miss stall fraction and eviction churn against the
+/// configured thresholds. Pressure halves the effective batch (and,
+/// sustained, browns out to packed residency); [`GROW_EVERY`] healthy
+/// steps regain one slot up to the configured maximum.
+struct Backpressure {
+    max: usize,
+    eff: usize,
+    knobs: OverloadKnobs,
+    metrics: Arc<PipelineMetrics>,
+    last_stall_s: f64,
+    last_wall_s: f64,
+    last_evictions: u64,
+    pressured_streak: u32,
+    healthy_streak: u32,
+}
+
+impl Backpressure {
+    fn new(max: usize, knobs: OverloadKnobs, metrics: Arc<PipelineMetrics>) -> Self {
+        Self {
+            max: max.max(1),
+            eff: max.max(1),
+            knobs,
+            metrics,
+            last_stall_s: 0.0,
+            last_wall_s: 0.0,
+            last_evictions: 0,
+            pressured_streak: 0,
+            healthy_streak: 0,
+        }
+    }
+
+    fn enabled(&self) -> bool {
+        self.knobs.shrink_stall_frac > 0.0 || self.knobs.shrink_evictions_per_step > 0
+    }
+
+    /// Step width the loop may admit right now.
+    fn effective(&self) -> usize {
+        self.eff
+    }
+
+    /// Called after each successful forward step.
+    fn observe(&mut self, sched: &ExpertScheduler) {
+        if !self.enabled() {
+            return;
+        }
+        let stall = self.metrics.expert_stall_secs();
+        let wall = self.metrics.forward_wall_secs();
+        let evictions = self.metrics.expert_evictions_count();
+        let d_stall = (stall - self.last_stall_s).max(0.0);
+        let d_wall = (wall - self.last_wall_s).max(0.0);
+        let d_ev = evictions.saturating_sub(self.last_evictions);
+        self.last_stall_s = stall;
+        self.last_wall_s = wall;
+        self.last_evictions = evictions;
+        let stalled = self.knobs.shrink_stall_frac > 0.0
+            && d_wall > 0.0
+            && d_stall / d_wall > self.knobs.shrink_stall_frac;
+        let churning = self.knobs.shrink_evictions_per_step > 0
+            && d_ev > self.knobs.shrink_evictions_per_step;
+        if stalled || churning {
+            self.healthy_streak = 0;
+            self.pressured_streak += 1;
+            if self.eff > 1 {
+                self.eff = (self.eff / 2).max(1);
+                self.metrics.record_batch_shrink();
+                trace::mark(Category::Step, "batch_shrink");
+            }
+            if self.knobs.brownout_packed && self.pressured_streak >= BROWNOUT_AFTER {
+                // idempotent: records the brownout metric and mark only
+                // on the actual residency flip
+                sched.brownout_to_packed();
+            }
+        } else {
+            self.pressured_streak = 0;
+            self.healthy_streak += 1;
+            if self.healthy_streak % GROW_EVERY == 0 && self.eff < self.max {
+                self.eff += 1;
+            }
+        }
+    }
+}
+
 /// Handle to one MoE serving thread.
 pub struct MoeHost {
     tx: mpsc::Sender<Envelope>,
@@ -85,6 +345,9 @@ pub struct MoeHost {
     /// Per-request completion budget (`ServeOptions::deadline_ms`; None
     /// when 0 = unbounded).
     deadline: Option<Duration>,
+    /// Bounded admission + per-tenant fairness; shared with the serving
+    /// thread, which releases slots as requests are answered.
+    gate: Arc<AdmissionGate>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -126,11 +389,14 @@ impl MoeHost {
         let moe = spec.moe.clone();
         let deadline =
             (spec.serve.deadline_ms > 0).then(|| Duration::from_millis(spec.serve.deadline_ms));
+        let gate = Arc::new(AdmissionGate::new(&spec.serve));
+        let knobs = OverloadKnobs::from_serve(&spec.serve);
         let (tx, rx) = mpsc::channel::<Envelope>();
+        let loop_gate = gate.clone();
         let join = std::thread::Builder::new()
             .name("serve-moe-host".into())
-            .spawn(move || serve_loop(rx, policy, sched, routers, moe))?;
-        Ok(Self { tx, metrics, deadline, join: Some(join) })
+            .spawn(move || serve_loop(rx, policy, sched, routers, moe, loop_gate, knobs))?;
+        Ok(Self { tx, metrics, deadline, gate, join: Some(join) })
     }
 
     /// Submit a trace; returns a receiver for the response. The request's
@@ -149,11 +415,25 @@ impl MoeHost {
         req: MoeTraceRequest,
         deadline: Option<Instant>,
     ) -> Result<mpsc::Receiver<Result<MoeTraceResponse>>> {
-        let (resp_tx, resp_rx) = mpsc::channel();
+        let tenant = req.tenant;
         let req_id = NEXT_REQ_ID.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(Envelope { req, req_id, enqueued: Instant::now(), deadline, resp: resp_tx })
-            .map_err(|_| anyhow::anyhow!("MoE serving thread is gone"))?;
+        self.metrics.record_submitted();
+        if let Err(e) = self.gate.try_admit(tenant) {
+            self.metrics.record_rejected();
+            trace::mark(Category::Queue, "rejected").req(req_id);
+            return Err(anyhow::Error::new(e));
+        }
+        self.metrics.record_admitted();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let env =
+            Envelope { req, req_id, enqueued: Instant::now(), deadline, resp: resp_tx };
+        if self.tx.send(env).is_err() {
+            // admitted but unservable: settle the books as aborted so
+            // the admission identity still reconciles
+            self.metrics.record_request_aborted();
+            self.gate.release(tenant);
+            anyhow::bail!("MoE serving thread is gone");
+        }
         Ok(resp_rx)
     }
 
@@ -225,135 +505,154 @@ fn serve_loop(
     sched: ExpertScheduler,
     routers: Vec<Router>,
     moe: MoeSpec,
+    gate: Arc<AdmissionGate>,
+    knobs: OverloadKnobs,
 ) {
+    let mut ctl = Backpressure::new(policy.max_batch, knobs, sched.metrics().clone());
+    let mut active: Vec<ActiveTrace> = Vec::new();
     loop {
-        // the drain window shrinks to the earliest request deadline in
-        // the forming batch — a request with little budget left must not
-        // spend it queueing for batch-mates
-        let batch = {
-            let _drain = trace::span(Category::Drain, "batch_drain");
-            collect_batch_by(&rx, policy, |env: &Envelope| env.deadline)
-        };
-        if batch.is_empty() {
-            return; // disconnected and drained
+        if active.is_empty() {
+            // idle: block on the batcher; the drain window shrinks to
+            // the earliest request deadline in the forming batch — a
+            // request with little budget left must not spend it queueing
+            // for batch-mates
+            let batch = {
+                let _drain = trace::span(Category::Drain, "batch_drain");
+                let p = BatchPolicy { max_batch: ctl.effective(), max_wait: policy.max_wait };
+                collect_batch_by(&rx, p, |env: &Envelope| env.deadline)
+            };
+            if batch.is_empty() {
+                return; // disconnected and drained
+            }
+            join_arrivals(batch, &mut active, &gate, &ctl);
+        } else {
+            // continuous batching: between steps, pull whatever has
+            // arrived without blocking (decoding sequences must not
+            // stall on a drain window) up to the effective step width
+            let mut room = ctl.effective().saturating_sub(active.len());
+            let mut arrivals = Vec::new();
+            while room > 0 {
+                match rx.try_recv() {
+                    Ok(env) => {
+                        arrivals.push(env);
+                        room -= 1;
+                    }
+                    Err(_) => break, // empty or disconnected: step on
+                }
+            }
+            if !arrivals.is_empty() {
+                join_arrivals(arrivals, &mut active, &gate, &ctl);
+            }
         }
-        serve_trace_batch(&sched, &routers, &moe, batch);
+        step_once(&sched, &routers, &moe, &gate, &mut ctl, &mut active);
     }
 }
 
-fn serve_trace_batch(
+/// Fold newly arrived envelopes into the live set. Zero-length traces
+/// are answered here (they never enter the step loop, so the retire
+/// path would drop their channel unanswered), and — with predictive
+/// shedding on — requests whose EWMA-projected completion already
+/// overshoots their deadline are answered [`MoeError::Shed`] before any
+/// forward work is spent on them.
+fn join_arrivals(
+    batch: Vec<Envelope>,
+    active: &mut Vec<ActiveTrace>,
+    gate: &AdmissionGate,
+    ctl: &Backpressure,
+) {
+    let now = Instant::now();
+    for env in batch {
+        // the queue window closed on arrival here; its start predates
+        // this thread seeing the envelope, so it is recorded from the
+        // measured enqueue instant rather than a live guard
+        trace::span_between(Category::Queue, "queue", env.req_id, env.enqueued, now);
+        let queue_s = (now - env.enqueued).as_secs_f64().max(0.0);
+        if env.req.trace.is_empty() {
+            trace::span_between(Category::Request, "request", env.req_id, now, Instant::now());
+            ctl.metrics.record_request_completed();
+            gate.release(env.req.tenant);
+            let _ = env.resp.send(Ok(MoeTraceResponse {
+                outputs: Vec::new(),
+                queue_s,
+                forward_s: 0.0,
+            }));
+            continue;
+        }
+        if ctl.knobs.shed_predictive {
+            if let Some(d) = env.deadline {
+                let ewma = gate.step_ewma();
+                // a cold EWMA (no step observed yet) predicts nothing —
+                // admit and let the deadline boundary handle it
+                if !ewma.is_zero() {
+                    let predicted = ewma.saturating_mul(env.req.trace.len() as u32);
+                    if now + predicted > d {
+                        ctl.metrics.record_shed();
+                        trace::mark(Category::Queue, "shed").req(env.req_id);
+                        gate.release(env.req.tenant);
+                        let _ = env.resp.send(Err(anyhow::Error::new(MoeError::Shed {
+                            predicted_ms: predicted.as_millis() as u64,
+                        })));
+                        continue;
+                    }
+                }
+            }
+        }
+        active.push(ActiveTrace { env, outputs: Vec::new(), cursor: 0, started: now });
+    }
+}
+
+/// One continuous-batching step: retire expired requests, forward the
+/// first `effective()` live sequences together, retire the finished,
+/// and feed the backpressure controller.
+fn step_once(
     sched: &ExpertScheduler,
     routers: &[Router],
     moe: &MoeSpec,
-    batch: Vec<Envelope>,
+    gate: &AdmissionGate,
+    ctl: &mut Backpressure,
+    active: &mut Vec<ActiveTrace>,
 ) {
+    // deadline retirement first: a trace past its deadline gets a
+    // structured Timeout at this step boundary instead of consuming
+    // more forward steps (partial outputs are dropped — a timed-out
+    // request has no well-defined result)
     let now = Instant::now();
-    let mut active: Vec<ActiveTrace> = batch
-        .into_iter()
-        .map(|env| ActiveTrace { env, outputs: Vec::new(), cursor: 0, started: now })
-        .collect();
-    for a in &active {
-        // the queue window closed when the batch formed; its start
-        // predates this thread seeing the envelope, so it is recorded
-        // from the measured enqueue instant rather than a live guard
-        trace::span_between(Category::Queue, "queue", a.env.req_id, a.env.enqueued, now);
+    active.retain_mut(|a| match a.env.deadline {
+        Some(d) if now >= d => {
+            sched.metrics().record_deadline_timeout();
+            trace::mark(Category::Fault, "deadline_timeout").req(a.env.req_id);
+            trace::span_between(Category::Request, "request", a.env.req_id, a.started, now);
+            gate.release(a.env.req.tenant);
+            let _ = a.env.resp.send(Err(anyhow::Error::new(MoeError::Timeout)));
+            false
+        }
+        _ => true,
+    });
+    if active.is_empty() {
+        return;
     }
-    // retire zero-length traces up front: they are already complete, but
-    // they never enter `live`, so the retire loop below would drop their
-    // response channel without ever answering (the client's recv() then
-    // fails with "channel closed" instead of an empty Ok)
-    for a in &active {
-        if a.env.req.trace.is_empty() {
-            let queue_s = (a.started - a.env.enqueued).as_secs_f64().max(0.0);
-            trace::span_between(
-                Category::Request,
-                "request",
-                a.env.req_id,
-                a.started,
-                Instant::now(),
-            );
-            let _ = a.env.resp.send(Ok(MoeTraceResponse {
-                outputs: Vec::new(),
-                queue_s,
-                forward_s: a.started.elapsed().as_secs_f64(),
-            }));
-        }
-    }
-    loop {
-        // deadline retirement: a trace past its deadline gets a
-        // structured Timeout at this step boundary instead of consuming
-        // more forward steps (partial outputs are dropped — a timed-out
-        // request has no well-defined result)
-        let now = Instant::now();
-        for a in active.iter_mut() {
-            if a.cursor >= a.env.req.trace.len() {
-                continue;
+    // step the oldest `n` sequences together (FIFO keeps head-of-line
+    // latency bounded when backpressure shrinks the width below the
+    // live count); their current vectors go to the scheduler as one
+    // batch, which is where cross-request expert-decode dedup pays off
+    let n = ctl.effective().min(active.len());
+    let xs: Vec<Vec<f32>> =
+        active[..n].iter().map(|a| a.env.req.trace[a.cursor].clone()).collect();
+    let t0 = Instant::now();
+    match sched.forward_batch(routers, moe, &xs) {
+        Ok(outs) => {
+            gate.observe_step(t0.elapsed());
+            for (a, y) in active[..n].iter_mut().zip(outs) {
+                a.outputs.push(y);
+                a.cursor += 1;
             }
-            if let Some(d) = a.env.deadline {
-                if now >= d {
-                    sched.metrics().record_deadline_timeout();
-                    trace::mark(Category::Fault, "deadline_timeout").req(a.env.req_id);
-                    trace::span_between(
-                        Category::Request,
-                        "request",
-                        a.env.req_id,
-                        a.started,
-                        now,
-                    );
-                    let _ = a.env.resp.send(Err(anyhow::Error::new(MoeError::Timeout)));
-                    a.cursor = a.env.req.trace.len(); // retire
-                    a.outputs.clear();
+            // retire finished traces immediately (short requests don't
+            // wait for the longest one in the live set)
+            let metrics = sched.metrics().clone();
+            active.retain_mut(|a| {
+                if a.cursor < a.env.req.trace.len() {
+                    return true;
                 }
-            }
-        }
-        let live: Vec<usize> = (0..active.len())
-            .filter(|&i| active[i].cursor < active[i].env.req.trace.len())
-            .collect();
-        if live.is_empty() {
-            break;
-        }
-        // the batcher's whole batch, one step at a time: every live
-        // sequence's current vector goes to the scheduler together
-        let xs: Vec<Vec<f32>> =
-            live.iter().map(|&i| active[i].env.req.trace[active[i].cursor].clone()).collect();
-        match sched.forward_batch(routers, moe, &xs) {
-            Ok(outs) => {
-                for (&i, y) in live.iter().zip(outs) {
-                    let a = &mut active[i];
-                    a.outputs.push(y);
-                    a.cursor += 1;
-                }
-            }
-            Err(e) => {
-                let msg = format!("moe forward failed: {e}");
-                let typed = e.downcast_ref::<MoeError>().cloned();
-                for &i in &live {
-                    // keep the typed error downcastable per trace (the
-                    // context preserves the human-readable message)
-                    let err = match &typed {
-                        Some(me) => anyhow::Error::new(me.clone()).context(msg.clone()),
-                        None => anyhow::anyhow!("{msg}"),
-                    };
-                    trace::mark(Category::Fault, "forward_error").req(active[i].env.req_id);
-                    trace::span_between(
-                        Category::Request,
-                        "request",
-                        active[i].env.req_id,
-                        active[i].started,
-                        Instant::now(),
-                    );
-                    let _ = active[i].env.resp.send(Err(err));
-                    active[i].cursor = active[i].env.req.trace.len(); // retire
-                    active[i].outputs.clear();
-                }
-                return;
-            }
-        }
-        // retire finished traces immediately (short requests don't wait
-        // for the longest one in the batch)
-        for &i in &live {
-            let a = &mut active[i];
-            if a.cursor == a.env.req.trace.len() {
                 let queue_s = (a.started - a.env.enqueued).as_secs_f64().max(0.0);
                 trace::span_between(
                     Category::Request,
@@ -362,11 +661,41 @@ fn serve_trace_batch(
                     a.started,
                     Instant::now(),
                 );
+                metrics.record_request_completed();
+                gate.release(a.env.req.tenant);
                 let _ = a.env.resp.send(Ok(MoeTraceResponse {
                     outputs: std::mem::take(&mut a.outputs),
                     queue_s,
                     forward_s: a.started.elapsed().as_secs_f64(),
                 }));
+                false
+            });
+            ctl.observe(sched);
+        }
+        Err(e) => {
+            // a failed forward poisons the step for everyone currently
+            // live (stepped or not): answer all of them structurally —
+            // aborted, not timed out — and keep serving new arrivals
+            let msg = format!("moe forward failed: {e}");
+            let typed = e.downcast_ref::<MoeError>().cloned();
+            for a in active.drain(..) {
+                // keep the typed error downcastable per trace (the
+                // context preserves the human-readable message)
+                let err = match &typed {
+                    Some(me) => anyhow::Error::new(me.clone()).context(msg.clone()),
+                    None => anyhow::anyhow!("{msg}"),
+                };
+                trace::mark(Category::Fault, "forward_error").req(a.env.req_id);
+                trace::span_between(
+                    Category::Request,
+                    "request",
+                    a.env.req_id,
+                    a.started,
+                    Instant::now(),
+                );
+                sched.metrics().record_request_aborted();
+                gate.release(a.env.req.tenant);
+                let _ = a.env.resp.send(Err(err));
             }
         }
     }
@@ -419,7 +748,7 @@ mod tests {
         .unwrap();
         let trace = clustered_trace(cfg.d_model, 2, 3, 6, 19);
         let rxs: Vec<_> = (0..3)
-            .map(|_| host.submit(MoeTraceRequest { trace: trace.clone() }).unwrap())
+            .map(|_| host.submit(MoeTraceRequest::new(trace.clone())).unwrap())
             .collect();
         // reference: fully-resident per-sequence forward, fresh decodes
         let resident: Vec<Vec<Arc<ExpertWeights>>> = (0..cfg.n_layers)
@@ -460,7 +789,7 @@ mod tests {
             sched: None,
         })
         .unwrap();
-        let resp = host.generate(MoeTraceRequest { trace: Vec::new() }).unwrap();
+        let resp = host.generate(MoeTraceRequest::new(Vec::new())).unwrap();
         assert!(resp.outputs.is_empty());
         host.shutdown();
     }
@@ -486,8 +815,8 @@ mod tests {
         })
         .unwrap();
         let trace = clustered_trace(cfg.d_model, 2, 3, 4, 23);
-        let rx_empty = host.submit(MoeTraceRequest { trace: Vec::new() }).unwrap();
-        let rx_full = host.submit(MoeTraceRequest { trace: trace.clone() }).unwrap();
+        let rx_empty = host.submit(MoeTraceRequest::new(Vec::new())).unwrap();
+        let rx_full = host.submit(MoeTraceRequest::new(trace.clone())).unwrap();
 
         let resp_empty = rx_empty.recv().unwrap().unwrap();
         assert!(resp_empty.outputs.is_empty());
@@ -531,8 +860,8 @@ mod tests {
         let base = clustered_trace(cfg.d_model, 2, 3, 6, 29);
         let short: Vec<Vec<f32>> = base[..2].to_vec();
         let long: Vec<Vec<f32>> = base.clone();
-        let rx_short = host.submit(MoeTraceRequest { trace: short.clone() }).unwrap();
-        let rx_long = host.submit(MoeTraceRequest { trace: long.clone() }).unwrap();
+        let rx_short = host.submit(MoeTraceRequest::new(short.clone())).unwrap();
+        let rx_long = host.submit(MoeTraceRequest::new(long.clone())).unwrap();
 
         let resident: Vec<Vec<Arc<ExpertWeights>>> = (0..cfg.n_layers)
             .map(|l| {
@@ -590,7 +919,7 @@ mod tests {
         .unwrap();
         let trace = clustered_trace(cfg.d_model, 2, 3, 4, 37);
         let err = host
-            .generate(MoeTraceRequest { trace })
+            .generate(MoeTraceRequest::new(trace))
             .expect_err("expired request returned Ok");
         match err.downcast_ref::<MoeError>() {
             Some(MoeError::Timeout) => {}
@@ -646,7 +975,7 @@ mod tests {
         let trace = clustered_trace(cfg.d_model, 2, 1, 1, 41);
         let t0 = Instant::now();
         let err = host
-            .generate(MoeTraceRequest { trace })
+            .generate(MoeTraceRequest::new(trace))
             .expect_err("wedged step returned Ok before its sleeps could finish");
         match err.downcast_ref::<MoeError>() {
             Some(MoeError::Aborted(_)) => {}
@@ -727,9 +1056,9 @@ mod tests {
         let long = vec![x_a.clone(), x_a.clone(), x_b, x_a.clone()];
         let short = vec![x_a.clone()];
         let other = vec![x_a.clone(), x_a.clone(), x_a.clone(), x_a];
-        let rx_long = host.submit(MoeTraceRequest { trace: long }).unwrap();
-        let rx_short = host.submit(MoeTraceRequest { trace: short }).unwrap();
-        let rx_other = host.submit(MoeTraceRequest { trace: other }).unwrap();
+        let rx_long = host.submit(MoeTraceRequest::new(long)).unwrap();
+        let rx_short = host.submit(MoeTraceRequest::new(short)).unwrap();
+        let rx_other = host.submit(MoeTraceRequest::new(other)).unwrap();
 
         // the short trace finished before the poisoned step and must
         // still succeed
@@ -748,5 +1077,390 @@ mod tests {
             );
         }
         host.shutdown();
+    }
+
+    #[test]
+    fn admission_gate_enforces_global_bound_and_weighted_shares() {
+        let gate = AdmissionGate::new(&ServeOptions {
+            admission_queue: 8,
+            tenant_weights: vec![3, 1],
+            ..Default::default()
+        });
+        // uncontended (queue under half full): tenant 0 admits freely
+        for _ in 0..4 {
+            gate.try_admit(0).unwrap();
+        }
+        // contended: weights [3, 1] give tenant 0 a share of 8*3/4 = 6
+        gate.try_admit(0).unwrap();
+        gate.try_admit(0).unwrap();
+        let err = gate.try_admit(0).unwrap_err();
+        assert!(
+            matches!(err, MoeError::Overloaded { retry_after_ms } if retry_after_ms >= 1),
+            "{err:?}"
+        );
+        // tenant 1's share (8*1/4 = 2) stayed reserved even though it
+        // arrived after tenant 0 filled everything it could
+        gate.try_admit(1).unwrap();
+        gate.try_admit(1).unwrap();
+        assert!(gate.try_admit(1).is_err(), "tenant 1 exceeded its share");
+        // queue is now full (8): even a fresh tenant is bounced globally
+        assert!(gate.try_admit(9).is_err(), "global bound did not hold");
+        // a release restores capacity to the releasing tenant
+        gate.release(0);
+        gate.try_admit(0).unwrap();
+    }
+
+    #[test]
+    fn admission_gate_tenant_quota_caps_inflight_regardless_of_queue_room() {
+        let gate = AdmissionGate::new(&ServeOptions {
+            admission_queue: 100,
+            tenant_quota: 2,
+            ..Default::default()
+        });
+        gate.try_admit(5).unwrap();
+        gate.try_admit(5).unwrap();
+        assert!(gate.try_admit(5).is_err(), "quota did not cap tenant 5");
+        gate.try_admit(6).unwrap(); // other tenants unaffected
+        gate.release(5);
+        gate.try_admit(5).unwrap();
+    }
+
+    #[test]
+    fn admission_gate_retry_after_tracks_backlog_times_step_pace() {
+        let gate =
+            AdmissionGate::new(&ServeOptions { admission_queue: 4, ..Default::default() });
+        // cold EWMA still tells the client to back off a minimum amount
+        match gate.overloaded(3) {
+            MoeError::Overloaded { retry_after_ms } => assert_eq!(retry_after_ms, 1),
+            other => panic!("{other:?}"),
+        }
+        gate.observe_step(Duration::from_millis(10));
+        // backlog of 4 ahead at 10 ms per step: retry after ~50 ms
+        match gate.overloaded(4) {
+            MoeError::Overloaded { retry_after_ms } => assert_eq!(retry_after_ms, 50),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn backpressure_halves_on_churn_and_regrows_additively() {
+        let (cfg, _dir, reader) = demo();
+        let spec = cfg.moe.clone().unwrap();
+        let metrics = Arc::new(PipelineMetrics::default());
+        let cache =
+            ExpertCache::from_options(reader.clone(), metrics.clone(), &ServeOptions::default());
+        let sched = ExpertScheduler::new(
+            reader,
+            metrics.clone(),
+            cache,
+            cfg.n_layers,
+            spec.n_experts,
+            SchedOptions::default(),
+        );
+        let knobs = OverloadKnobs {
+            shed_predictive: false,
+            shrink_stall_frac: 0.0,
+            shrink_evictions_per_step: 2,
+            brownout_packed: false,
+        };
+        let mut ctl = Backpressure::new(8, knobs, metrics.clone());
+        assert_eq!(ctl.effective(), 8);
+        // a churn-heavy step (3 evictions > threshold 2) halves the width
+        for _ in 0..3 {
+            metrics.record_expert_eviction();
+        }
+        ctl.observe(&sched);
+        assert_eq!(ctl.effective(), 4, "pressure must halve the step width");
+        assert_eq!(metrics.batch_shrinks_count(), 1);
+        // healthy steps regrow one slot per GROW_EVERY, not a jump back
+        for _ in 0..(GROW_EVERY * 2) {
+            ctl.observe(&sched);
+        }
+        assert_eq!(ctl.effective(), 6, "regrowth must be additive");
+    }
+
+    #[test]
+    fn staggered_arrival_joins_mid_decode_and_stays_bit_exact() {
+        // a record source that slows expert decodes so the first trace
+        // is still mid-decode when the second arrives: continuous
+        // batching folds the latecomer into the live set, and
+        // per-sequence math must not depend on who else is in the batch
+        struct DelaySource;
+        impl crate::faults::RecordSource for DelaySource {
+            fn fetch<'a>(
+                &self,
+                name: &str,
+                payload: &'a [u8],
+            ) -> Result<std::borrow::Cow<'a, [u8]>> {
+                if name.contains(".experts.") {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Ok(std::borrow::Cow::Borrowed(payload))
+            }
+        }
+        let (cfg, dir, clean) = demo();
+        let spec = cfg.moe.clone().unwrap();
+        let routers = load_routers(&clean, cfg.n_layers).unwrap();
+        let one = clean.expert_entry(0, 0).unwrap().decoded_f32_bytes;
+        let reader = Arc::new(
+            TqmReader::open(dir.join("moe.tqm"))
+                .unwrap()
+                .with_record_source(Arc::new(DelaySource)),
+        );
+        let host = MoeHost::start(MoeHostSpec {
+            reader,
+            n_layers: cfg.n_layers,
+            moe: spec.clone(),
+            serve: ServeOptions {
+                max_batch: 4,
+                max_wait_ms: 1,
+                // tight cache: decodes recur every step, keeping steps
+                // slow enough that the second submit lands mid-decode
+                expert_budget_bytes: spec.top_k * cfg.n_layers * one + one / 2,
+                ..Default::default()
+            },
+            sched: Some(SchedOptions {
+                prefetch: false,
+                ..SchedOptions::from_serve(&ServeOptions::default())
+            }),
+        })
+        .unwrap();
+        let t1 = clustered_trace(cfg.d_model, 2, 3, 12, 51);
+        let t2 = clustered_trace(cfg.d_model, 2, 3, 8, 52);
+        let rx1 = host.submit(MoeTraceRequest::new(t1.clone())).unwrap();
+        // give the first trace time to get a few steps in
+        std::thread::sleep(Duration::from_millis(60));
+        let rx2 = host.submit(MoeTraceRequest::new(t2.clone()).with_tenant(1)).unwrap();
+
+        let resident: Vec<Vec<Arc<ExpertWeights>>> = (0..cfg.n_layers)
+            .map(|l| {
+                (0..spec.n_experts)
+                    .map(|e| Arc::new(ExpertWeights::load(&clean, l, e).unwrap()))
+                    .collect()
+            })
+            .collect();
+        let reference = |trace: &[Vec<f32>]| -> Vec<Vec<f32>> {
+            trace
+                .iter()
+                .map(|x| {
+                    moe_stack_forward(&routers, &spec, x, |l, e| Ok(resident[l][e].clone()))
+                        .unwrap()
+                })
+                .collect()
+        };
+        let r1 = rx1.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+        let r2 = rx2.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+        assert_eq!(r1.outputs, reference(&t1), "resident trace diverged after a join");
+        assert_eq!(r2.outputs, reference(&t2), "joining trace diverged");
+        let m = host.metrics.clone();
+        assert_eq!(m.requests_completed_count(), 2);
+        assert!(m.admission_reconciles(), "{}", m.admission_identity());
+        host.shutdown();
+    }
+
+    #[test]
+    fn bounded_admission_rejects_overflow_then_recovers() {
+        struct DelaySource;
+        impl crate::faults::RecordSource for DelaySource {
+            fn fetch<'a>(
+                &self,
+                name: &str,
+                payload: &'a [u8],
+            ) -> Result<std::borrow::Cow<'a, [u8]>> {
+                if name.contains(".experts.") {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Ok(std::borrow::Cow::Borrowed(payload))
+            }
+        }
+        let (cfg, dir, _clean) = demo();
+        let reader = Arc::new(
+            TqmReader::open(dir.join("moe.tqm"))
+                .unwrap()
+                .with_record_source(Arc::new(DelaySource)),
+        );
+        let host = MoeHost::start(MoeHostSpec {
+            reader,
+            n_layers: cfg.n_layers,
+            moe: cfg.moe.clone().unwrap(),
+            serve: ServeOptions {
+                max_batch: 1,
+                max_wait_ms: 1,
+                admission_queue: 2,
+                ..Default::default()
+            },
+            sched: Some(SchedOptions {
+                prefetch: false,
+                ..SchedOptions::from_serve(&ServeOptions::default())
+            }),
+        })
+        .unwrap();
+        let trace = clustered_trace(cfg.d_model, 2, 3, 4, 61);
+        let rx1 = host.submit(MoeTraceRequest::new(trace.clone())).unwrap();
+        let rx2 = host.submit(MoeTraceRequest::new(trace.clone())).unwrap();
+        // slow decodes guarantee neither in-flight request has finished:
+        // the queue (bound 2) is full, so the third submit is answered
+        // Overloaded at the call site, before any queueing
+        let err = host
+            .submit(MoeTraceRequest::new(trace.clone()))
+            .expect_err("overflow was admitted");
+        match err.downcast_ref::<MoeError>() {
+            Some(MoeError::Overloaded { retry_after_ms }) => {
+                assert!(*retry_after_ms >= 1, "retry-after must be actionable");
+            }
+            other => panic!("expected structured Overloaded, got {other:?} ({err})"),
+        }
+        rx1.recv_timeout(Duration::from_secs(60)).unwrap().unwrap();
+        rx2.recv_timeout(Duration::from_secs(60)).unwrap().unwrap();
+        // capacity released on completion: the retry is admitted
+        let rx4 = host.submit(MoeTraceRequest::new(trace)).unwrap();
+        rx4.recv_timeout(Duration::from_secs(60)).unwrap().unwrap();
+        let m = host.metrics.clone();
+        assert_eq!(m.requests_submitted_count(), 4);
+        assert_eq!(m.requests_admitted_count(), 3);
+        assert_eq!(m.requests_rejected_count(), 1);
+        let identity = m.admission_identity();
+        assert!(m.admission_reconciles(), "{identity}");
+        assert!(identity.contains("[OK]"), "{identity}");
+        host.shutdown();
+    }
+
+    #[test]
+    fn predictive_shed_answers_before_any_forward_work() {
+        struct DelaySource;
+        impl crate::faults::RecordSource for DelaySource {
+            fn fetch<'a>(
+                &self,
+                name: &str,
+                payload: &'a [u8],
+            ) -> Result<std::borrow::Cow<'a, [u8]>> {
+                if name.contains(".experts.") {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Ok(std::borrow::Cow::Borrowed(payload))
+            }
+        }
+        let (cfg, dir, _clean) = demo();
+        let reader = Arc::new(
+            TqmReader::open(dir.join("moe.tqm"))
+                .unwrap()
+                .with_record_source(Arc::new(DelaySource)),
+        );
+        let host = MoeHost::start(MoeHostSpec {
+            reader,
+            n_layers: cfg.n_layers,
+            moe: cfg.moe.clone().unwrap(),
+            serve: ServeOptions {
+                max_batch: 2,
+                max_wait_ms: 1,
+                deadline_ms: 30,
+                shed_predictive: true,
+                ..Default::default()
+            },
+            sched: Some(SchedOptions {
+                prefetch: false,
+                ..SchedOptions::from_serve(&ServeOptions::default())
+            }),
+        })
+        .unwrap();
+        let trace = clustered_trace(cfg.d_model, 2, 3, 2, 71);
+        // the first request warms the step-pace EWMA the hard way: its
+        // first step alone outlasts the 30 ms deadline, so it is
+        // answered Timeout — charged after work was actually spent
+        let err1 = host
+            .generate(MoeTraceRequest::new(trace.clone()))
+            .expect_err("first request cannot make its deadline");
+        assert!(
+            matches!(err1.downcast_ref::<MoeError>(), Some(MoeError::Timeout)),
+            "expected Timeout, got {err1}"
+        );
+        // the second is shed on arrival at the live set: the warm EWMA
+        // predicts two slow steps, overshooting the deadline before any
+        // forward work is spent on it
+        let err2 = host
+            .generate(MoeTraceRequest::new(trace))
+            .expect_err("predicted-late request was served anyway");
+        match err2.downcast_ref::<MoeError>() {
+            Some(MoeError::Shed { predicted_ms }) => {
+                assert!(*predicted_ms >= 1, "shed must report its prediction");
+            }
+            other => panic!("expected structured Shed, got {other:?} ({err2})"),
+        }
+        let m = host.metrics.clone();
+        assert_eq!(m.requests_shed_count(), 1);
+        assert_eq!(m.deadline_timeouts_count(), 1);
+        assert!(m.admission_reconciles(), "{}", m.admission_identity());
+        host.shutdown();
+    }
+
+    #[test]
+    fn overload_chaos_every_request_answered_structurally_and_books_reconcile() {
+        let (cfg, _dir, reader) = demo();
+        let spec = cfg.moe.clone().unwrap();
+        let one = reader.expert_entry(0, 0).unwrap().decoded_f32_bytes;
+        let host = Arc::new(
+            MoeHost::start(MoeHostSpec {
+                reader: reader.clone(),
+                n_layers: cfg.n_layers,
+                moe: spec.clone(),
+                serve: ServeOptions {
+                    max_batch: 4,
+                    max_wait_ms: 1,
+                    deadline_ms: 2000,
+                    admission_queue: 6,
+                    tenant_quota: 3,
+                    tenant_weights: vec![4, 2, 1, 1],
+                    shed_predictive: true,
+                    shrink_stall_frac: 0.05,
+                    shrink_evictions_per_step: 1,
+                    brownout_packed: true,
+                    // tight cache so eviction churn actually fires
+                    expert_budget_bytes: spec.top_k * cfg.n_layers * one + one / 2,
+                    ..Default::default()
+                },
+                sched: None,
+            })
+            .unwrap(),
+        );
+        // zipf-ish tenant skew: tenant 0 dominates, tail tenants trickle
+        let tenants: [u32; 12] = [0, 0, 0, 0, 0, 0, 1, 1, 1, 2, 2, 3];
+        let mut handles = Vec::new();
+        for (i, &tenant) in tenants.iter().enumerate() {
+            let host = host.clone();
+            let d_model = cfg.d_model;
+            handles.push(std::thread::spawn(move || {
+                let mut answered = 0usize;
+                for r in 0..2 {
+                    let trace =
+                        clustered_trace(d_model, 2, 3, 4, (i * 2 + r) as u64 + 100);
+                    match host.generate(MoeTraceRequest::new(trace).with_tenant(tenant)) {
+                        Ok(resp) => {
+                            assert!(!resp.outputs.is_empty());
+                            answered += 1;
+                        }
+                        Err(e) => {
+                            // overload answers must be structured, never
+                            // a stringly-typed mystery — and never a
+                            // hang, which generate()'s watchdog would
+                            // have converted to Aborted
+                            assert!(
+                                e.downcast_ref::<MoeError>().is_some(),
+                                "unstructured overload error: {e:#}"
+                            );
+                            answered += 1;
+                        }
+                    }
+                }
+                answered
+            }));
+        }
+        let answered: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(answered, 24, "every request must be answered exactly once");
+        let m = host.metrics.clone();
+        assert_eq!(m.requests_submitted_count(), 24);
+        let identity = m.admission_identity();
+        assert!(m.admission_reconciles(), "{identity}");
+        assert_eq!(m.requests_in_flight(), 0, "{identity}");
+        Arc::try_unwrap(host).ok().expect("all client threads joined").shutdown();
     }
 }

@@ -47,6 +47,16 @@ pub enum MoeError {
     Quarantined { layer: usize },
     /// The serving thread died or the host shut down mid-request.
     Aborted(String),
+    /// Rejected at admission: the bounded queue (or the tenant's share of
+    /// it) is full. The request consumed **no** forward work; the client
+    /// should back off for `retry_after_ms` and resubmit.
+    Overloaded { retry_after_ms: u64 },
+    /// Dropped before its first forward step because the host predicted
+    /// it could not finish inside its deadline anyway (`predicted_ms` is
+    /// the estimated completion time vs the remaining budget). Distinct
+    /// from [`MoeError::Timeout`], which is charged only after forward
+    /// work was actually spent on the request.
+    Shed { predicted_ms: u64 },
 }
 
 impl std::fmt::Display for MoeError {
@@ -57,6 +67,15 @@ impl std::fmt::Display for MoeError {
                 write!(f, "all routed experts unavailable at layer {layer} (quarantined)")
             }
             MoeError::Aborted(reason) => write!(f, "request aborted: {reason}"),
+            MoeError::Overloaded { retry_after_ms } => {
+                write!(f, "admission rejected: host overloaded (retry after {retry_after_ms} ms)")
+            }
+            MoeError::Shed { predicted_ms } => {
+                write!(
+                    f,
+                    "request shed before work: predicted completion {predicted_ms} ms exceeds its deadline"
+                )
+            }
         }
     }
 }

@@ -12,11 +12,13 @@
 //!   tqm serve-demo --model e2e [--requests 16] [--batch 4]
 //!                 [--threads 0] [--prefetch-depth 1]
 //!                 [--expert-residency decoded|packed]
-//!   tqm tables    --table 1|2|3|4|bits|codec|network|residency|moe|sched|zipf|faults|envelope|all
-//!                 [--tokens 512]   (residency/moe/sched/zipf/faults/envelope: trace length)
+//!   tqm tables    --table 1|2|3|4|bits|codec|network|residency|moe|sched|zipf|faults|envelope|load|all
+//!                 [--tokens 512]   (residency/moe/sched/zipf/faults/envelope/load: trace length)
 //!                 [--batch 4]      (sched/faults: concurrent sequences)
 //!                 [--alpha 1.1]    (zipf: popularity skew)
 //!                 [--requests 8]   (envelope: concurrent traces per cell)
+//!                 [--clients 8] [--tenants 4] [--seed 0]
+//!                                  (load: concurrent clients / zipf tenants)
 //!   tqm bench-report --current DIR [--baseline DIR] [--noise 0.10]
 //!                 (diff two recorded BENCH_*.json sets; no --baseline =
 //!                  first run, everything reports as "new")
@@ -29,6 +31,12 @@
 //! `--table faults` replays a seeded chaos matrix (fault rate x retry
 //! budget) through the scheduler: completion rate, p99 added latency,
 //! retries and quarantine counts per cell.
+//!
+//! `--table load` is the overload generator: concurrent closed-loop
+//! clients with zipfian tenant skew drive a bounded `MoeHost` at
+//! 0.5x–4x of calibrated capacity, reporting per-tenant token-latency
+//! percentiles, shed/reject/timeout counts, goodput, and the admission
+//! identity line per cell (the CI overload-smoke gate greps for `[OK]`).
 //!
 //! `--table envelope` runs the full MoE serving loop once per simulated
 //! device cell — 4/6/8 GB-class byte budgets x 1–8 cores x
@@ -422,6 +430,19 @@ fn cmd_tables(args: &Args) -> Result<()> {
             )?;
             tables::render_envelope(&rows).print();
         }
+        "load" => {
+            let seed: u64 = args.get("seed", "0").parse()?;
+            let (rows, identities) = tables::load_table(
+                args.get_usize("clients", 8)?,
+                args.get_usize("tenants", 4)?,
+                args.get_usize("tokens", 8)?,
+                seed,
+            )?;
+            tables::render_load(&rows).print();
+            for line in &identities {
+                println!("{line}");
+            }
+        }
         "all" => {
             t1()?;
             eval_t("mmlu", "paper Table 2")?;
@@ -446,6 +467,11 @@ fn cmd_tables(args: &Args) -> Result<()> {
             tables::render_faults(&rows).print();
             let rows = tables::envelope_table(24, 4)?;
             tables::render_envelope(&rows).print();
+            let (rows, identities) = tables::load_table(4, 2, 4, 0)?;
+            tables::render_load(&rows).print();
+            for line in &identities {
+                println!("{line}");
+            }
         }
         other => bail!("unknown table {other:?}"),
     }

@@ -234,6 +234,21 @@ impl ExpertCache {
         self.residency
     }
 
+    /// Switch what *future* admissions hold — the brown-out path
+    /// (decoded → packed under cache pressure). Unlike
+    /// [`ExpertCache::with_residency`] this is legal on a populated
+    /// cache: already-resident entries keep their representation (both
+    /// modes are bit-exact, and every byte-accounting path charges each
+    /// slot its own `w.bytes()`), so nothing is flushed — old-mode
+    /// entries simply age out through normal LRU eviction while new
+    /// admissions are sized and decoded in the new mode. Callers that
+    /// decode outside the cache lock must capture the residency in the
+    /// same critical section as their `begin_get`/`begin_speculative`
+    /// so the decoded representation matches the reserved size.
+    pub fn set_residency(&mut self, residency: ExpertResidency) {
+        self.residency = residency;
+    }
+
     /// What one resident slot for `(layer, expert)` costs this cache's
     /// budget — decoded f32 bytes or packed bytes, both known from the
     /// expert index before any decode happens.

@@ -117,6 +117,35 @@ pub struct PipelineMetrics {
     faults_transient: AtomicU64,
     faults_corrupt: AtomicU64,
     faults_delay: AtomicU64,
+    // -- admission / overload (host) -----------------------------------------
+    // Two exact identities, the same discipline as the prefetch
+    // `issued == hits + waste` reconciliation:
+    //   submitted == admitted + rejected
+    //   admitted  == completed + timed_out (deadline_timeouts) + shed
+    //               + aborted + in-flight
+    // [`PipelineMetrics::admission_identity`] renders and checks both.
+    /// Requests offered to the host (admitted or not).
+    requests_submitted: AtomicU64,
+    /// Requests that passed admission into the queue.
+    requests_admitted: AtomicU64,
+    /// Requests refused at admission (`MoeError::Overloaded`) — the
+    /// bounded queue, a tenant quota, or the fair-share clamp said no.
+    requests_rejected: AtomicU64,
+    /// Admitted requests dropped before their first forward step
+    /// (`MoeError::Shed`) — deadline-aware shed-before-work, disjoint
+    /// from `deadline_timeouts` which is charged after work was spent.
+    requests_shed: AtomicU64,
+    /// Admitted requests answered with their full output.
+    requests_completed: AtomicU64,
+    /// Admitted requests answered with an error other than
+    /// timeout/shed (forward failure, host shutdown mid-request).
+    requests_aborted: AtomicU64,
+    /// Cache-backpressure events: the admitted batch was halved because
+    /// demand-miss stall or eviction churn crossed its threshold.
+    batch_shrinks: AtomicU64,
+    /// Brown-out transitions to packed expert residency (one-way; >1
+    /// only across multiple hosts sharing the metrics).
+    brownouts: AtomicU64,
 }
 
 impl PipelineMetrics {
@@ -521,6 +550,114 @@ impl PipelineMetrics {
         self.deadline_timeouts.fetch_add(1, Ordering::Relaxed);
     }
 
+    // -- admission / overload ------------------------------------------------
+
+    pub fn record_submitted(&self) {
+        self.requests_submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_admitted(&self) {
+        self.requests_admitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_rejected(&self) {
+        self.requests_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_shed(&self) {
+        self.requests_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_request_completed(&self) {
+        self.requests_completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_request_aborted(&self) {
+        self.requests_aborted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch_shrink(&self) {
+        self.batch_shrinks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_brownout(&self) {
+        self.brownouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn requests_submitted_count(&self) -> u64 {
+        self.requests_submitted.load(Ordering::Relaxed)
+    }
+
+    pub fn requests_admitted_count(&self) -> u64 {
+        self.requests_admitted.load(Ordering::Relaxed)
+    }
+
+    pub fn requests_rejected_count(&self) -> u64 {
+        self.requests_rejected.load(Ordering::Relaxed)
+    }
+
+    pub fn requests_shed_count(&self) -> u64 {
+        self.requests_shed.load(Ordering::Relaxed)
+    }
+
+    pub fn requests_completed_count(&self) -> u64 {
+        self.requests_completed.load(Ordering::Relaxed)
+    }
+
+    pub fn requests_aborted_count(&self) -> u64 {
+        self.requests_aborted.load(Ordering::Relaxed)
+    }
+
+    pub fn batch_shrinks_count(&self) -> u64 {
+        self.batch_shrinks.load(Ordering::Relaxed)
+    }
+
+    pub fn brownouts_count(&self) -> u64 {
+        self.brownouts.load(Ordering::Relaxed)
+    }
+
+    /// Admitted requests not yet answered (derived, 0 once drained).
+    pub fn requests_in_flight(&self) -> u64 {
+        let done = self.requests_completed_count()
+            + self.deadline_timeouts_count()
+            + self.requests_shed_count()
+            + self.requests_aborted_count();
+        self.requests_admitted_count().saturating_sub(done)
+    }
+
+    /// Whether both admission identities hold on the current counter
+    /// values: `submitted == admitted + rejected`, and every admitted
+    /// request is accounted for by exactly one terminal outcome (or is
+    /// still in flight). Exact only at a quiet point (host drained);
+    /// mid-run reads can transiently disagree across atomics.
+    pub fn admission_reconciles(&self) -> bool {
+        let done = self.requests_completed_count()
+            + self.deadline_timeouts_count()
+            + self.requests_shed_count()
+            + self.requests_aborted_count();
+        self.requests_submitted_count()
+            == self.requests_admitted_count() + self.requests_rejected_count()
+            && done <= self.requests_admitted_count()
+    }
+
+    /// The admission identity, rendered for the summary line and the CI
+    /// grep gate: ends in `[OK]` when both identities reconcile,
+    /// `[VIOLATION]` otherwise.
+    pub fn admission_identity(&self) -> String {
+        format!(
+            "admission: submitted {} = admitted {} + rejected {}; admitted = completed {} + timeout {} + shed {} + aborted {} + in-flight {} [{}]",
+            self.requests_submitted_count(),
+            self.requests_admitted_count(),
+            self.requests_rejected_count(),
+            self.requests_completed_count(),
+            self.deadline_timeouts_count(),
+            self.requests_shed_count(),
+            self.requests_aborted_count(),
+            self.requests_in_flight(),
+            if self.admission_reconciles() { "OK" } else { "VIOLATION" },
+        )
+    }
+
     pub fn record_fault_transient(&self) {
         self.faults_transient.fetch_add(1, Ordering::Relaxed);
     }
@@ -666,6 +803,17 @@ impl PipelineMetrics {
                 self.prefetch_worker_panics_count(),
             ));
         }
+        if self.requests_submitted_count() > 0 {
+            s.push_str("; ");
+            s.push_str(&self.admission_identity());
+            if self.batch_shrinks_count() > 0 || self.brownouts_count() > 0 {
+                s.push_str(&format!(
+                    "; backpressure: {} batch shrink(s), {} brownout(s)",
+                    self.batch_shrinks_count(),
+                    self.brownouts_count(),
+                ));
+            }
+        }
         if self.faults_injected_count() > 0 {
             s.push_str(&format!(
                 "; injected: {} transient, {} corrupt, {} delays",
@@ -741,6 +889,14 @@ impl PipelineMetrics {
             ("faults_transient", n(self.faults_transient_count())),
             ("faults_corrupt", n(self.faults_corrupt_count())),
             ("faults_delay", n(self.faults_delay_count())),
+            ("requests_submitted", n(self.requests_submitted_count())),
+            ("requests_admitted", n(self.requests_admitted_count())),
+            ("requests_rejected", n(self.requests_rejected_count())),
+            ("requests_shed", n(self.requests_shed_count())),
+            ("requests_completed", n(self.requests_completed_count())),
+            ("requests_aborted", n(self.requests_aborted_count())),
+            ("batch_shrinks", n(self.batch_shrinks_count())),
+            ("brownouts", n(self.brownouts_count())),
         ])
     }
 
@@ -948,6 +1104,84 @@ mod tests {
         assert_eq!(back.get("expert_misses").unwrap().as_usize().unwrap(), 1);
         assert_eq!(back.get("forward_steps").unwrap().as_usize().unwrap(), 1);
         assert_eq!(back.get("faults_transient").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn admission_identity_reconciles_and_flags_violations() {
+        let m = PipelineMetrics::default();
+        assert!(!m.summary().contains("admission:"), "inactive section must stay silent");
+        assert!(m.admission_reconciles(), "all-zero counters reconcile trivially");
+        // 6 submitted: 5 admitted + 1 rejected; of the admitted,
+        // 2 completed + 1 timeout + 1 shed + 1 aborted, 0 in flight
+        for _ in 0..6 {
+            m.record_submitted();
+        }
+        for _ in 0..5 {
+            m.record_admitted();
+        }
+        m.record_rejected();
+        m.record_request_completed();
+        m.record_request_completed();
+        m.record_deadline_timeout();
+        m.record_shed();
+        m.record_request_aborted();
+        assert_eq!(m.requests_in_flight(), 0);
+        assert!(m.admission_reconciles());
+        let line = m.admission_identity();
+        assert!(line.ends_with("[OK]"), "{line}");
+        assert!(line.contains("submitted 6 = admitted 5 + rejected 1"), "{line}");
+        assert!(m.summary().contains(&line), "identity line missing from summary");
+        // an unanswered admitted request shows up as in-flight, still OK
+        m.record_submitted();
+        m.record_admitted();
+        assert_eq!(m.requests_in_flight(), 1);
+        assert!(m.admission_identity().ends_with("[OK]"));
+        // a lost submit (admitted nor rejected) breaks the first identity
+        m.record_submitted();
+        assert!(!m.admission_reconciles());
+        assert!(m.admission_identity().ends_with("[VIOLATION]"));
+        m.record_admitted();
+        assert!(m.admission_reconciles(), "identity restored");
+        // more outcomes than admissions breaks the second identity
+        m.record_request_completed();
+        m.record_request_completed();
+        m.record_request_completed();
+        assert!(!m.admission_reconciles());
+        assert!(m.admission_identity().ends_with("[VIOLATION]"));
+    }
+
+    #[test]
+    fn backpressure_counters_surface_in_summary_and_snapshot() {
+        let m = PipelineMetrics::default();
+        m.record_submitted();
+        m.record_admitted();
+        m.record_request_completed();
+        assert!(!m.summary().contains("backpressure:"), "silent with no shrink/brownout");
+        m.record_batch_shrink();
+        m.record_batch_shrink();
+        m.record_brownout();
+        assert_eq!(m.batch_shrinks_count(), 2);
+        assert_eq!(m.brownouts_count(), 1);
+        assert!(
+            m.summary().contains("backpressure: 2 batch shrink(s), 1 brownout(s)"),
+            "{}",
+            m.summary()
+        );
+        let j = m.to_json();
+        let back = Json::parse(&j.to_string()).unwrap();
+        for key in [
+            "requests_submitted",
+            "requests_admitted",
+            "requests_rejected",
+            "requests_shed",
+            "requests_completed",
+            "requests_aborted",
+            "batch_shrinks",
+            "brownouts",
+        ] {
+            assert!(back.opt(key).is_some(), "snapshot missing {key}");
+        }
+        assert_eq!(back.get("batch_shrinks").unwrap().as_usize().unwrap(), 2);
     }
 
     #[test]

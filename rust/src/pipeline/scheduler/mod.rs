@@ -144,10 +144,6 @@ pub struct ExpertScheduler {
     /// to what the slice can hold, using the known resident sizes.
     reader: Arc<TqmReader>,
     metrics: Arc<PipelineMetrics>,
-    /// The cache's residency mode, captured at construction — demand
-    /// decodes (run outside the cache lock) and prefetch workers must
-    /// produce the same body the cache charges for.
-    residency: ExpertResidency,
     /// Popularity prior, persisted across steps (and batches) — the
     /// workload-skew half of the prefetch score.
     prior: Mutex<EwmaPrior>,
@@ -170,7 +166,6 @@ impl ExpertScheduler {
         n_experts: usize,
         opts: SchedOptions,
     ) -> Self {
-        let residency = cache.residency();
         let cache = Arc::new(Mutex::new(cache));
         let pool = (opts.prefetch && opts.prefetch_budget_bytes > 0).then(|| {
             PrefetchPool::new(
@@ -179,7 +174,6 @@ impl ExpertScheduler {
                 metrics.clone(),
                 opts.prefetch_budget_bytes,
                 opts.prefetch_workers,
-                residency,
                 opts.retry_budget,
             )
         });
@@ -189,7 +183,6 @@ impl ExpertScheduler {
             cache,
             reader,
             metrics,
-            residency,
             prior: Mutex::new(EwmaPrior::new(n_layers, n_experts, opts.ewma_decay)),
             pool,
             quarantine,
@@ -224,8 +217,15 @@ impl ExpertScheduler {
 
     /// One reservation + decode attempt, no retry.
     fn get_once(&self, layer: usize, expert: usize) -> Result<Arc<ExpertWeights>, FetchError> {
-        let fetch =
-            lock_recover(&self.cache).begin_get(layer, expert).map_err(FetchError::Hard)?;
+        // residency is captured in the SAME critical section as the
+        // reservation: a brown-out flipping the cache to packed between
+        // begin_get and the decode would otherwise land a body whose
+        // size disagrees with what the reservation charged
+        let (fetch, residency) = {
+            let mut cache = lock_recover(&self.cache);
+            let fetch = cache.begin_get(layer, expert).map_err(FetchError::Hard)?;
+            (fetch, cache.residency())
+        };
         match fetch {
             DemandFetch::Hit(w) => Ok(w),
             DemandFetch::Miss(res) => {
@@ -237,7 +237,7 @@ impl ExpertScheduler {
                 // shrink the effective budget forever — catch, release,
                 // re-raise
                 let decoded = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    ExpertWeights::load_with(&self.reader, layer, expert, self.residency)
+                    ExpertWeights::load_with(&self.reader, layer, expert, residency)
                 }));
                 match decoded {
                     Ok(Ok(w)) => Ok(lock_recover(&self.cache).commit_demand(
@@ -310,6 +310,25 @@ impl ExpertScheduler {
         if let Some(pool) = &self.pool {
             pool.quiesce();
         }
+    }
+
+    /// Brown-out: switch the cache to packed residency for all future
+    /// admissions (~`32/bits`× more experts per byte of budget, bit-exact
+    /// outputs) — the host's answer to sustained demand-miss stall when
+    /// shrinking the batch is not enough. Already-resident decoded
+    /// entries age out through normal LRU; in-flight decodes finish in
+    /// the mode their reservation captured, so byte accounting stays
+    /// exact across the flip. Returns `false` (and records nothing) when
+    /// the cache is already packed.
+    pub fn brownout_to_packed(&self) -> bool {
+        let mut cache = lock_recover(&self.cache);
+        if cache.residency() == ExpertResidency::Packed {
+            return false;
+        }
+        cache.set_residency(ExpertResidency::Packed);
+        self.metrics.record_brownout();
+        trace::mark(Category::Cache, "brownout_packed");
+        true
     }
 
     /// One forward step for a whole batch through a stack of MoE
@@ -497,7 +516,7 @@ impl ExpertScheduler {
                 .then(a.cmp(&b))
         });
         idx.truncate((top_k * xs.len() + top_k).min(ne));
-        {
+        let residency = {
             // skip residents and quarantined experts (`is_quarantined` is
             // the passive probe-free check — speculative filtering must
             // not consume the demand path's periodic recovery probe)
@@ -505,7 +524,8 @@ impl ExpertScheduler {
             idx.retain(|&e| {
                 !cache.contains(layer, e) && !self.quarantine.is_quarantined(layer, e)
             });
-        }
+            cache.residency()
+        };
         // cap the step's candidate set to what the slice can hold, best
         // first — otherwise a burst of same-step inserts would displace
         // its own best predictions through the slice's LRU
@@ -513,7 +533,7 @@ impl ExpertScheduler {
         let mut kept = Vec::with_capacity(idx.len());
         for e in idx {
             let need = match self.reader.expert_entry(layer, e) {
-                Ok(entry) => match self.residency {
+                Ok(entry) => match residency {
                     ExpertResidency::Decoded => entry.decoded_f32_bytes,
                     ExpertResidency::Packed => entry.packed_resident_bytes,
                 },
@@ -878,6 +898,39 @@ mod tests {
         let line = m.time_accounting();
         assert!(line.starts_with("time: forward wall"), "{line}");
         assert!(m.summary().contains("time: forward wall"), "summary missing accounting");
+    }
+
+    #[test]
+    fn brownout_to_packed_mid_run_stays_bit_exact() {
+        // steps before and after the flip must produce identical outputs
+        // to an all-decoded scheduler; mixed-mode residency (decoded
+        // entries surviving next to fresh packed admissions) must keep
+        // the byte books exact
+        let (cfg, _dir, reader) = demo(51);
+        let spec = cfg.moe.clone().unwrap();
+        let routers = load_routers(&reader, cfg.n_layers).unwrap();
+        let opts = SchedOptions { prefetch: false, ..SchedOptions::default() };
+        let xs_a = clustered_trace(cfg.d_model, 3, 1, 4, 61);
+        let xs_b = clustered_trace(cfg.d_model, 3, 1, 4, 67);
+        let (reference, _m) = scheduler(&reader, &cfg, usize::MAX, opts.clone());
+        let want_a = reference.forward_batch(&routers, &spec, &xs_a).unwrap();
+        let want_b = reference.forward_batch(&routers, &spec, &xs_b).unwrap();
+
+        let (sched, m) = scheduler(&reader, &cfg, usize::MAX, opts);
+        let got_a = sched.forward_batch(&routers, &spec, &xs_a).unwrap();
+        assert!(sched.brownout_to_packed(), "first flip must report a transition");
+        assert!(!sched.brownout_to_packed(), "second flip must be a no-op");
+        assert_eq!(m.brownouts_count(), 1);
+        let got_b = sched.forward_batch(&routers, &spec, &xs_b).unwrap();
+        assert_eq!(got_a, want_a, "pre-brownout step diverged");
+        assert_eq!(got_b, want_b, "post-brownout step diverged");
+        // the flip only affects *future* admissions: decoded entries
+        // stayed resident, new misses (if any) decoded packed
+        let cache = sched.cache_handle();
+        let cache = cache.lock().unwrap();
+        assert_eq!(cache.residency(), crate::config::ExpertResidency::Packed);
+        // byte books stay exact across the mixed-mode cache
+        assert_eq!(cache.demand_inflight_bytes(), 0);
     }
 
     #[test]

@@ -21,7 +21,6 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::config::ExpertResidency;
 use crate::format::TqmReader;
 use crate::model::moe::ExpertWeights;
 use crate::pipeline::{ExpertCache, PipelineMetrics};
@@ -87,7 +86,6 @@ impl PrefetchPool {
         metrics: Arc<PipelineMetrics>,
         budget_bytes: usize,
         n_workers: usize,
-        residency: ExpertResidency,
         retry_budget: u32,
     ) -> Self {
         let (tx, rx) = mpsc::channel::<Job>();
@@ -121,7 +119,6 @@ impl PrefetchPool {
                                 &reader,
                                 &metrics,
                                 budget_bytes,
-                                residency,
                                 retry_budget,
                                 layer,
                                 expert,
@@ -197,20 +194,23 @@ impl Drop for PrefetchPool {
 /// unknown, and could-never-fit experts before any decode allocation
 /// exists — the reservation is what keeps in-flight prefetch bytes
 /// inside the `budget + prefetch_budget` bound), then decode with fresh
-/// buffers **in the cache's residency mode** and commit onto the
-/// reservation.
-#[allow(clippy::too_many_arguments)]
+/// buffers **in the cache's residency mode** — captured in the same
+/// critical section as the reservation, so a concurrent brown-out flip
+/// cannot desynchronize the decoded body from the reserved size — and
+/// commit onto the reservation.
 fn run_job(
     cache: &Mutex<ExpertCache>,
     reader: &Arc<TqmReader>,
     metrics: &PipelineMetrics,
     budget_bytes: usize,
-    residency: ExpertResidency,
     retry_budget: u32,
     layer: usize,
     expert: usize,
 ) {
-    let reserved = lock_recover(cache).begin_speculative(layer, expert, budget_bytes);
+    let (reserved, residency) = {
+        let mut c = lock_recover(cache);
+        (c.begin_speculative(layer, expert, budget_bytes), c.residency())
+    };
     let Some(need) = reserved else {
         metrics.record_prefetch_rejected();
         trace::mark(Category::Prefetch, "admission_rejected").layer(layer).expert(expert);
@@ -276,6 +276,7 @@ fn run_job(
 mod tests {
     use super::*;
     use crate::compress::CodecId;
+    use crate::config::ExpertResidency;
     use crate::config::QuantizeOptions;
     use crate::model::moe::{moe_demo_config, quantize_moe_checkpoint, synth_moe_checkpoint};
     use crate::pipeline::expert_cache::DemandFetch;
@@ -336,7 +337,6 @@ mod tests {
                 metrics.clone(),
                 slice,
                 2,
-                ExpertResidency::Decoded,
                 0,
             );
             for round in 0..3usize {
@@ -421,7 +421,6 @@ mod tests {
             metrics.clone(),
             1 << 20,
             1, // single worker: every job must survive the panics before it
-            ExpertResidency::Decoded,
             2,
         );
         for e in 0..cfg.moe.as_ref().unwrap().n_experts {

@@ -451,6 +451,39 @@ mod tests {
     }
 
     #[test]
+    fn zero_completed_requests_render_an_empty_but_valid_report() {
+        // an overload run can shed or reject every request before any
+        // forward work: the trace then holds queue marks but not a
+        // single request span — the report must render cleanly (no NaN
+        // percentiles, zero waterfalls) with an intact integrity line
+        let _g = test_guard();
+        mark(Category::Queue, "shed").req(SYNTH_REQ);
+        mark(Category::Queue, "rejected").req(SYNTH_REQ + 1);
+        let batch = drain();
+        let r = from_batch(&batch);
+        assert!(r.requests.is_empty(), "marks alone must not fabricate waterfalls");
+        assert_eq!(r.integrity.negative_durations, 0);
+        assert_eq!(r.integrity.open_spans, 0);
+        for s in &r.stages {
+            assert!(
+                s.p50_us.is_finite() && s.p95_us.is_finite() && s.p99_us.is_finite(),
+                "stage {} percentile went non-finite on an empty run",
+                s.stage
+            );
+        }
+        let rendered = render(&r, 8);
+        assert!(rendered.contains("0 request(s)"), "{rendered}");
+        assert!(!rendered.contains("NaN"), "{rendered}");
+        assert!(rendered.contains("0 negative-duration event(s)"), "{rendered}");
+        assert!(rendered.contains("0 unclosed span(s)"), "{rendered}");
+        assert!(rendered.contains("queue/shed"), "shed mark missing: {rendered}");
+        // and a self-diff of the empty report is clean, not NaN noise
+        let (out, regressions) = diff(&r, &r, 0.10);
+        assert_eq!(regressions, 0, "{out}");
+        assert!(out.contains("0 regression(s)"), "{out}");
+    }
+
+    #[test]
     fn compact_breakdown_covers_all_stages() {
         let _g = test_guard();
         let t0 = Instant::now();

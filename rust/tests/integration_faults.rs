@@ -114,7 +114,7 @@ fn chaos_batch_zero_hung_or_crashed_requests() {
     // ANSWERED — success or structured error — within a generous bound
     let rxs: Vec<_> = traces
         .iter()
-        .map(|t| host.submit(MoeTraceRequest { trace: t.clone() }).unwrap())
+        .map(|t| host.submit(MoeTraceRequest::new(t.clone())).unwrap())
         .collect();
     let mut ok = 0usize;
     let mut degraded = 0usize;
@@ -192,7 +192,7 @@ fn deadline_exceeded_requests_answered_with_structured_timeout() {
     let metrics = host.metrics.clone();
     let trace = clustered_trace(cfg.d_model, 2, 3, 4, 61);
     let err = host
-        .generate(MoeTraceRequest { trace })
+        .generate(MoeTraceRequest::new(trace))
         .expect_err("a request parked past its deadline must not succeed");
     assert_eq!(
         err.downcast_ref::<MoeError>(),
@@ -235,7 +235,7 @@ fn faults_disabled_bit_exact_with_plain_reader() {
         .unwrap();
         let outs: Vec<Vec<Vec<f32>>> = traces
             .iter()
-            .map(|t| host.generate(MoeTraceRequest { trace: t.clone() }).unwrap().outputs)
+            .map(|t| host.generate(MoeTraceRequest::new(t.clone())).unwrap().outputs)
             .collect();
         host.shutdown();
         outs

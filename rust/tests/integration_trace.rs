@@ -82,7 +82,7 @@ fn serving_waterfalls_reconcile_and_chrome_round_trips() {
     let rxs: Vec<_> = (0..n)
         .map(|s| {
             let trace = clustered_trace(cfg.d_model, 3, 2, 8, 700 + s as u64);
-            host.submit(MoeTraceRequest { trace }).unwrap()
+            host.submit(MoeTraceRequest::new(trace)).unwrap()
         })
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
@@ -186,7 +186,7 @@ fn chaos_run_records_clean_integrity_and_fault_marks() {
     .unwrap();
     let rxs: Vec<_> = traces
         .iter()
-        .map(|t| host.submit(MoeTraceRequest { trace: t.clone() }).unwrap())
+        .map(|t| host.submit(MoeTraceRequest::new(t.clone())).unwrap())
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
         // success or structured degradation both fine — answered is the
@@ -239,15 +239,7 @@ fn prefetch_worker_panic_closes_every_span() {
     let metrics = Arc::new(PipelineMetrics::default());
     let cache =
         Arc::new(Mutex::new(ExpertCache::new(reader.clone(), metrics.clone(), usize::MAX, 1)));
-    let pool = PrefetchPool::new(
-        cache,
-        reader,
-        metrics.clone(),
-        1 << 20,
-        1,
-        ExpertResidency::Decoded,
-        1,
-    );
+    let pool = PrefetchPool::new(cache, reader, metrics.clone(), 1 << 20, 1, 1);
     for e in 0..spec.n_experts {
         pool.enqueue(0, e);
     }
